@@ -1,0 +1,55 @@
+//! Reproduces the paper's Figure 1 and Figure 2 anomalies (Section 1) on a
+//! Java-style "naive" size implementation, and shows the methodology fixing
+//! both.
+//!
+//! * Figure 1: a thread sees `contains(k) == true` and then `size() == 0` —
+//!   impossible in any sequential execution over the same history.
+//! * Figure 2: `size()` returns a **negative** number, because the racing
+//!   delete's decrement lands before the insert's (delayed) increment.
+//!
+//! ```bash
+//! cargo run --release --example anomaly_demo [--trials N] [--rounds N]
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use concurrent_size::bench_util::{fig1_anomalies, fig2_anomalies};
+use concurrent_size::cli::Args;
+use concurrent_size::size::{LinearizableSize, NaiveSize, SizeOpts, SizePolicy};
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let trials = args.get_usize("trials", 2_000);
+    let rounds = args.get_usize("rounds", 500);
+
+    // The naive policy updates its counter *after* the structure update —
+    // exactly Java's ConcurrentSkipListMap scheme the paper dissects. The
+    // insert-side window stands in for the preemption the paper's
+    // 64-thread scheduler provides for free.
+    let mut naive_policy = NaiveSize::new(MAX_THREADS, SizeOpts::default());
+    naive_policy.set_insert_window(Duration::from_micros(80));
+    let naive: Arc<SkipListSet<NaiveSize>> = Arc::new(SkipListSet::with_policy(naive_policy));
+    let lin: Arc<SkipListSet<LinearizableSize>> = Arc::new(SkipListSet::new(MAX_THREADS));
+
+    println!("== Figure 1: contains(k)=true followed by size()=0 ==");
+    let naive1 = fig1_anomalies(naive.as_ref(), trials);
+    let lin1 = fig1_anomalies(lin.as_ref(), trials);
+    println!("  naive size        : {naive1}/{trials} anomalous trials");
+    println!("  linearizable size : {lin1}/{trials} anomalous trials");
+
+    println!("== Figure 2: negative size ==");
+    let naive2 = fig2_anomalies(naive.as_ref(), rounds);
+    let lin2 = fig2_anomalies(lin.as_ref(), rounds);
+    println!("  naive size        : {naive2}/{rounds} rounds hit a negative size");
+    println!("  linearizable size : {lin2}/{rounds} rounds (must be 0)");
+
+    assert_eq!(lin1, 0, "methodology violated Figure 1 linearizability!");
+    assert_eq!(lin2, 0, "methodology returned a negative size!");
+    println!(
+        "\nanomaly_demo OK: methodology clean; naive anomalies observed: {}",
+        naive1 + naive2
+    );
+}

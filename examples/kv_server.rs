@@ -1,0 +1,122 @@
+//! A small TCP set server with an exact SIZE endpoint — the "reliable
+//! size in a real system" scenario the paper's introduction motivates
+//! (monitoring, admission control, dynamic-language runtimes).
+//!
+//! Protocol (one command per line): `PUT k` | `DEL k` | `HAS k` | `SIZE` |
+//! `QUIT`. Responses: `1`/`0` for ops, the exact count for `SIZE`.
+//!
+//! ```bash
+//! cargo run --release --example kv_server               # self-test mode
+//! cargo run --release --example kv_server -- --listen 127.0.0.1:7171
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use concurrent_size::cli::Args;
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::LinearizableSize;
+use concurrent_size::MAX_THREADS;
+
+type Store = Arc<HashTableSet<LinearizableSize>>;
+
+fn handle(store: Store, stream: TcpStream) {
+    let mut out = stream.try_clone().expect("clone stream");
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => return,
+        };
+        let mut parts = line.split_whitespace();
+        let reply = match (parts.next(), parts.next()) {
+            (Some("PUT"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => (store.insert(k) as i64).to_string(),
+                Err(_) => "ERR bad key".into(),
+            },
+            (Some("DEL"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => (store.delete(k) as i64).to_string(),
+                Err(_) => "ERR bad key".into(),
+            },
+            (Some("HAS"), Some(k)) => match k.parse::<u64>() {
+                Ok(k) => (store.contains(k) as i64).to_string(),
+                Err(_) => "ERR bad key".into(),
+            },
+            (Some("SIZE"), _) => store.size().unwrap().to_string(),
+            (Some("QUIT"), _) => return,
+            _ => "ERR unknown command".into(),
+        };
+        if writeln!(out, "{reply}").is_err() {
+            return;
+        }
+    }
+}
+
+fn serve(addr: &str, store: Store) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!("kv_server listening on {addr} (PUT/DEL/HAS/SIZE/QUIT)");
+    for stream in listener.incoming() {
+        let store = store.clone();
+        std::thread::spawn(move || handle(store, stream.expect("accept")));
+    }
+    Ok(())
+}
+
+/// Self-test: spin up the server on an ephemeral port, drive it with
+/// concurrent clients, and check the SIZE endpoint against ground truth.
+fn self_test(store: Store) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap();
+    {
+        let store = store.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let store = store.clone();
+                std::thread::spawn(move || handle(store, stream.expect("accept")));
+            }
+        });
+    }
+
+    let clients: Vec<_> = (0..4u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut out = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                let mut send = |cmd: String, line: &mut String| {
+                    writeln!(out, "{cmd}").unwrap();
+                    line.clear();
+                    reader.read_line(line).unwrap();
+                    line.trim().to_string()
+                };
+                for k in (c * 1000)..(c * 1000 + 250) {
+                    assert_eq!(send(format!("PUT {k}"), &mut line), "1");
+                }
+                for k in (c * 1000)..(c * 1000 + 50) {
+                    assert_eq!(send(format!("DEL {k}"), &mut line), "1");
+                }
+                let size: i64 = send("SIZE".into(), &mut line).parse().unwrap();
+                assert!((0..=1000).contains(&size), "impossible size {size}");
+                send("QUIT".into(), &mut line)
+            })
+        })
+        .collect();
+    for c in clients {
+        let _ = c.join();
+    }
+
+    assert_eq!(store.size(), Some(4 * 200));
+    println!("kv_server self-test OK: final SIZE = {:?}", store.size());
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let store: Store = Arc::new(HashTableSet::new(MAX_THREADS, 1 << 16));
+    match args.get("listen") {
+        Some(addr) => serve(&addr.to_string(), store).expect("serve"),
+        None => self_test(store),
+    }
+}

@@ -1,0 +1,64 @@
+//! Quickstart: add a linearizable, wait-free `size()` to a concurrent set.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::LinearizableSize;
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    // A lock-free skip list transformed with the paper's methodology:
+    // insert/delete/contains as usual, plus an O(#threads) exact size().
+    let set: Arc<SkipListSet<LinearizableSize>> = Arc::new(SkipListSet::new(MAX_THREADS));
+
+    // Concurrent writers...
+    let writers: Vec<_> = (0..4u64)
+        .map(|t| {
+            let set = set.clone();
+            std::thread::spawn(move || {
+                for k in (t * 1000)..(t * 1000 + 500) {
+                    set.insert(k);
+                }
+                for k in (t * 1000)..(t * 1000 + 100) {
+                    set.delete(k);
+                }
+            })
+        })
+        .collect();
+
+    // ...while a reader keeps asking for the exact size. Every value it
+    // sees is a size the set really had at some moment (linearizability) —
+    // never negative, never phantom.
+    let sizes = {
+        let set = set.clone();
+        std::thread::spawn(move || {
+            let mut observed = Vec::new();
+            for _ in 0..1000 {
+                let s = set.size().unwrap();
+                assert!((0..=2000).contains(&s), "impossible size {s}");
+                observed.push(s);
+            }
+            observed
+        })
+    };
+
+    for w in writers {
+        w.join().unwrap();
+    }
+    let observed = sizes.join().unwrap();
+
+    println!("final size           : {:?}", set.size());
+    println!("concurrent size calls: {} (all linearizable)", observed.len());
+    println!(
+        "observed size range  : {:?}..={:?}",
+        observed.iter().min().unwrap(),
+        observed.iter().max().unwrap()
+    );
+    assert_eq!(set.size(), Some(4 * 400));
+    println!("quickstart OK");
+}

@@ -1,0 +1,131 @@
+//! End-to-end driver: all three layers composed on a real workload.
+//!
+//! 1. **L3 (Rust)** runs a YCSB-style workload over the size-transformed
+//!    skip list while an epoch sampler records the size metadata and the
+//!    linearizable `size()`.
+//! 2. **L2/L1 (AOT JAX + Pallas via PJRT)** reduce the counter samples to
+//!    per-epoch sizes (`size_reduce`), scan the update history
+//!    (`prefix_scan`) and validate legality (`history_stats`).
+//! 3. The linearizable sizes and the Pallas pipeline must agree — exactly
+//!    at quiescent epochs and on the final state.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example size_analytics
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use concurrent_size::analytics::{analyze, EpochRecorder};
+use concurrent_size::cli::Args;
+use concurrent_size::history::{self, DeltaLog};
+use concurrent_size::metrics::fmt_rate;
+use concurrent_size::runtime::Artifacts;
+use concurrent_size::size::{LinearizableSize, SizePolicy};
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::workload::{self, key_range, OpType, UPDATE_HEAVY};
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let initial = args.get_u64("initial", 20_000);
+    let secs = args.get_f64("secs", 3.0);
+    let epochs = args.get_usize("epochs", 128);
+    let workers = args.get_usize("threads", 3);
+
+    println!("[1/4] loading AOT artifacts (PJRT CPU)...");
+    let artifacts = Artifacts::load_default().expect("run `make artifacts` first");
+
+    println!("[2/4] prefilling SizeSkipList with {initial} keys...");
+    let set: Arc<SkipListSet<LinearizableSize>> = Arc::new(SkipListSet::new(MAX_THREADS));
+    let mix = UPDATE_HEAVY;
+    let range = key_range(initial, mix);
+    workload::prefill(set.as_ref(), initial, range, 42);
+
+    println!("[3/4] running {workers} workload threads for {secs}s with {epochs} epochs...");
+    let stop = Arc::new(AtomicBool::new(false));
+    let log = Arc::new(DeltaLog::new());
+    // The prefill enters the history as one bulk delta, so the running size
+    // is absolute and the never-negative legality check applies end to end.
+    log.record_delta(initial as i64);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..workers as u64)
+        .map(|t| {
+            let set = set.clone();
+            let stop = stop.clone();
+            let log = log.clone();
+            std::thread::spawn(move || {
+                let mut stream = workload::OpStream::new(t, mix, range);
+                let mut ops = 0u64;
+                while !stop.load(SeqCst) {
+                    let (op, k) = stream.next();
+                    let ok = workload::apply(set.as_ref(), op, k);
+                    if ok && log.len() < concurrent_size::runtime::AOT_L {
+                        match op {
+                            OpType::Insert => log.record_insert(),
+                            OpType::Delete => log.record_delete(),
+                            OpType::Contains => {}
+                        }
+                    }
+                    ops += 1;
+                }
+                ops
+            })
+        })
+        .collect();
+
+    let mut rec = EpochRecorder::new();
+    let calc = set.policy().calculator().unwrap();
+    let dt = Duration::from_secs_f64(secs / epochs as f64);
+    for _ in 0..epochs - 1 {
+        std::thread::sleep(dt);
+        rec.record(calc);
+    }
+    stop.store(true, SeqCst);
+    let total_ops: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    rec.record(calc); // quiescent final epoch
+    let elapsed = t0.elapsed();
+
+    println!("[4/4] running the Pallas analytics pipeline...");
+    let report = analyze(&artifacts, &rec).expect("epoch analytics failed");
+
+    // History validation: the recorded update deltas must form a legal
+    // history, and the Pallas scan must agree with the Rust oracle.
+    let mut deltas = log.snapshot();
+    deltas.truncate(concurrent_size::runtime::AOT_L); // racing pushes may overshoot
+    let (p_running, p_stats) = artifacts.validate_history(&deltas).expect("history pipeline");
+    let (r_running, r_stats) = history::validate(&deltas);
+    assert_eq!(p_running, r_running, "Pallas scan != Rust oracle");
+    assert_eq!(p_stats, r_stats, "Pallas stats != Rust oracle");
+
+    let final_pallas = *report.pallas_sizes.last().unwrap();
+    let final_lin = *report.linearizable_sizes.last().unwrap();
+
+    println!("\n================ size_analytics report ================");
+    println!("workload ops            : {total_ops} ({} ops/s)",
+             fmt_rate(total_ops as f64 / elapsed.as_secs_f64()));
+    println!("epochs sampled          : {}", rec.len());
+    println!("final size  (pallas)    : {final_pallas}");
+    println!("final size  (linearizable size()): {final_lin}");
+    println!("epoch skew max |pallas - size()| : {}", report.max_skew());
+    println!("history deltas recorded : {}", deltas.len());
+    println!("history stats [min,max,final,neg]: {:?}", p_stats.as_array());
+    println!("history legal (never negative)   : {}", p_stats.is_legal());
+    println!("=======================================================");
+
+    assert!(report.final_exact(), "quiescent epoch must match exactly");
+    assert!(p_stats.is_legal(), "update history must never go negative");
+    // The absolute history telescopes to the final linearizable size —
+    // checkable only when the log did not hit the AOT capacity.
+    let truncated = deltas.len() >= concurrent_size::runtime::AOT_L;
+    if truncated {
+        println!("note: history hit AOT_L capacity; prefix checked for legality only");
+    } else {
+        assert_eq!(
+            p_stats.final_size, final_lin,
+            "history final size must equal the linearizable size"
+        );
+    }
+    println!("size_analytics OK: all three layers agree.");
+}

@@ -1,0 +1,11 @@
+"""Build-time-only Python package: JAX/Pallas authoring + AOT export.
+
+Never imported at runtime — the Rust coordinator only consumes the HLO
+text artifacts produced by ``python -m compile.aot``.
+"""
+
+import jax
+
+# The size metadata counters are u64 in the Rust coordinator; analytics run
+# on i64, which requires the x64 mode (default jax dtype is 32-bit).
+jax.config.update("jax_enable_x64", True)

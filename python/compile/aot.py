@@ -1,0 +1,75 @@
+"""AOT exporter: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  Lowered with ``return_tuple=True`` and
+unwrapped with ``to_tuple*`` on the Rust side.
+
+Exported artifacts (shapes are the contract with ``rust/src/runtime``):
+
+* ``size_reduce.hlo.txt``   — ``epoch_sizes``:      s64[AOT_E, AOT_T, 2] -> (s64[AOT_E],)
+* ``prefix_scan.hlo.txt``   — ``running_sizes``:    s64[AOT_L] -> (s64[AOT_L],)
+* ``history_stats.hlo.txt`` — ``validate_history``: s64[AOT_L], s64[] -> (s64[AOT_L], s64[4])
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The AOT shape contract; rust/src/runtime/artifacts.rs mirrors these values.
+AOT_E = 256  # epochs per analytics batch
+AOT_T = 64  # thread slots (max_threads supported by the coordinator)
+AOT_L = 65536  # history log capacity
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to xla_extension-0.5.1-compatible HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all() -> dict:
+    """Lower every exported graph; returns {artifact name: hlo text}."""
+    s64 = jnp.int64
+    counters = jax.ShapeDtypeStruct((AOT_E, AOT_T, 2), s64)
+    deltas = jax.ShapeDtypeStruct((AOT_L,), s64)
+    vlen = jax.ShapeDtypeStruct((), s64)
+
+    return {
+        "size_reduce.hlo.txt": to_hlo_text(
+            jax.jit(model.epoch_sizes).lower(counters)
+        ),
+        "prefix_scan.hlo.txt": to_hlo_text(
+            jax.jit(model.running_sizes).lower(deltas)
+        ),
+        "history_stats.hlo.txt": to_hlo_text(
+            jax.jit(model.validate_history).lower(deltas, vlen)
+        ),
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, text in lower_all().items():
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

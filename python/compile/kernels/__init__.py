@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the Concurrent Size analytics pipeline.
+
+All kernels are authored with TPU-style tiling (BlockSpec expresses the
+HBM<->VMEM schedule) but lowered with ``interpret=True`` so the AOT HLO runs
+on the PJRT CPU client embedded in the Rust coordinator.
+"""
+
+from .history_stats import history_stats  # noqa: F401
+from .prefix_scan import prefix_scan  # noqa: F401
+from .size_reduce import size_reduce  # noqa: F401

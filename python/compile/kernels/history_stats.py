@@ -1,0 +1,100 @@
+"""Pallas kernel: streaming statistics over a running-size series.
+
+Consumes the output of :mod:`prefix_scan` and reduces it to the four
+quantities the linearizability validator checks (paper Sections 1, 8):
+
+* ``stats[0]`` — minimum running size (must be >= 0 for a legal history;
+  the naive counter-after-op scheme of paper Figure 2 drives this negative),
+* ``stats[1]`` — maximum running size,
+* ``stats[2]`` — final size (cross-checked against a linearizable ``size()``
+  taken at quiescence),
+* ``stats[3]`` — number of prefix points with a negative size.
+
+Tiling: grid over ``[BLOCK_L]`` tiles with four SMEM accumulator cells;
+the accumulators are folded across the sequential grid and emitted once.
+VMEM per step is one tile (32 KiB at BLOCK_L = 4096); the kernel is a
+single-pass, memory-bound streaming reduction.
+
+``valid_len`` masks out padding, so callers may pad ``running`` to the AOT
+shape without corrupting the min/negativity statistics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_L = 4096
+
+
+def _history_stats_kernel(running_ref, valid_len_ref, stats_ref, acc_ref):
+    i = pl.program_id(0)
+    blk = running_ref.shape[0]
+    dtype = running_ref.dtype
+    big = jnp.asarray(jnp.iinfo(dtype).max, dtype)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[0] = big  # running min
+        acc_ref[1] = -big  # running max
+        acc_ref[2] = jnp.zeros((), dtype)  # final value
+        acc_ref[3] = jnp.zeros((), dtype)  # negative count
+
+    tile = running_ref[...]
+    base = i * blk
+    idx = base + jax.lax.iota(dtype, blk)
+    valid = idx < valid_len_ref[0]
+    masked_min = jnp.where(valid, tile, big)
+    masked_max = jnp.where(valid, tile, -big)
+
+    acc_ref[0] = jnp.minimum(acc_ref[0], jnp.min(masked_min))
+    acc_ref[1] = jnp.maximum(acc_ref[1], jnp.max(masked_max))
+    # Final value: last valid element seen so far (padding tiles keep it).
+    in_tile = jnp.logical_and(valid_len_ref[0] > base,
+                              valid_len_ref[0] <= base + blk)
+    last_idx = jnp.clip(valid_len_ref[0] - 1 - base, 0, blk - 1)
+    acc_ref[2] = jnp.where(in_tile, tile[last_idx], acc_ref[2])
+    acc_ref[3] = acc_ref[3] + jnp.sum(
+        jnp.where(jnp.logical_and(valid, tile < 0), 1, 0).astype(dtype))
+
+    stats_ref[0] = acc_ref[0]
+    stats_ref[1] = acc_ref[1]
+    stats_ref[2] = acc_ref[2]
+    stats_ref[3] = acc_ref[3]
+
+
+@functools.partial(jax.jit, static_argnames=("block_l",))
+def history_stats(running: jax.Array, valid_len: jax.Array,
+                  *, block_l: int = DEFAULT_BLOCK_L) -> jax.Array:
+    """[min, max, final, negative-count] over ``running[:valid_len]``.
+
+    Args:
+      running: integer array ``[L]`` of running sizes (possibly padded).
+      valid_len: scalar count of meaningful prefix elements.
+
+    Returns:
+      ``[4]`` stats array, same dtype as ``running``. For ``valid_len == 0``
+      min is ``iinfo.max`` and max is ``-iinfo.max`` (empty-fold identities).
+    """
+    if running.ndim != 1:
+        raise ValueError(f"expected [L] running sizes, got {running.shape}")
+    l = running.shape[0]
+    blk = min(block_l, max(l, 1))
+    l_pad = pl.cdiv(l, blk) * blk if l > 0 else blk
+    padded = jnp.zeros((l_pad,), running.dtype).at[:l].set(running)
+    vlen = jnp.asarray(valid_len, running.dtype).reshape((1,))
+
+    return pl.pallas_call(
+        _history_stats_kernel,
+        grid=(l_pad // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((4,), running.dtype),
+        scratch_shapes=[pltpu.SMEM((4,), running.dtype)],
+        interpret=True,
+    )(padded, vlen)

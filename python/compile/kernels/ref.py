@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every kernel in this package must match its oracle bit-exactly on integer
+inputs — asserted by ``python/tests/test_kernels.py`` under hypothesis sweeps
+of shapes, dtypes and values.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_size_reduce(counters):
+    """[E, T, 2] counters -> [E] sizes; paper Fig. 6 computeSize per epoch."""
+    counters = jnp.asarray(counters)
+    return jnp.sum(counters[:, :, 0] - counters[:, :, 1], axis=1)
+
+
+def ref_prefix_scan(deltas):
+    """[L] deltas -> [L] inclusive running sums."""
+    return jnp.cumsum(jnp.asarray(deltas))
+
+
+def ref_history_stats(running, valid_len):
+    """[min, max, final, neg-count] over running[:valid_len]."""
+    running = jnp.asarray(running)
+    dtype = running.dtype
+    big = jnp.asarray(jnp.iinfo(dtype).max, dtype)
+    valid = running[:valid_len]
+    if valid_len == 0:
+        return jnp.array([big, -big, 0, 0], dtype)
+    return jnp.array(
+        [jnp.min(valid), jnp.max(valid), valid[-1], jnp.sum(valid < 0)], dtype
+    )

@@ -1,0 +1,69 @@
+"""Layer-2 JAX compute graphs for Concurrent Size analytics.
+
+These are the graphs the Rust coordinator executes through PJRT (after AOT
+lowering by :mod:`compile.aot`).  They compose the Layer-1 Pallas kernels:
+
+* :func:`epoch_sizes` / :func:`analyze_epochs` — per-epoch sizes (and deltas
+  and extrema) from batched metadata-counter snapshots.  This is the batch
+  form of ``CountersSnapshot.computeSize`` (paper Fig. 6).
+* :func:`validate_history` — running sizes + legality statistics from a
+  linearization-ordered delta log (the offline half of the linearizability
+  checker; see paper Sections 1, 8 and Figure 2's negative-size anomaly).
+
+Shapes are static at AOT time; the Rust runtime pads inputs to the exported
+shapes and passes the true length as ``valid_len``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import history_stats, prefix_scan, size_reduce
+
+
+def epoch_sizes(counters: jax.Array) -> jax.Array:
+    """[E, T, 2] metadata-counter snapshots -> [E] data-structure sizes."""
+    return size_reduce(counters)
+
+
+def analyze_epochs(counters: jax.Array):
+    """Batch epoch analytics.
+
+    Args:
+      counters: ``[E, T, 2]`` integer counter snapshots.
+
+    Returns:
+      Tuple of
+      * ``sizes [E]`` — size at each epoch,
+      * ``deltas [E]`` — size change between consecutive epochs (delta[0] is
+        the size of the first epoch, i.e., relative to an empty structure),
+      * ``stats [4]`` — [min, max, final, negative-count] over the sizes.
+    """
+    sizes = size_reduce(counters)
+    deltas = jnp.diff(sizes, prepend=sizes.dtype.type(0))
+    e = sizes.shape[0]
+    stats = history_stats(sizes, jnp.asarray(e, sizes.dtype))
+    return sizes, deltas, stats
+
+
+def running_sizes(deltas: jax.Array) -> jax.Array:
+    """[L] linearization-ordered op deltas -> [L] running sizes."""
+    return prefix_scan(deltas)
+
+
+def validate_history(deltas: jax.Array, valid_len: jax.Array):
+    """Linearizability-oriented validation of an update history.
+
+    Args:
+      deltas: ``[L]`` op deltas (+1 insert, -1 delete, 0 padding), ordered by
+        linearization point.
+      valid_len: scalar number of meaningful entries.
+
+    Returns:
+      Tuple of
+      * ``running [L]`` — size after each linearized update,
+      * ``stats [4]`` — [min, max, final, negative-count] over the valid
+        prefix.  A legal set history has ``min >= 0`` and ``neg-count == 0``.
+    """
+    running = prefix_scan(deltas)
+    stats = history_stats(running, valid_len)
+    return running, stats

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is launched from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import compile  # noqa: E402,F401  (enables jax x64 as an import side effect)

@@ -1,0 +1,65 @@
+"""AOT export tests: artifact shape contract + HLO-text interchange format."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def hlos():
+    return aot.lower_all()
+
+
+class TestAotExport:
+    def test_all_artifacts_present(self, hlos):
+        assert set(hlos) == {
+            "size_reduce.hlo.txt",
+            "prefix_scan.hlo.txt",
+            "history_stats.hlo.txt",
+        }
+
+    def test_hlo_text_not_proto(self, hlos):
+        for name, text in hlos.items():
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_size_reduce_shape_contract(self, hlos):
+        text = hlos["size_reduce.hlo.txt"]
+        assert f"s64[{aot.AOT_E},{aot.AOT_T},2]" in text
+        assert f"(s64[{aot.AOT_E}]" in text  # tuple return
+
+    def test_prefix_scan_shape_contract(self, hlos):
+        text = hlos["prefix_scan.hlo.txt"]
+        assert f"s64[{aot.AOT_L}]" in text
+
+    def test_history_stats_shape_contract(self, hlos):
+        text = hlos["history_stats.hlo.txt"]
+        assert f"s64[{aot.AOT_L}]" in text
+        assert "s64[4]" in text
+
+    def test_no_custom_calls(self, hlos):
+        # interpret=True must fully lower pallas: a Mosaic custom-call would
+        # be unloadable by the CPU PJRT client in rust/src/runtime.
+        for name, text in hlos.items():
+            assert "custom-call" not in text, name
+
+    def test_entry_layout_is_tuple(self, hlos):
+        # return_tuple=True: rust side unwraps with to_tuple*.
+        for name, text in hlos.items():
+            m = re.search(r"entry_computation_layout=\{.*->\((.*)\)\}", text)
+            assert m, name
+
+    def test_main_writes_files(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--out-dir", str(tmp_path)]
+        )
+        aot.main()
+        for name in (
+            "size_reduce.hlo.txt",
+            "prefix_scan.hlo.txt",
+            "history_stats.hlo.txt",
+        ):
+            assert os.path.getsize(tmp_path / name) > 100

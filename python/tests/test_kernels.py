@@ -1,0 +1,159 @@
+"""Pallas kernels vs pure-jnp oracles — the core build-time correctness bar.
+
+Hypothesis sweeps shapes, dtypes and values; every comparison is exact
+(integer kernels must be bit-exact against the reference).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import history_stats, prefix_scan, size_reduce
+from compile.kernels.ref import (
+    ref_history_stats,
+    ref_prefix_scan,
+    ref_size_reduce,
+)
+
+DTYPES = [np.int32, np.int64]
+
+
+def ids(dt):
+    return np.dtype(dt).name
+
+
+# ---------------------------------------------------------------- size_reduce
+class TestSizeReduce:
+    @pytest.mark.parametrize("dtype", DTYPES, ids=ids)
+    def test_matches_ref_basic(self, dtype):
+        rng = np.random.default_rng(0)
+        counters = rng.integers(0, 1000, (64, 8, 2)).astype(dtype)
+        got = size_reduce(jnp.asarray(counters))
+        np.testing.assert_array_equal(got, ref_size_reduce(counters))
+        assert got.dtype == dtype
+
+    def test_empty_structure_is_zero(self):
+        counters = np.zeros((4, 16, 2), np.int64)
+        np.testing.assert_array_equal(size_reduce(jnp.asarray(counters)),
+                                      np.zeros(4, np.int64))
+
+    def test_single_epoch_single_thread(self):
+        counters = np.array([[[5, 2]]], np.int64)
+        np.testing.assert_array_equal(size_reduce(jnp.asarray(counters)), [3])
+
+    def test_non_block_multiple_epochs(self):
+        # E not divisible by the default block: exercises the padding path.
+        rng = np.random.default_rng(1)
+        counters = rng.integers(0, 50, (33, 3, 2)).astype(np.int64)
+        np.testing.assert_array_equal(size_reduce(jnp.asarray(counters)),
+                                      ref_size_reduce(counters))
+
+    def test_deletes_never_exceed_inserts_invariant_not_assumed(self):
+        # Kernel must compute the raw difference, even if negative (the
+        # validator is what flags negatives — not the reduction).
+        counters = np.array([[[0, 4], [1, 0]]], np.int64)
+        np.testing.assert_array_equal(size_reduce(jnp.asarray(counters)), [-3])
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        e=st.integers(0, 70),
+        t=st.integers(1, 9),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**32 - 1),
+        block_e=st.sampled_from([1, 2, 8, 32]),
+    )
+    def test_matches_ref_property(self, e, t, dtype, seed, block_e):
+        rng = np.random.default_rng(seed)
+        counters = rng.integers(0, 2**20, (e, t, 2)).astype(dtype)
+        got = size_reduce(jnp.asarray(counters), block_e=block_e)
+        np.testing.assert_array_equal(got, ref_size_reduce(counters))
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError):
+            size_reduce(jnp.zeros((3, 4), jnp.int64))
+        with pytest.raises(ValueError):
+            size_reduce(jnp.zeros((3, 4, 3), jnp.int64))
+
+
+# ---------------------------------------------------------------- prefix_scan
+class TestPrefixScan:
+    @pytest.mark.parametrize("dtype", DTYPES, ids=ids)
+    def test_matches_ref_basic(self, dtype):
+        rng = np.random.default_rng(2)
+        deltas = rng.integers(-1, 2, (10_000,)).astype(dtype)
+        got = prefix_scan(jnp.asarray(deltas))
+        np.testing.assert_array_equal(got, ref_prefix_scan(deltas))
+        assert got.dtype == dtype
+
+    def test_all_inserts(self):
+        deltas = np.ones(100, np.int64)
+        np.testing.assert_array_equal(prefix_scan(jnp.asarray(deltas)),
+                                      np.arange(1, 101))
+
+    def test_insert_delete_pairs_return_to_zero(self):
+        deltas = np.tile([1, -1], 50).astype(np.int64)
+        got = np.asarray(prefix_scan(jnp.asarray(deltas)))
+        assert got[-1] == 0
+        assert got.min() == 0 and got.max() == 1
+
+    def test_block_boundary_carry(self):
+        # Force multiple grid steps with a tiny block; the carry must thread.
+        deltas = np.ones(1000, np.int64)
+        got = prefix_scan(jnp.asarray(deltas), block_l=16)
+        np.testing.assert_array_equal(got, np.arange(1, 1001))
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        l=st.integers(0, 3000),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**32 - 1),
+        block_l=st.sampled_from([1, 7, 64, 4096]),
+    )
+    def test_matches_ref_property(self, l, dtype, seed, block_l):
+        rng = np.random.default_rng(seed)
+        deltas = rng.integers(-3, 4, (l,)).astype(dtype)
+        got = prefix_scan(jnp.asarray(deltas), block_l=block_l)
+        np.testing.assert_array_equal(got, ref_prefix_scan(deltas))
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError):
+            prefix_scan(jnp.zeros((3, 4), jnp.int64))
+
+
+# -------------------------------------------------------------- history_stats
+class TestHistoryStats:
+    def test_simple(self):
+        running = np.array([1, 2, 1, 0, -1, 5], np.int64)
+        got = history_stats(jnp.asarray(running), 6)
+        np.testing.assert_array_equal(got, [-1, 5, 5, 1])
+
+    def test_valid_len_masks_padding(self):
+        running = np.array([1, 2, -7, -7], np.int64)
+        got = history_stats(jnp.asarray(running), 2)
+        np.testing.assert_array_equal(got, [1, 2, 2, 0])
+
+    def test_legal_history_has_no_negatives(self):
+        deltas = np.tile([1, 1, -1], 100).astype(np.int64)
+        running = ref_prefix_scan(deltas)
+        got = np.asarray(history_stats(jnp.asarray(running), len(running)))
+        assert got[0] >= 0 and got[3] == 0
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        l=st.integers(1, 2000),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**32 - 1),
+        block_l=st.sampled_from([1, 13, 4096]),
+    )
+    def test_matches_ref_property(self, l, dtype, seed, block_l):
+        rng = np.random.default_rng(seed)
+        running = rng.integers(-100, 100, (l,)).astype(dtype)
+        vlen = int(rng.integers(0, l + 1))
+        got = history_stats(jnp.asarray(running), vlen, block_l=block_l)
+        np.testing.assert_array_equal(got, ref_history_stats(running, vlen))
+
+    def test_final_at_block_boundary(self):
+        running = np.arange(1, 65, dtype=np.int64)
+        got = history_stats(jnp.asarray(running), 32, block_l=32)
+        np.testing.assert_array_equal(got, [1, 32, 32, 0])

@@ -1,0 +1,82 @@
+"""Layer-2 graph tests: epoch analytics + history validation semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ref_prefix_scan, ref_size_reduce
+
+
+def _simulate_counters(rng, epochs, threads):
+    """Monotone per-thread counters with del <= ins per thread (a real run)."""
+    ins = np.cumsum(rng.integers(0, 5, (epochs, threads)), axis=0)
+    dels = (ins * rng.uniform(0, 1, (epochs, threads))).astype(np.int64)
+    return np.stack([ins.astype(np.int64), dels], axis=-1)
+
+
+class TestAnalyzeEpochs:
+    def test_sizes_match_ref(self):
+        rng = np.random.default_rng(3)
+        counters = _simulate_counters(rng, 20, 8)
+        sizes, deltas, stats = model.analyze_epochs(jnp.asarray(counters))
+        np.testing.assert_array_equal(sizes, ref_size_reduce(counters))
+
+    def test_deltas_telescope_to_sizes(self):
+        rng = np.random.default_rng(4)
+        counters = _simulate_counters(rng, 31, 4)
+        sizes, deltas, _ = model.analyze_epochs(jnp.asarray(counters))
+        np.testing.assert_array_equal(np.cumsum(deltas), sizes)
+
+    def test_stats_over_sizes(self):
+        rng = np.random.default_rng(5)
+        counters = _simulate_counters(rng, 16, 3)
+        sizes, _, stats = model.analyze_epochs(jnp.asarray(counters))
+        s = np.asarray(sizes)
+        np.testing.assert_array_equal(
+            stats, [s.min(), s.max(), s[-1], (s < 0).sum()]
+        )
+
+    def test_monotone_run_never_negative(self):
+        rng = np.random.default_rng(6)
+        counters = _simulate_counters(rng, 64, 6)
+        _, _, stats = model.analyze_epochs(jnp.asarray(counters))
+        assert int(stats[3]) == 0
+
+
+class TestValidateHistory:
+    def test_running_and_stats(self):
+        deltas = np.array([1, 1, -1, 1, -1, -1, 1], np.int64)
+        running, stats = model.validate_history(jnp.asarray(deltas), 7)
+        np.testing.assert_array_equal(running, ref_prefix_scan(deltas))
+        np.testing.assert_array_equal(stats, [0, 2, 1, 0])
+
+    def test_illegal_history_flagged(self):
+        # A delete linearized before its insert: the Figure 2 anomaly.
+        deltas = np.array([-1, 1], np.int64)
+        _, stats = model.validate_history(jnp.asarray(deltas), 2)
+        assert int(stats[0]) == -1 and int(stats[3]) == 1
+
+    def test_padding_is_ignored(self):
+        deltas = np.zeros(128, np.int64)
+        deltas[:3] = [1, 1, -1]
+        _, stats = model.validate_history(jnp.asarray(deltas), 3)
+        np.testing.assert_array_equal(stats, [1, 2, 1, 0])
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), l=st.integers(1, 1000))
+    def test_legal_set_history_never_negative(self, seed, l):
+        # Generate a legal history: delete only when non-empty.
+        rng = np.random.default_rng(seed)
+        deltas, cur = [], 0
+        for _ in range(l):
+            if cur > 0 and rng.random() < 0.5:
+                deltas.append(-1)
+                cur -= 1
+            else:
+                deltas.append(1)
+                cur += 1
+        deltas = np.array(deltas, np.int64)
+        running, stats = model.validate_history(jnp.asarray(deltas), l)
+        assert int(stats[0]) >= 0 and int(stats[3]) == 0
+        assert int(stats[2]) == cur

@@ -1,0 +1,71 @@
+//! Ablation A: the Section 7 optimizations, individually toggled.
+//!
+//! * §7.1 `clear_insert_info` — spares every later op on an inserted node a
+//!   redundant `updateMetadata` call.
+//! * §7.2 `backoff` — reduces CAS contention among concurrent size calls.
+//! * §7.3 `early_size_check` — adopts an already-agreed size instead of
+//!   re-collecting.
+//!
+//! Reports workload + size throughput on the skip list (update-heavy, one
+//! size thread) for each configuration.
+
+use concurrent_size::bench_util::BenchScale;
+use concurrent_size::cli::Args;
+use concurrent_size::harness::run;
+use concurrent_size::metrics::{fmt_rate, Table};
+use concurrent_size::size::{LinearizableSize, SizeOpts, SizePolicy};
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::workload::{self, UPDATE_HEAVY};
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let w = args.get_usize("workload-threads", 3);
+    let s = args.get_usize("size-threads", 2);
+
+    println!("=== Ablation: Section 7 optimizations (SizeSkipList, update-heavy) ===");
+    println!("(initial={} keys, {w} workload + {s} size threads)", scale.initial);
+
+    let configs: Vec<(&str, SizeOpts)> = vec![
+        ("all on (default)", SizeOpts::default()),
+        ("all off", SizeOpts::NONE),
+        (
+            "no 7.1 clear-insert-info",
+            SizeOpts { clear_insert_info: false, ..SizeOpts::default() },
+        ),
+        (
+            "no 7.2 backoff",
+            SizeOpts { backoff: false, ..SizeOpts::default() },
+        ),
+        (
+            "no 7.3 early-size-check",
+            SizeOpts { early_size_check: false, ..SizeOpts::default() },
+        ),
+    ];
+
+    let mut table = Table::new(&["configuration", "workload ops/s", "size ops/s"]);
+    for (name, opts) in configs {
+        let mut workload_sum = 0.0;
+        let mut size_sum = 0.0;
+        for i in 0..(scale.repeat.warmup + scale.repeat.runs) {
+            let set: SkipListSet<LinearizableSize> =
+                SkipListSet::with_policy(LinearizableSize::new(MAX_THREADS, opts));
+            let cfg = scale.config(w, s, UPDATE_HEAVY, scale.initial);
+            workload::prefill(&set, scale.initial, cfg.key_range, scale.seed);
+            let res = run(&set, &cfg);
+            if i >= scale.repeat.warmup {
+                workload_sum += res.workload_throughput();
+                size_sum += res.size_throughput();
+            }
+            concurrent_size::ebr::collect();
+        }
+        let n = scale.repeat.runs as f64;
+        table.row(&[
+            name.to_string(),
+            fmt_rate(workload_sum / n),
+            fmt_rate(size_sum / n),
+        ]);
+    }
+    table.print();
+}

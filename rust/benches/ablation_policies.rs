@@ -1,0 +1,97 @@
+//! Ablation B: size-policy alternatives the paper argues against
+//! (Section 1): naive counter-after-op (incorrect) and a global lock
+//! (correct but a bottleneck), against the methodology and the baseline.
+//!
+//! Reports workload throughput (and size throughput where applicable) on
+//! the hash table under both mixes with one concurrent size thread.
+
+use concurrent_size::bench_util::{BenchScale, MIXES};
+use concurrent_size::cli::Args;
+use concurrent_size::harness::run;
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::metrics::{fmt_rate, Table};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{LinearizableSize, LockSize, NaiveSize, NoSize};
+use concurrent_size::workload;
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let w = args.get_usize("workload-threads", 4);
+
+    println!("=== Ablation: size-policy alternatives (HashTable) ===");
+    println!("(initial={} keys, {w} workload threads + 1 size thread)", scale.initial);
+
+    for mix in MIXES {
+        println!("\n-- {} workload --", mix.label());
+        let mut table = Table::new(&["policy", "workload ops/s", "size ops/s", "linearizable?"]);
+        let policies: Vec<(&str, Box<dyn Fn() -> Box<dyn ConcurrentSet>>, bool, &str)> = vec![
+            (
+                "baseline (no size)",
+                Box::new(|| {
+                    Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, scale.initial as usize))
+                        as Box<dyn ConcurrentSet>
+                }),
+                false,
+                "n/a",
+            ),
+            (
+                "LinearizableSize (paper)",
+                Box::new(|| {
+                    Box::new(HashTableSet::<LinearizableSize>::new(
+                        MAX_THREADS,
+                        scale.initial as usize,
+                    )) as Box<dyn ConcurrentSet>
+                }),
+                true,
+                "yes",
+            ),
+            (
+                "NaiveSize (Java-style)",
+                Box::new(|| {
+                    Box::new(HashTableSet::<NaiveSize>::new(
+                        MAX_THREADS,
+                        scale.initial as usize,
+                    )) as Box<dyn ConcurrentSet>
+                }),
+                true,
+                "NO",
+            ),
+            (
+                "LockSize (global lock)",
+                Box::new(|| {
+                    Box::new(HashTableSet::<LockSize>::new(
+                        MAX_THREADS,
+                        scale.initial as usize,
+                    )) as Box<dyn ConcurrentSet>
+                }),
+                true,
+                "yes",
+            ),
+        ];
+        for (name, factory, with_size_thread, linearizable) in policies {
+            let mut workload_sum = 0.0;
+            let mut size_sum = 0.0;
+            for i in 0..(scale.repeat.warmup + scale.repeat.runs) {
+                let set = factory();
+                let cfg = scale.config(w, usize::from(with_size_thread), mix, scale.initial);
+                workload::prefill(set.as_ref(), scale.initial, cfg.key_range, scale.seed);
+                let res = run(set.as_ref(), &cfg);
+                if i >= scale.repeat.warmup {
+                    workload_sum += res.workload_throughput();
+                    size_sum += res.size_throughput();
+                }
+                concurrent_size::ebr::collect();
+            }
+            let n = scale.repeat.runs as f64;
+            table.row(&[
+                name.to_string(),
+                fmt_rate(workload_sum / n),
+                if with_size_thread { fmt_rate(size_sum / n) } else { "-".into() },
+                linearizable.to_string(),
+            ]);
+        }
+        table.print();
+    }
+}

@@ -1,0 +1,32 @@
+//! Figure 7 reproduction: overhead of the size mechanism on hash-table
+//! operations (paper Section 9, Fig. 7).
+//!
+//! Grid: {read-heavy, update-heavy} × {no size thread, 1 size thread} ×
+//! thread ladder; reports baseline vs transformed throughput and the ratio
+//! (the paper observes ratios of 80–99%).
+
+use concurrent_size::bench_util::{overhead_figure, BenchScale};
+use concurrent_size::cli::Args;
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{LinearizableSize, NoSize};
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let scale = BenchScale::from_args(&Args::from_env());
+    overhead_figure(
+        "Figure 7",
+        "HashTable",
+        &|initial| {
+            Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, initial as usize))
+                as Box<dyn ConcurrentSet>
+        },
+        &|initial| {
+            Box::new(HashTableSet::<LinearizableSize>::new(
+                MAX_THREADS,
+                initial as usize,
+            )) as Box<dyn ConcurrentSet>
+        },
+        &scale,
+    );
+}

@@ -1,0 +1,20 @@
+//! Figure 8 reproduction: overhead of the size mechanism on BST operations
+//! (paper Section 9, Fig. 8). Same grid as Figure 7.
+
+use concurrent_size::bench_util::{overhead_figure, BenchScale};
+use concurrent_size::bst::BstSet;
+use concurrent_size::cli::Args;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{LinearizableSize, NoSize};
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let scale = BenchScale::from_args(&Args::from_env());
+    overhead_figure(
+        "Figure 8",
+        "BST",
+        &|_| Box::new(BstSet::<NoSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>,
+        &|_| Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>,
+        &scale,
+    );
+}

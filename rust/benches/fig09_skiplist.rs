@@ -1,0 +1,20 @@
+//! Figure 9 reproduction: overhead of the size mechanism on skip-list
+//! operations (paper Section 9, Fig. 9). Same grid as Figure 7.
+
+use concurrent_size::bench_util::{overhead_figure, BenchScale};
+use concurrent_size::cli::Args;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{LinearizableSize, NoSize};
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let scale = BenchScale::from_args(&Args::from_env());
+    overhead_figure(
+        "Figure 9",
+        "SkipList",
+        &|_| Box::new(SkipListSet::<NoSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>,
+        &|_| Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>,
+        &scale,
+    );
+}

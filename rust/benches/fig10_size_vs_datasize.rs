@@ -1,0 +1,66 @@
+//! Figure 10 reproduction: size-thread throughput as a function of the
+//! data-structure size (paper Section 9, Fig. 10).
+//!
+//! The paper's claim: the methodology's `size()` is **insensitive to the
+//! data-structure size** (it reads 2·#threads counters, never the
+//! structure). The curves here should be flat across the size sweep, in
+//! contrast to the snapshot competitors of Figure 11.
+//!
+//! Setup (scaled): 1 size thread + `--workload-threads` workload threads,
+//! per the paper's "one size thread and 31 workload threads".
+
+use concurrent_size::bench_util::{measure_size_tput, BenchScale, MIXES};
+use concurrent_size::bst::BstSet;
+use concurrent_size::cli::Args;
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::metrics::{fmt_rate, Table};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::LinearizableSize;
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let w = args.get_usize("workload-threads", 3);
+
+    println!("=== Figure 10: size throughput vs data-structure size ===");
+    println!(
+        "(sizes={:?}, {w} workload threads + 1 size thread; paper: 1M/10M/100M, 31+1 threads)",
+        scale.sizes
+    );
+
+    let factories: Vec<(&str, concurrent_size::bench_util::SetFactory)> = vec![
+        ("SizeHashTable", &|initial| {
+            Box::new(HashTableSet::<LinearizableSize>::new(
+                MAX_THREADS,
+                initial as usize,
+            )) as Box<dyn ConcurrentSet>
+        }),
+        ("SizeSkipList", &|_| {
+            Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>
+        }),
+        ("SizeBST", &|_| {
+            Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>
+        }),
+    ];
+
+    for mix in MIXES {
+        println!("\n-- {} workload --", mix.label());
+        let mut table = Table::new(&["structure", "data size", "size ops/s", "CoV %"]);
+        for (name, factory) in &factories {
+            for &n in &scale.sizes {
+                let cfg = scale.config(w, 1, mix, n);
+                let stats = measure_size_tput(*factory, &scale, &cfg, n);
+                table.row(&[
+                    name.to_string(),
+                    n.to_string(),
+                    fmt_rate(stats.mean),
+                    format!("{:.1}", 100.0 * stats.cov()),
+                ]);
+            }
+        }
+        table.print();
+    }
+    println!("\nExpected shape: flat size throughput across data sizes (paper Fig. 10).");
+}

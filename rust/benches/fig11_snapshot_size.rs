@@ -1,0 +1,57 @@
+//! Figure 11 reproduction: snapshot-based size throughput as a function of
+//! the data-structure size (paper Section 9, Fig. 11).
+//!
+//! The competitors pay per-element (SnapshotSkipList) or per-64-element-leaf
+//! (VcasBST-64 model) costs, so their size throughput *degrades* as the
+//! structure grows — the contrast to Figure 10's flat curves. The paper
+//! reports SnapshotSkipList at ~1 size/s on 1M keys and quotes
+//! SizeSkipList ≥ 54806× SnapshotSkipList, SizeBST 83–60423× VcasBST-64.
+
+use concurrent_size::bench_util::{measure_size_tput, BenchScale, MIXES};
+use concurrent_size::cli::Args;
+use concurrent_size::metrics::{fmt_rate, Table};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::snapshot::SnapshotSkipList;
+use concurrent_size::vcas::VcasSet;
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let w = args.get_usize("workload-threads", 3);
+
+    println!("=== Figure 11: snapshot-based size throughput vs data-structure size ===");
+    println!(
+        "(sizes={:?}, {w} workload threads + 1 size thread)",
+        scale.sizes
+    );
+
+    let factories: Vec<(&str, concurrent_size::bench_util::SetFactory)> = vec![
+        ("SnapshotSkipList", &|_| {
+            Box::new(SnapshotSkipList::new(MAX_THREADS)) as Box<dyn ConcurrentSet>
+        }),
+        ("VcasSet-64", &|initial| {
+            Box::new(VcasSet::new(MAX_THREADS, initial as usize)) as Box<dyn ConcurrentSet>
+        }),
+    ];
+
+    for mix in MIXES {
+        println!("\n-- {} workload --", mix.label());
+        let mut table = Table::new(&["structure", "data size", "size ops/s", "CoV %"]);
+        for (name, factory) in &factories {
+            for &n in &scale.sizes {
+                let cfg = scale.config(w, 1, mix, n);
+                let stats = measure_size_tput(*factory, &scale, &cfg, n);
+                table.row(&[
+                    name.to_string(),
+                    n.to_string(),
+                    fmt_rate(stats.mean),
+                    format!("{:.1}", 100.0 * stats.cov()),
+                ]);
+            }
+        }
+        table.print();
+    }
+    println!("\nExpected shape: size throughput degrades with data size (paper Fig. 11),");
+    println!("with VcasSet-64 well above SnapshotSkipList but well below Figure 10.");
+}

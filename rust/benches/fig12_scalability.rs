@@ -1,0 +1,72 @@
+//! Figure 12 reproduction: size-operation scalability (paper Section 9,
+//! Fig. 12).
+//!
+//! `s` size threads (ladder) run against a fixed pool of workload threads;
+//! the paper's claim is that total size throughput *grows* with `s` for the
+//! transformed structures, while the snapshot competitors sit orders of
+//! magnitude below.
+
+use concurrent_size::bench_util::{measure_size_tput, BenchScale, MIXES};
+use concurrent_size::bst::BstSet;
+use concurrent_size::cli::Args;
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::metrics::{fmt_rate, Table};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::LinearizableSize;
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::snapshot::SnapshotSkipList;
+use concurrent_size::vcas::VcasSet;
+use concurrent_size::MAX_THREADS;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let w = args.get_usize("workload-threads", 2);
+
+    println!("=== Figure 12: size scalability ===");
+    println!(
+        "(initial={} keys, {w} workload threads, size-thread ladder {:?}; paper: 32 workload, s=1..16)",
+        scale.initial, scale.size_threads
+    );
+
+    let factories: Vec<(&str, concurrent_size::bench_util::SetFactory)> = vec![
+        ("SizeHashTable", &|initial| {
+            Box::new(HashTableSet::<LinearizableSize>::new(
+                MAX_THREADS,
+                initial as usize,
+            )) as Box<dyn ConcurrentSet>
+        }),
+        ("SizeSkipList", &|_| {
+            Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>
+        }),
+        ("SizeBST", &|_| {
+            Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)) as Box<dyn ConcurrentSet>
+        }),
+        ("SnapshotSkipList", &|_| {
+            Box::new(SnapshotSkipList::new(MAX_THREADS)) as Box<dyn ConcurrentSet>
+        }),
+        ("VcasSet-64", &|initial| {
+            Box::new(VcasSet::new(MAX_THREADS, initial as usize)) as Box<dyn ConcurrentSet>
+        }),
+    ];
+
+    for mix in MIXES {
+        println!("\n-- {} workload --", mix.label());
+        let mut table = Table::new(&["structure", "size threads", "total size ops/s", "CoV %"]);
+        for (name, factory) in &factories {
+            for &s in &scale.size_threads {
+                let cfg = scale.config(w, s, mix, scale.initial);
+                let stats = measure_size_tput(*factory, &scale, &cfg, scale.initial);
+                table.row(&[
+                    name.to_string(),
+                    s.to_string(),
+                    fmt_rate(stats.mean),
+                    format!("{:.1}", 100.0 * stats.cov()),
+                ]);
+            }
+        }
+        table.print();
+    }
+    println!("\nExpected shape: transformed structures' total size throughput grows with s");
+    println!("and sits orders of magnitude above the snapshot competitors (paper Fig. 12).");
+}

@@ -1,0 +1,96 @@
+//! Figure 13 reproduction: overhead breakdown by operation type (paper
+//! Section 9.1, Fig. 13).
+//!
+//! As in the paper, each workload thread repeatedly picks a uniform type
+//! for its next 100 operations and times the batch, yielding per-type
+//! throughput; the table reports transformed/baseline ratios per type.
+//! The paper observes the highest loss for insert and the lowest for
+//! contains.
+
+use std::time::Duration;
+
+use concurrent_size::bench_util::{BenchScale, MIXES};
+use concurrent_size::bst::BstSet;
+use concurrent_size::cli::Args;
+use concurrent_size::harness::{run, RunConfig};
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::metrics::Table;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{LinearizableSize, NoSize};
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::workload::{self, key_range, OpType};
+use concurrent_size::MAX_THREADS;
+
+fn per_type(set: &dyn ConcurrentSet, scale: &BenchScale, cfg: &RunConfig) -> [f64; 3] {
+    workload::prefill(set, scale.initial, cfg.key_range, scale.seed ^ 0xF111);
+    let res = run(set, cfg);
+    [
+        res.type_throughput(OpType::Insert),
+        res.type_throughput(OpType::Delete),
+        res.type_throughput(OpType::Contains),
+    ]
+}
+
+fn main() {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let w = args.get_usize("workload-threads", 4);
+
+    println!("=== Figure 13: overhead breakdown by operation type ===");
+    println!(
+        "(initial={} keys, {w} workload threads, 100-op uniform batches)",
+        scale.initial
+    );
+
+    for mix in MIXES {
+        // Fresh structures per mix: prefill must start from empty.
+        let pairs: Vec<(&str, Box<dyn ConcurrentSet>, Box<dyn ConcurrentSet>)> = vec![
+            (
+                "HashTable",
+                Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, scale.initial as usize)),
+                Box::new(HashTableSet::<LinearizableSize>::new(
+                    MAX_THREADS,
+                    scale.initial as usize,
+                )),
+            ),
+            (
+                "SkipList",
+                Box::new(SkipListSet::<NoSize>::new(MAX_THREADS)),
+                Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)),
+            ),
+            (
+                "BST",
+                Box::new(BstSet::<NoSize>::new(MAX_THREADS)),
+                Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)),
+            ),
+        ];
+        println!("\n-- {} workload --", mix.label());
+        let mut table = Table::new(&[
+            "structure",
+            "insert %",
+            "delete %",
+            "contains %",
+            "combined %",
+        ]);
+        for (name, baseline, transformed) in &pairs {
+            let mut cfg = RunConfig::new(w, 0, mix, key_range(scale.initial, mix));
+            cfg.duration = Duration::from_secs_f64(scale.secs);
+            cfg.per_type_timing = true;
+            cfg.seed = scale.seed;
+            let base = per_type(baseline.as_ref(), &scale, &cfg);
+            let tr = per_type(transformed.as_ref(), &scale, &cfg);
+            let ratio = |i: usize| 100.0 * tr[i] / base[i];
+            let combined =
+                100.0 * (tr[0] + tr[1] + tr[2]) / (base[0] + base[1] + base[2]);
+            table.row(&[
+                name.to_string(),
+                format!("{:.1}", ratio(0)),
+                format!("{:.1}", ratio(1)),
+                format!("{:.1}", ratio(2)),
+                format!("{combined:.1}"),
+            ]);
+        }
+        table.print();
+    }
+    println!("\nExpected shape: insert loses the most, contains the least (paper Fig. 13).");
+}

@@ -1,0 +1,157 @@
+//! Epoch analytics: periodic metadata sampling fed through the
+//! AOT-compiled Pallas pipeline.
+//!
+//! A run is divided into *epochs*; at each epoch boundary the coordinator
+//! samples (a) the linearizable `size()` and (b) the raw per-thread
+//! metadata counters of the [`crate::size::SizeCalculator`]. Offline, the
+//! PJRT pipeline reduces the counter samples to per-epoch sizes
+//! (`size_reduce` kernel) and the validator checks invariants.
+//!
+//! Exactness note: raw counter samples are taken cell-by-cell and are not
+//! by themselves linearizable (that is the paper's whole point!). They are
+//! recorded at *near-quiescent* epoch boundaries for trend analytics; the
+//! final epoch is taken at full quiescence, where the pipeline's size must
+//! equal the linearizable `size()` bit-exactly — asserted by the e2e
+//! example and the integration tests.
+
+use crate::runtime::Artifacts;
+use crate::size::SizeCalculator;
+
+/// One epoch sample.
+#[derive(Clone, Debug)]
+pub struct EpochSample {
+    /// Raw per-thread `[insertions, deletions]` counters.
+    pub counters: Vec<[u64; 2]>,
+    /// The linearizable size at (about) the same moment.
+    pub linearizable_size: i64,
+}
+
+/// Collects epoch samples during a run.
+#[derive(Default)]
+pub struct EpochRecorder {
+    samples: Vec<EpochSample>,
+}
+
+impl EpochRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sample `calc` now.
+    pub fn record(&mut self, calc: &SizeCalculator) {
+        self.samples.push(EpochSample {
+            counters: calc.sample_counters(),
+            linearizable_size: calc.compute(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[EpochSample] {
+        &self.samples
+    }
+}
+
+/// The artifact-computed report over an epoch recording.
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    /// Pallas-computed per-epoch sizes (from raw counter samples).
+    pub pallas_sizes: Vec<i64>,
+    /// Linearizable sizes observed online.
+    pub linearizable_sizes: Vec<i64>,
+    /// Per-epoch size deltas.
+    pub deltas: Vec<i64>,
+}
+
+impl EpochReport {
+    /// Max |pallas − linearizable| across epochs (sampling skew; must be 0
+    /// at quiescent epochs).
+    pub fn max_skew(&self) -> i64 {
+        self.pallas_sizes
+            .iter()
+            .zip(&self.linearizable_sizes)
+            .map(|(a, b)| (a - b).abs())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Exactness at the final (quiescent) epoch.
+    pub fn final_exact(&self) -> bool {
+        match (self.pallas_sizes.last(), self.linearizable_sizes.last()) {
+            (Some(a), Some(b)) => a == b,
+            _ => true,
+        }
+    }
+}
+
+/// Run the recorded epochs through the PJRT pipeline.
+pub fn analyze(artifacts: &Artifacts, rec: &EpochRecorder) -> anyhow::Result<EpochReport> {
+    let counters: Vec<Vec<[u64; 2]>> =
+        rec.samples().iter().map(|s| s.counters.clone()).collect();
+    let pallas_sizes = artifacts.epoch_sizes(&counters)?;
+    let linearizable_sizes: Vec<i64> =
+        rec.samples().iter().map(|s| s.linearizable_size).collect();
+    let deltas: Vec<i64> = pallas_sizes
+        .iter()
+        .scan(0i64, |prev, &s| {
+            let d = s - *prev;
+            *prev = s;
+            Some(d)
+        })
+        .collect();
+    Ok(EpochReport {
+        pallas_sizes,
+        linearizable_sizes,
+        deltas,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::{OpKind, SizeOpts, UpdateInfo};
+
+    #[test]
+    fn recorder_snapshots_counters() {
+        let calc = SizeCalculator::new(4, SizeOpts::default());
+        let mut rec = EpochRecorder::new();
+        rec.record(&calc);
+        calc.update_metadata(UpdateInfo { tid: 0, counter: 1 }.pack(), OpKind::Insert);
+        rec.record(&calc);
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.samples()[0].linearizable_size, 0);
+        assert_eq!(rec.samples()[1].linearizable_size, 1);
+        assert_eq!(rec.samples()[1].counters[0][0], 1);
+    }
+
+    #[test]
+    fn analyze_agrees_with_linearizable_at_quiescence() {
+        let artifacts = match Artifacts::load_default() {
+            Ok(a) => a,
+            Err(_) => return, // artifacts not built in this context
+        };
+        let calc = SizeCalculator::new(4, SizeOpts::default());
+        let mut rec = EpochRecorder::new();
+        for c in 1..=20u64 {
+            calc.update_metadata(UpdateInfo { tid: 1, counter: c }.pack(), OpKind::Insert);
+            if c % 2 == 0 {
+                calc.update_metadata(UpdateInfo { tid: 1, counter: c / 2 }.pack(), OpKind::Delete);
+            }
+            rec.record(&calc);
+        }
+        let report = analyze(&artifacts, &rec).unwrap();
+        // All samples here are quiescent: zero skew everywhere.
+        assert_eq!(report.max_skew(), 0);
+        assert!(report.final_exact());
+        assert_eq!(*report.pallas_sizes.last().unwrap(), 10);
+        // Deltas telescope back to the sizes.
+        let resum: i64 = report.deltas.iter().sum();
+        assert_eq!(resum, 10);
+    }
+}

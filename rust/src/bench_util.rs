@@ -1,0 +1,203 @@
+//! Shared scaffolding for the figure-reproduction benches
+//! (`rust/benches/fig*.rs`).
+//!
+//! Every bench accepts the same overrides so the paper-scale experiment is
+//! one flag away from the CI-scale default:
+//! `--threads 1,2,4,8` `--secs 0.5` `--runs 2` `--warmup 1`
+//! `--initial 20000` `--sizes 10000,50000,200000` `--seed 42`.
+//!
+//! Scale notes (DESIGN.md §2): this container exposes a single core, so
+//! thread ladders default to ≤ 8 (the paper uses up to 64 hardware
+//! threads) and data sizes to ≤ 200K (paper: 1M–100M). The reported
+//! quantities are the *relative* ones the paper's claims are about.
+
+use std::time::Duration;
+
+use crate::cli::Args;
+use crate::harness::{run, Repeat, RunConfig};
+use crate::metrics::{fmt_rate, Stats, Table};
+use crate::set_api::ConcurrentSet;
+use crate::workload::{self, key_range, Mix, READ_HEAVY, UPDATE_HEAVY};
+
+/// Common bench scale, assembled from CLI/env overrides.
+#[derive(Clone, Debug)]
+pub struct BenchScale {
+    pub threads: Vec<usize>,
+    pub size_threads: Vec<usize>,
+    pub secs: f64,
+    pub repeat: Repeat,
+    pub initial: u64,
+    pub sizes: Vec<u64>,
+    pub seed: u64,
+}
+
+impl BenchScale {
+    pub fn from_args(args: &Args) -> Self {
+        Self {
+            threads: args
+                .get_u64_list("threads", &[1, 2, 4, 8])
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            size_threads: args
+                .get_u64_list("size-threads", &[1, 2, 4, 8])
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            secs: args.get_f64("secs", 0.4),
+            repeat: Repeat {
+                warmup: args.get_usize("warmup", 1),
+                runs: args.get_usize("runs", 2),
+            },
+            initial: args.get_u64("initial", 20_000),
+            sizes: args.get_u64_list("sizes", &[10_000, 50_000, 200_000]),
+            seed: args.get_u64("seed", 42),
+        }
+    }
+
+    pub fn config(&self, w: usize, s: usize, mix: Mix, initial: u64) -> RunConfig {
+        let mut cfg = RunConfig::new(w, s, mix, key_range(initial, mix));
+        cfg.duration = Duration::from_secs_f64(self.secs);
+        cfg.seed = self.seed;
+        cfg
+    }
+}
+
+/// Both paper mixes with their labels.
+pub const MIXES: [Mix; 2] = [READ_HEAVY, UPDATE_HEAVY];
+
+/// A named way to build a fresh set for one measured run.
+pub type SetFactory<'a> = &'a (dyn Fn(u64) -> Box<dyn ConcurrentSet> + Sync);
+
+/// Measure mean workload throughput over fresh prefilled sets.
+pub fn measure_workload(factory: SetFactory, scale: &BenchScale, cfg: &RunConfig, initial: u64) -> Stats {
+    measure_metric(factory, scale, cfg, initial, |r| r.workload_throughput())
+}
+
+/// Measure mean size-thread throughput.
+pub fn measure_size_tput(factory: SetFactory, scale: &BenchScale, cfg: &RunConfig, initial: u64) -> Stats {
+    measure_metric(factory, scale, cfg, initial, |r| r.size_throughput())
+}
+
+fn measure_metric(
+    factory: SetFactory,
+    scale: &BenchScale,
+    cfg: &RunConfig,
+    initial: u64,
+    metric: impl Fn(&crate::harness::RunResult) -> f64,
+) -> Stats {
+    let mut samples = Vec::new();
+    for i in 0..(scale.repeat.warmup + scale.repeat.runs) {
+        let set = factory(initial);
+        workload::prefill(set.as_ref(), initial, cfg.key_range, scale.seed ^ 0xF111);
+        let res = run(set.as_ref(), cfg);
+        if i >= scale.repeat.warmup {
+            samples.push(metric(&res));
+        }
+        crate::ebr::collect();
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Figure 1 schedule: a writer inserts a fresh key while a prober runs
+/// `contains(k)` then `size()`; an anomaly is `contains == true` with
+/// `size == 0` (paper Fig. 1). Returns the number of anomalous trials.
+pub fn fig1_anomalies<S: ConcurrentSet>(set: &S, trials: usize) -> usize {
+    use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+    let mut anomalies = 0;
+    for k in 1..=trials as u64 {
+        let hit = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                set.insert(k);
+            });
+            scope.spawn(|| {
+                if set.contains(k) && set.size().unwrap() == 0 {
+                    hit.store(true, SeqCst);
+                }
+            });
+        });
+        anomalies += hit.load(SeqCst) as usize;
+        set.delete(k);
+    }
+    anomalies
+}
+
+/// Figure 2 schedule: per round, `T_ins` inserts a fresh key and `T_del`
+/// races to delete it (its decrement can land before the insert's delayed
+/// increment); the prober counts negative `size()` results (paper Fig. 2).
+pub fn fig2_anomalies<S: ConcurrentSet>(set: &S, rounds: usize) -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
+    let negatives = AtomicUsize::new(0);
+    for k in 1..=rounds as u64 {
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                set.insert(k); // T_ins (its metadata update may lag)
+            });
+            scope.spawn(|| {
+                while !set.delete(k) {
+                    std::hint::spin_loop(); // T_del: delete as soon as visible
+                }
+            });
+            scope.spawn(|| {
+                for _ in 0..64 {
+                    if set.size().unwrap() < 0 {
+                        negatives.fetch_add(1, SeqCst);
+                        break;
+                    }
+                }
+            });
+        });
+    }
+    negatives.load(SeqCst)
+}
+
+/// The Figures 7–9 experiment: baseline vs transformed workload throughput
+/// across the thread ladder, with and without a concurrent size thread.
+pub fn overhead_figure(
+    figure: &str,
+    structure: &str,
+    baseline: SetFactory,
+    transformed: SetFactory,
+    scale: &BenchScale,
+) {
+    println!("=== {figure}: overhead on {structure} operations ===");
+    println!(
+        "(initial={} secs={} runs={}; paper setup: 1M keys, 5s, 10 runs, 64 hw threads)",
+        scale.initial, scale.secs, scale.repeat.runs
+    );
+    for mix in MIXES {
+        for size_thread in [0usize, 1] {
+            println!(
+                "\n-- {} workload{} --",
+                mix.label(),
+                if size_thread == 1 {
+                    " + 1 concurrent size thread"
+                } else {
+                    ""
+                }
+            );
+            let mut table = Table::new(&[
+                "w",
+                "baseline ops/s",
+                &format!("{structure}+size ops/s"),
+                "ratio %",
+                "CoV %",
+            ]);
+            for &w in &scale.threads {
+                let cfg_base = scale.config(w, 0, mix, scale.initial);
+                let base = measure_workload(baseline, scale, &cfg_base, scale.initial);
+                let cfg_tr = scale.config(w, size_thread, mix, scale.initial);
+                let tr = measure_workload(transformed, scale, &cfg_tr, scale.initial);
+                table.row(&[
+                    w.to_string(),
+                    fmt_rate(base.mean),
+                    fmt_rate(tr.mean),
+                    format!("{:.1}", 100.0 * tr.mean / base.mean),
+                    format!("{:.1}", 100.0 * base.cov().max(tr.cov())),
+                ]);
+            }
+            table.print();
+        }
+    }
+}

@@ -1,0 +1,761 @@
+//! Non-blocking external binary search tree (Ellen, Fatourou, Ruppert,
+//! van Breugel, PODC 2010), generic over the size policy.
+//!
+//! Keys live in leaves; internal nodes route. Updates coordinate through
+//! per-internal-node `update` words (`info-pointer | state`), with states
+//! CLEAN / IFLAG / DFLAG / MARK and helping.
+//!
+//! ## The paper's adaptation (Section 4.2 / Section 9)
+//!
+//! The original tree linearizes `delete` at the *unlinking* (dchild CAS).
+//! The size methodology requires delete to linearize at the *marking* step,
+//! so — like the authors — we use the variant where a successful delete is
+//! linearized at the MARK CAS on the parent; the packed delete `UpdateInfo`
+//! rides inside the operation's `Info` record (installed atomically with
+//! the flag/mark, paper Section 4: "a deleteInfo field ... may be simply
+//! placed inside that object"). `helpMarked` updates the size metadata
+//! **before** the dchild unlink, and operations that observe a marked
+//! parent targeting their leaf help the delete reach its metadata
+//! linearization point before treating the key as absent.
+
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+
+use crate::ebr;
+use crate::set_api::ConcurrentSet;
+use crate::size::{SizeOpts, SizePolicy};
+use crate::thread_id;
+
+/// Sentinel keys (Ellen et al.'s ∞1 < ∞2). Application keys must be
+/// `< INF1`.
+const INF1: u64 = u64::MAX - 1;
+const INF2: u64 = u64::MAX;
+/// Largest insertable key for the BST.
+pub const BST_MAX_KEY: u64 = u64::MAX - 2;
+
+// update-word states (low 2 bits of the info pointer)
+const CLEAN: u64 = 0;
+const IFLAG: u64 = 1;
+const DFLAG: u64 = 2;
+const MARK: u64 = 3;
+const STATE_MASK: u64 = 3;
+
+#[inline]
+fn state(word: u64) -> u64 {
+    word & STATE_MASK
+}
+
+#[inline]
+fn info_ptr<P: SizePolicy>(word: u64) -> *mut Info<P> {
+    (word & !STATE_MASK) as *mut Info<P>
+}
+
+struct BstNode<P: SizePolicy> {
+    key: u64,
+    leaf: bool,
+    left: AtomicU64,
+    right: AtomicU64,
+    /// `info-pointer | state`; internal nodes only.
+    update: AtomicU64,
+    /// Published insert `UpdateInfo`; leaves only.
+    insert_info: P::InfoSlot,
+}
+
+impl<P: SizePolicy> BstNode<P> {
+    fn leaf(key: u64) -> *mut Self {
+        Box::into_raw(Box::new(BstNode {
+            key,
+            leaf: true,
+            left: AtomicU64::new(0),
+            right: AtomicU64::new(0),
+            update: AtomicU64::new(0),
+            insert_info: P::InfoSlot::default(),
+        }))
+    }
+
+    fn internal(key: u64, left: u64, right: u64) -> *mut Self {
+        Box::into_raw(Box::new(BstNode {
+            key,
+            leaf: false,
+            left: AtomicU64::new(left),
+            right: AtomicU64::new(right),
+            update: AtomicU64::new(0),
+            insert_info: P::InfoSlot::default(),
+        }))
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+#[allow(dead_code)] // kept for debugging/teardown diagnostics
+enum InfoKind {
+    Insert,
+    Delete,
+}
+
+/// Unified IInfo/DInfo record (one type so teardown can free type-erased
+/// pointers parked in CLEAN update words).
+struct Info<P: SizePolicy> {
+    #[allow(dead_code)] // diagnostic tag; state bits carry the live kind
+    kind: InfoKind,
+    gparent: *mut BstNode<P>,
+    parent: *mut BstNode<P>,
+    leaf: *mut BstNode<P>,
+    new_internal: *mut BstNode<P>,
+    /// The parent's update word captured before flagging (DInfo).
+    pupdate: u64,
+    /// Packed size `UpdateInfo` of the delete (paper: the `deleteInfo`
+    /// field placed inside the operation record). 0 when untracked.
+    packed_delete: u64,
+}
+
+unsafe impl<P: SizePolicy> Send for Info<P> {}
+unsafe impl<P: SizePolicy> Sync for Info<P> {}
+
+struct SearchResult<P: SizePolicy> {
+    gparent: *mut BstNode<P>,
+    parent: *mut BstNode<P>,
+    leaf: *mut BstNode<P>,
+    pupdate: u64,
+    gpupdate: u64,
+}
+
+pub struct BstSet<P: SizePolicy> {
+    root: *mut BstNode<P>,
+    policy: P,
+    graveyard: Graveyard,
+}
+
+unsafe impl<P: SizePolicy> Send for BstSet<P> {}
+unsafe impl<P: SizePolicy> Sync for BstSet<P> {}
+
+impl<P: SizePolicy> BstSet<P> {
+    pub fn new(max_threads: usize) -> Self {
+        Self::with_opts(max_threads, SizeOpts::default())
+    }
+
+    pub fn with_opts(max_threads: usize, opts: SizeOpts) -> Self {
+        Self::with_policy(P::new(max_threads, opts))
+    }
+
+    pub fn with_policy(policy: P) -> Self {
+        let l1 = BstNode::<P>::leaf(INF1);
+        let l2 = BstNode::<P>::leaf(INF2);
+        Self {
+            root: BstNode::<P>::internal(INF2, l1 as u64, l2 as u64),
+            policy,
+            graveyard: Graveyard::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &P {
+        &self.policy
+    }
+
+    /// Ellen et al. Search: returns gparent/parent/leaf and the update
+    /// words read *before* following the child pointers.
+    fn search(&self, k: u64) -> SearchResult<P> {
+        let mut gparent: *mut BstNode<P> = std::ptr::null_mut();
+        let mut parent: *mut BstNode<P> = std::ptr::null_mut();
+        let mut gpupdate = 0u64;
+        let mut pupdate = 0u64;
+        let mut l = self.root;
+        while !unsafe { &*l }.leaf {
+            gparent = parent;
+            parent = l;
+            gpupdate = pupdate;
+            let p = unsafe { &*parent };
+            pupdate = p.update.load(SeqCst);
+            l = if k < p.key {
+                p.left.load(SeqCst) as *mut BstNode<P>
+            } else {
+                p.right.load(SeqCst) as *mut BstNode<P>
+            };
+        }
+        SearchResult {
+            gparent,
+            parent,
+            leaf: l,
+            pupdate,
+            gpupdate,
+        }
+    }
+
+    /// Swap `old` for `new` among `parent`'s children (side determined by
+    /// the current value — a child pointer never migrates sides).
+    fn cas_child(parent: *mut BstNode<P>, old: u64, new: u64) -> bool {
+        let p = unsafe { &*parent };
+        if p.left.load(SeqCst) == old {
+            p.left.compare_exchange(old, new, SeqCst, SeqCst).is_ok()
+        } else if p.right.load(SeqCst) == old {
+            p.right.compare_exchange(old, new, SeqCst, SeqCst).is_ok()
+        } else {
+            false
+        }
+    }
+
+    /// Generic helping dispatch on an update word.
+    fn help(&self, word: u64) {
+        if word == 0 {
+            return;
+        }
+        let info = info_ptr::<P>(word);
+        match state(word) {
+            IFLAG => self.help_insert_op(info),
+            MARK => self.help_marked(info),
+            DFLAG => {
+                self.help_delete_op(info);
+            }
+            _ => {}
+        }
+    }
+
+    /// IFLAG helper: perform the ichild CAS, then unflag.
+    fn help_insert_op(&self, info: *mut Info<P>) {
+        let i = unsafe { &*info };
+        Self::cas_child(i.parent, i.leaf as u64, i.new_internal as u64);
+        let flag_word = info as u64 | IFLAG;
+        let _ = unsafe { &*i.parent }.update.compare_exchange(
+            flag_word,
+            info as u64 | CLEAN,
+            SeqCst,
+            SeqCst,
+        );
+    }
+
+    /// DFLAG helper: try to MARK the parent; on success finish via
+    /// [`Self::help_marked`], otherwise help the obstruction and unflag.
+    /// Returns whether the delete operation owning `info` succeeded.
+    fn help_delete_op(&self, info: *mut Info<P>) -> bool {
+        let d = unsafe { &*info };
+        let mark_word = info as u64 | MARK;
+        let p_update = unsafe { &*d.parent }.update.compare_exchange(
+            d.pupdate,
+            mark_word,
+            SeqCst,
+            SeqCst,
+        );
+        match p_update {
+            Ok(_) => {
+                // The MARK CAS is the (adapted) original linearization point
+                // of the delete. Retire the info parked in the replaced
+                // CLEAN word.
+                self.park_info(d.pupdate);
+                self.help_marked(info);
+                true
+            }
+            Err(witnessed) if witnessed == mark_word => {
+                self.help_marked(info); // another helper marked for us
+                true
+            }
+            Err(witnessed) => {
+                self.help(witnessed);
+                // Backtrack: unflag the grandparent (same info pointer).
+                let _ = unsafe { &*d.gparent }.update.compare_exchange(
+                    info as u64 | DFLAG,
+                    info as u64 | CLEAN,
+                    SeqCst,
+                    SeqCst,
+                );
+                false
+            }
+        }
+    }
+
+    /// MARK helper. Paper adaptation: the delete's metadata is updated
+    /// **before** the dchild unlink (Section 4: "Metadata is updated before
+    /// unlinking a marked node").
+    fn help_marked(&self, info: *mut Info<P>) {
+        let d = unsafe { &*info };
+        if P::TRACKED {
+            self.policy.commit_delete(d.packed_delete);
+        }
+        let p = unsafe { &*d.parent };
+        let l = d.leaf as u64;
+        let left = p.left.load(SeqCst);
+        let sibling = if left == l { p.right.load(SeqCst) } else { left };
+        if Self::cas_child(d.gparent, d.parent as u64, sibling) {
+            self.graveyard.push(d.parent as u64);
+            self.graveyard.push(d.leaf as u64);
+        }
+        let _ = unsafe { &*d.gparent }.update.compare_exchange(
+            info as u64 | DFLAG,
+            info as u64 | CLEAN,
+            SeqCst,
+            SeqCst,
+        );
+    }
+
+    /// Park the info record of a replaced CLEAN update word.
+    fn park_info(&self, word: u64) {
+        let ptr = info_ptr::<P>(word);
+        if !ptr.is_null() {
+            self.graveyard.push(ptr as u64 | GRAVE_INFO);
+        }
+    }
+
+    /// Is `leaf` the target of a MARK on its parent (i.e., logically
+    /// deleted under the adapted linearization)? Returns its packed
+    /// delete-info.
+    fn marked_delete_of(pupdate: u64, leaf: *mut BstNode<P>) -> Option<u64> {
+        if state(pupdate) == MARK {
+            let d = unsafe { &*info_ptr::<P>(pupdate) };
+            if d.leaf == leaf {
+                return Some(d.packed_delete);
+            }
+        }
+        None
+    }
+
+    /// Quiescent full count of real leaves (tests).
+    pub fn quiescent_count(&self) -> usize {
+        fn walk<P: SizePolicy>(node: *mut BstNode<P>) -> usize {
+            let n = unsafe { &*node };
+            if n.leaf {
+                return usize::from(n.key < INF1);
+            }
+            walk::<P>(n.left.load(SeqCst) as *mut BstNode<P>)
+                + walk::<P>(n.right.load(SeqCst) as *mut BstNode<P>)
+        }
+        let _g = ebr::pin();
+        walk::<P>(self.root)
+    }
+}
+
+/// Structure-lifetime deferred reclamation (see the skip list's
+/// `Graveyard` rationale in DESIGN.md): retired nodes and info records are
+/// parked and freed at `Drop`, deduplicated against the reachability walk,
+/// eliminating any use-after-free window in the helping protocol.
+struct Graveyard {
+    head: AtomicU64,
+}
+
+struct GraveEntry {
+    /// Tagged pointer: bit 0 set = info record, clear = tree node.
+    tagged: u64,
+    next: u64,
+}
+
+const GRAVE_INFO: u64 = 1;
+
+impl Graveyard {
+    fn new() -> Self {
+        Self { head: AtomicU64::new(0) }
+    }
+
+    fn push(&self, tagged: u64) {
+        let entry = Box::into_raw(Box::new(GraveEntry { tagged, next: 0 }));
+        loop {
+            let head = self.head.load(SeqCst);
+            unsafe { &mut *entry }.next = head;
+            if self.head.compare_exchange(head, entry as u64, SeqCst, SeqCst).is_ok() {
+                return;
+            }
+        }
+    }
+
+    fn drain(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut e = self.head.swap(0, SeqCst) as *mut GraveEntry;
+        while !e.is_null() {
+            let entry = unsafe { Box::from_raw(e) };
+            out.push(entry.tagged);
+            e = entry.next as *mut GraveEntry;
+        }
+        out
+    }
+}
+
+impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
+    fn insert(&self, k: u64) -> bool {
+        debug_assert!(k <= BST_MAX_KEY);
+        let _guard = ebr::pin();
+        let _op = self.policy.enter();
+        let tid = thread_id::current();
+
+        let packed = self.policy.begin_insert(tid);
+        let mut new_leaf: *mut BstNode<P> = std::ptr::null_mut();
+        let mut new_internal: *mut BstNode<P> = std::ptr::null_mut();
+
+        loop {
+            let s = self.search(k);
+            let l = unsafe { &*s.leaf };
+            if l.key == k {
+                // Present — unless a linearized (marked) delete targets it,
+                // in which case help it finish, then retry (Fig. 3 ll.19-21).
+                if let Some(dpacked) = Self::marked_delete_of(s.pupdate, s.leaf) {
+                    if P::TRACKED {
+                        self.policy.commit_delete(dpacked);
+                    }
+                    self.help(s.pupdate);
+                    continue;
+                }
+                self.policy.help_insert(&l.insert_info); // Fig. 3 ll.17-18
+                unsafe { free_unpublished(new_leaf, new_internal) };
+                return false;
+            }
+            if state(s.pupdate) != CLEAN {
+                self.help(s.pupdate);
+                continue;
+            }
+            if new_leaf.is_null() {
+                new_leaf = BstNode::<P>::leaf(k);
+                P::stash_insert_info(unsafe { &(*new_leaf).insert_info }, packed);
+                new_internal = BstNode::<P>::internal(0, 0, 0);
+            }
+            // (Re)aim the new internal node at the current sibling leaf.
+            let ni = unsafe { &mut *new_internal };
+            ni.key = k.max(l.key);
+            if k < l.key {
+                *ni.left.get_mut() = new_leaf as u64;
+                *ni.right.get_mut() = s.leaf as u64;
+            } else {
+                *ni.left.get_mut() = s.leaf as u64;
+                *ni.right.get_mut() = new_leaf as u64;
+            }
+            let info = Box::into_raw(Box::new(Info::<P> {
+                kind: InfoKind::Insert,
+                gparent: std::ptr::null_mut(),
+                parent: s.parent,
+                leaf: s.leaf,
+                new_internal,
+                pupdate: 0,
+                packed_delete: 0,
+            }));
+            match unsafe { &*s.parent }.update.compare_exchange(
+                s.pupdate,
+                info as u64 | IFLAG,
+                SeqCst,
+                SeqCst,
+            ) {
+                Ok(_) => {
+                    self.park_info(s.pupdate);
+                    self.help_insert_op(info);
+                    // Original linearization (ichild) passed: reach the new
+                    // linearization point (Fig. 3 line 25).
+                    self.policy
+                        .commit_insert(unsafe { &(*new_leaf).insert_info }, packed);
+                    return true;
+                }
+                Err(witnessed) => {
+                    drop(unsafe { Box::from_raw(info) }); // never published
+                    self.help(witnessed);
+                }
+            }
+        }
+    }
+
+    fn delete(&self, k: u64) -> bool {
+        let _guard = ebr::pin();
+        let _op = self.policy.enter();
+        let tid = thread_id::current();
+
+        let packed = self.policy.begin_delete(tid);
+
+        loop {
+            let s = self.search(k);
+            let l = unsafe { &*s.leaf };
+            if l.key != k {
+                return false; // Fig. 3 line 29
+            }
+            // Fig. 3 line 33: ensure the found node's insert is linearized.
+            self.policy.help_insert(&l.insert_info);
+            // Found but already logically deleted (marked): help its
+            // metadata, fail (Fig. 3 ll.30-32).
+            if let Some(dpacked) = Self::marked_delete_of(s.pupdate, s.leaf) {
+                if P::TRACKED {
+                    self.policy.commit_delete(dpacked);
+                }
+                return false;
+            }
+            if state(s.gpupdate) != CLEAN {
+                self.help(s.gpupdate);
+                continue;
+            }
+            if state(s.pupdate) != CLEAN {
+                self.help(s.pupdate);
+                continue;
+            }
+            if s.gparent.is_null() {
+                return false; // only sentinel leaves sit at depth 1
+            }
+            let info = Box::into_raw(Box::new(Info::<P> {
+                kind: InfoKind::Delete,
+                gparent: s.gparent,
+                parent: s.parent,
+                leaf: s.leaf,
+                new_internal: std::ptr::null_mut(),
+                pupdate: s.pupdate,
+                packed_delete: packed,
+            }));
+            match unsafe { &*s.gparent }.update.compare_exchange(
+                s.gpupdate,
+                info as u64 | DFLAG,
+                SeqCst,
+                SeqCst,
+            ) {
+                Ok(_) => {
+                    self.park_info(s.gpupdate);
+                    if self.help_delete_op(info) {
+                        if !P::TRACKED {
+                            self.policy.commit_delete(0); // naive/lock bump
+                        }
+                        return true;
+                    }
+                    // Backtracked: retry with a fresh info record.
+                }
+                Err(witnessed) => {
+                    drop(unsafe { Box::from_raw(info) }); // never published
+                    self.help(witnessed);
+                }
+            }
+        }
+    }
+
+    fn contains(&self, k: u64) -> bool {
+        let _guard = ebr::pin();
+        let _op = self.policy.enter();
+
+        let s = self.search(k);
+        let l = unsafe { &*s.leaf };
+        if l.key != k {
+            return false;
+        }
+        if let Some(dpacked) = Self::marked_delete_of(s.pupdate, s.leaf) {
+            // Logically deleted under the adapted linearization: help its
+            // metadata before reporting absence (Fig. 3 ll.12-13).
+            if P::TRACKED {
+                self.policy.commit_delete(dpacked);
+            }
+            return false;
+        }
+        self.policy.help_insert(&l.insert_info); // Fig. 3 ll.9-10
+        true
+    }
+
+    fn size(&self) -> Option<i64> {
+        self.policy.size()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "BST<{}>",
+            std::any::type_name::<P>().rsplit("::").next().unwrap()
+        )
+    }
+}
+
+/// Free insert-path allocations that were never published.
+unsafe fn free_unpublished<P: SizePolicy>(
+    new_leaf: *mut BstNode<P>,
+    new_internal: *mut BstNode<P>,
+) {
+    if !new_leaf.is_null() {
+        drop(unsafe { Box::from_raw(new_leaf) });
+    }
+    if !new_internal.is_null() {
+        drop(unsafe { Box::from_raw(new_internal) });
+    }
+}
+
+impl<P: SizePolicy> Drop for BstSet<P> {
+    fn drop(&mut self) {
+        // Free nodes and info records exactly once: the union of the
+        // reachability walk (nodes + infos parked in CLEAN update words)
+        // and the graveyard, deduplicated.
+        let mut nodes = std::collections::HashSet::new();
+        let mut infos = std::collections::HashSet::new();
+        let mut stack = vec![self.root];
+        while let Some(node) = stack.pop() {
+            if !nodes.insert(node as usize) {
+                continue;
+            }
+            let n = unsafe { &*node };
+            if !n.leaf {
+                stack.push(n.left.load(SeqCst) as *mut BstNode<P>);
+                stack.push(n.right.load(SeqCst) as *mut BstNode<P>);
+                let info = info_ptr::<P>(n.update.load(SeqCst));
+                if !info.is_null() {
+                    infos.insert(info as usize);
+                }
+            }
+        }
+        for tagged in self.graveyard.drain() {
+            if tagged & GRAVE_INFO != 0 {
+                infos.insert((tagged & !GRAVE_INFO) as usize);
+            } else {
+                nodes.insert(tagged as usize);
+            }
+        }
+        for &n in &nodes {
+            drop(unsafe { Box::from_raw(n as *mut BstNode<P>) });
+        }
+        for &i in &infos {
+            drop(unsafe { Box::from_raw(i as *mut Info<P>) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::{LinearizableSize, NoSize};
+    use std::sync::Arc;
+
+    fn bst() -> BstSet<LinearizableSize> {
+        BstSet::new(crate::MAX_THREADS)
+    }
+
+    #[test]
+    fn basic_ops() {
+        let t = bst();
+        assert!(!t.contains(10));
+        assert!(t.insert(10));
+        assert!(!t.insert(10));
+        assert!(t.contains(10));
+        assert!(t.delete(10));
+        assert!(!t.delete(10));
+        assert!(!t.contains(10));
+        assert_eq!(t.size(), Some(0));
+    }
+
+    #[test]
+    fn sequential_bulk() {
+        let t = bst();
+        for k in 0..1000u64 {
+            assert!(t.insert(k));
+        }
+        assert_eq!(t.size(), Some(1000));
+        assert_eq!(t.quiescent_count(), 1000);
+        for k in (0..1000u64).step_by(3) {
+            assert!(t.delete(k));
+        }
+        let expected = 1000 - 1000usize.div_ceil(3);
+        assert_eq!(t.size(), Some(expected as i64));
+        assert_eq!(t.quiescent_count(), expected);
+    }
+
+    #[test]
+    fn random_shape() {
+        let t = bst();
+        let mut rng = crate::rng::Xoshiro256::new(13);
+        let mut model = std::collections::BTreeSet::new();
+        for _ in 0..4000 {
+            let k = rng.gen_range(300);
+            match rng.gen_range(3) {
+                0 => assert_eq!(t.insert(k), model.insert(k), "insert {k}"),
+                1 => assert_eq!(t.delete(k), model.remove(&k), "delete {k}"),
+                _ => assert_eq!(t.contains(k), model.contains(&k), "contains {k}"),
+            }
+        }
+        assert_eq!(t.size(), Some(model.len() as i64));
+        assert_eq!(t.quiescent_count(), model.len());
+    }
+
+    #[test]
+    fn baseline_bst_without_size() {
+        let t: BstSet<NoSize> = BstSet::new(crate::MAX_THREADS);
+        assert!(t.insert(5));
+        assert!(t.contains(5));
+        assert_eq!(t.size(), None);
+        assert!(t.delete(5));
+        assert_eq!(t.quiescent_count(), 0);
+    }
+
+    #[test]
+    fn concurrent_disjoint_inserts() {
+        let t = Arc::new(bst());
+        let hs: Vec<_> = (0..4u64)
+            .map(|i| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for k in (i * 10_000)..(i * 10_000 + 500) {
+                        assert!(t.insert(k));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.size(), Some(2000));
+        assert_eq!(t.quiescent_count(), 2000);
+    }
+
+    #[test]
+    fn concurrent_same_key_single_winner() {
+        for _ in 0..30 {
+            let t = Arc::new(bst());
+            let ins: Vec<_> = (0..4)
+                .map(|_| {
+                    let t = t.clone();
+                    std::thread::spawn(move || t.insert(7) as usize)
+                })
+                .collect();
+            assert_eq!(ins.into_iter().map(|h| h.join().unwrap()).sum::<usize>(), 1);
+            let dels: Vec<_> = (0..4)
+                .map(|_| {
+                    let t = t.clone();
+                    std::thread::spawn(move || t.delete(7) as usize)
+                })
+                .collect();
+            assert_eq!(dels.into_iter().map(|h| h.join().unwrap()).sum::<usize>(), 1);
+            assert_eq!(t.size(), Some(0));
+        }
+    }
+
+    #[test]
+    fn churn_size_in_bounds() {
+        let t = Arc::new(bst());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let churners: Vec<_> = (0..4u64)
+            .map(|i| {
+                let t = t.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::rng::Xoshiro256::new(i + 31);
+                    while !stop.load(SeqCst) {
+                        let k = rng.gen_range(100);
+                        if rng.gen_bool(0.5) {
+                            t.insert(k);
+                        } else {
+                            t.delete(k);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..800 {
+            let s = t.size().unwrap();
+            assert!((0..=100).contains(&s), "size {s} out of bounds");
+        }
+        stop.store(true, SeqCst);
+        for c in churners {
+            c.join().unwrap();
+        }
+        assert_eq!(t.size().unwrap() as usize, t.quiescent_count());
+    }
+
+    #[test]
+    fn interleaved_insert_delete_same_keys() {
+        let t = Arc::new(bst());
+        let hs: Vec<_> = (0..4u64)
+            .map(|i| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::rng::Xoshiro256::new(i + 77);
+                    for _ in 0..2500 {
+                        let k = rng.gen_range(32);
+                        if rng.gen_bool(0.5) {
+                            t.insert(k);
+                        } else {
+                            t.delete(k);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.size().unwrap() as usize, t.quiescent_count());
+    }
+}

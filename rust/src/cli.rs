@@ -1,0 +1,135 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `csize <subcommand> [--key value]... [--flag]...`.
+//! Benches reuse [`Args::from_env`] so every figure reproduction accepts
+//! `--threads`, `--secs`, `--size`, `--runs`, ... overrides.
+
+use std::collections::HashMap;
+
+/// Parsed command line: one optional subcommand plus `--key [value]` pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand unless it
+    /// starts with `--`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.options.insert(key.to_string(), v);
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            }
+            // bare positional tokens after the subcommand are ignored
+        }
+        out
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0], and a stray `--bench`
+    /// token that `cargo bench` passes to harness=false benches).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated integer list, e.g. `--sizes 10000,100000`.
+    pub fn get_u64_list(&self, key: &str, default: &[u64]) -> Vec<u64> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad integer {t:?}")))
+                .collect(),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = args("bench --threads 8 --secs 2");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get_u64("threads", 0), 8);
+        assert_eq!(a.get_u64("secs", 0), 2);
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = args("demo --verbose --runs 3");
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        assert_eq!(a.get_u64("runs", 0), 3);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("x");
+        assert_eq!(a.get_u64("missing", 7), 7);
+        assert_eq!(a.get_f64("missing", 0.5), 0.5);
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_flag() {
+        let a = args("--threads 4");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_u64("threads", 0), 4);
+    }
+
+    #[test]
+    fn integer_lists() {
+        let a = args("b --sizes 10,20,30");
+        assert_eq!(a.get_u64_list("sizes", &[1]), vec![10, 20, 30]);
+        assert_eq!(a.get_u64_list("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "--threads expects an integer")]
+    fn bad_integer_panics() {
+        args("b --threads abc").get_u64("threads", 0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Type-erased deferred destruction of a heap allocation.
+
+/// A pointer plus the monomorphized dropper that knows its real type.
+pub struct Deferred {
+    ptr: *mut u8,
+    dropper: unsafe fn(*mut u8),
+}
+
+// The pointee is required to be `Send` at construction, and `Deferred` is
+// only ever executed once, by one thread.
+unsafe impl Send for Deferred {}
+
+impl Deferred {
+    /// Wrap a `Box::into_raw` pointer.
+    pub fn from_box_raw<T: Send>(ptr: *mut T) -> Self {
+        unsafe fn drop_box<T>(p: *mut u8) {
+            drop(unsafe { Box::from_raw(p.cast::<T>()) });
+        }
+        Self {
+            ptr: ptr.cast(),
+            dropper: drop_box::<T>,
+        }
+    }
+
+    /// Run the destructor.
+    ///
+    /// # Safety
+    /// Must be called exactly once, after no thread can reference the
+    /// pointee.
+    pub unsafe fn execute(self) {
+        unsafe { (self.dropper)(self.ptr) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn executes_the_right_destructor() {
+        struct Flag(Arc<AtomicBool>);
+        impl Drop for Flag {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::SeqCst);
+            }
+        }
+        let hit = Arc::new(AtomicBool::new(false));
+        let d = Deferred::from_box_raw(Box::into_raw(Box::new(Flag(hit.clone()))));
+        unsafe { d.execute() };
+        assert!(hit.load(Ordering::SeqCst));
+    }
+}

@@ -1,0 +1,325 @@
+//! Epoch-based memory reclamation (EBR), from scratch.
+//!
+//! The Java original of the paper leans on the JVM garbage collector: a
+//! node unlinked from a lock-free structure is freed only when no thread
+//! can still hold a reference. This module provides the same guarantee:
+//!
+//! * every data-structure operation runs inside a [`pin`] [`Guard`];
+//! * unlinked nodes (and replaced [`crate::size::CountersSnapshot`]
+//!   instances) are [`retire`]d, not dropped;
+//! * a retired object tagged with epoch `t` is freed only once the global
+//!   epoch reaches `t + 2`, which requires every pinned thread to have
+//!   passed through an unpinned state after the retirement — at which point
+//!   no live reference can remain.
+//!
+//! The design is the classic 3-epoch scheme (Fraser 2004): a global epoch
+//! counter, one padded per-thread-slot state word (`epoch << 1 | pinned`),
+//! per-thread garbage bags tagged with the retirement epoch, and an orphan
+//! list that adopts the bags of exiting threads. Pinning is wait-free;
+//! collection is opportunistic and amortized.
+
+mod deferred;
+
+pub use deferred::Deferred;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Mutex;
+
+use crossbeam_utils::CachePadded;
+use once_cell::sync::Lazy;
+
+use crate::thread_id;
+use crate::MAX_THREADS;
+
+/// Collect (attempt epoch advance + free) every this many retirements.
+const COLLECT_THRESHOLD: usize = 64;
+
+/// Global epoch. Starts at 1 so a state word of 0 unambiguously means
+/// "not pinned".
+static EPOCH: AtomicU64 = AtomicU64::new(1);
+
+/// Per-slot state: `epoch << 1 | 1` while pinned, `0` while not.
+static SLOT_STATE: Lazy<Box<[CachePadded<AtomicU64>]>> = Lazy::new(|| {
+    (0..MAX_THREADS)
+        .map(|_| CachePadded::new(AtomicU64::new(0)))
+        .collect()
+});
+
+/// Bags of exited threads, adopted by future collections.
+static ORPHANS: Lazy<Mutex<Vec<(u64, Deferred)>>> = Lazy::new(|| Mutex::new(Vec::new()));
+
+/// Total objects freed by the reclaimer (test/diagnostic counter).
+static FREED: AtomicU64 = AtomicU64::new(0);
+/// Total objects retired (test/diagnostic counter).
+static RETIRED: AtomicU64 = AtomicU64::new(0);
+
+struct Local {
+    garbage: Vec<(u64, Deferred)>,
+    since_collect: usize,
+}
+
+impl Drop for Local {
+    fn drop(&mut self) {
+        if !self.garbage.is_empty() {
+            ORPHANS.lock().unwrap().append(&mut self.garbage);
+        }
+    }
+}
+
+thread_local! {
+    // Pin depth on the hot path is a plain Cell (every operation pins);
+    // the garbage bags sit behind a RefCell touched only on retire/collect.
+    static DEPTH: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+    static LOCAL: RefCell<Local> = RefCell::new(Local {
+        garbage: Vec::new(),
+        since_collect: 0,
+    });
+}
+
+/// An active pin on the current thread. Operations may nest pins freely;
+/// the slot is released when the outermost guard drops.
+pub struct Guard {
+    tid: usize,
+}
+
+impl Guard {
+    /// The dense thread id of the pinned thread (also the metadata-counter
+    /// index the size mechanism uses).
+    #[inline]
+    pub fn tid(&self) -> usize {
+        self.tid
+    }
+}
+
+impl Drop for Guard {
+    #[inline]
+    fn drop(&mut self) {
+        let depth = DEPTH.with(|d| {
+            let v = d.get() - 1;
+            d.set(v);
+            v
+        });
+        if depth == 0 {
+            SLOT_STATE[self.tid].store(0, SeqCst);
+        }
+    }
+}
+
+/// Pin the current thread: while the returned [`Guard`] lives, no object
+/// retired after this point will be freed. Wait-free.
+#[inline]
+pub fn pin() -> Guard {
+    let tid = thread_id::current();
+    let depth = DEPTH.with(|d| {
+        let v = d.get() + 1;
+        d.set(v);
+        v
+    });
+    if depth == 1 {
+        // Publish the epoch we are entering; re-check so the published
+        // value is never older than the global epoch at publication.
+        loop {
+            let e = EPOCH.load(SeqCst);
+            SLOT_STATE[tid].store((e << 1) | 1, SeqCst);
+            if EPOCH.load(SeqCst) == e {
+                break;
+            }
+        }
+    }
+    Guard { tid }
+}
+
+/// Whether the calling thread currently holds a pin (debug contract checks).
+#[inline]
+pub fn is_pinned() -> bool {
+    DEPTH.with(|d| d.get() > 0)
+}
+
+/// Hand an unlinked, heap-allocated object to the reclaimer.
+///
+/// # Safety
+/// `ptr` must come from `Box::into_raw`, be unreachable to any thread that
+/// pins *after* this call, and not be retired twice.
+pub unsafe fn retire<T: Send>(ptr: *mut T) {
+    retire_deferred(Deferred::from_box_raw(ptr));
+}
+
+/// Variant taking a prebuilt [`Deferred`] (for type-erased call sites).
+pub fn retire_deferred(d: Deferred) {
+    RETIRED.fetch_add(1, SeqCst);
+    let epoch = EPOCH.load(SeqCst);
+    let should_collect = LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        l.garbage.push((epoch, d));
+        l.since_collect += 1;
+        l.since_collect >= COLLECT_THRESHOLD
+    });
+    if should_collect {
+        collect();
+    }
+}
+
+/// Attempt an epoch advance and free everything that became safe.
+/// Called automatically every [`COLLECT_THRESHOLD`] retirements; exposed
+/// for tests and for structure teardown.
+pub fn collect() {
+    let ge = EPOCH.load(SeqCst);
+    let mut can_advance = true;
+    for slot in SLOT_STATE.iter() {
+        let s = slot.load(SeqCst);
+        if s & 1 == 1 && (s >> 1) != ge {
+            can_advance = false;
+            break;
+        }
+    }
+    if can_advance {
+        // A failed CAS means someone else advanced — equally good.
+        let _ = EPOCH.compare_exchange(ge, ge + 1, SeqCst, SeqCst);
+    }
+    let safe = EPOCH.load(SeqCst);
+
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        l.since_collect = 0;
+        free_ready(&mut l.garbage, safe);
+    });
+
+    // Adopt orphans opportunistically (never on the fast path: only here).
+    if let Ok(mut orphans) = ORPHANS.try_lock() {
+        free_ready(&mut orphans, safe);
+    }
+}
+
+fn free_ready(bag: &mut Vec<(u64, Deferred)>, safe_epoch: u64) {
+    let mut i = 0;
+    while i < bag.len() {
+        if bag[i].0 + 2 <= safe_epoch {
+            let (_, d) = bag.swap_remove(i);
+            unsafe { d.execute() };
+            FREED.fetch_add(1, SeqCst);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Repeatedly collect until the local + orphan bags drain (or `rounds`
+/// attempts pass). Used by tests and `Drop` impls of whole structures.
+pub fn flush(rounds: usize) {
+    for _ in 0..rounds {
+        collect();
+        let done = LOCAL.with(|l| l.borrow().garbage.is_empty())
+            && ORPHANS.lock().unwrap().is_empty();
+        if done {
+            return;
+        }
+    }
+}
+
+/// Called by the thread registry when a thread's slot is recycled.
+pub(crate) fn on_thread_exit(tid: usize) {
+    SLOT_STATE[tid].store(0, SeqCst);
+}
+
+/// Diagnostic counters: `(retired, freed)` so far, process-wide.
+pub fn stats() -> (u64, u64) {
+    (RETIRED.load(SeqCst), FREED.load(SeqCst))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    struct DropCounter(Arc<AtomicUsize>);
+    impl Drop for DropCounter {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, SeqCst);
+        }
+    }
+
+    #[test]
+    fn retired_object_is_eventually_freed() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let p = Box::into_raw(Box::new(DropCounter(drops.clone())));
+        unsafe { retire(p) };
+        flush(16);
+        assert_eq!(drops.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn object_not_freed_while_another_thread_is_pinned() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let d2 = drops.clone();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let (tx2, rx2) = std::sync::mpsc::channel::<()>();
+        let pinner = std::thread::spawn(move || {
+            let _g = pin();
+            tx.send(()).unwrap();
+            rx2.recv().unwrap(); // hold the pin until told otherwise
+        });
+        rx.recv().unwrap();
+        let p = Box::into_raw(Box::new(DropCounter(d2)));
+        unsafe { retire(p) };
+        flush(16);
+        assert_eq!(drops.load(SeqCst), 0, "freed under an active pin");
+        tx2.send(()).unwrap();
+        pinner.join().unwrap();
+        flush(16);
+        assert_eq!(drops.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn nested_pins_unpin_once() {
+        let g1 = pin();
+        let tid = g1.tid();
+        {
+            let _g2 = pin();
+            assert_eq!(_g2.tid(), tid);
+        }
+        // Still pinned: slot state non-zero.
+        assert_ne!(SLOT_STATE[tid].load(SeqCst), 0);
+        drop(g1);
+        assert_eq!(SLOT_STATE[tid].load(SeqCst), 0);
+    }
+
+    #[test]
+    fn exiting_thread_hands_garbage_to_orphans() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        let d2 = drops.clone();
+        std::thread::spawn(move || {
+            let p = Box::into_raw(Box::new(DropCounter(d2)));
+            unsafe { retire(p) };
+            // exit immediately without collecting
+        })
+        .join()
+        .unwrap();
+        flush(16);
+        assert_eq!(drops.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn stress_concurrent_retires_all_freed() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        const PER_THREAD: usize = 2_000;
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let d = drops.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..PER_THREAD {
+                        let _g = pin();
+                        let p = Box::into_raw(Box::new(DropCounter(d.clone())));
+                        unsafe { retire(p) };
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        flush(64);
+        assert_eq!(drops.load(SeqCst), 4 * PER_THREAD);
+    }
+}

@@ -1,0 +1,249 @@
+//! Multi-threaded throughput engine: the experiment driver behind every
+//! figure reproduction (paper Section 9, *Methodology*).
+//!
+//! A run spawns `w` workload threads (insert/delete/contains per the mix)
+//! and `s` size threads (repeated `size()` calls) for a fixed duration, and
+//! reports per-category operation counts. A per-op-type mode times
+//! 100-operation uniform batches for the Figure 13 breakdown.
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::time::{Duration, Instant};
+
+use crate::metrics::Stats;
+use crate::set_api::ConcurrentSet;
+use crate::workload::{self, Mix, OpStream, OpType};
+
+/// Configuration of one timed run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub workload_threads: usize,
+    pub size_threads: usize,
+    pub duration: Duration,
+    pub mix: Mix,
+    pub key_range: u64,
+    pub seed: u64,
+    /// Fig. 13 mode: run 100-op uniform-type batches and time each type.
+    pub per_type_timing: bool,
+}
+
+impl RunConfig {
+    pub fn new(workload_threads: usize, size_threads: usize, mix: Mix, key_range: u64) -> Self {
+        Self {
+            workload_threads,
+            size_threads,
+            duration: Duration::from_millis(500),
+            mix,
+            key_range,
+            seed: 0xBEEF,
+            per_type_timing: false,
+        }
+    }
+}
+
+/// Aggregated result of one run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub elapsed: Duration,
+    /// Total insert+delete+contains completed by workload threads.
+    pub workload_ops: u64,
+    /// Total `size()` calls completed by size threads.
+    pub size_ops: u64,
+    /// Per-type op counts (Fig. 13 mode): [insert, delete, contains].
+    pub type_ops: [u64; 3],
+    /// Per-type busy nanoseconds (Fig. 13 mode).
+    pub type_nanos: [u64; 3],
+}
+
+impl RunResult {
+    pub fn workload_throughput(&self) -> f64 {
+        self.workload_ops as f64 / self.elapsed.as_secs_f64()
+    }
+
+    pub fn size_throughput(&self) -> f64 {
+        self.size_ops as f64 / self.elapsed.as_secs_f64()
+    }
+
+    /// Fig. 13: throughput of one op type = ops / busy time of that type.
+    pub fn type_throughput(&self, op: OpType) -> f64 {
+        let i = op as usize;
+        if self.type_nanos[i] == 0 {
+            return 0.0;
+        }
+        self.type_ops[i] as f64 / (self.type_nanos[i] as f64 / 1e9)
+    }
+}
+
+/// One timed run over `set`.
+pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
+    let stop = AtomicBool::new(false);
+    let start = Instant::now();
+    let mut result = RunResult::default();
+
+    std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for t in 0..cfg.workload_threads {
+            let stop = &stop;
+            let set: &dyn ConcurrentSet = set;
+            let cfg = cfg.clone();
+            workers.push(scope.spawn(move || {
+                let mut stream =
+                    OpStream::new(cfg.seed ^ (t as u64) << 32, cfg.mix, cfg.key_range);
+                let mut ops = 0u64;
+                let mut type_ops = [0u64; 3];
+                let mut type_nanos = [0u64; 3];
+                if cfg.per_type_timing {
+                    // Fig. 13 mode: uniform 100-op batches, timed per batch.
+                    let mut pick = OpStream::new(cfg.seed ^ 0xF13 ^ (t as u64), cfg.mix, 100);
+                    while !stop.load(SeqCst) {
+                        let (op, _) = pick.next();
+                        let t0 = Instant::now();
+                        for _ in 0..100 {
+                            workload::apply(set, op, stream.next_key());
+                        }
+                        let dt = t0.elapsed().as_nanos() as u64;
+                        type_ops[op as usize] += 100;
+                        type_nanos[op as usize] += dt;
+                        ops += 100;
+                    }
+                } else {
+                    while !stop.load(SeqCst) {
+                        let (op, key) = stream.next();
+                        workload::apply(set, op, key);
+                        ops += 1;
+                    }
+                }
+                (ops, 0u64, type_ops, type_nanos)
+            }));
+        }
+        for t in 0..cfg.size_threads {
+            let stop = &stop;
+            let set: &dyn ConcurrentSet = set;
+            let _ = t;
+            workers.push(scope.spawn(move || {
+                let mut sizes = 0u64;
+                while !stop.load(SeqCst) {
+                    let s = set.size().expect("size thread on a size-less structure");
+                    debug_assert!(s >= 0, "linearizable size went negative");
+                    sizes += 1;
+                }
+                (0u64, sizes, [0u64; 3], [0u64; 3])
+            }));
+        }
+
+        std::thread::sleep(cfg.duration);
+        stop.store(true, SeqCst);
+
+        for w in workers {
+            let (ops, sizes, type_ops, type_nanos) = w.join().unwrap();
+            result.workload_ops += ops;
+            result.size_ops += sizes;
+            for i in 0..3 {
+                result.type_ops[i] += type_ops[i];
+                result.type_nanos[i] += type_nanos[i];
+            }
+        }
+    });
+
+    result.elapsed = start.elapsed();
+    result
+}
+
+/// Repeated measurement with warmup (paper: 5 warmup + 10 measured runs;
+/// scaled via the bench CLIs). A fresh structure is built per run and
+/// prefilled, so runs are independent.
+#[derive(Clone, Copy, Debug)]
+pub struct Repeat {
+    pub warmup: usize,
+    pub runs: usize,
+}
+
+impl Default for Repeat {
+    fn default() -> Self {
+        Self { warmup: 1, runs: 3 }
+    }
+}
+
+/// Run `make_set()` `repeat.runs` times (after warmups), prefilled to
+/// `initial_size`, and aggregate a chosen metric.
+pub fn measure<F>(
+    make_set: F,
+    initial_size: u64,
+    cfg: &RunConfig,
+    repeat: &Repeat,
+    metric: impl Fn(&RunResult) -> f64,
+) -> Stats
+where
+    F: Fn() -> Box<dyn ConcurrentSet>,
+{
+    let mut samples = Vec::with_capacity(repeat.runs);
+    for i in 0..(repeat.warmup + repeat.runs) {
+        let set = make_set();
+        workload::prefill(set.as_ref(), initial_size, cfg.key_range, cfg.seed ^ 0xF111);
+        let res = run(set.as_ref(), cfg);
+        if i >= repeat.warmup {
+            samples.push(metric(&res));
+        }
+        crate::ebr::collect();
+    }
+    Stats::from_samples(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashtable::HashTableSet;
+    use crate::size::{LinearizableSize, NoSize};
+    use crate::workload::{key_range, UPDATE_HEAVY};
+
+    fn quick_cfg(w: usize, s: usize) -> RunConfig {
+        let mut cfg = RunConfig::new(w, s, UPDATE_HEAVY, key_range(512, UPDATE_HEAVY));
+        cfg.duration = Duration::from_millis(80);
+        cfg
+    }
+
+    #[test]
+    fn run_produces_ops() {
+        let set: HashTableSet<LinearizableSize> = HashTableSet::new(crate::MAX_THREADS, 512);
+        workload::prefill(&set, 512, key_range(512, UPDATE_HEAVY), 3);
+        let res = run(&set, &quick_cfg(2, 1));
+        assert!(res.workload_ops > 0);
+        assert!(res.size_ops > 0);
+        assert!(res.workload_throughput() > 0.0);
+    }
+
+    #[test]
+    fn baseline_runs_without_size_threads() {
+        let set: HashTableSet<NoSize> = HashTableSet::new(crate::MAX_THREADS, 512);
+        let res = run(&set, &quick_cfg(2, 0));
+        assert!(res.workload_ops > 0);
+        assert_eq!(res.size_ops, 0);
+    }
+
+    #[test]
+    fn per_type_mode_times_all_types() {
+        let set: HashTableSet<LinearizableSize> = HashTableSet::new(crate::MAX_THREADS, 512);
+        workload::prefill(&set, 512, key_range(512, UPDATE_HEAVY), 3);
+        let mut cfg = quick_cfg(2, 0);
+        cfg.per_type_timing = true;
+        cfg.duration = Duration::from_millis(200);
+        let res = run(&set, &cfg);
+        for op in [OpType::Insert, OpType::Delete, OpType::Contains] {
+            assert!(res.type_ops[op as usize] > 0, "{op:?} never ran");
+            assert!(res.type_throughput(op) > 0.0);
+        }
+    }
+
+    #[test]
+    fn measure_aggregates_runs() {
+        let cfg = quick_cfg(1, 0);
+        let stats = measure(
+            || Box::new(HashTableSet::<NoSize>::new(crate::MAX_THREADS, 256)),
+            256,
+            &cfg,
+            &Repeat { warmup: 0, runs: 2 },
+            |r| r.workload_throughput(),
+        );
+        assert_eq!(stats.n, 2);
+        assert!(stats.mean > 0.0);
+    }
+}

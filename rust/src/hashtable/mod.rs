@@ -1,0 +1,190 @@
+//! Hash-table set: a static table of Harris-list buckets (paper Section 9:
+//! "a table of linked lists whose implementation is based on the linked
+//! list", capacity a power of two between 1× and 2× the expected elements,
+//! as Java's `ConcurrentHashMap` sizes itself).
+//!
+//! All buckets share one size policy instance, so `size()` spans the whole
+//! table — the metadata is per *thread*, not per bucket (paper Section 5).
+
+use std::sync::atomic::AtomicU64;
+
+use crate::list;
+use crate::set_api::ConcurrentSet;
+use crate::size::{SizeOpts, SizePolicy};
+
+/// Fibonacci multiplicative hash: spreads sequential keys across buckets.
+#[inline]
+fn spread(k: u64) -> u64 {
+    k.wrapping_mul(0x9E3779B97F4A7C15) >> 17
+}
+
+pub struct HashTableSet<P: SizePolicy> {
+    buckets: Box<[AtomicU64]>,
+    mask: u64,
+    policy: P,
+}
+
+unsafe impl<P: SizePolicy> Send for HashTableSet<P> {}
+unsafe impl<P: SizePolicy> Sync for HashTableSet<P> {}
+
+impl<P: SizePolicy> HashTableSet<P> {
+    /// `expected_elements` sizes the table: capacity = next power of two
+    /// `>= expected_elements` (1–2× occupancy, mirroring the paper).
+    pub fn new(max_threads: usize, expected_elements: usize) -> Self {
+        Self::with_opts(max_threads, expected_elements, SizeOpts::default())
+    }
+
+    pub fn with_opts(max_threads: usize, expected_elements: usize, opts: SizeOpts) -> Self {
+        Self::with_policy(P::new(max_threads, opts), expected_elements)
+    }
+
+    pub fn with_policy(policy: P, expected_elements: usize) -> Self {
+        let capacity = expected_elements.max(1).next_power_of_two();
+        Self {
+            buckets: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            mask: capacity as u64 - 1,
+            policy,
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, k: u64) -> &AtomicU64 {
+        &self.buckets[(spread(k) & self.mask) as usize]
+    }
+
+    pub fn policy(&self) -> &P {
+        &self.policy
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Quiescent full count across all buckets (tests).
+    pub fn quiescent_count(&self) -> usize {
+        self.buckets
+            .iter()
+            .map(list::quiescent_count_at::<P>)
+            .sum()
+    }
+}
+
+impl<P: SizePolicy> ConcurrentSet for HashTableSet<P> {
+    fn insert(&self, k: u64) -> bool {
+        list::insert_at(&self.policy, self.bucket(k), k)
+    }
+    fn delete(&self, k: u64) -> bool {
+        list::delete_at(&self.policy, self.bucket(k), k)
+    }
+    fn contains(&self, k: u64) -> bool {
+        list::contains_at(&self.policy, self.bucket(k), k)
+    }
+    fn size(&self) -> Option<i64> {
+        self.policy.size()
+    }
+    fn name(&self) -> String {
+        format!(
+            "HashTable<{}>",
+            std::any::type_name::<P>().rsplit("::").next().unwrap()
+        )
+    }
+}
+
+impl<P: SizePolicy> Drop for HashTableSet<P> {
+    fn drop(&mut self) {
+        for b in self.buckets.iter() {
+            unsafe { list::drop_chain::<P>(b) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::{LinearizableSize, NoSize};
+    use std::sync::atomic::Ordering::SeqCst;
+    use std::sync::Arc;
+
+    fn table() -> HashTableSet<LinearizableSize> {
+        HashTableSet::new(crate::MAX_THREADS, 256)
+    }
+
+    #[test]
+    fn capacity_is_power_of_two() {
+        let t: HashTableSet<NoSize> = HashTableSet::new(4, 100);
+        assert_eq!(t.capacity(), 128);
+        let t: HashTableSet<NoSize> = HashTableSet::new(4, 128);
+        assert_eq!(t.capacity(), 128);
+    }
+
+    #[test]
+    fn basic_ops() {
+        let t = table();
+        assert!(t.insert(10));
+        assert!(!t.insert(10));
+        assert!(t.contains(10));
+        assert!(!t.contains(11));
+        assert!(t.delete(10));
+        assert!(!t.delete(10));
+        assert_eq!(t.size(), Some(0));
+    }
+
+    #[test]
+    fn size_spans_buckets() {
+        let t = table();
+        for k in 0..1000 {
+            assert!(t.insert(k));
+        }
+        assert_eq!(t.size(), Some(1000));
+        assert_eq!(t.quiescent_count(), 1000);
+        for k in 0..1000 {
+            assert!(t.delete(k));
+        }
+        assert_eq!(t.size(), Some(0));
+    }
+
+    #[test]
+    fn colliding_keys_coexist() {
+        // Keys an exact capacity apart can collide; both must be stored.
+        let t: HashTableSet<LinearizableSize> = HashTableSet::new(crate::MAX_THREADS, 2);
+        for k in 0..64 {
+            assert!(t.insert(k));
+        }
+        for k in 0..64 {
+            assert!(t.contains(k), "lost key {k}");
+        }
+        assert_eq!(t.size(), Some(64));
+    }
+
+    #[test]
+    fn concurrent_churn_size_matches() {
+        let t = Arc::new(table());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let churners: Vec<_> = (0..4u64)
+            .map(|tid| {
+                let t = t.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::rng::Xoshiro256::new(tid);
+                    while !stop.load(SeqCst) {
+                        let k = rng.gen_range(512);
+                        if rng.gen_bool(0.5) {
+                            t.insert(k);
+                        } else {
+                            t.delete(k);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..500 {
+            let s = t.size().unwrap();
+            assert!((0..=512).contains(&s), "size {s} out of bounds");
+        }
+        stop.store(true, SeqCst);
+        for c in churners {
+            c.join().unwrap();
+        }
+        assert_eq!(t.size().unwrap() as usize, t.quiescent_count());
+    }
+}

@@ -1,0 +1,201 @@
+//! Operation histories and the offline size-linearizability checker.
+//!
+//! The paper's correctness arguments (Sections 1, 8) revolve around two
+//! observable invariants of any *legal* set history:
+//!
+//! 1. the running size (prefix sum of +1/−1 update deltas in linearization
+//!    order) is never negative — the naive counter-after-op scheme violates
+//!    this (Figure 2);
+//! 2. any `size()` return value equals the running size at its
+//!    linearization point; at quiescence it equals the exact element count.
+//!
+//! This module records update deltas (in commit order, which for a single
+//! recording stream equals linearization order) and checks the invariants —
+//! both with a pure-Rust oracle and, in the e2e example, through the
+//! AOT-compiled Pallas pipeline (`prefix_scan` / `history_stats`), which
+//! must agree bit-exactly.
+
+use std::sync::Mutex;
+
+/// Statistics of a running-size series; mirrors the `history_stats` Pallas
+/// kernel output `[min, max, final, negative-count]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistoryStats {
+    pub min: i64,
+    pub max: i64,
+    pub final_size: i64,
+    pub negative_count: i64,
+}
+
+impl HistoryStats {
+    /// A history is legal for a set iff its running size never dips below
+    /// zero.
+    pub fn is_legal(&self) -> bool {
+        self.min >= 0 && self.negative_count == 0
+    }
+
+    pub fn as_array(&self) -> [i64; 4] {
+        [self.min, self.max, self.final_size, self.negative_count]
+    }
+}
+
+/// Inclusive prefix sums of `deltas` (the Rust oracle for the Pallas
+/// `prefix_scan` kernel).
+pub fn running_sizes(deltas: &[i64]) -> Vec<i64> {
+    let mut out = Vec::with_capacity(deltas.len());
+    let mut acc = 0i64;
+    for &d in deltas {
+        acc += d;
+        out.push(acc);
+    }
+    out
+}
+
+/// Stats over a running-size series (oracle for the `history_stats`
+/// kernel; empty series uses the kernel's fold identities).
+pub fn stats_of(running: &[i64]) -> HistoryStats {
+    if running.is_empty() {
+        return HistoryStats {
+            min: i64::MAX,
+            max: -i64::MAX,
+            final_size: 0,
+            negative_count: 0,
+        };
+    }
+    HistoryStats {
+        min: running.iter().copied().min().unwrap(),
+        max: running.iter().copied().max().unwrap(),
+        final_size: *running.last().unwrap(),
+        negative_count: running.iter().filter(|&&x| x < 0).count() as i64,
+    }
+}
+
+/// Validate a delta log end to end.
+pub fn validate(deltas: &[i64]) -> (Vec<i64>, HistoryStats) {
+    let running = running_sizes(deltas);
+    let stats = stats_of(&running);
+    (running, stats)
+}
+
+/// Thread-safe append-only delta log used by examples/tests to capture
+/// update commit order.
+#[derive(Default)]
+pub struct DeltaLog {
+    deltas: Mutex<Vec<i64>>,
+}
+
+impl DeltaLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_insert(&self) {
+        self.deltas.lock().unwrap().push(1);
+    }
+
+    /// Record an arbitrary delta (e.g., a bulk prefill as one `+n` entry so
+    /// the log's running size is absolute rather than relative).
+    pub fn record_delta(&self, delta: i64) {
+        self.deltas.lock().unwrap().push(delta);
+    }
+
+    pub fn record_delete(&self) {
+        self.deltas.lock().unwrap().push(-1);
+    }
+
+    pub fn snapshot(&self) -> Vec<i64> {
+        self.deltas.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.deltas.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite;
+
+    #[test]
+    fn running_sizes_telescope() {
+        assert_eq!(running_sizes(&[1, 1, -1, 1]), vec![1, 2, 1, 2]);
+        assert_eq!(running_sizes(&[]), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn stats_detect_negative_histories() {
+        let (_, s) = validate(&[-1, 1]);
+        assert_eq!(s.min, -1);
+        assert_eq!(s.negative_count, 1);
+        assert!(!s.is_legal());
+    }
+
+    #[test]
+    fn legal_history_passes() {
+        let (_, s) = validate(&[1, 1, -1, -1, 1]);
+        assert_eq!(
+            s,
+            HistoryStats {
+                min: 0,
+                max: 2,
+                final_size: 1,
+                negative_count: 0
+            }
+        );
+        assert!(s.is_legal());
+    }
+
+    #[test]
+    fn delta_log_records_in_order() {
+        let log = DeltaLog::new();
+        log.record_insert();
+        log.record_insert();
+        log.record_delete();
+        assert_eq!(log.snapshot(), vec![1, 1, -1]);
+        assert_eq!(log.len(), 3);
+    }
+
+    #[test]
+    fn prop_legal_generator_always_legal() {
+        proptest_lite::run("legal histories validate", |rng| {
+            let mut deltas = Vec::new();
+            let mut cur = 0i64;
+            for _ in 0..rng.gen_range(500) {
+                if cur > 0 && rng.gen_bool(0.5) {
+                    deltas.push(-1);
+                    cur -= 1;
+                } else {
+                    deltas.push(1);
+                    cur += 1;
+                }
+            }
+            let (running, stats) = validate(&deltas);
+            crate::prop_assert!(stats.is_legal(), "legal history flagged: {stats:?}");
+            crate::prop_assert!(
+                running.last().copied().unwrap_or(0) == cur,
+                "final mismatch"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_stats_match_bruteforce() {
+        proptest_lite::run("stats == brute force", |rng| {
+            let n = rng.gen_range(200) as usize;
+            let deltas: Vec<i64> = (0..n).map(|_| rng.gen_range(5) as i64 - 2).collect();
+            let (running, stats) = validate(&deltas);
+            if !running.is_empty() {
+                crate::prop_assert!(stats.min == *running.iter().min().unwrap());
+                crate::prop_assert!(stats.max == *running.iter().max().unwrap());
+                crate::prop_assert!(stats.final_size == *running.last().unwrap());
+            }
+            Ok(())
+        });
+    }
+}

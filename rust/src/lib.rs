@@ -1,0 +1,71 @@
+//! # concurrent-size
+//!
+//! A production-oriented Rust reproduction of **“Concurrent Size”**
+//! (Gal Sela & Erez Petrank, OOPSLA 2022, DOI 10.1145/3563300): a methodology
+//! for adding a **wait-free, linearizable `size()`** operation to concurrent
+//! sets and dictionaries with O(#threads) cost — no full-structure snapshot,
+//! no global lock.
+//!
+//! ## What lives where
+//!
+//! * [`size`] — the paper's core mechanism: per-thread insertion/deletion
+//!   counters ([`size::SizeCalculator`]), the Jayanti-style wait-free
+//!   counter snapshot ([`size::CountersSnapshot`]), and the
+//!   [`size::SizePolicy`] family used to instantiate each data structure as
+//!   a baseline (`NoSize`), paper-transformed (`LinearizableSize`),
+//!   Java-style buggy (`NaiveSize`) or global-lock (`LockSize`) variant.
+//! * [`list`], [`hashtable`], [`skiplist`], [`bst`] — the evaluated data
+//!   structures, each generic over the size policy (paper Section 9).
+//! * [`snapshot`], [`vcas`] — the snapshot-based competitors
+//!   (Petrank–Timnat snap-collector; Wei et al. versioned-CAS BST).
+//! * [`ebr`] — from-scratch epoch-based memory reclamation (the GC the Java
+//!   original leaned on).
+//! * [`workload`], [`harness`], [`metrics`] — YCSB-style workload generator
+//!   and the multi-threaded throughput engine that regenerates the paper's
+//!   Figures 7–13.
+//! * [`runtime`], [`analytics`] — PJRT CPU runtime loading the AOT-compiled
+//!   JAX/Pallas analytics artifacts (`artifacts/*.hlo.txt`), and the epoch
+//!   analytics pipeline built on them.
+//! * [`history`] — operation logging + the offline size-linearizability
+//!   checker (rust oracle, cross-checked against the Pallas pipeline).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the libxla rpath; compile-checked only.
+//! use concurrent_size::set_api::ConcurrentSet;
+//! use concurrent_size::size::LinearizableSize;
+//! use concurrent_size::skiplist::SkipListSet;
+//!
+//! let set: SkipListSet<LinearizableSize> = SkipListSet::new(64);
+//! assert!(set.insert(41));
+//! assert!(set.insert(42));
+//! assert!(set.delete(41));
+//! assert_eq!(set.size(), Some(1)); // linearizable, wait-free, O(#threads)
+//! ```
+
+pub mod analytics;
+pub mod bench_util;
+pub mod bst;
+pub mod cli;
+pub mod ebr;
+pub mod harness;
+pub mod hashtable;
+pub mod history;
+pub mod list;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+pub mod set_api;
+pub mod size;
+pub mod skiplist;
+pub mod snapshot;
+pub mod thread_id;
+pub mod vcas;
+pub mod workload;
+
+/// Maximum number of registered application threads (paper: per-thread
+/// counter arrays are sized once at construction). Mirrors `AOT_T` in
+/// `python/compile/aot.py`.
+pub const MAX_THREADS: usize = 64;

@@ -1,0 +1,589 @@
+//! Harris lock-free linked-list set, generic over the size policy.
+//!
+//! This is the paper's running example (Fig. 3 applied to Harris 2001) and
+//! also the bucket engine for [`crate::hashtable`]. The engine operates on
+//! an external `head: AtomicU64` so a table of buckets reuses it verbatim.
+//!
+//! ## Deletion state machine
+//!
+//! * **Tracked** ([`crate::size::LinearizableSize`]): the *marking step* is
+//!   installing packed `UpdateInfo` into the node's `delete_info` slot
+//!   (CAS 0 → info) — the analogue of `ConcurrentSkipListMap` repointing the
+//!   value field at the `UpdateInfo` (paper Section 4). The winner is the
+//!   logical deleter; the metadata is updated (`commit_delete`) **before**
+//!   the physical steps, which are Harris's: set the next-pointer mark bit,
+//!   then unlink. Any operation that encounters a node with installed
+//!   delete-info must commit its metadata before unlinking or ignoring it.
+//! * **Untracked**: classic Harris — the next-pointer mark CAS is the
+//!   logical delete and decides the winner.
+//!
+//! Unlinked nodes are retired through [`crate::ebr`].
+
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+
+use crate::ebr;
+use crate::set_api::{ConcurrentSet, MAX_KEY};
+use crate::size::{SizeOpts, SizePolicy};
+use crate::thread_id;
+
+const MARK: u64 = 1;
+
+#[inline]
+fn is_marked(word: u64) -> bool {
+    word & MARK == MARK
+}
+
+#[inline]
+fn addr<P: SizePolicy>(word: u64) -> *mut Node<P> {
+    (word & !MARK) as *mut Node<P>
+}
+
+/// List node. Info slots are zero-sized for untracked policies, so the
+/// baseline node layout matches the untransformed algorithm.
+pub(crate) struct Node<P: SizePolicy> {
+    pub(crate) key: u64,
+    /// Successor pointer; low bit = Harris mark (physical-deletion lock).
+    pub(crate) next: AtomicU64,
+    /// Published insert `UpdateInfo` (paper: `insertInfo` field).
+    pub(crate) insert_info: P::InfoSlot,
+    /// Published delete `UpdateInfo`; non-zero = logically deleted
+    /// (paper: the repurposed value/`deleteInfo` field).
+    pub(crate) delete_info: P::InfoSlot,
+}
+
+impl<P: SizePolicy> Node<P> {
+    fn alloc(key: u64, next: u64) -> *mut Self {
+        Box::into_raw(Box::new(Node {
+            key,
+            next: AtomicU64::new(next),
+            insert_info: P::InfoSlot::default(),
+            delete_info: P::InfoSlot::default(),
+        }))
+    }
+}
+
+/// Whether `node` is logically deleted, returning its delete-info when the
+/// policy tracks one.
+#[inline]
+fn deletion_state<P: SizePolicy>(node: &Node<P>) -> (bool, u64) {
+    if P::TRACKED {
+        let dinfo = P::read_delete_info(&node.delete_info);
+        if dinfo != 0 {
+            return (true, dinfo);
+        }
+        // delete_info is installed before the mark, so a marked node always
+        // has a non-zero slot; re-reading covers the race window.
+        if is_marked(node.next.load(SeqCst)) {
+            return (true, P::read_delete_info(&node.delete_info));
+        }
+        (false, 0)
+    } else {
+        (is_marked(node.next.load(SeqCst)), 0)
+    }
+}
+
+/// Set the Harris mark bit on `node.next` (idempotent).
+#[inline]
+fn mark_next<P: SizePolicy>(node: &Node<P>) -> u64 {
+    let mut w = node.next.load(SeqCst);
+    while !is_marked(w) {
+        match node.next.compare_exchange(w, w | MARK, SeqCst, SeqCst) {
+            Ok(_) => return w | MARK,
+            Err(cur) => w = cur,
+        }
+    }
+    w
+}
+
+/// Find `(pred, curr)` with `curr` the first node whose key is `>= k`,
+/// physically unlinking every logically-deleted node encountered —
+/// after committing its delete metadata (Fig. 3 footnote: *"call
+/// updateMetadata(node's deleteInfo, DELETE) before unlinking"*).
+///
+/// `pred == null` means the predecessor is `head` itself. Caller must hold
+/// an EBR pin.
+unsafe fn search<P: SizePolicy>(
+    policy: &P,
+    head: &AtomicU64,
+    k: u64,
+) -> (*mut Node<P>, *mut Node<P>) {
+    'retry: loop {
+        let mut pred: *mut Node<P> = std::ptr::null_mut();
+        loop {
+            let pred_next: &AtomicU64 = if pred.is_null() {
+                head
+            } else {
+                unsafe { &(*pred).next }
+            };
+            let curr_w = pred_next.load(SeqCst);
+            if is_marked(curr_w) {
+                // pred was deleted under us; restart from the head.
+                continue 'retry;
+            }
+            let curr = addr::<P>(curr_w);
+            if curr.is_null() {
+                return (pred, curr);
+            }
+            let curr_ref = unsafe { &*curr };
+            let (deleted, dinfo) = deletion_state(curr_ref);
+            if deleted {
+                // New linearization order: metadata before unlink.
+                if P::TRACKED {
+                    policy.commit_delete(dinfo);
+                }
+                let marked_next = mark_next(curr_ref);
+                match pred_next.compare_exchange(curr_w, marked_next & !MARK, SeqCst, SeqCst) {
+                    Ok(_) => {
+                        unsafe { ebr::retire(curr) };
+                        continue; // re-read the same pred_next
+                    }
+                    Err(_) => continue 'retry,
+                }
+            }
+            if curr_ref.key >= k {
+                return (pred, curr);
+            }
+            pred = curr;
+        }
+    }
+}
+
+/// Insert into the list rooted at `head` (Fig. 3 lines 15–26).
+pub(crate) fn insert_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> bool {
+    debug_assert!(k <= MAX_KEY);
+    let _guard = ebr::pin();
+    let _op = policy.enter();
+    let tid = thread_id::current();
+
+    let packed = policy.begin_insert(tid); // line 22 (createUpdateInfo)
+    let mut new_node: *mut Node<P> = std::ptr::null_mut();
+
+    loop {
+        let (pred, curr) = unsafe { search(policy, head, k) };
+        if !curr.is_null() {
+            let curr_ref = unsafe { &*curr };
+            if curr_ref.key == k {
+                // Present in an unmarked node: help its insert, fail
+                // (lines 16–18).
+                policy.help_insert(&curr_ref.insert_info);
+                if !new_node.is_null() {
+                    drop(unsafe { Box::from_raw(new_node) }); // never published
+                }
+                return false;
+            }
+        }
+        if new_node.is_null() {
+            new_node = Node::<P>::alloc(k, curr as u64);
+            P::stash_insert_info(unsafe { &(*new_node).insert_info }, packed); // line 23
+        } else {
+            unsafe { &(*new_node).next }.store(curr as u64, SeqCst);
+        }
+        let pred_next: &AtomicU64 = if pred.is_null() {
+            head
+        } else {
+            unsafe { &(*pred).next }
+        };
+        if pred_next
+            .compare_exchange(curr as u64, new_node as u64, SeqCst, SeqCst)
+            .is_ok()
+        {
+            // Original linearization passed; reach the new one (line 25).
+            policy.commit_insert(unsafe { &(*new_node).insert_info }, packed);
+            return true;
+        }
+        // CAS failed: retry with the allocated node.
+    }
+}
+
+/// Delete from the list rooted at `head` (Fig. 3 lines 27–38).
+pub(crate) fn delete_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> bool {
+    let _guard = ebr::pin();
+    let _op = policy.enter();
+    let tid = thread_id::current();
+
+    loop {
+        let (pred, curr) = unsafe { search(policy, head, k) };
+        if curr.is_null() || unsafe { &*curr }.key != k {
+            return false; // line 29
+        }
+        let curr_ref = unsafe { &*curr };
+
+        if P::TRACKED {
+            // Line 33: the node we found is unmarked — ensure its insert is
+            // linearized before we depend on it.
+            policy.help_insert(&curr_ref.insert_info);
+            let packed = policy.begin_delete(tid); // line 34
+            // Line 35: the marking step = installing delete-info.
+            let winner = P::try_claim_delete(&curr_ref.delete_info, packed);
+            // Line 36: metadata before any unlink.
+            policy.commit_delete(winner);
+            // Physical deletion (best effort; search() will finish it).
+            let marked_next = mark_next(curr_ref);
+            let pred_next: &AtomicU64 = if pred.is_null() {
+                head
+            } else {
+                unsafe { &(*pred).next }
+            };
+            if pred_next
+                .compare_exchange(curr as u64, marked_next & !MARK, SeqCst, SeqCst)
+                .is_ok()
+            {
+                unsafe { ebr::retire(curr) };
+            }
+            return winner == packed; // lost the claim race => concurrent
+                                     // delete succeeded instead (lines 30-32)
+        } else {
+            // Classic Harris: the next-pointer mark decides the winner.
+            let mut w = curr_ref.next.load(SeqCst);
+            loop {
+                if is_marked(w) {
+                    break; // someone else deleted it; re-search => not found
+                }
+                match curr_ref.next.compare_exchange(w, w | MARK, SeqCst, SeqCst) {
+                    Ok(_) => {
+                        policy.commit_delete(0); // naive/lock counter bump
+                        let pred_next: &AtomicU64 = if pred.is_null() {
+                            head
+                        } else {
+                            unsafe { &(*pred).next }
+                        };
+                        if pred_next
+                            .compare_exchange(curr as u64, w, SeqCst, SeqCst)
+                            .is_ok()
+                        {
+                            unsafe { ebr::retire(curr) };
+                        }
+                        return true;
+                    }
+                    Err(cur) => w = cur,
+                }
+            }
+            // Marked by a concurrent delete: the key is gone.
+            return false;
+        }
+    }
+}
+
+/// Membership test (Fig. 3 lines 6–13): a read-only traversal that helps
+/// pending operations on the found node reach their metadata linearization
+/// point before reporting.
+pub(crate) fn contains_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> bool {
+    let _guard = ebr::pin();
+    let _op = policy.enter();
+
+    let mut curr = addr::<P>(head.load(SeqCst));
+    while !curr.is_null() {
+        let curr_ref = unsafe { &*curr };
+        if curr_ref.key >= k {
+            break;
+        }
+        curr = addr::<P>(curr_ref.next.load(SeqCst));
+    }
+    if curr.is_null() {
+        return false;
+    }
+    let curr_ref = unsafe { &*curr };
+    if curr_ref.key != k {
+        return false;
+    }
+    let (deleted, dinfo) = deletion_state(curr_ref);
+    if deleted {
+        if P::TRACKED {
+            policy.commit_delete(dinfo); // lines 12–13
+        }
+        return false;
+    }
+    policy.help_insert(&curr_ref.insert_info); // lines 9–10
+    true
+}
+
+/// Non-linearizable full count: walks the list ignoring in-flight state.
+/// For tests at quiescence only.
+pub(crate) fn quiescent_count_at<P: SizePolicy>(head: &AtomicU64) -> usize {
+    let _guard = ebr::pin();
+    let mut n = 0;
+    let mut curr = addr::<P>(head.load(SeqCst));
+    while !curr.is_null() {
+        let curr_ref = unsafe { &*curr };
+        let (deleted, _) = deletion_state(curr_ref);
+        if !deleted {
+            n += 1;
+        }
+        curr = addr::<P>(curr_ref.next.load(SeqCst));
+    }
+    n
+}
+
+/// Free every node reachable from `head` (exclusive access).
+pub(crate) unsafe fn drop_chain<P: SizePolicy>(head: &AtomicU64) {
+    let mut curr = addr::<P>(head.load(SeqCst));
+    while !curr.is_null() {
+        let next = addr::<P>(unsafe { &*curr }.next.load(SeqCst));
+        drop(unsafe { Box::from_raw(curr) });
+        curr = next;
+    }
+    head.store(0, SeqCst);
+}
+
+// ---------------------------------------------------------------------------
+
+/// A sorted lock-free linked-list set (paper's transformation target in
+/// Fig. 3; also the base structure of the hash table's buckets).
+pub struct LinkedListSet<P: SizePolicy> {
+    head: AtomicU64,
+    policy: P,
+}
+
+unsafe impl<P: SizePolicy> Send for LinkedListSet<P> {}
+unsafe impl<P: SizePolicy> Sync for LinkedListSet<P> {}
+
+impl<P: SizePolicy> LinkedListSet<P> {
+    pub fn new(max_threads: usize) -> Self {
+        Self::with_opts(max_threads, SizeOpts::default())
+    }
+
+    pub fn with_opts(max_threads: usize, opts: SizeOpts) -> Self {
+        Self {
+            head: AtomicU64::new(0),
+            policy: P::new(max_threads, opts),
+        }
+    }
+
+    /// Build around an externally-configured policy (demos use this to set
+    /// `NaiveSize` anomaly windows).
+    pub fn with_policy(policy: P) -> Self {
+        Self {
+            head: AtomicU64::new(0),
+            policy,
+        }
+    }
+
+    pub fn policy(&self) -> &P {
+        &self.policy
+    }
+
+    /// Quiescent full count (tests).
+    pub fn quiescent_count(&self) -> usize {
+        quiescent_count_at::<P>(&self.head)
+    }
+}
+
+impl<P: SizePolicy> ConcurrentSet for LinkedListSet<P> {
+    fn insert(&self, k: u64) -> bool {
+        insert_at(&self.policy, &self.head, k)
+    }
+    fn delete(&self, k: u64) -> bool {
+        delete_at(&self.policy, &self.head, k)
+    }
+    fn contains(&self, k: u64) -> bool {
+        contains_at(&self.policy, &self.head, k)
+    }
+    fn size(&self) -> Option<i64> {
+        self.policy.size()
+    }
+    fn name(&self) -> String {
+        format!("LinkedList<{}>", std::any::type_name::<P>().rsplit("::").next().unwrap())
+    }
+}
+
+impl<P: SizePolicy> Drop for LinkedListSet<P> {
+    fn drop(&mut self) {
+        unsafe { drop_chain::<P>(&self.head) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::{LinearizableSize, NaiveSize, NoSize};
+    use std::sync::Arc;
+
+    fn lin_list() -> LinkedListSet<LinearizableSize> {
+        LinkedListSet::new(crate::MAX_THREADS)
+    }
+
+    #[test]
+    fn insert_delete_contains_basic() {
+        let l = lin_list();
+        assert!(!l.contains(5));
+        assert!(l.insert(5));
+        assert!(!l.insert(5));
+        assert!(l.contains(5));
+        assert!(l.delete(5));
+        assert!(!l.delete(5));
+        assert!(!l.contains(5));
+    }
+
+    #[test]
+    fn size_is_exact_sequentially() {
+        let l = lin_list();
+        assert_eq!(l.size(), Some(0));
+        for k in 0..100 {
+            assert!(l.insert(k));
+        }
+        assert_eq!(l.size(), Some(100));
+        for k in 0..50 {
+            assert!(l.delete(k * 2));
+        }
+        assert_eq!(l.size(), Some(50));
+        assert_eq!(l.quiescent_count(), 50);
+    }
+
+    #[test]
+    fn reinsertion_after_delete() {
+        let l = lin_list();
+        assert!(l.insert(7));
+        assert!(l.delete(7));
+        assert!(l.insert(7));
+        assert!(l.contains(7));
+        assert_eq!(l.size(), Some(1));
+    }
+
+    #[test]
+    fn ordering_is_maintained() {
+        let l = lin_list();
+        for k in [5u64, 1, 9, 3, 7] {
+            l.insert(k);
+        }
+        for k in [1u64, 3, 5, 7, 9] {
+            assert!(l.contains(k));
+        }
+        assert!(!l.contains(2));
+        assert_eq!(l.size(), Some(5));
+    }
+
+    #[test]
+    fn baseline_nosize_works_without_size() {
+        let l: LinkedListSet<NoSize> = LinkedListSet::new(crate::MAX_THREADS);
+        assert!(l.insert(1));
+        assert!(l.contains(1));
+        assert_eq!(l.size(), None);
+        assert!(l.delete(1));
+        assert_eq!(l.quiescent_count(), 0);
+    }
+
+    #[test]
+    fn concurrent_inserts_distinct_ranges() {
+        let l = Arc::new(lin_list());
+        let hs: Vec<_> = (0..4u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    for k in (t * 1000)..(t * 1000 + 250) {
+                        assert!(l.insert(k));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(l.size(), Some(1000));
+        assert_eq!(l.quiescent_count(), 1000);
+    }
+
+    #[test]
+    fn concurrent_same_key_single_winner() {
+        for _ in 0..50 {
+            let l = Arc::new(lin_list());
+            let hs: Vec<_> = (0..4)
+                .map(|_| {
+                    let l = l.clone();
+                    std::thread::spawn(move || l.insert(42) as usize)
+                })
+                .collect();
+            let wins: usize = hs.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(wins, 1, "exactly one insert(42) must win");
+            assert_eq!(l.size(), Some(1));
+        }
+    }
+
+    #[test]
+    fn concurrent_delete_single_winner() {
+        for _ in 0..50 {
+            let l = Arc::new(lin_list());
+            l.insert(42);
+            let hs: Vec<_> = (0..4)
+                .map(|_| {
+                    let l = l.clone();
+                    std::thread::spawn(move || l.delete(42) as usize)
+                })
+                .collect();
+            let wins: usize = hs.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(wins, 1, "exactly one delete(42) must win");
+            assert_eq!(l.size(), Some(0));
+        }
+    }
+
+    #[test]
+    fn size_never_negative_under_churn() {
+        let l = Arc::new(lin_list());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let churners: Vec<_> = (0..3u64)
+            .map(|t| {
+                let l = l.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut i = 0u64;
+                    while !stop.load(SeqCst) {
+                        let k = t * 10 + (i % 5);
+                        l.insert(k);
+                        l.delete(k);
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..1000 {
+            let s = l.size().unwrap();
+            assert!(s >= 0, "linearizable size went negative: {s}");
+            assert!(s <= 15, "size exceeded live-key bound: {s}");
+        }
+        stop.store(true, SeqCst);
+        for c in churners {
+            c.join().unwrap();
+        }
+        assert_eq!(l.size().unwrap() as usize, l.quiescent_count());
+    }
+
+    #[test]
+    fn naive_policy_counts_at_quiescence() {
+        let l: LinkedListSet<NaiveSize> = LinkedListSet::new(crate::MAX_THREADS);
+        for k in 0..10 {
+            l.insert(k);
+        }
+        l.delete(3);
+        assert_eq!(l.size(), Some(9));
+    }
+
+    #[test]
+    fn mixed_stress_size_matches_quiescent_count() {
+        let l = Arc::new(lin_list());
+        let hs: Vec<_> = (0..4u64)
+            .map(|t| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::rng::Xoshiro256::new(t + 99);
+                    for _ in 0..3000 {
+                        let k = rng.gen_range(64);
+                        match rng.gen_range(3) {
+                            0 => {
+                                l.insert(k);
+                            }
+                            1 => {
+                                l.delete(k);
+                            }
+                            _ => {
+                                l.contains(k);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(l.size().unwrap() as usize, l.quiescent_count());
+    }
+}

@@ -1,0 +1,218 @@
+//! `csize` — the Concurrent Size coordinator CLI.
+//!
+//! Subcommands:
+//! * `demo`     — quick functional tour of every structure/policy combo.
+//! * `bench`    — one ad-hoc throughput run (`--structure`, `--policy`,
+//!   `--threads`, `--size-threads`, `--secs`, `--initial`, `--mix`).
+//! * `analyze`  — run a workload with epoch sampling and push the samples
+//!   through the AOT-compiled Pallas pipeline (PJRT).
+//! * `verify`   — anomaly hunt: show the naive policy violating
+//!   linearizability (paper Figs. 1–2) and the transformed one holding.
+//!
+//! Figure reproductions live in `cargo bench` targets (see DESIGN.md §4).
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::Arc;
+use std::time::Duration;
+
+use concurrent_size::bst::BstSet;
+use concurrent_size::cli::Args;
+use concurrent_size::harness::{run, RunConfig};
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::list::LinkedListSet;
+use concurrent_size::metrics::fmt_rate;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{LinearizableSize, LockSize, NaiveSize, NoSize, SizePolicy};
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::snapshot::SnapshotSkipList;
+use concurrent_size::vcas::VcasSet;
+use concurrent_size::workload::{self, key_range, Mix, READ_HEAVY, UPDATE_HEAVY};
+use concurrent_size::{analytics, runtime, MAX_THREADS};
+
+fn make_set(structure: &str, policy: &str, initial: usize) -> Box<dyn ConcurrentSet> {
+    match (structure, policy) {
+        ("hashtable", "baseline") => Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, initial)),
+        ("hashtable", "size") => {
+            Box::new(HashTableSet::<LinearizableSize>::new(MAX_THREADS, initial))
+        }
+        ("hashtable", "naive") => Box::new(HashTableSet::<NaiveSize>::new(MAX_THREADS, initial)),
+        ("hashtable", "lock") => Box::new(HashTableSet::<LockSize>::new(MAX_THREADS, initial)),
+        ("skiplist", "baseline") => Box::new(SkipListSet::<NoSize>::new(MAX_THREADS)),
+        ("skiplist", "size") => Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)),
+        ("skiplist", "naive") => Box::new(SkipListSet::<NaiveSize>::new(MAX_THREADS)),
+        ("skiplist", "lock") => Box::new(SkipListSet::<LockSize>::new(MAX_THREADS)),
+        ("bst", "baseline") => Box::new(BstSet::<NoSize>::new(MAX_THREADS)),
+        ("bst", "size") => Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)),
+        ("bst", "naive") => Box::new(BstSet::<NaiveSize>::new(MAX_THREADS)),
+        ("bst", "lock") => Box::new(BstSet::<LockSize>::new(MAX_THREADS)),
+        ("list", "size") => Box::new(LinkedListSet::<LinearizableSize>::new(MAX_THREADS)),
+        ("list", "baseline") => Box::new(LinkedListSet::<NoSize>::new(MAX_THREADS)),
+        ("snapshot-skiplist", _) => Box::new(SnapshotSkipList::new(MAX_THREADS)),
+        ("vcas", _) => Box::new(VcasSet::new(MAX_THREADS, initial)),
+        _ => {
+            eprintln!("unknown structure/policy: {structure}/{policy}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_mix(s: &str) -> Mix {
+    match s {
+        "update-heavy" | "update" => UPDATE_HEAVY,
+        "read-heavy" | "read" => READ_HEAVY,
+        other => {
+            eprintln!("unknown mix {other:?} (use update-heavy|read-heavy)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_demo() {
+    println!("== concurrent-size demo ==");
+    for structure in [
+        "hashtable",
+        "skiplist",
+        "bst",
+        "list",
+        "snapshot-skiplist",
+        "vcas",
+    ] {
+        let set = make_set(structure, "size", 1024);
+        for k in 1..=100u64 {
+            set.insert(k);
+        }
+        for k in 1..=50u64 {
+            set.delete(k * 2);
+        }
+        println!(
+            "{:<24} contains(1)={:<5} size={:?}",
+            set.name(),
+            set.contains(1),
+            set.size()
+        );
+    }
+}
+
+fn cmd_bench(args: &Args) {
+    let structure = args.get("structure").unwrap_or("skiplist").to_string();
+    let policy = args.get("policy").unwrap_or("size").to_string();
+    let initial = args.get_usize("initial", 100_000);
+    let mix = parse_mix(args.get("mix").unwrap_or("update-heavy"));
+    let w = args.get_usize("threads", 4);
+    let s = args.get_usize("size-threads", 1);
+    let secs = args.get_f64("secs", 2.0);
+
+    let set = make_set(&structure, &policy, initial);
+    let range = key_range(initial as u64, mix);
+    println!(
+        "prefilling {} with {initial} keys (range [1,{range}])...",
+        set.name()
+    );
+    workload::prefill(set.as_ref(), initial as u64, range, 42);
+
+    let mut cfg = RunConfig::new(w, if policy == "baseline" { 0 } else { s }, mix, range);
+    cfg.duration = Duration::from_secs_f64(secs);
+    let res = run(set.as_ref(), &cfg);
+    println!(
+        "{:<24} mix={} w={w} s={} -> workload {} ops/s, size {} ops/s",
+        set.name(),
+        mix.label(),
+        cfg.size_threads,
+        fmt_rate(res.workload_throughput()),
+        fmt_rate(res.size_throughput()),
+    );
+}
+
+fn cmd_analyze(args: &Args) {
+    let initial = args.get_usize("initial", 10_000);
+    let epochs = args.get_usize("epochs", 64).min(runtime::AOT_E);
+    let secs = args.get_f64("secs", 2.0);
+    let mix = parse_mix(args.get("mix").unwrap_or("update-heavy"));
+
+    println!("loading PJRT artifacts...");
+    let artifacts = runtime::Artifacts::load_default().expect("make artifacts first");
+
+    let set: Arc<SkipListSet<LinearizableSize>> = Arc::new(SkipListSet::new(MAX_THREADS));
+    let range = key_range(initial as u64, mix);
+    workload::prefill(set.as_ref(), initial as u64, range, 42);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..3u64)
+        .map(|t| {
+            let set = set.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut stream = workload::OpStream::new(t, mix, range);
+                let mut ops = 0u64;
+                while !stop.load(SeqCst) {
+                    let (op, k) = stream.next();
+                    workload::apply(set.as_ref(), op, k);
+                    ops += 1;
+                }
+                ops
+            })
+        })
+        .collect();
+
+    let mut rec = analytics::EpochRecorder::new();
+    let calc = set.policy().calculator().unwrap();
+    let epoch_dt = Duration::from_secs_f64(secs / epochs as f64);
+    for _ in 0..epochs.saturating_sub(1) {
+        std::thread::sleep(epoch_dt);
+        rec.record(calc);
+    }
+    stop.store(true, SeqCst);
+    let total_ops: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    rec.record(calc); // final, quiescent epoch
+
+    let report = analytics::analyze(&artifacts, &rec).expect("pipeline failure");
+    println!(
+        "epochs={} ops={} final size (pallas)={} (linearizable)={} skew_max={} final_exact={}",
+        rec.len(),
+        total_ops,
+        report.pallas_sizes.last().unwrap(),
+        report.linearizable_sizes.last().unwrap(),
+        report.max_skew(),
+        report.final_exact(),
+    );
+    assert!(report.final_exact(), "quiescent epoch must be exact");
+}
+
+fn cmd_verify(args: &Args) {
+    use concurrent_size::bench_util::{fig1_anomalies, fig2_anomalies};
+    use concurrent_size::size::SizeOpts;
+    let trials = args.get_usize("trials", 2_000);
+    let rounds = args.get_usize("rounds", 500);
+
+    let mut naive_policy = NaiveSize::new(MAX_THREADS, SizeOpts::default());
+    naive_policy.set_insert_window(Duration::from_micros(80));
+    let naive: SkipListSet<NaiveSize> = SkipListSet::with_policy(naive_policy);
+    let lin: SkipListSet<LinearizableSize> = SkipListSet::new(MAX_THREADS);
+
+    println!("-- Figure 1 anomaly (contains=true then size=0), {trials} trials --");
+    println!("  naive        : {}", fig1_anomalies(&naive, trials));
+    let lin1 = fig1_anomalies(&lin, trials);
+    println!("  linearizable : {lin1}");
+
+    println!("-- Figure 2 anomaly (negative size), {rounds} rounds --");
+    println!("  naive        : {}", fig2_anomalies(&naive, rounds));
+    let lin2 = fig2_anomalies(&lin, rounds);
+    println!("  linearizable : {lin2}");
+
+    assert_eq!(lin1 + lin2, 0, "the transformed structure must never misreport");
+    println!("verify OK: methodology exhibits no anomalies");
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("demo") | None => cmd_demo(),
+        Some("bench") => cmd_bench(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("verify") => cmd_verify(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}; try demo|bench|analyze|verify");
+            std::process::exit(2);
+        }
+    }
+}

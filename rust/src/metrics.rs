@@ -1,0 +1,173 @@
+//! Summary statistics and table formatting for the benchmark harness.
+//!
+//! The paper reports each data point as the average of repeated runs and
+//! quotes the coefficient of variation (Section 9: "up to 11%"); this module
+//! provides exactly those aggregates plus simple fixed-width table output
+//! used by the figure benches.
+
+/// Aggregates over repeated measurements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Stats::from_samples on empty slice");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Self {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Coefficient of variation (stddev / mean); 0 for a zero mean.
+    pub fn cov(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+}
+
+/// Percentile with linear interpolation (`p` in `[0, 100]`).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Human-readable ops/sec (e.g., `12.3M`, `455.1K`).
+pub fn fmt_rate(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e6 {
+        format!("{:.2}M", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.1}K", ops_per_sec / 1e3)
+    } else {
+        format!("{ops_per_sec:.1}")
+    }
+}
+
+/// Fixed-width table printer used by the figure benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column-count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.stddev - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stats_single_sample_has_zero_stddev() {
+        let s = Stats::from_samples(&[5.0]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.cov(), 0.0);
+    }
+
+    #[test]
+    fn cov_matches_definition() {
+        let s = Stats::from_samples(&[10.0, 12.0, 8.0]);
+        assert!((s.cov() - s.stddev / s.mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+    }
+
+    #[test]
+    fn fmt_rate_scales() {
+        assert_eq!(fmt_rate(12_345_678.0), "12.35M");
+        assert_eq!(fmt_rate(4_200.0), "4.2K");
+        assert_eq!(fmt_rate(9.0), "9.0");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["w", "ops/s"]);
+        t.row(&["1".into(), "12.3M".into()]);
+        t.row(&["64".into(), "1.1M".into()]);
+        let r = t.render();
+        assert!(r.contains("w  ops/s") || r.contains(" w  ops/s"));
+        assert_eq!(r.lines().count(), 4);
+    }
+}

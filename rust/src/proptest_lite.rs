@@ -1,0 +1,101 @@
+//! Minimal randomized property-testing helper.
+//!
+//! `proptest` is not available in the offline build, so this module carries
+//! the 20% we need: run a property over many seeded random cases, report
+//! the failing seed for reproduction, and honor `CSIZE_PROP_SEED` /
+//! `CSIZE_PROP_CASES` env overrides.
+
+use crate::rng::Xoshiro256;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("CSIZE_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC512E);
+        let cases = std::env::var("CSIZE_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` over `config.cases` random cases; panics with the case seed on
+/// the first failure (re-run with `CSIZE_PROP_SEED=<seed> CSIZE_PROP_CASES=1`).
+pub fn run_with(name: &str, config: Config, mut prop: impl FnMut(&mut Xoshiro256) -> Result<(), String>) {
+    for case in 0..config.cases {
+        let case_seed = config.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{} (CSIZE_PROP_SEED={case_seed} to reproduce): {msg}",
+                config.cases
+            );
+        }
+    }
+}
+
+/// [`run_with`] under the default/env configuration.
+pub fn run(name: &str, prop: impl FnMut(&mut Xoshiro256) -> Result<(), String>) {
+    run_with(name, Config::default(), prop);
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_with(
+            "trivial",
+            Config { cases: 10, seed: 1 },
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn failing_property_panics_with_seed() {
+        run_with("failing", Config { cases: 5, seed: 2 }, |rng| {
+            let x = rng.gen_range(10);
+            prop_assert!(x < 5, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_assert_formats_message() {
+        let res: Result<(), String> = (|| {
+            prop_assert!(1 + 1 == 3, "math broke: {}", 42);
+            Ok(())
+        })();
+        assert_eq!(res.unwrap_err(), "math broke: 42");
+    }
+}

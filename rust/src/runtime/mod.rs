@@ -1,0 +1,201 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas analytics
+//! artifacts from Rust.
+//!
+//! The interchange format is **HLO text** (see `python/compile/aot.py` and
+//! DESIGN.md): `HloModuleProto::from_text_file` → `client.compile` →
+//! `execute`. Executables are compiled once at load and reused; Python is
+//! never on any execution path.
+//!
+//! Shape contract (mirrors `python/compile/aot.py`):
+//! * `size_reduce.hlo.txt`   : s64[[`AOT_E`], [`AOT_T`], 2] → (s64[[`AOT_E`]],)
+//! * `prefix_scan.hlo.txt`   : s64[[`AOT_L`]] → (s64[[`AOT_L`]],)
+//! * `history_stats.hlo.txt` : s64[[`AOT_L`]], s64[] → (s64[[`AOT_L`]], s64[4])
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::history::HistoryStats;
+
+/// Epochs per analytics batch (AOT_E in aot.py).
+pub const AOT_E: usize = 256;
+/// Thread slots (AOT_T in aot.py; == [`crate::MAX_THREADS`]).
+pub const AOT_T: usize = 64;
+/// History log capacity (AOT_L in aot.py).
+pub const AOT_L: usize = 65536;
+
+/// The three compiled analytics executables.
+pub struct Artifacts {
+    size_reduce: xla::PjRtLoadedExecutable,
+    prefix_scan: xla::PjRtLoadedExecutable,
+    history_stats: xla::PjRtLoadedExecutable,
+}
+
+impl Artifacts {
+    /// Compile all artifacts from `dir` (default: `./artifacts`) on the
+    /// PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        };
+        Ok(Self {
+            size_reduce: compile("size_reduce.hlo.txt")?,
+            prefix_scan: compile("prefix_scan.hlo.txt")?,
+            history_stats: compile("history_stats.hlo.txt")?,
+        })
+    }
+
+    /// Locate the artifacts directory relative to the repo root (walks up
+    /// from the current dir), then [`Self::load`] it.
+    pub fn load_default() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("size_reduce.hlo.txt").exists() {
+                return Self::load(&cand);
+            }
+            if !dir.pop() {
+                bail!("artifacts/ not found; run `make artifacts` first");
+            }
+        }
+    }
+
+    /// Per-epoch sizes from per-thread counter samples.
+    ///
+    /// `epochs[e][t] = [insertions, deletions]`; at most [`AOT_E`] epochs of
+    /// at most [`AOT_T`] threads (padded with zeros up to the AOT shape).
+    pub fn epoch_sizes(&self, epochs: &[Vec<[u64; 2]>]) -> Result<Vec<i64>> {
+        if epochs.len() > AOT_E {
+            bail!("too many epochs: {} > {AOT_E}", epochs.len());
+        }
+        let mut flat = vec![0i64; AOT_E * AOT_T * 2];
+        for (e, sample) in epochs.iter().enumerate() {
+            if sample.len() > AOT_T {
+                bail!("too many threads: {} > {AOT_T}", sample.len());
+            }
+            for (t, pair) in sample.iter().enumerate() {
+                flat[(e * AOT_T + t) * 2] = pair[0] as i64;
+                flat[(e * AOT_T + t) * 2 + 1] = pair[1] as i64;
+            }
+        }
+        let input = xla::Literal::vec1(&flat).reshape(&[AOT_E as i64, AOT_T as i64, 2])?;
+        let out = self.size_reduce.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let sizes = out.to_vec::<i64>()?;
+        Ok(sizes[..epochs.len()].to_vec())
+    }
+
+    /// Running sizes of a delta log via the Pallas `prefix_scan` kernel.
+    pub fn running_sizes(&self, deltas: &[i64]) -> Result<Vec<i64>> {
+        if deltas.len() > AOT_L {
+            bail!("history too long: {} > {AOT_L}", deltas.len());
+        }
+        let mut padded = vec![0i64; AOT_L];
+        padded[..deltas.len()].copy_from_slice(deltas);
+        let input = xla::Literal::vec1(&padded);
+        let out = self.prefix_scan.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let running = out.to_vec::<i64>()?;
+        Ok(running[..deltas.len()].to_vec())
+    }
+
+    /// Full history validation (running sizes + stats) via the Pallas
+    /// pipeline.
+    pub fn validate_history(&self, deltas: &[i64]) -> Result<(Vec<i64>, HistoryStats)> {
+        if deltas.len() > AOT_L {
+            bail!("history too long: {} > {AOT_L}", deltas.len());
+        }
+        let mut padded = vec![0i64; AOT_L];
+        padded[..deltas.len()].copy_from_slice(deltas);
+        let input = xla::Literal::vec1(&padded);
+        let vlen = xla::Literal::scalar(deltas.len() as i64);
+        let (running, stats) = self.history_stats.execute::<xla::Literal>(&[input, vlen])?[0][0]
+            .to_literal_sync()?
+            .to_tuple2()?;
+        let running = running.to_vec::<i64>()?[..deltas.len()].to_vec();
+        let s = stats.to_vec::<i64>()?;
+        Ok((
+            running,
+            HistoryStats {
+                min: s[0],
+                max: s[1],
+                final_size: s[2],
+                negative_count: s[3],
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` to have run (they are part of
+    //! the `make test` flow, which guarantees it).
+    use super::*;
+    use crate::history;
+
+    fn artifacts() -> Artifacts {
+        Artifacts::load_default().expect("run `make artifacts` before `cargo test`")
+    }
+
+    #[test]
+    fn epoch_sizes_match_rust_oracle() {
+        let a = artifacts();
+        let epochs: Vec<Vec<[u64; 2]>> = (0..10)
+            .map(|e| (0..8).map(|t| [(e * t + e) as u64, (e * t / 2) as u64]).collect())
+            .collect();
+        let got = a.epoch_sizes(&epochs).unwrap();
+        let want: Vec<i64> = epochs
+            .iter()
+            .map(|s| s.iter().map(|p| p[0] as i64 - p[1] as i64).sum())
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn running_sizes_match_rust_oracle() {
+        let a = artifacts();
+        let deltas: Vec<i64> = (0..1000).map(|i| if i % 3 == 0 { -1 } else { 1 }).collect();
+        assert_eq!(
+            a.running_sizes(&deltas).unwrap(),
+            history::running_sizes(&deltas)
+        );
+    }
+
+    #[test]
+    fn validate_history_matches_rust_oracle() {
+        let a = artifacts();
+        let deltas = vec![1, 1, -1, 1, -1, -1, 1, 1];
+        let (running, stats) = a.validate_history(&deltas).unwrap();
+        let (want_running, want_stats) = history::validate(&deltas);
+        assert_eq!(running, want_running);
+        assert_eq!(stats, want_stats);
+        assert!(stats.is_legal());
+    }
+
+    #[test]
+    fn illegal_history_is_flagged_by_kernel() {
+        let a = artifacts();
+        let (_, stats) = a.validate_history(&[-1, 1]).unwrap();
+        assert_eq!(stats.min, -1);
+        assert_eq!(stats.negative_count, 1);
+        assert!(!stats.is_legal());
+    }
+
+    #[test]
+    fn empty_epoch_batch() {
+        let a = artifacts();
+        assert!(a.epoch_sizes(&[]).unwrap().is_empty());
+    }
+}

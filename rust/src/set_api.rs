@@ -1,0 +1,27 @@
+//! The common concurrent-set interface (paper Section 2: insert / delete /
+//! contains, plus the added `size`).
+//!
+//! All keys are `u64` with `u64::MAX` reserved as the tail sentinel.
+//! Dictionaries are the same transformation with a value payload; the
+//! skip-list implementation doubles as a map via [`crate::skiplist`]'s
+//! value variant — the paper makes the identical simplification ("we refer
+//! only to sets for brevity, but all our claims apply to dictionaries").
+
+/// Object-safe set interface used by the workload harness, so one driver
+/// benches every structure/policy combination.
+pub trait ConcurrentSet: Send + Sync {
+    /// Insert `k`; `true` iff `k` was absent (paper: "returns a failure"
+    /// otherwise).
+    fn insert(&self, k: u64) -> bool;
+    /// Delete `k`; `true` iff `k` was present.
+    fn delete(&self, k: u64) -> bool;
+    /// Membership test.
+    fn contains(&self, k: u64) -> bool;
+    /// The structure's `size()`, if its policy provides one.
+    fn size(&self) -> Option<i64>;
+    /// Structure name for reports (e.g. `SizeSkipList`).
+    fn name(&self) -> String;
+}
+
+/// Largest insertable key (`u64::MAX` is the tail sentinel).
+pub const MAX_KEY: u64 = u64::MAX - 1;

@@ -1,0 +1,352 @@
+//! `SizeCalculator` — paper Figure 5, line-by-line.
+//!
+//! Holds the size metadata (one cache-padded (insertions, deletions)
+//! counter pair per thread, paper Section 5) and the currently-announced
+//! [`CountersSnapshot`]. Replaced snapshot instances are retired through
+//! [`crate::ebr`] (the Java original relies on the GC for this), keeping
+//! `compute` wait-free and `update_metadata` constant-time.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering::SeqCst};
+
+use crossbeam_utils::CachePadded;
+
+use super::{CountersSnapshot, OpKind, UpdateInfo};
+use crate::ebr;
+
+/// Optimization toggles (paper Section 7); all enabled by default, exposed
+/// for the `ablation_opts` bench.
+#[derive(Clone, Copy, Debug)]
+pub struct SizeOpts {
+    /// §7.1 — clear a node's insert-info slot once its insert is reflected,
+    /// sparing every later operation on the node a metadata check.
+    pub clear_insert_info: bool,
+    /// §7.2 — exponential backoff before competing on an adopted
+    /// `CountersSnapshot`'s collection.
+    pub backoff: bool,
+    /// §7.3 — return an already-agreed size early instead of re-collecting.
+    pub early_size_check: bool,
+}
+
+impl Default for SizeOpts {
+    fn default() -> Self {
+        Self {
+            clear_insert_info: true,
+            backoff: true,
+            early_size_check: true,
+        }
+    }
+}
+
+impl SizeOpts {
+    pub const NONE: SizeOpts = SizeOpts {
+        clear_insert_info: false,
+        backoff: false,
+        early_size_check: false,
+    };
+}
+
+/// Bounded backoff: at most `ROUNDS` waits of up to `MAX_SPINS` spin hints,
+/// preserving wait-freedom of `compute`.
+const BACKOFF_ROUNDS: u32 = 6;
+const BACKOFF_MAX_SPINS: u32 = 512;
+
+pub struct SizeCalculator {
+    /// `metadataCounters[tid] = [insertions, deletions]`, padded so each
+    /// thread's pair sits in its own cache line (paper Section 6.1).
+    metadata: Box<[CachePadded<[AtomicU64; 2]>]>,
+    /// The most recent `CountersSnapshot` (paper Fig. 4). Old instances are
+    /// EBR-retired on replacement.
+    counters_snapshot: AtomicPtr<CountersSnapshot>,
+    opts: SizeOpts,
+    nthreads: usize,
+}
+
+impl SizeCalculator {
+    /// Paper Fig. 5 lines 53–56: zeroed counters plus a dummy non-collecting
+    /// snapshot so the first `size()` announces a fresh one.
+    pub fn new(nthreads: usize, opts: SizeOpts) -> Self {
+        let dummy = Box::new(CountersSnapshot::new(nthreads));
+        dummy.collecting.store(false, SeqCst);
+        Self {
+            metadata: (0..nthreads)
+                .map(|_| CachePadded::new([AtomicU64::new(0), AtomicU64::new(0)]))
+                .collect(),
+            counters_snapshot: AtomicPtr::new(Box::into_raw(dummy)),
+            opts,
+            nthreads,
+        }
+    }
+
+    #[inline]
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    #[inline]
+    pub fn opts(&self) -> SizeOpts {
+        self.opts
+    }
+
+    /// Paper Fig. 5 lines 57–61 (+ §7.2/§7.3): the wait-free `size()`.
+    /// O(nthreads); the caller's thread must be EBR-safe (we pin
+    /// internally, so any call site is fine).
+    pub fn compute(&self) -> i64 {
+        let _g = ebr::pin();
+        let (active, adopted) = self.obtain_collecting_counters_snapshot();
+
+        // §7.3: a size agreed by a concurrent compute is ours too.
+        if self.opts.early_size_check {
+            if let Some(s) = active.agreed_size() {
+                return s;
+            }
+        }
+        // §7.2: if we adopted an instance announced by another size call,
+        // give it bounded time to finish before contending on the CASes.
+        if adopted && self.opts.backoff {
+            let mut spins = 8u32;
+            for _ in 0..BACKOFF_ROUNDS {
+                if let Some(s) = active.agreed_size() {
+                    return s;
+                }
+                for _ in 0..spins {
+                    std::hint::spin_loop();
+                }
+                spins = (spins * 2).min(BACKOFF_MAX_SPINS);
+            }
+        }
+
+        self.collect(active); // line 59
+        active.collecting.store(false, SeqCst); // line 60: linearization pt
+        active.compute_size(self.opts.early_size_check) // line 61
+    }
+
+    /// Paper Fig. 5 lines 62–70. Returns the collecting instance plus
+    /// whether it was announced by someone else (`adopted`, for §7.2).
+    ///
+    /// Safety: returned reference is valid while the caller's EBR pin is
+    /// held — instances are only freed two epochs after replacement.
+    fn obtain_collecting_counters_snapshot(&self) -> (&CountersSnapshot, bool) {
+        let current = self.counters_snapshot.load(SeqCst);
+        let current_ref = unsafe { &*current };
+        if current_ref.is_collecting() {
+            return (current_ref, true); // line 64–65
+        }
+        let fresh = Box::into_raw(Box::new(CountersSnapshot::new(self.nthreads)));
+        match self
+            .counters_snapshot
+            .compare_exchange(current, fresh, SeqCst, SeqCst)
+        {
+            Ok(_) => {
+                // We replaced `current`; nobody can reach it anymore through
+                // the calculator, but pinned readers may still hold it.
+                unsafe { ebr::retire(current) };
+                (unsafe { &*fresh }, false) // lines 68–69
+            }
+            Err(witnessed) => {
+                // Our instance was never published: free it immediately.
+                drop(unsafe { Box::from_raw(fresh) });
+                (unsafe { &*witnessed }, true) // line 70
+            }
+        }
+    }
+
+    /// Paper Fig. 5 lines 71–74.
+    fn collect(&self, target: &CountersSnapshot) {
+        for tid in 0..self.nthreads {
+            for kind in [OpKind::Insert, OpKind::Delete] {
+                target.add(tid, kind, self.metadata[tid][kind as usize].load(SeqCst));
+            }
+        }
+    }
+
+    /// Paper Fig. 5 lines 75–83: make the metadata reflect `info`'s
+    /// operation (idempotent — callable by the initiator and any helper),
+    /// then forward to a concurrent collection if one might have missed it.
+    ///
+    /// Constant time: the counter CAS runs at most once and `forward` loops
+    /// at most twice (paper Claim 8.4).
+    pub fn update_metadata(&self, packed: u64, kind: OpKind) {
+        debug_assert_ne!(packed, 0);
+        let UpdateInfo { tid, counter } = UpdateInfo::unpack(packed);
+        let cell = &self.metadata[tid][kind as usize];
+
+        // Lines 78–79: reflect the operation (exactly-once via monotone CAS).
+        if cell.load(SeqCst) == counter - 1 {
+            let _ = cell.compare_exchange(counter - 1, counter, SeqCst, SeqCst);
+        }
+
+        // Lines 80–83: forward to an ongoing collection. The check order
+        // (obtain snapshot → still collecting → counter still current) is
+        // what bounds `forward` to two iterations (§8.2).
+        //
+        // The snapshot deref needs an EBR pin; every data-structure call
+        // site already holds one (operations pin on entry), so this is a
+        // single Cell read on the hot path instead of a fresh pin.
+        let _g = if ebr::is_pinned() { None } else { Some(ebr::pin()) };
+        let snap = unsafe { &*self.counters_snapshot.load(SeqCst) };
+        if snap.is_collecting() && cell.load(SeqCst) == counter {
+            snap.forward(tid, kind, counter);
+        }
+    }
+
+    /// Paper Fig. 5 lines 84–85: the info the calling thread's upcoming
+    /// `kind` operation publishes for helpers.
+    pub fn create_update_info(&self, kind: OpKind, tid: usize) -> u64 {
+        let counter = self.metadata[tid][kind as usize].load(SeqCst) + 1;
+        UpdateInfo { tid, counter }.pack()
+    }
+
+    /// Raw counter sample `[tid][ins, del]` for the offline analytics
+    /// pipeline (NOT linearizable — epoch analytics tolerance is documented
+    /// in `analytics`; use [`Self::compute`] for a linearizable size).
+    pub fn sample_counters(&self) -> Vec<[u64; 2]> {
+        (0..self.nthreads)
+            .map(|tid| {
+                [
+                    self.metadata[tid][0].load(SeqCst),
+                    self.metadata[tid][1].load(SeqCst),
+                ]
+            })
+            .collect()
+    }
+
+    /// Current value of one metadata counter (tests/diagnostics).
+    pub fn counter(&self, tid: usize, kind: OpKind) -> u64 {
+        self.metadata[tid][kind as usize].load(SeqCst)
+    }
+}
+
+impl Drop for SizeCalculator {
+    fn drop(&mut self) {
+        let p = *self.counters_snapshot.get_mut();
+        drop(unsafe { Box::from_raw(p) });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::INVALID_CELL;
+    use std::sync::Arc;
+
+    fn info(tid: usize, counter: u64) -> u64 {
+        UpdateInfo { tid, counter }.pack()
+    }
+
+    #[test]
+    fn empty_calculator_size_is_zero() {
+        let sc = SizeCalculator::new(4, SizeOpts::default());
+        assert_eq!(sc.compute(), 0);
+    }
+
+    #[test]
+    fn update_metadata_is_idempotent() {
+        let sc = SizeCalculator::new(2, SizeOpts::default());
+        let i1 = info(0, 1);
+        sc.update_metadata(i1, OpKind::Insert);
+        sc.update_metadata(i1, OpKind::Insert); // helper repeats: no effect
+        sc.update_metadata(i1, OpKind::Insert);
+        assert_eq!(sc.counter(0, OpKind::Insert), 1);
+        assert_eq!(sc.compute(), 1);
+    }
+
+    #[test]
+    fn size_tracks_inserts_and_deletes() {
+        let sc = SizeCalculator::new(2, SizeOpts::default());
+        sc.update_metadata(info(0, 1), OpKind::Insert);
+        sc.update_metadata(info(0, 2), OpKind::Insert);
+        sc.update_metadata(info(1, 1), OpKind::Insert);
+        sc.update_metadata(info(0, 1), OpKind::Delete);
+        assert_eq!(sc.compute(), 2);
+    }
+
+    #[test]
+    fn create_update_info_targets_next_counter() {
+        let sc = SizeCalculator::new(2, SizeOpts::default());
+        let p = sc.create_update_info(OpKind::Insert, 1);
+        assert_eq!(UpdateInfo::unpack(p), UpdateInfo { tid: 1, counter: 1 });
+        sc.update_metadata(p, OpKind::Insert);
+        let p2 = sc.create_update_info(OpKind::Insert, 1);
+        assert_eq!(UpdateInfo::unpack(p2).counter, 2);
+    }
+
+    #[test]
+    fn compute_twice_announces_fresh_snapshots() {
+        let sc = SizeCalculator::new(2, SizeOpts::default());
+        assert_eq!(sc.compute(), 0);
+        sc.update_metadata(info(0, 1), OpKind::Insert);
+        assert_eq!(sc.compute(), 1); // must not return the stale agreed 0
+    }
+
+    #[test]
+    fn update_during_collection_is_forwarded() {
+        // Build a collecting snapshot manually, then update metadata: the
+        // new value must be forwarded into the snapshot (paper lines 80-83).
+        let sc = SizeCalculator::new(2, SizeOpts::default());
+        let _g = ebr::pin();
+        let snap = unsafe { &*sc.counters_snapshot.load(SeqCst) };
+        snap.collecting.store(true, SeqCst);
+        sc.update_metadata(info(0, 1), OpKind::Insert);
+        assert_eq!(snap.cell(0, OpKind::Insert), 1);
+        assert_ne!(snap.cell(0, OpKind::Insert), INVALID_CELL);
+        snap.collecting.store(false, SeqCst);
+    }
+
+    #[test]
+    fn concurrent_sizes_agree() {
+        let sc = Arc::new(SizeCalculator::new(8, SizeOpts::default()));
+        // Preload 100 net inserts by thread 0.
+        for c in 1..=100 {
+            sc.update_metadata(info(0, c), OpKind::Insert);
+        }
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let sc = sc.clone();
+                std::thread::spawn(move || sc.compute())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 100);
+        }
+    }
+
+    #[test]
+    fn stress_size_never_negative_with_paired_ops() {
+        // Updaters always insert-then-delete: any linearizable size is >= 0.
+        let sc = Arc::new(SizeCalculator::new(8, SizeOpts::default()));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let updaters: Vec<_> = (0..3)
+            .map(|t| {
+                let sc = sc.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let tid = t; // distinct logical tids for this test
+                    let mut c = 0u64;
+                    while !stop.load(SeqCst) {
+                        c += 1;
+                        sc.update_metadata(info(tid, c), OpKind::Insert);
+                        sc.update_metadata(info(tid, c), OpKind::Delete);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..2_000 {
+            let s = sc.compute();
+            assert!((0..=3).contains(&s), "non-linearizable size {s}");
+        }
+        stop.store(true, SeqCst);
+        for u in updaters {
+            u.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn opts_none_still_correct() {
+        let sc = SizeCalculator::new(2, SizeOpts::NONE);
+        sc.update_metadata(info(0, 1), OpKind::Insert);
+        sc.update_metadata(info(1, 1), OpKind::Insert);
+        sc.update_metadata(info(1, 1), OpKind::Delete);
+        assert_eq!(sc.compute(), 1);
+        assert_eq!(sc.compute(), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! `CountersSnapshot` — paper Figure 6, line-by-line.
+//!
+//! One instance coordinates every `size()` call of a single collection
+//! phase; updating operations `forward` counter values a concurrent
+//! collection might have missed (Jayanti's second array, adapted to
+//! multiple concurrent scanners à la Petrank–Timnat).
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering::SeqCst};
+
+use super::OpKind;
+
+/// Sentinel for "not yet collected" snapshot cells (paper: `Long.MAX_VALUE`;
+/// counters are < 2^48 so `u64::MAX` can never be a real counter).
+pub const INVALID_CELL: u64 = u64::MAX;
+
+/// Sentinel for "size not yet determined".
+pub const INVALID_SIZE: i64 = i64::MIN;
+
+/// Snapshot of the metadata counters plus the agreed size (paper Fig. 4).
+pub struct CountersSnapshot {
+    /// `snapshot[tid][kind]` — collected/forwarded counter values.
+    snapshot: Box<[[AtomicU64; 2]]>,
+    /// True while the collection phase is ongoing; setting it false is the
+    /// linearization point of every `size()` using this instance (§8.1.1).
+    pub(crate) collecting: AtomicBool,
+    /// The agreed size; first successful CAS from [`INVALID_SIZE`] wins.
+    size: AtomicI64,
+}
+
+impl CountersSnapshot {
+    /// Paper Fig. 6 lines 87–91.
+    pub fn new(nthreads: usize) -> Self {
+        Self {
+            snapshot: (0..nthreads)
+                .map(|_| [AtomicU64::new(INVALID_CELL), AtomicU64::new(INVALID_CELL)])
+                .collect(),
+            collecting: AtomicBool::new(true),
+            size: AtomicI64::new(INVALID_SIZE),
+        }
+    }
+
+    /// Collect `counter` into the snapshot unless some operation already
+    /// collected or forwarded this cell (paper lines 92–94).
+    pub fn add(&self, tid: usize, kind: OpKind, counter: u64) {
+        let cell = &self.snapshot[tid][kind as usize];
+        if cell.load(SeqCst) == INVALID_CELL {
+            let _ = cell.compare_exchange(INVALID_CELL, counter, SeqCst, SeqCst);
+        }
+    }
+
+    /// Forward a freshly-written metadata value a concurrent collection may
+    /// have missed (paper lines 95–100). Executes at most two loop
+    /// iterations (paper Claim 8.4) because stale forwards are filtered by
+    /// the caller's check sequence in `update_metadata`.
+    pub fn forward(&self, tid: usize, kind: OpKind, counter: u64) {
+        let cell = &self.snapshot[tid][kind as usize];
+        let mut snap = cell.load(SeqCst);
+        while snap == INVALID_CELL || counter > snap {
+            match cell.compare_exchange(snap, counter, SeqCst, SeqCst) {
+                Ok(_) => return,
+                Err(witnessed) => snap = witnessed,
+            }
+        }
+    }
+
+    /// Compute/adopt the agreed size (paper lines 101–109). With
+    /// `early_check` (optimization §7.3) the already-agreed size short-cuts
+    /// both the summation and the CAS.
+    pub fn compute_size(&self, early_check: bool) -> i64 {
+        if early_check {
+            let s = self.size.load(SeqCst);
+            if s != INVALID_SIZE {
+                return s;
+            }
+        }
+        let mut computed: i64 = 0;
+        for cells in self.snapshot.iter() {
+            let ins = cells[OpKind::Insert as usize].load(SeqCst);
+            let del = cells[OpKind::Delete as usize].load(SeqCst);
+            debug_assert_ne!(ins, INVALID_CELL, "compute_size before collection completed");
+            debug_assert_ne!(del, INVALID_CELL, "compute_size before collection completed");
+            computed += ins as i64 - del as i64;
+        }
+        if early_check {
+            let s = self.size.load(SeqCst);
+            if s != INVALID_SIZE {
+                return s;
+            }
+        }
+        match self
+            .size
+            .compare_exchange(INVALID_SIZE, computed, SeqCst, SeqCst)
+        {
+            Ok(_) => computed,
+            Err(witnessed) => witnessed, // adopt the concurrently-agreed size
+        }
+    }
+
+    /// The agreed size if already determined.
+    #[inline]
+    pub fn agreed_size(&self) -> Option<i64> {
+        match self.size.load(SeqCst) {
+            INVALID_SIZE => None,
+            s => Some(s),
+        }
+    }
+
+    /// Whether the collection phase is still ongoing.
+    #[inline]
+    pub fn is_collecting(&self) -> bool {
+        self.collecting.load(SeqCst)
+    }
+
+    /// Raw snapshot cell (tests/diagnostics).
+    #[cfg(test)]
+    pub(crate) fn cell(&self, tid: usize, kind: OpKind) -> u64 {
+        self.snapshot[tid][kind as usize].load(SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_instance_is_collecting_and_invalid() {
+        let cs = CountersSnapshot::new(4);
+        assert!(cs.is_collecting());
+        assert_eq!(cs.agreed_size(), None);
+        assert_eq!(cs.cell(0, OpKind::Insert), INVALID_CELL);
+    }
+
+    #[test]
+    fn add_only_fills_invalid_cells() {
+        let cs = CountersSnapshot::new(2);
+        cs.add(0, OpKind::Insert, 5);
+        cs.add(0, OpKind::Insert, 99); // must not override
+        assert_eq!(cs.cell(0, OpKind::Insert), 5);
+    }
+
+    #[test]
+    fn forward_overrides_smaller_values() {
+        let cs = CountersSnapshot::new(2);
+        cs.add(1, OpKind::Delete, 3);
+        cs.forward(1, OpKind::Delete, 7);
+        assert_eq!(cs.cell(1, OpKind::Delete), 7);
+        cs.forward(1, OpKind::Delete, 4); // stale: ignored
+        assert_eq!(cs.cell(1, OpKind::Delete), 7);
+    }
+
+    #[test]
+    fn forward_fills_invalid_cells() {
+        let cs = CountersSnapshot::new(1);
+        cs.forward(0, OpKind::Insert, 2);
+        assert_eq!(cs.cell(0, OpKind::Insert), 2);
+    }
+
+    #[test]
+    fn compute_size_sums_ins_minus_del() {
+        let cs = CountersSnapshot::new(3);
+        for tid in 0..3 {
+            cs.add(tid, OpKind::Insert, (tid as u64 + 1) * 10);
+            cs.add(tid, OpKind::Delete, tid as u64);
+        }
+        // 10+20+30 - (0+1+2) = 57
+        assert_eq!(cs.compute_size(true), 57);
+        assert_eq!(cs.agreed_size(), Some(57));
+    }
+
+    #[test]
+    fn first_compute_wins_and_is_adopted() {
+        let cs = CountersSnapshot::new(1);
+        cs.add(0, OpKind::Insert, 4);
+        cs.add(0, OpKind::Delete, 1);
+        assert_eq!(cs.compute_size(false), 3);
+        // Later forwards change cells but not the agreed size.
+        cs.forward(0, OpKind::Insert, 100);
+        assert_eq!(cs.compute_size(false), 3);
+        assert_eq!(cs.compute_size(true), 3);
+    }
+}

@@ -1,0 +1,87 @@
+//! The paper's core contribution: wait-free linearizable `size()`.
+//!
+//! * [`SizeCalculator`] — per-thread insertion/deletion metadata counters +
+//!   the announced [`CountersSnapshot`] (paper Fig. 5).
+//! * [`CountersSnapshot`] — the Jayanti-style wait-free collect object
+//!   shared by concurrent `size()` calls (paper Fig. 6).
+//! * [`UpdateInfo`] — the trace a successful insert/delete leaves for
+//!   helpers (paper Fig. 4). We pack it into a single `u64`
+//!   (`tid << 48 | counter`) so publishing it is one relaxed store and no
+//!   allocation — the protocol is unchanged, only the representation.
+//! * [`SizePolicy`] and its implementations — the compile-time switch that
+//!   instantiates each data structure as baseline / paper-transformed /
+//!   naive / global-lock (see `policy.rs`).
+
+mod calculator;
+mod counters_snapshot;
+mod policy;
+
+pub use calculator::{SizeCalculator, SizeOpts};
+pub use counters_snapshot::{CountersSnapshot, INVALID_CELL, INVALID_SIZE};
+pub use policy::{LinearizableSize, LockSize, NaiveSize, NoSize, SizePolicy};
+
+/// Operation kind: index into the per-thread counter pair (paper line 1:
+/// `INSERT = 0, DELETE = 1`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Insert = 0,
+    Delete = 1,
+}
+
+/// Bits reserved for the per-thread operation counter.
+pub const COUNTER_BITS: u32 = 48;
+const COUNTER_MASK: u64 = (1 << COUNTER_BITS) - 1;
+
+/// The information the `c`-th successful operation of thread `tid` leaves
+/// for helpers (paper Section 5): which counter to update and its target
+/// value. `counter` starts at 1, so the packed form is never 0 — `0` is the
+/// "no pending operation" sentinel in node info slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UpdateInfo {
+    pub tid: usize,
+    pub counter: u64,
+}
+
+impl UpdateInfo {
+    /// Pack into the single-word form stored in node info slots.
+    #[inline]
+    pub fn pack(self) -> u64 {
+        debug_assert!(self.tid < (1 << (64 - COUNTER_BITS)));
+        debug_assert!(self.counter != 0 && self.counter <= COUNTER_MASK);
+        ((self.tid as u64) << COUNTER_BITS) | self.counter
+    }
+
+    /// Unpack a non-zero packed word.
+    #[inline]
+    pub fn unpack(packed: u64) -> Self {
+        debug_assert!(packed != 0);
+        Self {
+            tid: (packed >> COUNTER_BITS) as usize,
+            counter: packed & COUNTER_MASK,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (tid, counter) in [(0, 1), (5, 42), (63, (1u64 << 48) - 1)] {
+            let info = UpdateInfo { tid, counter };
+            assert_eq!(UpdateInfo::unpack(info.pack()), info);
+        }
+    }
+
+    #[test]
+    fn packed_is_never_zero() {
+        assert_ne!(UpdateInfo { tid: 0, counter: 1 }.pack(), 0);
+    }
+
+    #[test]
+    fn opkind_indices_match_paper() {
+        assert_eq!(OpKind::Insert as usize, 0);
+        assert_eq!(OpKind::Delete as usize, 1);
+    }
+}

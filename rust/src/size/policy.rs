@@ -1,0 +1,440 @@
+//! Size policies: the compile-time switch between the paper's transformed
+//! data structure, the untouched baseline, and the two strawmen the paper
+//! argues against (Section 1).
+//!
+//! Every data structure in this crate is generic over a [`SizePolicy`]:
+//!
+//! * [`NoSize`] — the baseline. All hooks are no-ops and the per-node info
+//!   slots are zero-sized, so the monomorphized structure is bit-identical
+//!   to the untransformed algorithm (this is what Figures 7–9 measure
+//!   against).
+//! * [`LinearizableSize`] — the paper's methodology (Sections 4–7):
+//!   operations publish `UpdateInfo`, help dependent operations reach their
+//!   metadata linearization point, and `size()` is wait-free O(#threads).
+//! * [`NaiveSize`] — Java's `ConcurrentSkipListMap`-style counter updated
+//!   *after* the structure update. Non-linearizable: exhibits the Figure 1
+//!   (contains/size contradiction) and Figure 2 (negative size) anomalies.
+//!   An optional artificial delay widens the race window for the demos.
+//! * [`LockSize`] — the coarse global-lock alternative: updates take a read
+//!   lock, `size()` takes the write lock. Correct but a scalability
+//!   bottleneck (the `ablation_policies` bench quantifies it).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::SeqCst};
+use std::sync::RwLock;
+use std::time::Duration;
+
+use crossbeam_utils::CachePadded;
+
+use super::{OpKind, SizeCalculator, SizeOpts};
+
+/// Compile-time hooks a size-aware data structure invokes at the points the
+/// paper's transformation prescribes (Fig. 3). `InfoSlot` is the per-node
+/// storage for published `UpdateInfo` (zero-sized when untracked).
+pub trait SizePolicy: Send + Sync + Sized + 'static {
+    /// Per-node storage for packed `UpdateInfo` (insert-info and, for
+    /// mark-by-slot structures, delete-info).
+    type InfoSlot: Send + Sync + Default;
+    /// Held for the duration of every structure operation (only `LockSize`
+    /// uses a non-trivial guard).
+    type OpGuard<'a>
+    where
+        Self: 'a;
+
+    /// Whether the linearizable-metadata protocol is active (drives the
+    /// tracked-specific branches in the structures; `false` branches
+    /// compile away).
+    const TRACKED: bool;
+
+    fn new(max_threads: usize, opts: SizeOpts) -> Self;
+
+    /// Enter an operation (Fig. 3 wraps every op; only `LockSize` blocks).
+    fn enter(&self) -> Self::OpGuard<'_>;
+
+    // ---- insert path (Fig. 3 lines 15–26) ----
+
+    /// `createUpdateInfo(INSERT)` — packed info for the upcoming insert.
+    fn begin_insert(&self, tid: usize) -> u64;
+    /// Store the packed info in a *pre-publication* node (plain store).
+    fn stash_insert_info(slot: &Self::InfoSlot, packed: u64);
+    /// After the node is linked (the original linearization point): reach
+    /// the new linearization point (`updateMetadata`), then clear the slot
+    /// (§7.1).
+    fn commit_insert(&self, slot: &Self::InfoSlot, packed: u64);
+    /// An operation observed an unmarked node it depends on: ensure the
+    /// insert that created it is reflected (Fig. 3 lines 9–10, 17–18, 33).
+    fn help_insert(&self, slot: &Self::InfoSlot);
+
+    // ---- delete path (Fig. 3 lines 27–38) ----
+
+    /// `createUpdateInfo(DELETE)`.
+    fn begin_delete(&self, tid: usize) -> u64;
+    /// Race to install delete-info in the node's slot (the *marking* step of
+    /// slot-marked structures): returns the winning packed info. Untracked
+    /// policies return 0 (their structures mark via pointer bits instead).
+    fn try_claim_delete(slot: &Self::InfoSlot, packed: u64) -> u64;
+    /// Read the installed delete-info (0 if none).
+    fn read_delete_info(slot: &Self::InfoSlot) -> u64;
+    /// The delete reached its original linearization point (the mark):
+    /// reach the new one (`updateMetadata`). Must run *before* any unlink
+    /// attempt (Fig. 3 footnote). Idempotent; helpers call it too.
+    fn commit_delete(&self, packed: u64);
+
+    // ---- size ----
+
+    /// The structure's `size()`; `None` when the policy does not provide one.
+    fn size(&self) -> Option<i64>;
+
+    /// Access to the underlying calculator (tracked policies only).
+    fn calculator(&self) -> Option<&SizeCalculator> {
+        None
+    }
+}
+
+// --------------------------------------------------------------------------
+/// Baseline: the untransformed data structure (paper's `SkipList`,
+/// `HashTable`, `BST`).
+pub struct NoSize;
+
+impl SizePolicy for NoSize {
+    type InfoSlot = ();
+    type OpGuard<'a> = ();
+    const TRACKED: bool = false;
+
+    fn new(_: usize, _: SizeOpts) -> Self {
+        NoSize
+    }
+    #[inline(always)]
+    fn enter(&self) -> () {}
+    #[inline(always)]
+    fn begin_insert(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn stash_insert_info(_: &(), _: u64) {}
+    #[inline(always)]
+    fn commit_insert(&self, _: &(), _: u64) {}
+    #[inline(always)]
+    fn help_insert(&self, _: &()) {}
+    #[inline(always)]
+    fn begin_delete(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn try_claim_delete(_: &(), _: u64) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn read_delete_info(_: &()) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn commit_delete(&self, _: u64) {}
+    #[inline(always)]
+    fn size(&self) -> Option<i64> {
+        None
+    }
+}
+
+// --------------------------------------------------------------------------
+/// The paper's methodology: linearizable wait-free size.
+pub struct LinearizableSize {
+    calc: SizeCalculator,
+}
+
+impl SizePolicy for LinearizableSize {
+    type InfoSlot = AtomicU64;
+    type OpGuard<'a> = ();
+    const TRACKED: bool = true;
+
+    fn new(max_threads: usize, opts: SizeOpts) -> Self {
+        Self {
+            calc: SizeCalculator::new(max_threads, opts),
+        }
+    }
+
+    #[inline(always)]
+    fn enter(&self) -> () {}
+
+    #[inline]
+    fn begin_insert(&self, tid: usize) -> u64 {
+        self.calc.create_update_info(OpKind::Insert, tid)
+    }
+
+    #[inline]
+    fn stash_insert_info(slot: &AtomicU64, packed: u64) {
+        // Pre-publication: the node is not yet reachable, a plain store
+        // would do; Relaxed keeps it race-free under the memory model.
+        slot.store(packed, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn commit_insert(&self, slot: &AtomicU64, packed: u64) {
+        self.calc.update_metadata(packed, OpKind::Insert);
+        if self.calc.opts().clear_insert_info {
+            slot.store(0, SeqCst); // §7.1: signal "already reflected"
+        }
+    }
+
+    #[inline]
+    fn help_insert(&self, slot: &AtomicU64) {
+        let packed = slot.load(SeqCst);
+        if packed != 0 {
+            self.calc.update_metadata(packed, OpKind::Insert);
+        }
+    }
+
+    #[inline]
+    fn begin_delete(&self, tid: usize) -> u64 {
+        self.calc.create_update_info(OpKind::Delete, tid)
+    }
+
+    #[inline]
+    fn try_claim_delete(slot: &AtomicU64, packed: u64) -> u64 {
+        match slot.compare_exchange(0, packed, SeqCst, SeqCst) {
+            Ok(_) => packed,
+            Err(winner) => winner,
+        }
+    }
+
+    #[inline]
+    fn read_delete_info(slot: &AtomicU64) -> u64 {
+        slot.load(SeqCst)
+    }
+
+    #[inline]
+    fn commit_delete(&self, packed: u64) {
+        if packed != 0 {
+            self.calc.update_metadata(packed, OpKind::Delete);
+        }
+    }
+
+    #[inline]
+    fn size(&self) -> Option<i64> {
+        Some(self.calc.compute())
+    }
+
+    fn calculator(&self) -> Option<&SizeCalculator> {
+        Some(&self.calc)
+    }
+}
+
+// --------------------------------------------------------------------------
+/// Java-style non-linearizable size: a shared counter bumped *after* the
+/// data-structure update (paper Section 1, Figures 1–2).
+pub struct NaiveSize {
+    size: CachePadded<AtomicI64>,
+    /// Optional artificial delays between the structure update and the
+    /// counter update, widening the anomaly windows for demos/tests.
+    /// An insert-only window reproduces the paper's Figure 2 interleaving
+    /// (T_ins preempted before its increment while T_del's decrement lands).
+    insert_window: Option<Duration>,
+    delete_window: Option<Duration>,
+}
+
+impl NaiveSize {
+    /// Set the anomaly-window delay on both op kinds (call before sharing).
+    pub fn set_window(&mut self, window: Duration) {
+        self.insert_window = Some(window);
+        self.delete_window = Some(window);
+    }
+
+    /// Delay only the insert's metadata update (the Figure 2 schedule).
+    pub fn set_insert_window(&mut self, window: Duration) {
+        self.insert_window = Some(window);
+    }
+
+    #[inline]
+    fn delay(window: Option<Duration>) {
+        if let Some(w) = window {
+            std::thread::sleep(w);
+        }
+    }
+}
+
+impl SizePolicy for NaiveSize {
+    type InfoSlot = ();
+    type OpGuard<'a> = ();
+    const TRACKED: bool = false;
+
+    fn new(_: usize, _: SizeOpts) -> Self {
+        Self {
+            size: CachePadded::new(AtomicI64::new(0)),
+            insert_window: None,
+            delete_window: None,
+        }
+    }
+
+    #[inline(always)]
+    fn enter(&self) -> () {}
+    #[inline(always)]
+    fn begin_insert(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn stash_insert_info(_: &(), _: u64) {}
+
+    #[inline]
+    fn commit_insert(&self, _: &(), _: u64) {
+        // The separation between the structure update (already visible) and
+        // this counter update is exactly the paper's Figure 1/2 bug.
+        Self::delay(self.insert_window);
+        self.size.fetch_add(1, SeqCst);
+    }
+
+    #[inline(always)]
+    fn help_insert(&self, _: &()) {}
+    #[inline(always)]
+    fn begin_delete(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn try_claim_delete(_: &(), _: u64) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn read_delete_info(_: &()) -> u64 {
+        0
+    }
+
+    #[inline]
+    fn commit_delete(&self, _: u64) {
+        Self::delay(self.delete_window);
+        self.size.fetch_sub(1, SeqCst);
+    }
+
+    #[inline]
+    fn size(&self) -> Option<i64> {
+        Some(self.size.load(SeqCst))
+    }
+}
+
+// --------------------------------------------------------------------------
+/// Coarse-grained global-lock size (paper Section 1, "third alternative").
+pub struct LockSize {
+    lock: RwLock<()>,
+    size: CachePadded<AtomicI64>,
+}
+
+impl SizePolicy for LockSize {
+    type InfoSlot = ();
+    type OpGuard<'a> = std::sync::RwLockReadGuard<'a, ()>;
+    const TRACKED: bool = false;
+
+    fn new(_: usize, _: SizeOpts) -> Self {
+        Self {
+            lock: RwLock::new(()),
+            size: CachePadded::new(AtomicI64::new(0)),
+        }
+    }
+
+    #[inline]
+    fn enter(&self) -> Self::OpGuard<'_> {
+        self.lock.read().unwrap()
+    }
+
+    #[inline(always)]
+    fn begin_insert(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn stash_insert_info(_: &(), _: u64) {}
+
+    #[inline]
+    fn commit_insert(&self, _: &(), _: u64) {
+        // Runs while the op's read guard is held: ordered w.r.t. size().
+        self.size.fetch_add(1, SeqCst);
+    }
+
+    #[inline(always)]
+    fn help_insert(&self, _: &()) {}
+    #[inline(always)]
+    fn begin_delete(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn try_claim_delete(_: &(), _: u64) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn read_delete_info(_: &()) -> u64 {
+        0
+    }
+
+    #[inline]
+    fn commit_delete(&self, _: u64) {
+        self.size.fetch_sub(1, SeqCst);
+    }
+
+    #[inline]
+    fn size(&self) -> Option<i64> {
+        let _w = self.lock.write().unwrap();
+        Some(self.size.load(SeqCst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nosize_is_zero_cost_storage() {
+        assert_eq!(std::mem::size_of::<<NoSize as SizePolicy>::InfoSlot>(), 0);
+    }
+
+    #[test]
+    fn linearizable_tracks_commits() {
+        let p = LinearizableSize::new(4, SizeOpts::default());
+        let slot = AtomicU64::new(0);
+        let i = p.begin_insert(0);
+        LinearizableSize::stash_insert_info(&slot, i);
+        p.commit_insert(&slot, i);
+        assert_eq!(slot.load(SeqCst), 0, "opt 7.1 must clear the slot");
+        assert_eq!(p.size(), Some(1));
+        let d = p.begin_delete(0);
+        let won = LinearizableSize::try_claim_delete(&AtomicU64::new(0), d);
+        assert_eq!(won, d);
+        p.commit_delete(won);
+        assert_eq!(p.size(), Some(0));
+    }
+
+    #[test]
+    fn claim_delete_race_single_winner() {
+        let slot = AtomicU64::new(0);
+        let a = crate::size::UpdateInfo { tid: 1, counter: 1 }.pack();
+        let b = crate::size::UpdateInfo { tid: 2, counter: 1 }.pack();
+        assert_eq!(LinearizableSize::try_claim_delete(&slot, a), a);
+        assert_eq!(LinearizableSize::try_claim_delete(&slot, b), a, "loser adopts winner");
+        assert_eq!(LinearizableSize::read_delete_info(&slot), a);
+    }
+
+    #[test]
+    fn helping_twice_counts_once() {
+        let p = LinearizableSize::new(2, SizeOpts::NONE); // no slot clearing
+        let slot = AtomicU64::new(0);
+        let i = p.begin_insert(1);
+        LinearizableSize::stash_insert_info(&slot, i);
+        p.commit_insert(&slot, i);
+        p.help_insert(&slot); // helper after commit: idempotent
+        p.help_insert(&slot);
+        assert_eq!(p.size(), Some(1));
+    }
+
+    #[test]
+    fn naive_counts_but_lags() {
+        let p = NaiveSize::new(1, SizeOpts::default());
+        p.commit_insert(&(), 0);
+        p.commit_insert(&(), 0);
+        p.commit_delete(0);
+        assert_eq!(p.size(), Some(1));
+    }
+
+    #[test]
+    fn lock_size_is_consistent_under_guard() {
+        let p = LockSize::new(1, SizeOpts::default());
+        {
+            let _g = p.enter();
+            p.commit_insert(&(), 0);
+        }
+        assert_eq!(p.size(), Some(1));
+    }
+}

@@ -1,0 +1,776 @@
+//! Lock-free skip-list set, generic over the size policy.
+//!
+//! Tower-based lock-free skip list (Fraser 2004 / Herlihy–Shavit Ch. 14
+//! style, the same family as Java's `ConcurrentSkipListMap` the paper
+//! evaluates): each node carries its full `next` tower; logical membership
+//! is decided at the bottom level.
+//!
+//! ## Deletion state machine (paper Section 4)
+//!
+//! * **Tracked**: the marking step is installing the packed `UpdateInfo`
+//!   into `delete_info` (the paper's `ConcurrentSkipListMap` adaptation:
+//!   the value field is repointed at the `UpdateInfo` instead of `NULL`).
+//!   Metadata is updated (`commit_delete`) before the physical mark/unlink.
+//! * **Untracked**: classic scheme — the bottom-level next-pointer mark CAS
+//!   is the logical delete.
+//!
+//! Physical removal: mark every level top-down, then `find` unlinks.
+
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+
+use crate::ebr;
+use crate::rng::Xoshiro256;
+use crate::set_api::{ConcurrentSet, MAX_KEY};
+use crate::size::{SizeOpts, SizePolicy};
+use crate::thread_id;
+
+pub(crate) const MAX_LEVEL: usize = 20;
+const MARK: u64 = 1;
+
+#[inline]
+fn is_marked(w: u64) -> bool {
+    w & MARK == MARK
+}
+
+#[inline]
+fn addr<P: SizePolicy>(w: u64) -> *mut SkipNode<P> {
+    (w & !MARK) as *mut SkipNode<P>
+}
+
+// Reclamation state word layout (see `maybe_retire`):
+//   bits 0..=20   — "linked at level l" (set by the inserter's link CAS)
+//   bits 21..=41  — "unlinked at level l" (set by the unlink-CAS winner)
+//   bit 62        — inserter finished: no future link can be created
+//   bit 63        — retire claimed (exactly-once guard)
+const LINKED_SHIFT: u32 = 0;
+const UNLINKED_SHIFT: u32 = 21;
+const LEVELS_MASK: u64 = (1 << MAX_LEVEL as u32) - 1;
+const STATE_DONE: u64 = 1 << 62;
+const STATE_CLAIMED: u64 = 1 << 63;
+
+pub(crate) struct SkipNode<P: SizePolicy> {
+    key: u64,
+    /// Tower of successor words (low bit = mark); length = node level.
+    next: Box<[AtomicU64]>,
+    /// Per-level link/unlink accounting for safe reclamation: the node is
+    /// EBR-retired only once (a) the inserter can create no further links
+    /// and (b) every level that was ever linked has been unlinked — i.e.,
+    /// the node is provably unreachable. (A plain "retire at bottom-level
+    /// unlink" is unsound: an in-flight inserter may link an upper level
+    /// after the bottom unlink, and with equal-key nodes in transition a
+    /// single cleanup find() pass can miss the stale upper link.)
+    state: AtomicU64,
+    insert_info: P::InfoSlot,
+    delete_info: P::InfoSlot,
+}
+
+impl<P: SizePolicy> SkipNode<P> {
+    fn alloc(key: u64, level: usize) -> *mut Self {
+        Box::into_raw(Box::new(SkipNode {
+            key,
+            next: (0..level).map(|_| AtomicU64::new(0)).collect(),
+            state: AtomicU64::new(0),
+            insert_info: P::InfoSlot::default(),
+            delete_info: P::InfoSlot::default(),
+        }))
+    }
+
+    #[inline]
+    fn level(&self) -> usize {
+        self.next.len()
+    }
+}
+
+/// Structure-lifetime deferred reclamation for skip-list nodes.
+///
+/// Multi-level towers admit a subtle resurrection window between an
+/// in-flight inserter's upper-level linking and concurrent unlinkers
+/// (Java's original leans on the GC here; crossbeam-skiplist carries
+/// per-tower reference counting for the same reason). Rather than risk a
+/// use-after-free on that window, fully-unlinked towers are parked in a
+/// lock-free graveyard owned by the structure and freed at `Drop`, after
+/// deduplication against the level-chain walk. Memory growth is bounded by
+/// the structure's total deletion count over its lifetime; `list`/`bst`
+/// nodes (single incoming link) use full EBR reclamation. Recorded as a
+/// substitution in DESIGN.md.
+pub(crate) struct Graveyard {
+    head: AtomicU64, // Treiber stack of GraveEntry
+}
+
+struct GraveEntry {
+    node: u64,
+    next: u64,
+}
+
+impl Graveyard {
+    fn new() -> Self {
+        Self {
+            head: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, node: u64) {
+        let entry = Box::into_raw(Box::new(GraveEntry { node, next: 0 }));
+        loop {
+            let head = self.head.load(SeqCst);
+            unsafe { &mut *entry }.next = head;
+            if self
+                .head
+                .compare_exchange(head, entry as u64, SeqCst, SeqCst)
+                .is_ok()
+            {
+                return;
+            }
+        }
+    }
+
+    /// Drain into a list of node pointers (exclusive access).
+    fn drain(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut e = self.head.swap(0, SeqCst) as *mut GraveEntry;
+        while !e.is_null() {
+            let entry = unsafe { Box::from_raw(e) };
+            out.push(entry.node);
+            e = entry.next as *mut GraveEntry;
+        }
+        out
+    }
+}
+
+/// Park `node` in the graveyard iff the inserter is done and
+/// linked == unlinked (no live chain references remain in steady state).
+/// Exactly-once via the CLAIMED bit.
+unsafe fn maybe_retire<P: SizePolicy>(node: *mut SkipNode<P>, graveyard: &Graveyard) {
+    let state = &unsafe { &*node }.state;
+    loop {
+        let s = state.load(SeqCst);
+        if s & STATE_CLAIMED != 0 || s & STATE_DONE == 0 {
+            return;
+        }
+        let linked = (s >> LINKED_SHIFT) & LEVELS_MASK;
+        let unlinked = (s >> UNLINKED_SHIFT) & LEVELS_MASK;
+        if linked != unlinked || linked & 1 == 0 {
+            return; // still reachable (or never published)
+        }
+        if state
+            .compare_exchange(s, s | STATE_CLAIMED, SeqCst, SeqCst)
+            .is_ok()
+        {
+            graveyard.push(node as u64);
+            return;
+        }
+    }
+}
+
+/// Record a successful link of `node` at `lvl` (inserter only).
+unsafe fn on_link<P: SizePolicy>(node: *mut SkipNode<P>, lvl: usize, graveyard: &Graveyard) {
+    unsafe { &*node }
+        .state
+        .fetch_or(1 << (LINKED_SHIFT + lvl as u32), SeqCst);
+    unsafe { maybe_retire(node, graveyard) };
+}
+
+/// Record a successful unlink of `node` at `lvl` (unlink-CAS winner only).
+unsafe fn on_unlink<P: SizePolicy>(node: *mut SkipNode<P>, lvl: usize, graveyard: &Graveyard) {
+    unsafe { &*node }
+        .state
+        .fetch_or(1 << (UNLINKED_SHIFT + lvl as u32), SeqCst);
+    unsafe { maybe_retire(node, graveyard) };
+}
+
+/// The inserter finished (or abandoned) its linking phase.
+unsafe fn on_inserter_done<P: SizePolicy>(node: *mut SkipNode<P>, graveyard: &Graveyard) {
+    unsafe { &*node }.state.fetch_or(STATE_DONE, SeqCst);
+    unsafe { maybe_retire(node, graveyard) };
+}
+
+/// Debug forensics: any pointer stored into a level-`lvl` chain slot must
+/// reference a node tall enough to participate in that level.
+#[inline]
+fn debug_check_chain_value<P: SizePolicy>(w: u64, lvl: usize, site: &str) {
+    #[cfg(debug_assertions)]
+    {
+        let p = addr::<P>(w);
+        if !p.is_null() {
+            let h = unsafe { &*p }.level();
+            assert!(
+                h > lvl,
+                "{site}: writing node {:#x} (h={h}) into level-{lvl} slot",
+                p as usize
+            );
+        }
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        let _ = (w, lvl, site);
+    }
+}
+
+/// Logical-deletion check; mirrors `list::deletion_state`.
+#[inline]
+fn deletion_state<P: SizePolicy>(node: &SkipNode<P>) -> (bool, u64) {
+    if P::TRACKED {
+        let dinfo = P::read_delete_info(&node.delete_info);
+        if dinfo != 0 {
+            return (true, dinfo);
+        }
+        if is_marked(node.next[0].load(SeqCst)) {
+            return (true, P::read_delete_info(&node.delete_info));
+        }
+        (false, 0)
+    } else {
+        (is_marked(node.next[0].load(SeqCst)), 0)
+    }
+}
+
+/// Mark every level of the tower, top-down; returns the bottom pre-mark
+/// word. The bottom-level mark is the physical-deletion lock; for untracked
+/// policies its CAS also decides the logical winner (`bottom_won`).
+struct MarkOutcome {
+    /// This call performed the bottom-level mark CAS.
+    bottom_won: bool,
+}
+
+fn mark_tower<P: SizePolicy>(node: &SkipNode<P>) -> MarkOutcome {
+    for lvl in (1..node.level()).rev() {
+        let mut w = node.next[lvl].load(SeqCst);
+        while !is_marked(w) {
+            match node.next[lvl].compare_exchange(w, w | MARK, SeqCst, SeqCst) {
+                Ok(_) => break,
+                Err(cur) => w = cur,
+            }
+        }
+    }
+    let mut w = node.next[0].load(SeqCst);
+    loop {
+        if is_marked(w) {
+            return MarkOutcome { bottom_won: false };
+        }
+        match node.next[0].compare_exchange(w, w | MARK, SeqCst, SeqCst) {
+            Ok(_) => return MarkOutcome { bottom_won: true },
+            Err(cur) => w = cur,
+        }
+    }
+}
+
+thread_local! {
+    static LEVEL_RNG: std::cell::RefCell<Xoshiro256> = std::cell::RefCell::new(
+        Xoshiro256::new(0x5EED ^ (thread_id::current() as u64) << 32)
+    );
+}
+
+/// Geometric tower height (p = 1/2), capped at [`MAX_LEVEL`].
+fn random_level() -> usize {
+    LEVEL_RNG.with(|r| {
+        let bits = r.borrow_mut().next_u64();
+        ((bits.trailing_ones() as usize) + 1).min(MAX_LEVEL)
+    })
+}
+
+pub struct SkipListSet<P: SizePolicy> {
+    /// Sentinel head tower (key conceptually −∞; never compared).
+    head: Box<[AtomicU64; MAX_LEVEL]>,
+    policy: P,
+    /// Deferred-reclamation parking lot (see [`Graveyard`]).
+    graveyard: Graveyard,
+}
+
+unsafe impl<P: SizePolicy> Send for SkipListSet<P> {}
+unsafe impl<P: SizePolicy> Sync for SkipListSet<P> {}
+
+impl<P: SizePolicy> SkipListSet<P> {
+    pub fn new(max_threads: usize) -> Self {
+        Self::with_opts(max_threads, SizeOpts::default())
+    }
+
+    pub fn with_opts(max_threads: usize, opts: SizeOpts) -> Self {
+        Self::with_policy(P::new(max_threads, opts))
+    }
+
+    pub fn with_policy(policy: P) -> Self {
+        Self {
+            head: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            policy,
+            graveyard: Graveyard::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &P {
+        &self.policy
+    }
+
+    #[inline]
+    fn head_next(&self, lvl: usize) -> &AtomicU64 {
+        &self.head[lvl]
+    }
+
+    #[inline]
+    fn next_ref<'a>(&'a self, pred: *mut SkipNode<P>, lvl: usize) -> &'a AtomicU64 {
+        if pred.is_null() {
+            self.head_next(lvl)
+        } else {
+            unsafe { &(*pred).next[lvl] }
+        }
+    }
+
+    /// Standard lock-free `find`: per-level `(pred, succ)` pairs with
+    /// physical unlinking of logically-deleted nodes — each preceded by its
+    /// metadata commit (Fig. 3 footnote). Returns the bottom-level match.
+    ///
+    /// Caller must hold an EBR pin.
+    fn find(
+        &self,
+        k: u64,
+        preds: &mut [*mut SkipNode<P>; MAX_LEVEL],
+        succs: &mut [u64; MAX_LEVEL],
+    ) -> Option<*mut SkipNode<P>> {
+        'retry: loop {
+            let mut pred: *mut SkipNode<P> = std::ptr::null_mut();
+            for lvl in (0..MAX_LEVEL).rev() {
+                loop {
+                    let pred_next = self.next_ref(pred, lvl);
+                    let curr_w = pred_next.load(SeqCst);
+                    if is_marked(curr_w) {
+                        continue 'retry; // pred deleted under us
+                    }
+                    let curr = addr::<P>(curr_w);
+                    if curr.is_null() {
+                        preds[lvl] = pred;
+                        succs[lvl] = 0;
+                        break;
+                    }
+                    let curr_ref = unsafe { &*curr };
+                    let (deleted, dinfo) = deletion_state(curr_ref);
+                    if deleted {
+                        if P::TRACKED {
+                            self.policy.commit_delete(dinfo); // before unlink
+                        }
+                        mark_tower(curr_ref);
+                        let succ_w = curr_ref.next[lvl].load(SeqCst) & !MARK;
+                        debug_check_chain_value::<P>(succ_w, lvl, "find-unlink");
+                        match pred_next.compare_exchange(curr_w, succ_w, SeqCst, SeqCst) {
+                            Ok(_) => {
+                                unsafe { on_unlink(curr, lvl, &self.graveyard) };
+                                continue;
+                            }
+                            Err(_) => continue 'retry,
+                        }
+                    }
+                    if curr_ref.key >= k {
+                        debug_check_chain_value::<P>(curr_w, lvl, "find-succ");
+                        preds[lvl] = pred;
+                        succs[lvl] = curr_w;
+                        break;
+                    }
+                    pred = curr;
+                }
+            }
+            let found = addr::<P>(succs[0]);
+            if !found.is_null() && unsafe { &*found }.key == k {
+                return Some(found);
+            }
+            return None;
+        }
+    }
+
+    /// Copy the keys of all live bottom-level nodes, in order. This is the
+    /// O(n) "snapshot copy of the base level" the Petrank–Timnat
+    /// [`crate::snapshot::SnapshotSkipList`] competitor pays for on every
+    /// `size()` (paper Section 9).
+    pub fn collect_keys(&self) -> Vec<u64> {
+        let _g = ebr::pin();
+        let mut keys = Vec::new();
+        let mut curr = addr::<P>(self.head_next(0).load(SeqCst));
+        while !curr.is_null() {
+            let c = unsafe { &*curr };
+            if !deletion_state(c).0 {
+                keys.push(c.key);
+            }
+            curr = addr::<P>(c.next[0].load(SeqCst));
+        }
+        keys
+    }
+
+    /// Quiescent full count at the bottom level (tests).
+    pub fn quiescent_count(&self) -> usize {
+        let _g = ebr::pin();
+        let mut n = 0;
+        let mut curr = addr::<P>(self.head_next(0).load(SeqCst));
+        while !curr.is_null() {
+            let c = unsafe { &*curr };
+            if !deletion_state(c).0 {
+                n += 1;
+            }
+            curr = addr::<P>(c.next[0].load(SeqCst));
+        }
+        n
+    }
+}
+
+impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
+    fn insert(&self, k: u64) -> bool {
+        debug_assert!(k <= MAX_KEY);
+        let _guard = ebr::pin();
+        let _op = self.policy.enter();
+        let tid = thread_id::current();
+
+        let packed = self.policy.begin_insert(tid);
+        let mut preds = [std::ptr::null_mut(); MAX_LEVEL];
+        let mut succs = [0u64; MAX_LEVEL];
+        let mut new_node: *mut SkipNode<P> = std::ptr::null_mut();
+        let level = random_level();
+
+        loop {
+            if let Some(found) = self.find(k, &mut preds, &mut succs) {
+                // Present in an unmarked node: help, fail (Fig. 3 ll.16–18).
+                self.policy.help_insert(unsafe { &(*found).insert_info });
+                if !new_node.is_null() {
+                    drop(unsafe { Box::from_raw(new_node) });
+                }
+                return false;
+            }
+            if new_node.is_null() {
+                new_node = SkipNode::<P>::alloc(k, level);
+                P::stash_insert_info(unsafe { &(*new_node).insert_info }, packed);
+            }
+            let new_ref = unsafe { &*new_node };
+            for lvl in 0..level {
+                debug_check_chain_value::<P>(succs[lvl], lvl, "insert-init");
+                new_ref.next[lvl].store(succs[lvl], SeqCst);
+            }
+            // Bottom-level link = the original linearization point.
+            let pred_next = self.next_ref(preds[0], 0);
+            if pred_next
+                .compare_exchange(succs[0], new_node as u64, SeqCst, SeqCst)
+                .is_err()
+            {
+                continue; // retry with the allocated node
+            }
+            unsafe { on_link(new_node, 0, &self.graveyard) };
+            // Reach the new linearization point before anything else
+            // (Fig. 3 line 25).
+            self.policy.commit_insert(&new_ref.insert_info, packed);
+
+            // Link upper levels (best effort; abandoned if node is deleted).
+            'link: for lvl in 1..level {
+                loop {
+                    let cur_succ = new_ref.next[lvl].load(SeqCst);
+                    if is_marked(cur_succ) {
+                        break 'link; // concurrently deleted
+                    }
+                    let pred_next = self.next_ref(preds[lvl], lvl);
+                    if pred_next
+                        .compare_exchange(succs[lvl], new_node as u64, SeqCst, SeqCst)
+                        .is_ok()
+                    {
+                        unsafe { on_link(new_node, lvl, &self.graveyard) };
+                        break;
+                    }
+                    // CAS failed: refresh preds/succs and re-point the new
+                    // node's successor at this level before retrying.
+                    match self.find(k, &mut preds, &mut succs) {
+                        Some(f) if f == new_node => {}
+                        _ => break 'link, // deleted (and possibly replaced)
+                    }
+                    if cur_succ != succs[lvl] {
+                        debug_check_chain_value::<P>(succs[lvl], lvl, "insert-repoint");
+                        if new_ref.next[lvl]
+                            .compare_exchange(cur_succ, succs[lvl], SeqCst, SeqCst)
+                            .is_err()
+                            && is_marked(new_ref.next[lvl].load(SeqCst))
+                        {
+                            break 'link; // lost to the marker: stop linking
+                        }
+                    }
+                }
+            }
+            // Reclamation (see `state`): if the node was deleted while we
+            // were linking, help unlink promptly; correctness only needs the
+            // link/unlink accounting plus the DONE bit below.
+            if deletion_state(new_ref).0 {
+                self.find(k, &mut preds, &mut succs);
+            }
+            unsafe { on_inserter_done(new_node, &self.graveyard) };
+            return true;
+        }
+    }
+
+    fn delete(&self, k: u64) -> bool {
+        let _guard = ebr::pin();
+        let _op = self.policy.enter();
+        let tid = thread_id::current();
+
+        let mut preds = [std::ptr::null_mut(); MAX_LEVEL];
+        let mut succs = [0u64; MAX_LEVEL];
+
+        loop {
+            let found = match self.find(k, &mut preds, &mut succs) {
+                None => return false, // Fig. 3 line 29
+                Some(f) => f,
+            };
+            let node = unsafe { &*found };
+
+            if P::TRACKED {
+                self.policy.help_insert(&node.insert_info); // line 33
+                let packed = self.policy.begin_delete(tid); // line 34
+                // Line 35: the marking step = installing delete-info.
+                let winner = P::try_claim_delete(&node.delete_info, packed);
+                self.policy.commit_delete(winner); // line 36: before unlink
+                mark_tower(node);
+                // Physical unlink via find (also retires the node).
+                self.find(k, &mut preds, &mut succs);
+                return winner == packed;
+            } else {
+                let outcome = mark_tower(node);
+                if outcome.bottom_won {
+                    self.policy.commit_delete(0); // naive/lock counter bump
+                    self.find(k, &mut preds, &mut succs); // physical unlink
+                    return true;
+                }
+                return false; // concurrent delete won
+            }
+        }
+    }
+
+    fn contains(&self, k: u64) -> bool {
+        let _guard = ebr::pin();
+        let _op = self.policy.enter();
+
+        // Wait-free traversal (no unlinking).
+        let mut pred: *mut SkipNode<P> = std::ptr::null_mut();
+        for lvl in (0..MAX_LEVEL).rev() {
+            loop {
+                let w = self.next_ref(pred, lvl).load(SeqCst);
+                let curr = addr::<P>(w);
+                if curr.is_null() {
+                    break;
+                }
+                let curr_ref = unsafe { &*curr };
+                if curr_ref.key < k {
+                    pred = curr;
+                } else {
+                    break;
+                }
+            }
+        }
+        // Walk the bottom level to the candidate.
+        let mut curr = addr::<P>(self.next_ref(pred, 0).load(SeqCst));
+        while !curr.is_null() {
+            let curr_ref = unsafe { &*curr };
+            if curr_ref.key >= k {
+                break;
+            }
+            curr = addr::<P>(curr_ref.next[0].load(SeqCst));
+        }
+        if curr.is_null() {
+            return false;
+        }
+        let node = unsafe { &*curr };
+        if node.key != k {
+            return false;
+        }
+        let (deleted, dinfo) = deletion_state(node);
+        if deleted {
+            if P::TRACKED {
+                self.policy.commit_delete(dinfo); // Fig. 3 ll.12–13
+            }
+            return false;
+        }
+        self.policy.help_insert(&node.insert_info); // Fig. 3 ll.9–10
+        true
+    }
+
+    fn size(&self) -> Option<i64> {
+        self.policy.size()
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "SkipList<{}>",
+            std::any::type_name::<P>().rsplit("::").next().unwrap()
+        )
+    }
+}
+
+impl<P: SizePolicy> Drop for SkipListSet<P> {
+    fn drop(&mut self) {
+        // Free every node exactly once: the union of (a) nodes reachable
+        // from any level chain (live nodes + deleted-but-uncleaned towers)
+        // and (b) the graveyard of fully-unlinked towers. Deduplicated so
+        // a parked tower that is somehow still chained is freed once.
+        let mut seen = std::collections::HashSet::new();
+        for lvl in 0..MAX_LEVEL {
+            let mut curr = addr::<P>(self.head_next(lvl).load(SeqCst));
+            while !curr.is_null() {
+                if !seen.insert(curr as usize) {
+                    // already collected via another level
+                }
+                let c = unsafe { &*curr };
+                if lvl >= c.level() {
+                    break; // corrupted chain would stop here (defensive)
+                }
+                curr = addr::<P>(c.next[lvl].load(SeqCst));
+            }
+        }
+        for node in self.graveyard.drain() {
+            seen.insert(node as usize);
+        }
+        for &p in &seen {
+            drop(unsafe { Box::from_raw(p as *mut SkipNode<P>) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::{LinearizableSize, NoSize};
+    use std::sync::Arc;
+
+    fn sl() -> SkipListSet<LinearizableSize> {
+        SkipListSet::new(crate::MAX_THREADS)
+    }
+
+    #[test]
+    fn basic_ops() {
+        let s = sl();
+        assert!(!s.contains(3));
+        assert!(s.insert(3));
+        assert!(!s.insert(3));
+        assert!(s.contains(3));
+        assert!(s.delete(3));
+        assert!(!s.delete(3));
+        assert!(!s.contains(3));
+        assert_eq!(s.size(), Some(0));
+    }
+
+    #[test]
+    fn many_sequential_keys() {
+        let s = sl();
+        for k in 0..2000u64 {
+            assert!(s.insert(k));
+        }
+        assert_eq!(s.size(), Some(2000));
+        for k in (0..2000u64).step_by(2) {
+            assert!(s.delete(k));
+        }
+        assert_eq!(s.size(), Some(1000));
+        for k in 0..2000u64 {
+            assert_eq!(s.contains(k), k % 2 == 1, "key {k}");
+        }
+        assert_eq!(s.quiescent_count(), 1000);
+    }
+
+    #[test]
+    fn random_order_inserts_are_sorted() {
+        let s = sl();
+        let mut rng = crate::rng::Xoshiro256::new(11);
+        let mut keys = std::collections::BTreeSet::new();
+        for _ in 0..500 {
+            let k = rng.gen_range(10_000);
+            assert_eq!(s.insert(k), keys.insert(k));
+        }
+        assert_eq!(s.size(), Some(keys.len() as i64));
+        for k in keys {
+            assert!(s.contains(k));
+        }
+    }
+
+    #[test]
+    fn baseline_skiplist_without_size() {
+        let s: SkipListSet<NoSize> = SkipListSet::new(crate::MAX_THREADS);
+        assert!(s.insert(1));
+        assert!(s.contains(1));
+        assert_eq!(s.size(), None);
+        assert!(s.delete(1));
+        assert_eq!(s.quiescent_count(), 0);
+    }
+
+    #[test]
+    fn concurrent_inserts_disjoint() {
+        let s = Arc::new(sl());
+        let hs: Vec<_> = (0..4u64)
+            .map(|t| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for k in (t * 10_000)..(t * 10_000 + 500) {
+                        assert!(s.insert(k));
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(s.size(), Some(2000));
+        assert_eq!(s.quiescent_count(), 2000);
+    }
+
+    #[test]
+    fn concurrent_same_key_races() {
+        for round in 0..30 {
+            let s = Arc::new(sl());
+            let ins: Vec<_> = (0..3)
+                .map(|_| {
+                    let s = s.clone();
+                    std::thread::spawn(move || s.insert(9) as usize)
+                })
+                .collect();
+            let wins: usize = ins.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(wins, 1, "round {round}: one insert must win");
+            let dels: Vec<_> = (0..3)
+                .map(|_| {
+                    let s = s.clone();
+                    std::thread::spawn(move || s.delete(9) as usize)
+                })
+                .collect();
+            let wins: usize = dels.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(wins, 1, "round {round}: one delete must win");
+            assert_eq!(s.size(), Some(0));
+        }
+    }
+
+    #[test]
+    fn churn_size_bounds_and_quiescent_match() {
+        let s = Arc::new(sl());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let churners: Vec<_> = (0..4u64)
+            .map(|t| {
+                let s = s.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut rng = crate::rng::Xoshiro256::new(t + 5);
+                    while !stop.load(SeqCst) {
+                        let k = rng.gen_range(128);
+                        if rng.gen_bool(0.5) {
+                            s.insert(k);
+                        } else {
+                            s.delete(k);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..800 {
+            let sz = s.size().unwrap();
+            assert!((0..=128).contains(&sz), "size {sz} out of bounds");
+        }
+        stop.store(true, SeqCst);
+        for c in churners {
+            c.join().unwrap();
+        }
+        assert_eq!(s.size().unwrap() as usize, s.quiescent_count());
+    }
+
+    #[test]
+    fn reinsert_after_delete_many_rounds() {
+        let s = sl();
+        for _ in 0..200 {
+            assert!(s.insert(77));
+            assert!(s.contains(77));
+            assert!(s.delete(77));
+            assert!(!s.contains(77));
+        }
+        assert_eq!(s.size(), Some(0));
+    }
+}

@@ -1,0 +1,97 @@
+//! Thread slot registry: the paper's `threadID`.
+//!
+//! The size metadata is an array with one (insertion, deletion) counter pair
+//! per thread (paper Section 5), indexed by a dense thread id in
+//! `0..MAX_THREADS`. Threads acquire a slot lazily on first data-structure
+//! operation and release it when they exit, so ids are recycled — exactly
+//! like a thread-local `threadID` variable in the Java original, but safe
+//! for short-lived threads.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::MAX_THREADS;
+
+static SLOTS: [AtomicBool; MAX_THREADS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const FREE: AtomicBool = AtomicBool::new(false);
+    [FREE; MAX_THREADS]
+};
+
+/// RAII slot ownership; stored in a thread-local so `current()` is a cached
+/// load after the first call on each thread.
+struct SlotOwner {
+    tid: usize,
+}
+
+impl Drop for SlotOwner {
+    fn drop(&mut self) {
+        crate::ebr::on_thread_exit(self.tid);
+        SLOTS[self.tid].store(false, Ordering::Release);
+    }
+}
+
+thread_local! {
+    static OWNER: SlotOwner = SlotOwner { tid: acquire_slot() };
+}
+
+fn acquire_slot() -> usize {
+    for (tid, slot) in SLOTS.iter().enumerate() {
+        if slot
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return tid;
+        }
+    }
+    panic!("thread_id: more than MAX_THREADS={MAX_THREADS} live threads");
+}
+
+/// Dense id of the calling thread (registers it on first use).
+#[inline]
+pub fn current() -> usize {
+    OWNER.with(|o| o.tid)
+}
+
+/// Number of slots the registry can hand out.
+#[inline]
+pub const fn capacity() -> usize {
+    MAX_THREADS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn current_is_stable_within_a_thread() {
+        assert_eq!(current(), current());
+    }
+
+    #[test]
+    fn ids_are_in_range() {
+        assert!(current() < MAX_THREADS);
+    }
+
+    #[test]
+    fn distinct_live_threads_get_distinct_ids() {
+        let mine = current();
+        let theirs = std::thread::spawn(current).join().unwrap();
+        assert_ne!(mine, theirs);
+    }
+
+    #[test]
+    fn slots_are_recycled_after_thread_exit() {
+        let a = std::thread::spawn(current).join().unwrap();
+        // The previous thread has fully exited after join; its slot is free
+        // again, so a new thread can grab some slot (possibly the same one).
+        let b = std::thread::spawn(current).join().unwrap();
+        assert!(a < MAX_THREADS && b < MAX_THREADS);
+    }
+
+    #[test]
+    fn many_sequential_threads_do_not_exhaust_slots() {
+        for _ in 0..(MAX_THREADS * 4) {
+            std::thread::spawn(current).join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! YCSB-style workload generation (paper Section 9, *Methodology*).
+//!
+//! Two mixes, exactly the paper's:
+//! * **update-heavy** — 30% insert / 20% delete / 50% contains;
+//! * **read-heavy**   —  3% insert /  2% delete / 95% contains.
+//!
+//! Keys are drawn uniformly from `[1, r]` with `r = n·(i+d)/i`, the choice
+//! that keeps the structure's size stable around its initial fill `n`.
+
+use crate::rng::Xoshiro256;
+use crate::set_api::ConcurrentSet;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpType {
+    Insert = 0,
+    Delete = 1,
+    Contains = 2,
+}
+
+/// An operation mix (percentages; contains = remainder).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mix {
+    pub insert_pct: u32,
+    pub delete_pct: u32,
+}
+
+impl Mix {
+    pub const fn contains_pct(&self) -> u32 {
+        100 - self.insert_pct - self.delete_pct
+    }
+
+    pub fn label(&self) -> &'static str {
+        if *self == UPDATE_HEAVY {
+            "update-heavy"
+        } else if *self == READ_HEAVY {
+            "read-heavy"
+        } else {
+            "custom"
+        }
+    }
+}
+
+/// Paper: 30% insert, 20% delete, 50% contains.
+pub const UPDATE_HEAVY: Mix = Mix {
+    insert_pct: 30,
+    delete_pct: 20,
+};
+
+/// Paper: 3% insert, 2% delete, 95% contains.
+pub const READ_HEAVY: Mix = Mix {
+    insert_pct: 3,
+    delete_pct: 2,
+};
+
+/// `r = n·(i+d)/i` (paper Section 9) — the key range that keeps the
+/// structure around `n` live elements under `mix`.
+pub fn key_range(initial_size: u64, mix: Mix) -> u64 {
+    let i = mix.insert_pct as u64;
+    let d = mix.delete_pct as u64;
+    (initial_size * (i + d) / i).max(1)
+}
+
+/// Per-thread deterministic stream of operations.
+pub struct OpStream {
+    rng: Xoshiro256,
+    mix: Mix,
+    key_range: u64,
+}
+
+impl OpStream {
+    pub fn new(seed: u64, mix: Mix, key_range: u64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed),
+            mix,
+            key_range,
+        }
+    }
+
+    /// Next `(op, key)`; key uniform in `[1, key_range]`.
+    #[inline]
+    pub fn next(&mut self) -> (OpType, u64) {
+        let p = self.rng.gen_range(100) as u32;
+        let op = if p < self.mix.insert_pct {
+            OpType::Insert
+        } else if p < self.mix.insert_pct + self.mix.delete_pct {
+            OpType::Delete
+        } else {
+            OpType::Contains
+        };
+        (op, self.rng.gen_range_incl(1, self.key_range))
+    }
+
+    /// Next key only (for fixed-type phases, Fig. 13 mode).
+    #[inline]
+    pub fn next_key(&mut self) -> u64 {
+        self.rng.gen_range_incl(1, self.key_range)
+    }
+}
+
+/// Fill `set` with exactly `n` distinct uniform keys from `[1, key_range]`
+/// (paper: "we fill the data structure with ... items" before each run).
+pub fn prefill(set: &dyn ConcurrentSet, n: u64, key_range: u64, seed: u64) {
+    assert!(
+        key_range >= n,
+        "prefill: cannot place {n} distinct keys in [1, {key_range}]"
+    );
+    let mut rng = Xoshiro256::new(seed);
+    let mut inserted = 0;
+    while inserted < n {
+        if set.insert(rng.gen_range_incl(1, key_range)) {
+            inserted += 1;
+        }
+    }
+}
+
+/// Apply one op to `set`; returns whether it was "successful" in the
+/// set-semantics sense.
+#[inline]
+pub fn apply(set: &dyn ConcurrentSet, op: OpType, key: u64) -> bool {
+    match op {
+        OpType::Insert => set.insert(key),
+        OpType::Delete => set.delete(key),
+        OpType::Contains => set.contains(key),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashtable::HashTableSet;
+    use crate::size::LinearizableSize;
+
+    #[test]
+    fn key_range_matches_paper_formula() {
+        // Paper's example: n = 1M, 30% ins / 20% del => r ≈ 1.67M.
+        assert_eq!(key_range(1_000_000, UPDATE_HEAVY), 1_666_666);
+        assert_eq!(key_range(1_000_000, READ_HEAVY), 1_666_666);
+    }
+
+    #[test]
+    fn mixes_sum_to_100() {
+        assert_eq!(UPDATE_HEAVY.contains_pct(), 50);
+        assert_eq!(READ_HEAVY.contains_pct(), 95);
+    }
+
+    #[test]
+    fn op_stream_respects_mix() {
+        let mut s = OpStream::new(1, UPDATE_HEAVY, 1000);
+        let mut counts = [0u32; 3];
+        for _ in 0..100_000 {
+            let (op, k) = s.next();
+            counts[op as usize] += 1;
+            assert!((1..=1000).contains(&k));
+        }
+        let ins = counts[0] as f64 / 1000.0;
+        let del = counts[1] as f64 / 1000.0;
+        assert!((28.0..32.0).contains(&ins), "insert% {ins}");
+        assert!((18.0..22.0).contains(&del), "delete% {del}");
+    }
+
+    #[test]
+    fn prefill_reaches_exact_size() {
+        let t: HashTableSet<LinearizableSize> = HashTableSet::new(crate::MAX_THREADS, 2048);
+        prefill(&t, 1500, key_range(1500, UPDATE_HEAVY), 7);
+        assert_eq!(t.size(), Some(1500));
+    }
+
+    #[test]
+    fn streams_are_deterministic() {
+        let mut a = OpStream::new(5, READ_HEAVY, 100);
+        let mut b = OpStream::new(5, READ_HEAVY, 100);
+        for _ in 0..1000 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Cross-module integration tests: every structure × policy combination
+//! under concurrent stress, linearizability probes, and the full
+//! Rust → PJRT analytics pipeline.
+//!
+//! Requires `make artifacts` (the `make test` flow guarantees it).
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::Arc;
+
+use concurrent_size::analytics::{analyze, EpochRecorder};
+use concurrent_size::bench_util::{fig1_anomalies, fig2_anomalies};
+use concurrent_size::bst::BstSet;
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::history;
+use concurrent_size::list::LinkedListSet;
+use concurrent_size::rng::Xoshiro256;
+use concurrent_size::runtime::Artifacts;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{LinearizableSize, LockSize, SizePolicy};
+use concurrent_size::skiplist::SkipListSet;
+use concurrent_size::snapshot::SnapshotSkipList;
+use concurrent_size::vcas::VcasSet;
+use concurrent_size::workload::{self, key_range, UPDATE_HEAVY};
+use concurrent_size::MAX_THREADS;
+
+fn all_sized_sets() -> Vec<Box<dyn ConcurrentSet>> {
+    vec![
+        Box::new(HashTableSet::<LinearizableSize>::new(MAX_THREADS, 4096)),
+        Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)),
+        Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)),
+        Box::new(LinkedListSet::<LinearizableSize>::new(MAX_THREADS)),
+        Box::new(HashTableSet::<LockSize>::new(MAX_THREADS, 4096)),
+        Box::new(SnapshotSkipList::new(MAX_THREADS)),
+        Box::new(VcasSet::new(MAX_THREADS, 4096)),
+    ]
+}
+
+/// Sequential model check: every structure agrees with a BTreeSet oracle.
+#[test]
+fn all_structures_match_sequential_model() {
+    for set in all_sized_sets() {
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0xAB);
+        for _ in 0..3000 {
+            let k = rng.gen_range_incl(1, 200);
+            match rng.gen_range(3) {
+                0 => assert_eq!(set.insert(k), model.insert(k), "{} insert {k}", set.name()),
+                1 => assert_eq!(set.delete(k), model.remove(&k), "{} delete {k}", set.name()),
+                _ => assert_eq!(set.contains(k), model.contains(&k), "{} contains {k}", set.name()),
+            }
+            if model.len() % 97 == 0 {
+                assert_eq!(set.size(), Some(model.len() as i64), "{} size", set.name());
+            }
+        }
+        assert_eq!(set.size(), Some(model.len() as i64), "{} final", set.name());
+    }
+}
+
+/// Concurrent churn: sizes stay within the live-key bound and match the
+/// model at quiescence (for the linearizable structures).
+#[test]
+fn concurrent_churn_bounds_all_structures() {
+    for set in all_sized_sets() {
+        let set: Arc<dyn ConcurrentSet> = Arc::from(set);
+        let stop = Arc::new(AtomicBool::new(false));
+        let key_space = 96u64;
+        let churners: Vec<_> = (0..4u64)
+            .map(|t| {
+                let set = set.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256::new(t + 1);
+                    while !stop.load(SeqCst) {
+                        let k = rng.gen_range_incl(1, key_space);
+                        if rng.gen_bool(0.5) {
+                            set.insert(k);
+                        } else {
+                            set.delete(k);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..200 {
+            let s = set.size().unwrap();
+            assert!(
+                (0..=key_space as i64).contains(&s),
+                "{}: size {s} outside [0, {key_space}]",
+                set.name()
+            );
+        }
+        stop.store(true, SeqCst);
+        for c in churners {
+            c.join().unwrap();
+        }
+        // Quiescent cross-check against a fresh count by membership probing.
+        let live = (1..=key_space).filter(|&k| set.contains(k)).count();
+        assert_eq!(set.size(), Some(live as i64), "{} quiescent", set.name());
+    }
+}
+
+/// Paper Figures 1–2: the linearizable policy never exhibits the anomalies,
+/// on any structure.
+#[test]
+fn methodology_has_no_anomalies() {
+    let skip: SkipListSet<LinearizableSize> = SkipListSet::new(MAX_THREADS);
+    assert_eq!(fig1_anomalies(&skip, 300), 0);
+    assert_eq!(fig2_anomalies(&skip, 100), 0);
+    let bst: BstSet<LinearizableSize> = BstSet::new(MAX_THREADS);
+    assert_eq!(fig1_anomalies(&bst, 300), 0);
+    assert_eq!(fig2_anomalies(&bst, 100), 0);
+    let ht: HashTableSet<LinearizableSize> = HashTableSet::new(MAX_THREADS, 1024);
+    assert_eq!(fig1_anomalies(&ht, 300), 0);
+    assert_eq!(fig2_anomalies(&ht, 100), 0);
+}
+
+/// Size thread racing a prefd workload: every observation in bounds, and
+/// the harness path (the exact code the figure benches run) stays sane.
+#[test]
+fn harness_roundtrip_with_size_thread() {
+    use concurrent_size::harness::{run, RunConfig};
+    let set: SkipListSet<LinearizableSize> = SkipListSet::new(MAX_THREADS);
+    let range = key_range(2000, UPDATE_HEAVY);
+    workload::prefill(&set, 2000, range, 9);
+    let mut cfg = RunConfig::new(3, 1, UPDATE_HEAVY, range);
+    cfg.duration = std::time::Duration::from_millis(300);
+    let res = run(&set, &cfg);
+    assert!(res.workload_ops > 0 && res.size_ops > 0);
+    // Quiescent: linearizable size equals a membership census.
+    let live = (1..=range).filter(|&k| set.contains(k)).count();
+    assert_eq!(set.size(), Some(live as i64));
+}
+
+/// Full three-layer pipeline: workload → epoch sampling → PJRT kernels.
+#[test]
+fn pipeline_end_to_end_exact_at_quiescence() {
+    let artifacts = Artifacts::load_default().expect("run `make artifacts` first");
+    let set: Arc<SkipListSet<LinearizableSize>> = Arc::new(SkipListSet::new(MAX_THREADS));
+    workload::prefill(set.as_ref(), 1000, 2000, 11);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let workers: Vec<_> = (0..2u64)
+        .map(|t| {
+            let set = set.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut stream = workload::OpStream::new(t, UPDATE_HEAVY, 2000);
+                while !stop.load(SeqCst) {
+                    let (op, k) = stream.next();
+                    workload::apply(set.as_ref(), op, k);
+                }
+            })
+        })
+        .collect();
+
+    let calc = set.policy().calculator().unwrap();
+    let mut rec = EpochRecorder::new();
+    for _ in 0..20 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        rec.record(calc);
+    }
+    stop.store(true, SeqCst);
+    for w in workers {
+        w.join().unwrap();
+    }
+    rec.record(calc); // quiescent
+
+    let report = analyze(&artifacts, &rec).unwrap();
+    assert!(report.final_exact(), "quiescent Pallas size must be exact");
+    assert_eq!(
+        *report.linearizable_sizes.last().unwrap(),
+        set.size().unwrap()
+    );
+}
+
+/// The Pallas history pipeline agrees with the Rust oracle on random logs.
+#[test]
+fn pallas_history_matches_oracle_on_random_logs() {
+    let artifacts = Artifacts::load_default().expect("run `make artifacts` first");
+    let mut rng = Xoshiro256::new(0xD1CE);
+    for _ in 0..10 {
+        let n = rng.gen_range(3000) as usize + 1;
+        let deltas: Vec<i64> = (0..n).map(|_| rng.gen_range(3) as i64 - 1).collect();
+        let (p_run, p_stats) = artifacts.validate_history(&deltas).unwrap();
+        let (r_run, r_stats) = history::validate(&deltas);
+        assert_eq!(p_run, r_run);
+        assert_eq!(p_stats, r_stats);
+    }
+}
+
+/// EBR memory accounting: long churn must not leak retired nodes
+/// unboundedly (retired ≈ freed after flush).
+#[test]
+fn ebr_reclaims_under_structure_churn() {
+    {
+        let set: SkipListSet<LinearizableSize> = SkipListSet::new(MAX_THREADS);
+        for round in 0..50 {
+            for k in 0..100u64 {
+                set.insert(k + round * 13 % 256);
+            }
+            for k in 0..100u64 {
+                set.delete(k + round * 13 % 256);
+            }
+        }
+    }
+    concurrent_size::ebr::flush(64);
+    let (retired, freed) = concurrent_size::ebr::stats();
+    assert!(retired > 0, "churn must retire nodes");
+    assert!(
+        freed + 1024 >= retired,
+        "leak suspicion: retired={retired} freed={freed}"
+    );
+}
+
+/// Thread slots recycle cleanly across many short-lived workers touching
+/// shared structures.
+#[test]
+fn thread_slot_recycling_under_structure_use() {
+    let set: Arc<HashTableSet<LinearizableSize>> = Arc::new(HashTableSet::new(MAX_THREADS, 256));
+    for wave in 0..8 {
+        let hs: Vec<_> = (0..8u64)
+            .map(|t| {
+                let set = set.clone();
+                std::thread::spawn(move || {
+                    for k in 0..50u64 {
+                        set.insert(wave * 1000 + t * 100 + k);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+    assert_eq!(set.size(), Some(8 * 8 * 50));
+}

@@ -1,0 +1,127 @@
+//! Randomized property tests (proptest_lite) over the size mechanism's
+//! invariants — the Rust-side counterpart of the paper's Section 8 claims.
+
+use concurrent_size::proptest_lite;
+use concurrent_size::rng::Xoshiro256;
+use concurrent_size::size::{OpKind, SizeCalculator, SizeOpts, UpdateInfo};
+use concurrent_size::{bst::BstSet, hashtable::HashTableSet, skiplist::SkipListSet};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::LinearizableSize;
+use concurrent_size::prop_assert;
+
+/// Claim: update_metadata is idempotent and order-insensitive across
+/// helpers — any interleaving of duplicate updates yields the same final
+/// counters and size.
+#[test]
+fn prop_metadata_updates_idempotent_under_duplication() {
+    proptest_lite::run("metadata idempotent", |rng: &mut Xoshiro256| {
+        let nthreads = rng.gen_range(8) as usize + 1;
+        let sc = SizeCalculator::new(nthreads, SizeOpts::default());
+        let mut per_thread = vec![(0u64, 0u64); nthreads]; // (ins, del)
+        let ops = rng.gen_range(200) + 1;
+        let mut expected = 0i64;
+        for _ in 0..ops {
+            let tid = rng.gen_range(nthreads as u64) as usize;
+            let is_insert = {
+                // deletes only if the thread has spare inserts (legal set history)
+                let (ins, del) = per_thread[tid];
+                ins == del || rng.gen_bool(0.6)
+            };
+            let (ins, del) = &mut per_thread[tid];
+            let (kind, counter) = if is_insert {
+                *ins += 1;
+                expected += 1;
+                (OpKind::Insert, *ins)
+            } else {
+                *del += 1;
+                expected -= 1;
+                (OpKind::Delete, *del)
+            };
+            let packed = UpdateInfo { tid, counter }.pack();
+            // The initiator plus a random number of helpers all update.
+            for _ in 0..(1 + rng.gen_range(3)) {
+                sc.update_metadata(packed, kind);
+            }
+        }
+        let size = sc.compute();
+        prop_assert!(size == expected, "size {size} != expected {expected}");
+        // Counters must match the per-thread tallies exactly.
+        for (tid, &(ins, del)) in per_thread.iter().enumerate() {
+            prop_assert!(sc.counter(tid, OpKind::Insert) == ins);
+            prop_assert!(sc.counter(tid, OpKind::Delete) == del);
+        }
+        Ok(())
+    });
+}
+
+/// Claim: `create_update_info` always targets current+1 (the c-th op of a
+/// thread publishes counter value c).
+#[test]
+fn prop_create_update_info_monotone() {
+    proptest_lite::run("update info monotone", |rng| {
+        let sc = SizeCalculator::new(4, SizeOpts::default());
+        let mut counters = [0u64; 4];
+        for _ in 0..rng.gen_range(100) + 1 {
+            let tid = rng.gen_range(4) as usize;
+            let packed = sc.create_update_info(OpKind::Insert, tid);
+            let info = UpdateInfo::unpack(packed);
+            prop_assert!(info.tid == tid);
+            prop_assert!(info.counter == counters[tid] + 1, "non-monotone info");
+            sc.update_metadata(packed, OpKind::Insert);
+            counters[tid] += 1;
+        }
+        Ok(())
+    });
+}
+
+/// Claim: under random interleaved single-thread workloads, every
+/// structure's size() tracks a sequential model exactly (linearizability
+/// degenerates to sequential correctness here; concurrent interleavings
+/// are covered by the stress tests).
+#[test]
+fn prop_structures_match_model_with_random_ops() {
+    proptest_lite::run_with(
+        "structures vs model",
+        proptest_lite::Config { cases: 16, seed: 0x512E },
+        |rng| {
+            let sets: Vec<Box<dyn ConcurrentSet>> = vec![
+                Box::new(HashTableSet::<LinearizableSize>::new(64, 512)),
+                Box::new(SkipListSet::<LinearizableSize>::new(64)),
+                Box::new(BstSet::<LinearizableSize>::new(64)),
+            ];
+            let mut model = std::collections::BTreeSet::new();
+            for _ in 0..rng.gen_range(1200) + 1 {
+                let k = rng.gen_range_incl(1, 64);
+                match rng.gen_range(3) {
+                    0 => {
+                        let want = model.insert(k);
+                        for s in &sets {
+                            prop_assert!(s.insert(k) == want, "{} insert({k})", s.name());
+                        }
+                    }
+                    1 => {
+                        let want = model.remove(&k);
+                        for s in &sets {
+                            prop_assert!(s.delete(k) == want, "{} delete({k})", s.name());
+                        }
+                    }
+                    _ => {
+                        let want = model.contains(&k);
+                        for s in &sets {
+                            prop_assert!(s.contains(k) == want, "{} contains({k})", s.name());
+                        }
+                    }
+                }
+            }
+            for s in &sets {
+                prop_assert!(
+                    s.size() == Some(model.len() as i64),
+                    "{} size != model {}",
+                    s.name(),
+                    model.len()
+                );
+            }
+            Ok(())
+        },
+    );
+}
