@@ -3,27 +3,42 @@
 //! (monitoring, admission control, dynamic-language runtimes).
 //!
 //! Protocol (one command per line): `PUT k` | `DEL k` | `HAS k` | `SIZE` |
-//! `QUIT`. Responses: `1`/`0` for ops, the exact count for `SIZE`.
+//! `QUIT`. Responses: `1`/`0` for ops, the exact count for `SIZE`, and
+//! `ERR ...` for malformed input or a store whose policy has no `size()`.
+//!
+//! Connections are served by a **bounded worker pool** (never more than
+//! `thread_id::capacity()` handler threads): the per-thread size metadata
+//! has a fixed number of slots, so the old thread-per-connection design
+//! panicked in `acquire_slot` on the 65th live connection. Workers pull
+//! accepted sockets from a backlog channel and serve one connection at a
+//! time; excess clients queue instead of crashing the server.
 //!
 //! ```bash
 //! cargo run --release --example kv_server               # self-test mode
-//! cargo run --release --example kv_server -- --listen 127.0.0.1:7171
+//! cargo run --release --example kv_server -- --listen 127.0.0.1:7171 \
+//!     [--policy linearizable|handshake|optimistic|...] [--workers N]
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
 
-use concurrent_size::cli::Args;
-use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::bench_util;
+use concurrent_size::cli::{Args, PolicyKind};
 use concurrent_size::set_api::ConcurrentSet;
-use concurrent_size::size::LinearizableSize;
-use concurrent_size::MAX_THREADS;
+use concurrent_size::thread_id;
 
-type Store = Arc<HashTableSet<LinearizableSize>>;
+type Store = Arc<dyn ConcurrentSet>;
 
-fn handle(store: Store, stream: TcpStream) {
-    let mut out = stream.try_clone().expect("clone stream");
+/// Accepted connections waiting for a worker (beyond this, accept blocks).
+const BACKLOG: usize = 1024;
+
+fn handle(store: &dyn ConcurrentSet, stream: TcpStream) {
+    let mut out = match stream.try_clone() {
+        Ok(out) => out,
+        Err(_) => return,
+    };
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let line = match line {
@@ -44,7 +59,12 @@ fn handle(store: Store, stream: TcpStream) {
                 Ok(k) => (store.contains(k) as i64).to_string(),
                 Err(_) => "ERR bad key".into(),
             },
-            (Some("SIZE"), _) => store.size().unwrap().to_string(),
+            // A store under a size-less policy answers gracefully instead
+            // of panicking the handler.
+            (Some("SIZE"), _) => match store.size() {
+                Some(s) => s.to_string(),
+                None => "ERR size unsupported by this policy".into(),
+            },
             (Some("QUIT"), _) => return,
             _ => "ERR unknown command".into(),
         };
@@ -54,29 +74,79 @@ fn handle(store: Store, stream: TcpStream) {
     }
 }
 
-fn serve(addr: &str, store: Store) -> std::io::Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    println!("kv_server listening on {addr} (PUT/DEL/HAS/SIZE/QUIT)");
+/// Cap the pool so handler threads (plus the accept thread, the main
+/// thread, and a little slack for test clients) always fit in the
+/// per-thread metadata slots.
+fn clamp_workers(requested: usize) -> usize {
+    requested.clamp(1, thread_id::capacity() / 2)
+}
+
+/// Spawn `workers` handler threads draining `rx`; returns their handles.
+fn spawn_pool(
+    store: &Store,
+    rx: Receiver<TcpStream>,
+    workers: usize,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let rx = Arc::new(Mutex::new(rx));
+    (0..workers)
+        .map(|_| {
+            let store = store.clone();
+            let rx = rx.clone();
+            std::thread::spawn(move || loop {
+                // Hold the lock only to dequeue, not while serving.
+                let stream = match rx.lock().unwrap().recv() {
+                    Ok(s) => s,
+                    Err(_) => return, // acceptor gone: drain and exit
+                };
+                handle(store.as_ref(), stream);
+            })
+        })
+        .collect()
+}
+
+/// Accept loop feeding the pool. Exits when the listener errors out.
+fn accept_into_pool(listener: TcpListener, store: Store, workers: usize) {
+    let (tx, rx) = sync_channel::<TcpStream>(BACKLOG);
+    let pool = spawn_pool(&store, rx, workers);
     for stream in listener.incoming() {
-        let store = store.clone();
-        std::thread::spawn(move || handle(store, stream.expect("accept")));
+        match stream {
+            Ok(s) => {
+                if tx.send(s).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                // Transient accept failures (ECONNABORTED, EMFILE, ...)
+                // must not take the whole server down.
+                eprintln!("kv_server: accept failed: {e}");
+                continue;
+            }
+        }
     }
+    drop(tx);
+    for w in pool {
+        let _ = w.join();
+    }
+}
+
+fn serve(addr: &str, store: Store, workers: usize) -> std::io::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    println!(
+        "kv_server listening on {addr} (PUT/DEL/HAS/SIZE/QUIT; {workers} workers)"
+    );
+    accept_into_pool(listener, store, workers);
     Ok(())
 }
 
 /// Self-test: spin up the server on an ephemeral port, drive it with
-/// concurrent clients, and check the SIZE endpoint against ground truth.
-fn self_test(store: Store) {
+/// concurrent clients plus a connection burst beyond the thread-slot
+/// capacity, and check the SIZE endpoint against ground truth.
+fn self_test(store: Store, workers: usize) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
     let addr = listener.local_addr().unwrap();
     {
         let store = store.clone();
-        std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                let store = store.clone();
-                std::thread::spawn(move || handle(store, stream.expect("accept")));
-            }
-        });
+        std::thread::spawn(move || accept_into_pool(listener, store, workers));
     }
 
     let clients: Vec<_> = (0..4u64)
@@ -98,25 +168,61 @@ fn self_test(store: Store) {
                 for k in (c * 1000)..(c * 1000 + 50) {
                     assert_eq!(send(format!("DEL {k}"), &mut line), "1");
                 }
-                let size: i64 = send("SIZE".into(), &mut line).parse().unwrap();
-                assert!((0..=1000).contains(&size), "impossible size {size}");
+                // A size-less policy (--policy baseline) answers ERR here.
+                let reply = send("SIZE".into(), &mut line);
+                if !reply.starts_with("ERR") {
+                    let size: i64 = reply.parse().expect("numeric SIZE reply");
+                    assert!((0..=1000).contains(&size), "impossible size {size}");
+                }
                 send("QUIT".into(), &mut line)
             })
         })
         .collect();
     for c in clients {
-        let _ = c.join();
+        c.join().expect("self-test client failed");
     }
 
-    assert_eq!(store.size(), Some(4 * 200));
-    println!("kv_server self-test OK: final SIZE = {:?}", store.size());
+    // Burst: more connections than thread_id::capacity(). The old
+    // thread-per-connection server panicked here; the pool must just
+    // queue them.
+    let burst = thread_id::capacity() + 16;
+    for i in 0..burst as u64 {
+        let stream = TcpStream::connect(addr).expect("burst connect");
+        let mut out = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        writeln!(out, "HAS {}", i % 7).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.trim() == "0" || line.trim() == "1", "burst reply {line:?}");
+        writeln!(out, "QUIT").unwrap();
+    }
+
+    // With a size-less policy (--policy baseline) fall back to a census.
+    match store.size() {
+        Some(s) => assert_eq!(s, 4 * 200),
+        None => {
+            let live = (0..4000u64).filter(|&k| store.contains(k)).count();
+            assert_eq!(live, 4 * 200);
+        }
+    }
+    println!(
+        "kv_server self-test OK: survived {burst}-connection burst, final SIZE = {:?}",
+        store.size()
+    );
 }
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
-    let store: Store = Arc::new(HashTableSet::new(MAX_THREADS, 1 << 16));
+    let policy = args.get("policy").unwrap_or("linearizable");
+    let Some(kind) = PolicyKind::parse(policy) else {
+        eprintln!("unknown --policy {policy:?}");
+        std::process::exit(2);
+    };
+    let store: Store =
+        Arc::from(bench_util::make_set("hashtable", kind, 1 << 16).expect("hashtable factory"));
+    let workers = clamp_workers(args.get_usize("workers", 16));
     match args.get("listen") {
-        Some(addr) => serve(&addr.to_string(), store).expect("serve"),
-        None => self_test(store),
+        Some(addr) => serve(&addr.to_string(), store, workers).expect("serve"),
+        None => self_test(store, workers),
     }
 }

@@ -35,7 +35,15 @@ fn main() {
     let workers = args.get_usize("threads", 3);
 
     println!("[1/4] loading AOT artifacts (PJRT CPU)...");
-    let artifacts = Artifacts::load_default().expect("run `make artifacts` first");
+    let artifacts = match Artifacts::load_default() {
+        Ok(a) => a,
+        Err(e) => {
+            // Stub runtime (no `pjrt` feature) or missing artifacts: skip
+            // gracefully rather than panicking at the user.
+            eprintln!("size_analytics unavailable: {e}");
+            std::process::exit(1);
+        }
+    };
 
     println!("[2/4] prefilling SizeSkipList with {initial} keys...");
     let set: Arc<SkipListSet<LinearizableSize>> = Arc::new(SkipListSet::new(MAX_THREADS));

@@ -56,8 +56,11 @@ def _history_stats_kernel(running_ref, valid_len_ref, stats_ref, acc_ref):
                               valid_len_ref[0] <= base + blk)
     last_idx = jnp.clip(valid_len_ref[0] - 1 - base, 0, blk - 1)
     acc_ref[2] = jnp.where(in_tile, tile[last_idx], acc_ref[2])
+    # dtype= keeps the count in the input dtype; jnp.sum would otherwise
+    # promote int32 to int64 (under x64) and the SMEM store would fail.
     acc_ref[3] = acc_ref[3] + jnp.sum(
-        jnp.where(jnp.logical_and(valid, tile < 0), 1, 0).astype(dtype))
+        jnp.where(jnp.logical_and(valid, tile < 0), 1, 0).astype(dtype),
+        dtype=dtype)
 
     stats_ref[0] = acc_ref[0]
     stats_ref[1] = acc_ref[1]

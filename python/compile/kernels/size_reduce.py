@@ -39,7 +39,10 @@ def _size_reduce_kernel(counters_ref, sizes_ref):
     tile = counters_ref[...]
     ins = tile[:, :, 0]
     dels = tile[:, :, 1]
-    sizes_ref[...] = jnp.sum(ins - dels, axis=1)
+    # Keep the accumulator in the input dtype: jnp.sum would otherwise
+    # promote int32 to the default int (int64 under x64) and the store
+    # into the int32 output ref would fail.
+    sizes_ref[...] = jnp.sum(ins - dels, axis=1, dtype=tile.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_e",))

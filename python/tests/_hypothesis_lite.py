@@ -1,0 +1,90 @@
+"""Minimal stand-in for the `hypothesis` API surface these tests use.
+
+The offline test image does not ship `hypothesis`; installing it is not an
+option. This shim covers exactly what the kernel/model tests need —
+`@given(**kwargs)` with keyword strategies, `@settings(max_examples=...,
+deadline=...)`, `st.integers(lo, hi)` and `st.sampled_from(seq)` — by
+drawing `max_examples` seeded pseudo-random cases per test. The real
+library is preferred whenever it is importable (see conftest.py); failures
+report the case number and drawn arguments for reproduction.
+"""
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._hypothesis_lite_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(**strategy_kwargs):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings is conventionally stacked ABOVE @given, so it tags
+            # this wrapper (decorators apply bottom-up); fall back to the
+            # inner fn in case it was stacked underneath.
+            max_examples = getattr(
+                wrapper,
+                "_hypothesis_lite_max_examples",
+                getattr(fn, "_hypothesis_lite_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            # Derive the base seed from a stable digest of the test name
+            # (builtin hash() is salted per process, which would make the
+            # reported failing case irreproducible across runs).
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+            for case in range(max_examples):
+                rng = np.random.default_rng(base_seed + case)
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on case {case} with "
+                        f"arguments {drawn!r}: {e}"
+                    ) from e
+
+        # Hide the strategy parameters from pytest's fixture resolution:
+        # expose only the non-drawn parameters (e.g. `self`).
+        remaining = [
+            p
+            for name, p in inspect.signature(fn).parameters.items()
+            if name not in strategy_kwargs
+        ]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate

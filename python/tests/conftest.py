@@ -1,7 +1,23 @@
 import os
 import sys
+import types
 
 # Make `compile` importable when pytest is launched from python/.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import compile  # noqa: E402,F401  (enables jax x64 as an import side effect)
+
+# The offline image has no `hypothesis`; fall back to the local shim that
+# covers the API surface these tests use (real hypothesis wins if present).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_lite
+
+    shim = types.ModuleType("hypothesis")
+    shim.given = _hypothesis_lite.given
+    shim.settings = _hypothesis_lite.settings
+    shim.strategies = _hypothesis_lite.strategies
+    sys.modules["hypothesis"] = shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_lite.strategies

@@ -1,80 +1,50 @@
-//! Ablation B: size-policy alternatives the paper argues against
-//! (Section 1): naive counter-after-op (incorrect) and a global lock
-//! (correct but a bottleneck), against the methodology and the baseline.
+//! Ablation B: the size-methods design space on one structure.
 //!
-//! Reports workload throughput (and size throughput where applicable) on
-//! the hash table under both mixes with one concurrent size thread.
+//! Sweeps all **six** size policies on the hash table under both paper
+//! mixes with one concurrent size thread: the paper's four (baseline,
+//! wait-free linearizable, Java-style naive, global lock — Section 1) plus
+//! the synchronization-methods study's two optimized methods (handshake,
+//! optimistic — arXiv 2506.16350). Reports workload *and* size-call
+//! throughput so both sides of each method's trade-off are visible:
+//! handshake should lead the update-heavy workload column while paying on
+//! the size column; optimistic should match the paper's workload numbers
+//! with cheaper size calls when collects succeed.
 
-use concurrent_size::bench_util::{BenchScale, MIXES};
-use concurrent_size::cli::Args;
+use concurrent_size::bench_util::{make_set, BenchScale, MIXES, STRUCTURES};
+use concurrent_size::cli::{Args, PolicyKind};
 use concurrent_size::harness::run;
-use concurrent_size::hashtable::HashTableSet;
 use concurrent_size::metrics::{fmt_rate, Table};
-use concurrent_size::set_api::ConcurrentSet;
-use concurrent_size::size::{LinearizableSize, LockSize, NaiveSize, NoSize};
 use concurrent_size::workload;
-use concurrent_size::MAX_THREADS;
 
 fn main() {
     let args = Args::from_env();
     let scale = BenchScale::from_args(&args);
     let w = args.get_usize("workload-threads", 4);
+    let structure = args.get("structure").unwrap_or("hashtable").to_string();
+    if !STRUCTURES.contains(&structure.as_str()) {
+        eprintln!(
+            "unknown --structure {structure:?} (use {})",
+            STRUCTURES.join("|")
+        );
+        std::process::exit(2);
+    }
 
-    println!("=== Ablation: size-policy alternatives (HashTable) ===");
-    println!("(initial={} keys, {w} workload threads + 1 size thread)", scale.initial);
+    println!("=== Ablation: size methods on {structure} ===");
+    println!(
+        "(initial={} keys, {w} workload threads + 1 size thread, {} runs of {}s)",
+        scale.initial, scale.repeat.runs, scale.secs
+    );
 
     for mix in MIXES {
         println!("\n-- {} workload --", mix.label());
         let mut table = Table::new(&["policy", "workload ops/s", "size ops/s", "linearizable?"]);
-        let policies: Vec<(&str, Box<dyn Fn() -> Box<dyn ConcurrentSet>>, bool, &str)> = vec![
-            (
-                "baseline (no size)",
-                Box::new(|| {
-                    Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, scale.initial as usize))
-                        as Box<dyn ConcurrentSet>
-                }),
-                false,
-                "n/a",
-            ),
-            (
-                "LinearizableSize (paper)",
-                Box::new(|| {
-                    Box::new(HashTableSet::<LinearizableSize>::new(
-                        MAX_THREADS,
-                        scale.initial as usize,
-                    )) as Box<dyn ConcurrentSet>
-                }),
-                true,
-                "yes",
-            ),
-            (
-                "NaiveSize (Java-style)",
-                Box::new(|| {
-                    Box::new(HashTableSet::<NaiveSize>::new(
-                        MAX_THREADS,
-                        scale.initial as usize,
-                    )) as Box<dyn ConcurrentSet>
-                }),
-                true,
-                "NO",
-            ),
-            (
-                "LockSize (global lock)",
-                Box::new(|| {
-                    Box::new(HashTableSet::<LockSize>::new(
-                        MAX_THREADS,
-                        scale.initial as usize,
-                    )) as Box<dyn ConcurrentSet>
-                }),
-                true,
-                "yes",
-            ),
-        ];
-        for (name, factory, with_size_thread, linearizable) in policies {
+        for kind in PolicyKind::ALL {
+            let with_size_thread = kind.provides_size();
             let mut workload_sum = 0.0;
             let mut size_sum = 0.0;
             for i in 0..(scale.repeat.warmup + scale.repeat.runs) {
-                let set = factory();
+                let set = make_set(&structure, kind, scale.initial as usize)
+                    .unwrap_or_else(|| panic!("unknown structure {structure:?}"));
                 let cfg = scale.config(w, usize::from(with_size_thread), mix, scale.initial);
                 workload::prefill(set.as_ref(), scale.initial, cfg.key_range, scale.seed);
                 let res = run(set.as_ref(), &cfg);
@@ -86,10 +56,18 @@ fn main() {
             }
             let n = scale.repeat.runs as f64;
             table.row(&[
-                name.to_string(),
+                kind.label().to_string(),
                 fmt_rate(workload_sum / n),
-                if with_size_thread { fmt_rate(size_sum / n) } else { "-".into() },
-                linearizable.to_string(),
+                if with_size_thread {
+                    fmt_rate(size_sum / n)
+                } else {
+                    "-".into()
+                },
+                if with_size_thread {
+                    (if kind.linearizable() { "yes" } else { "NO" }).to_string()
+                } else {
+                    "n/a".into()
+                },
             ]);
         }
         table.print();

@@ -91,7 +91,7 @@ impl EpochReport {
 }
 
 /// Run the recorded epochs through the PJRT pipeline.
-pub fn analyze(artifacts: &Artifacts, rec: &EpochRecorder) -> anyhow::Result<EpochReport> {
+pub fn analyze(artifacts: &Artifacts, rec: &EpochRecorder) -> crate::runtime::Result<EpochReport> {
     let counters: Vec<Vec<[u64; 2]>> =
         rec.samples().iter().map(|s| s.counters.clone()).collect();
     let pallas_sizes = artifacts.epoch_sizes(&counters)?;

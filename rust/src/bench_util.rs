@@ -13,11 +13,19 @@
 
 use std::time::Duration;
 
-use crate::cli::Args;
+use crate::bst::BstSet;
+use crate::cli::{Args, PolicyKind};
 use crate::harness::{run, Repeat, RunConfig};
+use crate::hashtable::HashTableSet;
+use crate::list::LinkedListSet;
 use crate::metrics::{fmt_rate, Stats, Table};
 use crate::set_api::ConcurrentSet;
+use crate::size::{
+    HandshakeSize, LinearizableSize, LockSize, NaiveSize, NoSize, OptimisticSize,
+};
+use crate::skiplist::SkipListSet;
 use crate::workload::{self, key_range, Mix, READ_HEAVY, UPDATE_HEAVY};
+use crate::MAX_THREADS;
 
 /// Common bench scale, assembled from CLI/env overrides.
 #[derive(Clone, Debug)]
@@ -66,6 +74,54 @@ impl BenchScale {
 /// Both paper mixes with their labels.
 pub const MIXES: [Mix; 2] = [READ_HEAVY, UPDATE_HEAVY];
 
+/// The four size-transformable structures, by CLI name.
+pub const STRUCTURES: [&str; 4] = ["hashtable", "skiplist", "bst", "list"];
+
+/// Build `structure` instantiated with `policy` — the one factory behind
+/// `csize bench`, the ablation benches and `kv_server`, so every surface
+/// speaks the same six-policy vocabulary. `expected` sizes the hash table;
+/// `None` for an unknown structure name.
+pub fn make_set(
+    structure: &str,
+    policy: PolicyKind,
+    expected: usize,
+) -> Option<Box<dyn ConcurrentSet>> {
+    use PolicyKind::*;
+    Some(match (structure, policy) {
+        ("hashtable", Baseline) => Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, expected)),
+        ("hashtable", Linearizable) => {
+            Box::new(HashTableSet::<LinearizableSize>::new(MAX_THREADS, expected))
+        }
+        ("hashtable", Naive) => Box::new(HashTableSet::<NaiveSize>::new(MAX_THREADS, expected)),
+        ("hashtable", Lock) => Box::new(HashTableSet::<LockSize>::new(MAX_THREADS, expected)),
+        ("hashtable", Handshake) => {
+            Box::new(HashTableSet::<HandshakeSize>::new(MAX_THREADS, expected))
+        }
+        ("hashtable", Optimistic) => {
+            Box::new(HashTableSet::<OptimisticSize>::new(MAX_THREADS, expected))
+        }
+        ("skiplist", Baseline) => Box::new(SkipListSet::<NoSize>::new(MAX_THREADS)),
+        ("skiplist", Linearizable) => Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)),
+        ("skiplist", Naive) => Box::new(SkipListSet::<NaiveSize>::new(MAX_THREADS)),
+        ("skiplist", Lock) => Box::new(SkipListSet::<LockSize>::new(MAX_THREADS)),
+        ("skiplist", Handshake) => Box::new(SkipListSet::<HandshakeSize>::new(MAX_THREADS)),
+        ("skiplist", Optimistic) => Box::new(SkipListSet::<OptimisticSize>::new(MAX_THREADS)),
+        ("bst", Baseline) => Box::new(BstSet::<NoSize>::new(MAX_THREADS)),
+        ("bst", Linearizable) => Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)),
+        ("bst", Naive) => Box::new(BstSet::<NaiveSize>::new(MAX_THREADS)),
+        ("bst", Lock) => Box::new(BstSet::<LockSize>::new(MAX_THREADS)),
+        ("bst", Handshake) => Box::new(BstSet::<HandshakeSize>::new(MAX_THREADS)),
+        ("bst", Optimistic) => Box::new(BstSet::<OptimisticSize>::new(MAX_THREADS)),
+        ("list", Baseline) => Box::new(LinkedListSet::<NoSize>::new(MAX_THREADS)),
+        ("list", Linearizable) => Box::new(LinkedListSet::<LinearizableSize>::new(MAX_THREADS)),
+        ("list", Naive) => Box::new(LinkedListSet::<NaiveSize>::new(MAX_THREADS)),
+        ("list", Lock) => Box::new(LinkedListSet::<LockSize>::new(MAX_THREADS)),
+        ("list", Handshake) => Box::new(LinkedListSet::<HandshakeSize>::new(MAX_THREADS)),
+        ("list", Optimistic) => Box::new(LinkedListSet::<OptimisticSize>::new(MAX_THREADS)),
+        _ => return None,
+    })
+}
+
 /// A named way to build a fresh set for one measured run.
 pub type SetFactory<'a> = &'a (dyn Fn(u64) -> Box<dyn ConcurrentSet> + Sync);
 
@@ -99,10 +155,32 @@ fn measure_metric(
     Stats::from_samples(&samples)
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_covers_all_structures_and_policies() {
+        for structure in STRUCTURES {
+            for policy in PolicyKind::ALL {
+                let set = make_set(structure, policy, 256)
+                    .unwrap_or_else(|| panic!("no factory for {structure}/{policy:?}"));
+                assert!(set.insert(7), "{structure}/{policy:?} insert");
+                assert!(set.contains(7));
+                match policy.provides_size() {
+                    true => assert_eq!(set.size(), Some(1), "{structure}/{policy:?}"),
+                    false => assert_eq!(set.size(), None, "{structure}/{policy:?}"),
+                }
+            }
+        }
+        assert!(make_set("btree", PolicyKind::Baseline, 0).is_none());
+    }
+}
+
 /// Figure 1 schedule: a writer inserts a fresh key while a prober runs
 /// `contains(k)` then `size()`; an anomaly is `contains == true` with
 /// `size == 0` (paper Fig. 1). Returns the number of anomalous trials.
-pub fn fig1_anomalies<S: ConcurrentSet>(set: &S, trials: usize) -> usize {
+pub fn fig1_anomalies(set: &dyn ConcurrentSet, trials: usize) -> usize {
     use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
     let mut anomalies = 0;
     for k in 1..=trials as u64 {
@@ -126,7 +204,7 @@ pub fn fig1_anomalies<S: ConcurrentSet>(set: &S, trials: usize) -> usize {
 /// Figure 2 schedule: per round, `T_ins` inserts a fresh key and `T_del`
 /// races to delete it (its decrement can land before the insert's delayed
 /// increment); the prober counts negative `size()` results (paper Fig. 2).
-pub fn fig2_anomalies<S: ConcurrentSet>(set: &S, rounds: usize) -> usize {
+pub fn fig2_anomalies(set: &dyn ConcurrentSet, rounds: usize) -> usize {
     use std::sync::atomic::{AtomicUsize, Ordering::SeqCst};
     let negatives = AtomicUsize::new(0);
     for k in 1..=rounds as u64 {

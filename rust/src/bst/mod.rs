@@ -512,7 +512,7 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
 
     fn contains(&self, k: u64) -> bool {
         let _guard = ebr::pin();
-        let _op = self.policy.enter();
+        let _op = self.policy.enter_read();
 
         let s = self.search(k);
         let l = unsafe { &*s.leaf };

@@ -6,6 +6,81 @@
 
 use std::collections::HashMap;
 
+/// The six size policies selectable from every CLI surface (`csize bench
+/// --policy`, the ablation benches, `kv_server --policy`): the paper's four
+/// plus the synchronization-methods study's two optimized methods.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Untransformed structure; no `size()` at all.
+    Baseline,
+    /// The paper's wait-free linearizable size.
+    Linearizable,
+    /// Java-style counter-after-op; **not** linearizable (Figs. 1–2).
+    Naive,
+    /// Global reader-writer lock.
+    Lock,
+    /// Handshake-based method (arXiv 2506.16350): cheap updates, blocking
+    /// size.
+    Handshake,
+    /// Optimistic double-collect with wait-free fallback (arXiv
+    /// 2506.16350).
+    Optimistic,
+}
+
+impl PolicyKind {
+    /// Every policy, in ablation-report order.
+    pub const ALL: [PolicyKind; 6] = [
+        PolicyKind::Baseline,
+        PolicyKind::Linearizable,
+        PolicyKind::Naive,
+        PolicyKind::Lock,
+        PolicyKind::Handshake,
+        PolicyKind::Optimistic,
+    ];
+
+    /// Parse a CLI spelling (the historical `size` alias maps to the
+    /// paper's policy).
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "baseline" | "nosize" => PolicyKind::Baseline,
+            "size" | "linearizable" => PolicyKind::Linearizable,
+            "naive" => PolicyKind::Naive,
+            "lock" => PolicyKind::Lock,
+            "handshake" => PolicyKind::Handshake,
+            "optimistic" => PolicyKind::Optimistic,
+            _ => return None,
+        })
+    }
+
+    /// Canonical CLI / report name.
+    pub fn label(self) -> &'static str {
+        match self {
+            PolicyKind::Baseline => "baseline",
+            PolicyKind::Linearizable => "linearizable",
+            PolicyKind::Naive => "naive",
+            PolicyKind::Lock => "lock",
+            PolicyKind::Handshake => "handshake",
+            PolicyKind::Optimistic => "optimistic",
+        }
+    }
+
+    /// Whether the policy implements `size()` at all.
+    pub fn provides_size(self) -> bool {
+        self != PolicyKind::Baseline
+    }
+
+    /// Whether the provided `size()` is linearizable.
+    pub fn linearizable(self) -> bool {
+        matches!(
+            self,
+            PolicyKind::Linearizable
+                | PolicyKind::Lock
+                | PolicyKind::Handshake
+                | PolicyKind::Optimistic
+        )
+    }
+}
+
 /// Parsed command line: one optional subcommand plus `--key [value]` pairs.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -131,5 +206,30 @@ mod tests {
     #[should_panic(expected = "--threads expects an integer")]
     fn bad_integer_panics() {
         args("b --threads abc").get_u64("threads", 0);
+    }
+
+    #[test]
+    fn policy_kind_parses_all_spellings() {
+        for kind in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(PolicyKind::parse("size"), Some(PolicyKind::Linearizable));
+        assert_eq!(PolicyKind::parse("nosize"), Some(PolicyKind::Baseline));
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn policy_kind_classification() {
+        assert!(!PolicyKind::Baseline.provides_size());
+        assert!(PolicyKind::Naive.provides_size());
+        assert!(!PolicyKind::Naive.linearizable());
+        for kind in [
+            PolicyKind::Linearizable,
+            PolicyKind::Lock,
+            PolicyKind::Handshake,
+            PolicyKind::Optimistic,
+        ] {
+            assert!(kind.provides_size() && kind.linearizable(), "{kind:?}");
+        }
     }
 }

@@ -26,9 +26,7 @@ use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 use std::sync::Mutex;
 
-use crossbeam_utils::CachePadded;
-use once_cell::sync::Lazy;
-
+use crate::pad::CachePadded;
 use crate::thread_id;
 use crate::MAX_THREADS;
 
@@ -40,14 +38,14 @@ const COLLECT_THRESHOLD: usize = 64;
 static EPOCH: AtomicU64 = AtomicU64::new(1);
 
 /// Per-slot state: `epoch << 1 | 1` while pinned, `0` while not.
-static SLOT_STATE: Lazy<Box<[CachePadded<AtomicU64>]>> = Lazy::new(|| {
-    (0..MAX_THREADS)
-        .map(|_| CachePadded::new(AtomicU64::new(0)))
-        .collect()
-});
+static SLOT_STATE: [CachePadded<AtomicU64>; MAX_THREADS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const UNPINNED: CachePadded<AtomicU64> = CachePadded::new(AtomicU64::new(0));
+    [UNPINNED; MAX_THREADS]
+};
 
 /// Bags of exited threads, adopted by future collections.
-static ORPHANS: Lazy<Mutex<Vec<(u64, Deferred)>>> = Lazy::new(|| Mutex::new(Vec::new()));
+static ORPHANS: Mutex<Vec<(u64, Deferred)>> = Mutex::new(Vec::new());
 
 /// Total objects freed by the reclaimer (test/diagnostic counter).
 static FREED: AtomicU64 = AtomicU64::new(0);

@@ -234,6 +234,21 @@ mod tests {
     }
 
     #[test]
+    fn run_drives_handshake_and_optimistic_policies() {
+        // The new size methods must survive the exact driver the figure
+        // benches use — including a concurrent size thread (the handshake
+        // path blocks updates during each size; no deadlock allowed).
+        use crate::cli::PolicyKind;
+        for policy in [PolicyKind::Handshake, PolicyKind::Optimistic] {
+            let set = crate::bench_util::make_set("hashtable", policy, 512).unwrap();
+            workload::prefill(set.as_ref(), 512, key_range(512, UPDATE_HEAVY), 3);
+            let res = run(set.as_ref(), &quick_cfg(2, 1));
+            assert!(res.workload_ops > 0, "{policy:?} starved the workload");
+            assert!(res.size_ops > 0, "{policy:?} starved size calls");
+        }
+    }
+
+    #[test]
     fn measure_aggregates_runs() {
         let cfg = quick_cfg(1, 0);
         let stats = measure(

@@ -8,12 +8,29 @@
 //!
 //! ## What lives where
 //!
-//! * [`size`] — the paper's core mechanism: per-thread insertion/deletion
-//!   counters ([`size::SizeCalculator`]), the Jayanti-style wait-free
-//!   counter snapshot ([`size::CountersSnapshot`]), and the
-//!   [`size::SizePolicy`] family used to instantiate each data structure as
-//!   a baseline (`NoSize`), paper-transformed (`LinearizableSize`),
-//!   Java-style buggy (`NaiveSize`) or global-lock (`LockSize`) variant.
+//! * [`size`] — the size-methods subsystem. The paper's core mechanism:
+//!   per-thread insertion/deletion counters ([`size::SizeCalculator`]), the
+//!   Jayanti-style wait-free counter snapshot ([`size::CountersSnapshot`]),
+//!   and the [`size::SizePolicy`] family — **six** policies that
+//!   instantiate each data structure across the size design space:
+//!   - `NoSize` — baseline, no `size()` (the overhead yardstick);
+//!   - `LinearizableSize` — the paper's wait-free linearizable size;
+//!     strongest progress guarantee, metadata work on every update;
+//!   - `NaiveSize` — Java-style counter-after-op; cheap but **not**
+//!     linearizable (Figures 1–2 anomalies);
+//!   - `LockSize` — global reader-writer lock; correct, simplest, worst
+//!     scalability under mixed traffic;
+//!   - `HandshakeSize` — flag-raise/ack handshake (the
+//!     synchronization-methods study, arXiv 2506.16350): near-zero update
+//!     overhead, so it wins update-heavy mixes with rare/periodic sizes;
+//!     `size()` is blocking and serialized;
+//!   - `OptimisticSize` — version-stamped double-collect with bounded
+//!     retries falling back to the wait-free path (same study): the
+//!     paper's update costs with cheaper size calls when collects
+//!     succeed; wins when sizes and moderate update traffic interleave.
+//!
+//!   `cargo bench --bench ablation_policies` sweeps all six on one
+//!   structure; every policy plugs into all four structures generically.
 //! * [`list`], [`hashtable`], [`skiplist`], [`bst`] — the evaluated data
 //!   structures, each generic over the size policy (paper Section 9).
 //! * [`snapshot`], [`vcas`] — the snapshot-based competitors
@@ -25,7 +42,9 @@
 //!   Figures 7–13.
 //! * [`runtime`], [`analytics`] — PJRT CPU runtime loading the AOT-compiled
 //!   JAX/Pallas analytics artifacts (`artifacts/*.hlo.txt`), and the epoch
-//!   analytics pipeline built on them.
+//!   analytics pipeline built on them. The XLA backend sits behind the
+//!   `pjrt` cargo feature; default (offline) builds get a stub whose
+//!   loaders fail gracefully and the pipeline consumers skip.
 //! * [`history`] — operation logging + the offline size-linearizability
 //!   checker (rust oracle, cross-checked against the Pallas pipeline).
 //!
@@ -54,6 +73,7 @@ pub mod hashtable;
 pub mod history;
 pub mod list;
 pub mod metrics;
+pub mod pad;
 pub mod proptest_lite;
 pub mod rng;
 pub mod runtime;

@@ -269,7 +269,7 @@ pub(crate) fn delete_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> 
 /// point before reporting.
 pub(crate) fn contains_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> bool {
     let _guard = ebr::pin();
-    let _op = policy.enter();
+    let _op = policy.enter_read();
 
     let mut curr = addr::<P>(head.load(SeqCst));
     while !curr.is_null() {

@@ -15,14 +15,12 @@ use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 use std::sync::Arc;
 use std::time::Duration;
 
-use concurrent_size::bst::BstSet;
-use concurrent_size::cli::Args;
+use concurrent_size::bench_util;
+use concurrent_size::cli::{Args, PolicyKind};
 use concurrent_size::harness::{run, RunConfig};
-use concurrent_size::hashtable::HashTableSet;
-use concurrent_size::list::LinkedListSet;
 use concurrent_size::metrics::fmt_rate;
 use concurrent_size::set_api::ConcurrentSet;
-use concurrent_size::size::{LinearizableSize, LockSize, NaiveSize, NoSize, SizePolicy};
+use concurrent_size::size::{LinearizableSize, NaiveSize, SizePolicy};
 use concurrent_size::skiplist::SkipListSet;
 use concurrent_size::snapshot::SnapshotSkipList;
 use concurrent_size::vcas::VcasSet;
@@ -30,27 +28,27 @@ use concurrent_size::workload::{self, key_range, Mix, READ_HEAVY, UPDATE_HEAVY};
 use concurrent_size::{analytics, runtime, MAX_THREADS};
 
 fn make_set(structure: &str, policy: &str, initial: usize) -> Box<dyn ConcurrentSet> {
-    match (structure, policy) {
-        ("hashtable", "baseline") => Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, initial)),
-        ("hashtable", "size") => {
-            Box::new(HashTableSet::<LinearizableSize>::new(MAX_THREADS, initial))
-        }
-        ("hashtable", "naive") => Box::new(HashTableSet::<NaiveSize>::new(MAX_THREADS, initial)),
-        ("hashtable", "lock") => Box::new(HashTableSet::<LockSize>::new(MAX_THREADS, initial)),
-        ("skiplist", "baseline") => Box::new(SkipListSet::<NoSize>::new(MAX_THREADS)),
-        ("skiplist", "size") => Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)),
-        ("skiplist", "naive") => Box::new(SkipListSet::<NaiveSize>::new(MAX_THREADS)),
-        ("skiplist", "lock") => Box::new(SkipListSet::<LockSize>::new(MAX_THREADS)),
-        ("bst", "baseline") => Box::new(BstSet::<NoSize>::new(MAX_THREADS)),
-        ("bst", "size") => Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)),
-        ("bst", "naive") => Box::new(BstSet::<NaiveSize>::new(MAX_THREADS)),
-        ("bst", "lock") => Box::new(BstSet::<LockSize>::new(MAX_THREADS)),
-        ("list", "size") => Box::new(LinkedListSet::<LinearizableSize>::new(MAX_THREADS)),
-        ("list", "baseline") => Box::new(LinkedListSet::<NoSize>::new(MAX_THREADS)),
-        ("snapshot-skiplist", _) => Box::new(SnapshotSkipList::new(MAX_THREADS)),
-        ("vcas", _) => Box::new(VcasSet::new(MAX_THREADS, initial)),
-        _ => {
-            eprintln!("unknown structure/policy: {structure}/{policy}");
+    // Snapshot-based competitors carry their own size mechanism and ignore
+    // the policy; everything else goes through the shared six-policy
+    // factory (`bench_util::make_set`).
+    match structure {
+        "snapshot-skiplist" => return Box::new(SnapshotSkipList::new(MAX_THREADS)),
+        "vcas" => return Box::new(VcasSet::new(MAX_THREADS, initial)),
+        _ => {}
+    }
+    let Some(kind) = PolicyKind::parse(policy) else {
+        eprintln!(
+            "unknown policy {policy:?} (use baseline|linearizable|naive|lock|handshake|optimistic)"
+        );
+        std::process::exit(2);
+    };
+    match bench_util::make_set(structure, kind, initial) {
+        Some(set) => set,
+        None => {
+            eprintln!(
+                "unknown structure {structure:?} (use {}|snapshot-skiplist|vcas)",
+                bench_util::STRUCTURES.join("|")
+            );
             std::process::exit(2);
         }
     }
@@ -91,6 +89,26 @@ fn cmd_demo() {
             set.size()
         );
     }
+    println!("\n-- size policies (hash table) --");
+    for kind in PolicyKind::ALL {
+        let set = make_set("hashtable", kind.label(), 1024);
+        for k in 1..=100u64 {
+            set.insert(k);
+        }
+        for k in 1..=50u64 {
+            set.delete(k * 2);
+        }
+        println!(
+            "{:<12} size={:<10} linearizable={}",
+            kind.label(),
+            format!("{:?}", set.size()),
+            if kind.provides_size() {
+                if kind.linearizable() { "yes" } else { "NO" }
+            } else {
+                "n/a"
+            }
+        );
+    }
 }
 
 fn cmd_bench(args: &Args) {
@@ -110,7 +128,9 @@ fn cmd_bench(args: &Args) {
     );
     workload::prefill(set.as_ref(), initial as u64, range, 42);
 
-    let mut cfg = RunConfig::new(w, if policy == "baseline" { 0 } else { s }, mix, range);
+    // No size threads on structures whose policy provides no size().
+    let size_threads = if set.size().is_some() { s } else { 0 };
+    let mut cfg = RunConfig::new(w, size_threads, mix, range);
     cfg.duration = Duration::from_secs_f64(secs);
     let res = run(set.as_ref(), &cfg);
     println!(
@@ -130,7 +150,13 @@ fn cmd_analyze(args: &Args) {
     let mix = parse_mix(args.get("mix").unwrap_or("update-heavy"));
 
     println!("loading PJRT artifacts...");
-    let artifacts = runtime::Artifacts::load_default().expect("make artifacts first");
+    let artifacts = match runtime::Artifacts::load_default() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("analyze unavailable: {e}");
+            std::process::exit(1);
+        }
+    };
 
     let set: Arc<SkipListSet<LinearizableSize>> = Arc::new(SkipListSet::new(MAX_THREADS));
     let range = key_range(initial as u64, mix);

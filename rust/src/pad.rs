@@ -1,0 +1,78 @@
+//! Cache-line padding, replacing `crossbeam_utils::CachePadded` so the
+//! crate builds with zero external dependencies (the offline image has no
+//! crates.io registry).
+//!
+//! Alignment is 128 bytes: the size of two x86-64 cache lines (the spatial
+//! prefetcher pulls pairs) and of one aarch64 cache line on big cores —
+//! the same constant crossbeam uses on these targets. Each padded value
+//! therefore owns its line(s), which is what keeps the paper's per-thread
+//! counter arrays free of false sharing (paper Section 6.1).
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns `T` to 128 bytes.
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    #[inline]
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    #[inline]
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        Self::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_128() {
+        assert_eq!(std::mem::align_of::<CachePadded<u8>>(), 128);
+        assert_eq!(std::mem::size_of::<CachePadded<u8>>(), 128);
+    }
+
+    #[test]
+    fn deref_roundtrip() {
+        let mut p = CachePadded::new(7u64);
+        assert_eq!(*p, 7);
+        *p = 9;
+        assert_eq!(p.into_inner(), 9);
+    }
+
+    #[test]
+    fn adjacent_padded_values_share_no_line() {
+        let pair = [CachePadded::new(0u8), CachePadded::new(0u8)];
+        let a = &pair[0] as *const _ as usize;
+        let b = &pair[1] as *const _ as usize;
+        assert!(b - a >= 128);
+    }
+}

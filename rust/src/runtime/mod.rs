@@ -10,10 +10,18 @@
 //! * `size_reduce.hlo.txt`   : s64[[`AOT_E`], [`AOT_T`], 2] → (s64[[`AOT_E`]],)
 //! * `prefix_scan.hlo.txt`   : s64[[`AOT_L`]] → (s64[[`AOT_L`]],)
 //! * `history_stats.hlo.txt` : s64[[`AOT_L`]], s64[] → (s64[[`AOT_L`]], s64[4])
+//!
+//! ## Offline builds
+//!
+//! The XLA backend needs the vendored `xla` crate and `libxla`, which the
+//! offline image does not carry, so it sits behind the `pjrt` cargo
+//! feature. The default build substitutes a stub whose loaders return
+//! [`Err`]; every artifact consumer (integration tests, `csize analyze`,
+//! `examples/size_analytics`) treats that as "skip the PJRT cross-check".
+//! The Rust oracles in [`crate::history`] keep the same semantics covered.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::path::Path;
 
 use crate::history::HistoryStats;
 
@@ -24,121 +32,243 @@ pub const AOT_T: usize = 64;
 /// History log capacity (AOT_L in aot.py).
 pub const AOT_L: usize = 65536;
 
-/// The three compiled analytics executables.
-pub struct Artifacts {
-    size_reduce: xla::PjRtLoadedExecutable,
-    prefix_scan: xla::PjRtLoadedExecutable,
-    history_stats: xla::PjRtLoadedExecutable,
-}
+/// Runtime error: a message chain, `anyhow`-shaped but dependency-free.
+#[derive(Debug)]
+pub struct RuntimeError(String);
 
-impl Artifacts {
-    /// Compile all artifacts from `dir` (default: `./artifacts`) on the
-    /// PJRT CPU client.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path: PathBuf = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        };
-        Ok(Self {
-            size_reduce: compile("size_reduce.hlo.txt")?,
-            prefix_scan: compile("prefix_scan.hlo.txt")?,
-            history_stats: compile("history_stats.hlo.txt")?,
-        })
-    }
-
-    /// Locate the artifacts directory relative to the repo root (walks up
-    /// from the current dir), then [`Self::load`] it.
-    pub fn load_default() -> Result<Self> {
-        let mut dir = std::env::current_dir()?;
-        loop {
-            let cand = dir.join("artifacts");
-            if cand.join("size_reduce.hlo.txt").exists() {
-                return Self::load(&cand);
-            }
-            if !dir.pop() {
-                bail!("artifacts/ not found; run `make artifacts` first");
-            }
-        }
-    }
-
-    /// Per-epoch sizes from per-thread counter samples.
-    ///
-    /// `epochs[e][t] = [insertions, deletions]`; at most [`AOT_E`] epochs of
-    /// at most [`AOT_T`] threads (padded with zeros up to the AOT shape).
-    pub fn epoch_sizes(&self, epochs: &[Vec<[u64; 2]>]) -> Result<Vec<i64>> {
-        if epochs.len() > AOT_E {
-            bail!("too many epochs: {} > {AOT_E}", epochs.len());
-        }
-        let mut flat = vec![0i64; AOT_E * AOT_T * 2];
-        for (e, sample) in epochs.iter().enumerate() {
-            if sample.len() > AOT_T {
-                bail!("too many threads: {} > {AOT_T}", sample.len());
-            }
-            for (t, pair) in sample.iter().enumerate() {
-                flat[(e * AOT_T + t) * 2] = pair[0] as i64;
-                flat[(e * AOT_T + t) * 2 + 1] = pair[1] as i64;
-            }
-        }
-        let input = xla::Literal::vec1(&flat).reshape(&[AOT_E as i64, AOT_T as i64, 2])?;
-        let out = self.size_reduce.execute::<xla::Literal>(&[input])?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        let sizes = out.to_vec::<i64>()?;
-        Ok(sizes[..epochs.len()].to_vec())
-    }
-
-    /// Running sizes of a delta log via the Pallas `prefix_scan` kernel.
-    pub fn running_sizes(&self, deltas: &[i64]) -> Result<Vec<i64>> {
-        if deltas.len() > AOT_L {
-            bail!("history too long: {} > {AOT_L}", deltas.len());
-        }
-        let mut padded = vec![0i64; AOT_L];
-        padded[..deltas.len()].copy_from_slice(deltas);
-        let input = xla::Literal::vec1(&padded);
-        let out = self.prefix_scan.execute::<xla::Literal>(&[input])?[0][0]
-            .to_literal_sync()?
-            .to_tuple1()?;
-        let running = out.to_vec::<i64>()?;
-        Ok(running[..deltas.len()].to_vec())
-    }
-
-    /// Full history validation (running sizes + stats) via the Pallas
-    /// pipeline.
-    pub fn validate_history(&self, deltas: &[i64]) -> Result<(Vec<i64>, HistoryStats)> {
-        if deltas.len() > AOT_L {
-            bail!("history too long: {} > {AOT_L}", deltas.len());
-        }
-        let mut padded = vec![0i64; AOT_L];
-        padded[..deltas.len()].copy_from_slice(deltas);
-        let input = xla::Literal::vec1(&padded);
-        let vlen = xla::Literal::scalar(deltas.len() as i64);
-        let (running, stats) = self.history_stats.execute::<xla::Literal>(&[input, vlen])?[0][0]
-            .to_literal_sync()?
-            .to_tuple2()?;
-        let running = running.to_vec::<i64>()?[..deltas.len()].to_vec();
-        let s = stats.to_vec::<i64>()?;
-        Ok((
-            running,
-            HistoryStats {
-                min: s[0],
-                max: s[1],
-                final_size: s[2],
-                negative_count: s[3],
-            },
-        ))
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
     }
 }
 
-#[cfg(test)]
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        Self(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Early-return shorthand (scoped to this module and its backends).
+macro_rules! bail {
+    ($($fmt:tt)+) => {
+        return Err($crate::runtime::RuntimeError::new(format!($($fmt)+)))
+    };
+}
+
+/// Locate the `artifacts/` directory by walking up from the current dir.
+fn find_artifacts_dir() -> Result<std::path::PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("size_reduce.hlo.txt").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            bail!("artifacts/ not found; run `make artifacts` first");
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! The real XLA-backed implementation (requires the vendored `xla`
+    //! crate; see the module docs).
+    use super::*;
+
+    /// The three compiled analytics executables.
+    pub struct Artifacts {
+        size_reduce: xla::PjRtLoadedExecutable,
+        prefix_scan: xla::PjRtLoadedExecutable,
+        history_stats: xla::PjRtLoadedExecutable,
+    }
+
+    impl Artifacts {
+        /// Compile all artifacts from `dir` on the PJRT CPU client.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref();
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::new(format!("creating PJRT CPU client: {e}")))?;
+            let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(name);
+                let text_path = path
+                    .to_str()
+                    .ok_or_else(|| RuntimeError::new("non-utf8 artifact path"))?;
+                let proto = xla::HloModuleProto::from_text_file(text_path)
+                    .map_err(|e| RuntimeError::new(format!("parsing {}: {e}", path.display())))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .map_err(|e| RuntimeError::new(format!("compiling {}: {e}", path.display())))
+            };
+            Ok(Self {
+                size_reduce: compile("size_reduce.hlo.txt")?,
+                prefix_scan: compile("prefix_scan.hlo.txt")?,
+                history_stats: compile("history_stats.hlo.txt")?,
+            })
+        }
+
+        /// Locate the artifacts directory, then [`Self::load`] it.
+        pub fn load_default() -> Result<Self> {
+            Self::load(find_artifacts_dir()?)
+        }
+
+        /// Per-epoch sizes from per-thread counter samples.
+        ///
+        /// `epochs[e][t] = [insertions, deletions]`; at most [`AOT_E`]
+        /// epochs of at most [`AOT_T`] threads (zero-padded to AOT shape).
+        pub fn epoch_sizes(&self, epochs: &[Vec<[u64; 2]>]) -> Result<Vec<i64>> {
+            if epochs.len() > AOT_E {
+                bail!("too many epochs: {} > {AOT_E}", epochs.len());
+            }
+            let mut flat = vec![0i64; AOT_E * AOT_T * 2];
+            for (e, sample) in epochs.iter().enumerate() {
+                if sample.len() > AOT_T {
+                    bail!("too many threads: {} > {AOT_T}", sample.len());
+                }
+                for (t, pair) in sample.iter().enumerate() {
+                    flat[(e * AOT_T + t) * 2] = pair[0] as i64;
+                    flat[(e * AOT_T + t) * 2 + 1] = pair[1] as i64;
+                }
+            }
+            let input = xla::Literal::vec1(&flat)
+                .reshape(&[AOT_E as i64, AOT_T as i64, 2])
+                .map_err(|e| RuntimeError::new(e.to_string()))?;
+            let out = self
+                .size_reduce
+                .execute::<xla::Literal>(&[input])
+                .map_err(|e| RuntimeError::new(e.to_string()))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::new(e.to_string()))?
+                .to_tuple1()
+                .map_err(|e| RuntimeError::new(e.to_string()))?;
+            let sizes = out
+                .to_vec::<i64>()
+                .map_err(|e| RuntimeError::new(e.to_string()))?;
+            Ok(sizes[..epochs.len()].to_vec())
+        }
+
+        /// Running sizes of a delta log via the Pallas `prefix_scan` kernel.
+        pub fn running_sizes(&self, deltas: &[i64]) -> Result<Vec<i64>> {
+            if deltas.len() > AOT_L {
+                bail!("history too long: {} > {AOT_L}", deltas.len());
+            }
+            let mut padded = vec![0i64; AOT_L];
+            padded[..deltas.len()].copy_from_slice(deltas);
+            let input = xla::Literal::vec1(&padded);
+            let out = self
+                .prefix_scan
+                .execute::<xla::Literal>(&[input])
+                .map_err(|e| RuntimeError::new(e.to_string()))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::new(e.to_string()))?
+                .to_tuple1()
+                .map_err(|e| RuntimeError::new(e.to_string()))?;
+            let running = out
+                .to_vec::<i64>()
+                .map_err(|e| RuntimeError::new(e.to_string()))?;
+            Ok(running[..deltas.len()].to_vec())
+        }
+
+        /// Full history validation (running sizes + stats) via the Pallas
+        /// pipeline.
+        pub fn validate_history(&self, deltas: &[i64]) -> Result<(Vec<i64>, HistoryStats)> {
+            if deltas.len() > AOT_L {
+                bail!("history too long: {} > {AOT_L}", deltas.len());
+            }
+            let mut padded = vec![0i64; AOT_L];
+            padded[..deltas.len()].copy_from_slice(deltas);
+            let input = xla::Literal::vec1(&padded);
+            let vlen = xla::Literal::scalar(deltas.len() as i64);
+            let (running, stats) = self
+                .history_stats
+                .execute::<xla::Literal>(&[input, vlen])
+                .map_err(|e| RuntimeError::new(e.to_string()))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::new(e.to_string()))?
+                .to_tuple2()
+                .map_err(|e| RuntimeError::new(e.to_string()))?;
+            let running = running
+                .to_vec::<i64>()
+                .map_err(|e| RuntimeError::new(e.to_string()))?[..deltas.len()]
+                .to_vec();
+            let s = stats
+                .to_vec::<i64>()
+                .map_err(|e| RuntimeError::new(e.to_string()))?;
+            Ok((
+                running,
+                HistoryStats {
+                    min: s[0],
+                    max: s[1],
+                    final_size: s[2],
+                    negative_count: s[3],
+                },
+            ))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend for builds without the `pjrt` feature: the API
+    //! compiles, the loaders fail, consumers skip the PJRT cross-check.
+    use super::*;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+         (requires the vendored xla crate and libxla)";
+
+    /// Stub artifacts handle; the loaders always fail, so the methods are
+    /// unreachable in practice and just re-report the missing feature.
+    pub struct Artifacts {
+        _private: (),
+    }
+
+    impl Artifacts {
+        pub fn load(_dir: impl AsRef<Path>) -> Result<Self> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+
+        pub fn load_default() -> Result<Self> {
+            // Distinguish "no runtime" from "no runtime AND no artifacts"
+            // so the user fixes the right thing first.
+            match find_artifacts_dir() {
+                Ok(dir) => Err(RuntimeError::new(format!(
+                    "{UNAVAILABLE}; artifacts are present at {}",
+                    dir.display()
+                ))),
+                Err(_) => Err(RuntimeError::new(format!(
+                    "{UNAVAILABLE}; artifacts/ not found either"
+                ))),
+            }
+        }
+
+        pub fn epoch_sizes(&self, _epochs: &[Vec<[u64; 2]>]) -> Result<Vec<i64>> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+
+        pub fn running_sizes(&self, _deltas: &[i64]) -> Result<Vec<i64>> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+
+        pub fn validate_history(&self, _deltas: &[i64]) -> Result<(Vec<i64>, HistoryStats)> {
+            Err(RuntimeError::new(UNAVAILABLE))
+        }
+    }
+}
+
+pub use backend::Artifacts;
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     //! These tests require `make artifacts` to have run (they are part of
     //! the `make test` flow, which guarantees it).
@@ -197,5 +327,18 @@ mod tests {
     fn empty_epoch_batch() {
         let a = artifacts();
         assert!(a.epoch_sizes(&[]).unwrap().is_empty());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_loaders_report_missing_feature() {
+        let err = Artifacts::load_default().err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "unhelpful error: {err}");
+        let err = Artifacts::load("/nonexistent").err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"));
     }
 }

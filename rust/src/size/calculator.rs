@@ -8,7 +8,7 @@
 
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering::SeqCst};
 
-use crossbeam_utils::CachePadded;
+use crate::pad::CachePadded;
 
 use super::{CountersSnapshot, OpKind, UpdateInfo};
 use crate::ebr;

@@ -1,0 +1,375 @@
+//! Handshake-based size (the synchronization-methods study, arXiv
+//! 2506.16350): make `size()` pay for synchronization so updates don't.
+//!
+//! ## Protocol
+//!
+//! Updates keep plain per-thread `[insertions, deletions]` counters —
+//! bumped *inside* the operation, on the thread's own cache line, with no
+//! `UpdateInfo` publication, no helping and no shared-counter contention.
+//! On its own such a counter sum is the paper's non-linearizable "naive"
+//! size; the handshake is what makes reading it sound:
+//!
+//! 1. `size()` raises [`HandshakeSize::size_flag`] (one per structure) and
+//!    then waits for every per-thread **epoch/ack slot** to go *even* —
+//!    each slot is odd exactly while its owner thread is inside an
+//!    operation, so an even sweep means all in-flight operations drained.
+//! 2. An operation entering while the flag is up **acknowledges** by
+//!    backing its slot out to even and parking until the flag drops; the
+//!    slot-store→flag-load / flag-store→slot-load SeqCst pairing (Dekker)
+//!    guarantees an operation either sees the flag and parks, or its odd
+//!    slot is seen by the drain sweep and waited for.
+//! 3. Between the drain and the flag drop the structure is *quiescent*:
+//!    `size()` reads the counters at leisure — every completed update is
+//!    reflected, nothing is mid-flight — and that whole window is its
+//!    linearization point.
+//!
+//! ## Trade-off (when this method wins)
+//!
+//! The update fast path is two private-line stores plus one flag load per
+//! operation — strictly cheaper than the wait-free method's metadata CAS +
+//! announced-snapshot forwarding — and read-only `contains` skips the
+//! handshake entirely (reads never touch the counters, and during a
+//! size's frozen window they observe exactly the counted state, so only
+//! update drains are load-bearing). The price: `size()` blocks updates
+//! for its O(#threads) window and size callers serialize, so the method
+//! shines on update-heavy workloads with rare/periodic size calls and
+//! loses when size is hammered concurrently (`ablation_policies`
+//! quantifies both). Unlike the paper's method, `size()` here is
+//! blocking, not wait-free — linearizability is preserved, progress
+//! guarantees are the trade.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
+use std::sync::Mutex;
+
+use crate::pad::CachePadded;
+use crate::thread_id;
+
+use super::policy::SizePolicy;
+use super::{OpKind, SizeOpts};
+
+/// Spins before each yield while parked on the flag or draining a slot
+/// (single-core containers need the yield to make progress at all).
+const SPINS_BEFORE_YIELD: u32 = 64;
+
+/// Per-thread epoch/ack slot: even = quiescent, odd = inside an operation.
+/// Monotonically increasing, so a stuck reader can tell "same op" from
+/// "new op" when debugging.
+type AckSlot = CachePadded<AtomicU64>;
+
+pub struct HandshakeSize {
+    /// `counters[tid] = [insertions, deletions]`; each owner-written only.
+    counters: Box<[CachePadded<[AtomicU64; 2]>]>,
+    /// Epoch/ack slots, one per thread (see module docs).
+    ack: Box<[AckSlot]>,
+    /// Raised while a `size()` handshake is in progress.
+    size_flag: AtomicBool,
+    /// Completed handshakes (diagnostics; one per successful `size()`).
+    handshakes: AtomicU64,
+    /// Serializes size callers: one handshake at a time.
+    size_lock: Mutex<()>,
+}
+
+/// RAII op guard: flips the owner's ack slot odd on entry, even on drop.
+/// Read-only operations carry no slot (see [`SizePolicy::enter_read`]) —
+/// they neither toggle parity nor park, so reads stay handshake-free.
+pub struct HandshakeGuard<'a> {
+    slot: Option<&'a AtomicU64>,
+}
+
+impl Drop for HandshakeGuard<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(slot) = self.slot {
+            // Sole writer of the slot: load can be relaxed, the store must
+            // be SeqCst so the drain sweep that observes it also observes
+            // every counter bump this operation performed.
+            let v = slot.load(Relaxed);
+            debug_assert!(v % 2 == 1, "guard dropped on a quiescent slot");
+            slot.store(v + 1, SeqCst);
+        }
+    }
+}
+
+impl HandshakeSize {
+    #[inline]
+    fn park_while_flag_up(&self) {
+        let mut spins = 0u32;
+        while self.size_flag.load(SeqCst) {
+            spins += 1;
+            if spins < SPINS_BEFORE_YIELD {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    #[inline]
+    fn bump(&self, kind: OpKind) {
+        let tid = thread_id::current();
+        // Owner-only counter: Relaxed is enough — visibility to size() is
+        // carried by the SeqCst even-store of the enclosing guard.
+        self.counters[tid][kind as usize].fetch_add(1, Relaxed);
+    }
+
+    /// Completed handshakes so far (one per successful `size()`).
+    pub fn handshake_count(&self) -> u64 {
+        self.handshakes.load(SeqCst)
+    }
+
+    /// Raw counter value (tests/diagnostics; not linearizable on its own).
+    pub fn counter(&self, tid: usize, kind: OpKind) -> u64 {
+        self.counters[tid][kind as usize].load(SeqCst)
+    }
+}
+
+impl SizePolicy for HandshakeSize {
+    // No per-node metadata at all: the node layout stays baseline.
+    type InfoSlot = ();
+    type OpGuard<'a>
+        = HandshakeGuard<'a>
+    where
+        Self: 'a;
+    const TRACKED: bool = false;
+
+    fn new(max_threads: usize, _opts: SizeOpts) -> Self {
+        Self {
+            counters: (0..max_threads)
+                .map(|_| CachePadded::new([AtomicU64::new(0), AtomicU64::new(0)]))
+                .collect(),
+            ack: (0..max_threads)
+                .map(|_| CachePadded::new(AtomicU64::new(0)))
+                .collect(),
+            size_flag: AtomicBool::new(false),
+            handshakes: AtomicU64::new(0),
+            size_lock: Mutex::new(()),
+        }
+    }
+
+    #[inline]
+    fn enter(&self) -> HandshakeGuard<'_> {
+        let slot: &AtomicU64 = &self.ack[thread_id::current()];
+        loop {
+            let v = slot.load(Relaxed);
+            debug_assert!(v % 2 == 0, "re-entrant operation on one thread");
+            // Announce "in operation" BEFORE checking the flag (Dekker
+            // store→load): if we miss a concurrent handshake's flag, the
+            // handshake's drain sweep is guaranteed to see our odd slot.
+            slot.store(v + 1, SeqCst);
+            if !self.size_flag.load(SeqCst) {
+                return HandshakeGuard { slot: Some(slot) };
+            }
+            // A handshake is in progress: acknowledge by backing out to a
+            // quiescent (even) slot, park until it completes, retry.
+            slot.store(v + 2, SeqCst);
+            self.park_while_flag_up();
+        }
+    }
+
+    #[inline]
+    fn enter_read(&self) -> HandshakeGuard<'_> {
+        // Reads never touch the counters and the structure is frozen while
+        // a size() holds its quiescent window, so a reader running through
+        // it still observes exactly the counted state — no parity toggle,
+        // no parking, no flag load. Reads are completely handshake-free.
+        HandshakeGuard { slot: None }
+    }
+
+    #[inline(always)]
+    fn begin_insert(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn stash_insert_info(_: &(), _: u64) {}
+
+    #[inline]
+    fn commit_insert(&self, _: &(), _: u64) {
+        self.bump(OpKind::Insert);
+    }
+
+    #[inline(always)]
+    fn help_insert(&self, _: &()) {}
+    #[inline(always)]
+    fn begin_delete(&self, _: usize) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn try_claim_delete(_: &(), _: u64) -> u64 {
+        0
+    }
+    #[inline(always)]
+    fn read_delete_info(_: &()) -> u64 {
+        0
+    }
+
+    #[inline]
+    fn commit_delete(&self, _: u64) {
+        self.bump(OpKind::Delete);
+    }
+
+    fn size(&self) -> Option<i64> {
+        let _serialize = self.size_lock.lock().unwrap();
+        self.size_flag.store(true, SeqCst);
+        // Drain: wait until every thread is at a quiescent point. Threads
+        // that entered before the flag finish their op; threads entering
+        // after it park (see `enter`), so after this sweep nothing moves.
+        for slot in self.ack.iter() {
+            let mut spins = 0u32;
+            while slot.load(SeqCst) % 2 == 1 {
+                spins += 1;
+                if spins < SPINS_BEFORE_YIELD {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        // Quiescent window: the counter sum is the exact current size, and
+        // any point in this window is a valid linearization point.
+        let mut total = 0i64;
+        for pair in self.counters.iter() {
+            total += pair[OpKind::Insert as usize].load(SeqCst) as i64;
+            total -= pair[OpKind::Delete as usize].load(SeqCst) as i64;
+        }
+        self.handshakes.fetch_add(1, SeqCst);
+        self.size_flag.store(false, SeqCst);
+        // Fairness: with the flag down but the size lock still held, give
+        // parked updaters a scheduling window before the next handshake
+        // can raise the flag again — without this, back-to-back size()
+        // callers can starve updates on machines with few cores.
+        std::thread::yield_now();
+        debug_assert!(total >= 0, "handshake size went negative: {total}");
+        Some(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    fn policy() -> HandshakeSize {
+        HandshakeSize::new(crate::MAX_THREADS, SizeOpts::default())
+    }
+
+    #[test]
+    fn info_slot_is_zero_sized() {
+        assert_eq!(
+            std::mem::size_of::<<HandshakeSize as SizePolicy>::InfoSlot>(),
+            0,
+            "handshake must add no per-node metadata"
+        );
+    }
+
+    #[test]
+    fn sequential_counting() {
+        let p = policy();
+        {
+            let _g = p.enter();
+            p.commit_insert(&(), 0);
+            p.commit_insert(&(), 0);
+        }
+        {
+            let _g = p.enter();
+            p.commit_delete(0);
+        }
+        assert_eq!(p.size(), Some(1));
+        assert_eq!(p.handshake_count(), 1);
+    }
+
+    #[test]
+    fn read_guard_is_handshake_free() {
+        let p = policy();
+        let tid = thread_id::current();
+        let before = p.ack[tid].load(SeqCst);
+        // Even with a handshake "in progress", a read guard neither parks
+        // nor touches the ack slot.
+        p.size_flag.store(true, SeqCst);
+        {
+            let _g = p.enter_read();
+            assert_eq!(p.ack[tid].load(SeqCst), before);
+        }
+        p.size_flag.store(false, SeqCst);
+        assert_eq!(p.ack[tid].load(SeqCst), before);
+    }
+
+    #[test]
+    fn guard_toggles_ack_slot_parity() {
+        let p = policy();
+        let tid = thread_id::current();
+        let before = p.ack[tid].load(SeqCst);
+        assert_eq!(before % 2, 0);
+        {
+            let _g = p.enter();
+            assert_eq!(p.ack[tid].load(SeqCst) % 2, 1);
+        }
+        assert_eq!(p.ack[tid].load(SeqCst) % 2, 0);
+        assert!(p.ack[tid].load(SeqCst) > before, "slot must be monotone");
+    }
+
+    #[test]
+    fn size_drains_in_flight_op() {
+        // An operation holds its guard while size() runs in another
+        // thread: size must wait for the guard and then count the op.
+        let p = Arc::new(policy());
+        let entered = Arc::new(AtomicBool::new(false));
+        let release = Arc::new(AtomicBool::new(false));
+        let sizer = {
+            let p = p.clone();
+            let entered = entered.clone();
+            let release = release.clone();
+            std::thread::spawn(move || {
+                while !entered.load(SeqCst) {
+                    std::hint::spin_loop();
+                }
+                release.store(true, SeqCst); // let the op finish…
+                p.size().unwrap() // …and drain it
+            })
+        };
+        {
+            let _g = p.enter();
+            p.commit_insert(&(), 0);
+            entered.store(true, SeqCst);
+            while !release.load(SeqCst) {
+                std::hint::spin_loop();
+            }
+            // Hold the guard a little longer so the drain really waits.
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(sizer.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn concurrent_churn_never_negative() {
+        let p = Arc::new(policy());
+        let stop = Arc::new(AtomicBool::new(false));
+        let churners: Vec<_> = (0..3)
+            .map(|_| {
+                let p = p.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(SeqCst) {
+                        {
+                            let _g = p.enter();
+                            p.commit_insert(&(), 0);
+                        }
+                        {
+                            let _g = p.enter();
+                            p.commit_delete(0);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..300 {
+            let s = p.size().unwrap();
+            assert!((0..=3).contains(&s), "non-linearizable size {s}");
+        }
+        stop.store(true, SeqCst);
+        for c in churners {
+            c.join().unwrap();
+        }
+        assert_eq!(p.size(), Some(0));
+    }
+}

@@ -11,13 +11,22 @@
 //! * [`SizePolicy`] and its implementations — the compile-time switch that
 //!   instantiates each data structure as baseline / paper-transformed /
 //!   naive / global-lock (see `policy.rs`).
+//! * [`HandshakeSize`], [`OptimisticSize`] — the optimized size methods of
+//!   the follow-up synchronization-methods study (Kas-Sharir, Sela &
+//!   Petrank, arXiv 2506.16350): a blocking handshake that makes updates
+//!   nearly free, and an optimistic double-collect with a wait-free
+//!   fallback (see `handshake.rs` / `optimistic.rs`).
 
 mod calculator;
 mod counters_snapshot;
+mod handshake;
+mod optimistic;
 mod policy;
 
 pub use calculator::{SizeCalculator, SizeOpts};
 pub use counters_snapshot::{CountersSnapshot, INVALID_CELL, INVALID_SIZE};
+pub use handshake::HandshakeSize;
+pub use optimistic::{OptimisticSize, OPTIMISTIC_MAX_RETRIES};
 pub use policy::{LinearizableSize, LockSize, NaiveSize, NoSize, SizePolicy};
 
 /// Operation kind: index into the per-thread counter pair (paper line 1:

@@ -18,12 +18,17 @@
 //! * [`LockSize`] — the coarse global-lock alternative: updates take a read
 //!   lock, `size()` takes the write lock. Correct but a scalability
 //!   bottleneck (the `ablation_policies` bench quantifies it).
+//!
+//! The optimized methods of the follow-up synchronization-methods study —
+//! [`super::HandshakeSize`] and [`super::OptimisticSize`] — live in their
+//! own modules (`handshake.rs`, `optimistic.rs`) and implement the same
+//! trait, so every structure gets all six policies generically.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::SeqCst};
 use std::sync::RwLock;
 use std::time::Duration;
 
-use crossbeam_utils::CachePadded;
+use crate::pad::CachePadded;
 
 use super::{OpKind, SizeCalculator, SizeOpts};
 
@@ -47,8 +52,18 @@ pub trait SizePolicy: Send + Sync + Sized + 'static {
 
     fn new(max_threads: usize, opts: SizeOpts) -> Self;
 
-    /// Enter an operation (Fig. 3 wraps every op; only `LockSize` blocks).
+    /// Enter an update operation (Fig. 3 wraps every op; only `LockSize`
+    /// and `HandshakeSize` have non-trivial guards).
     fn enter(&self) -> Self::OpGuard<'_>;
+
+    /// Enter a read-only operation (`contains`). Defaults to [`Self::enter`];
+    /// `HandshakeSize` overrides it to skip the handshake entirely — only
+    /// update drains are load-bearing for size linearizability, since the
+    /// structure is frozen during a size's read window and a reader then
+    /// observes exactly the counted state.
+    fn enter_read(&self) -> Self::OpGuard<'_> {
+        self.enter()
+    }
 
     // ---- insert path (Fig. 3 lines 15–26) ----
 
@@ -139,6 +154,14 @@ impl SizePolicy for NoSize {
 /// The paper's methodology: linearizable wait-free size.
 pub struct LinearizableSize {
     calc: SizeCalculator,
+}
+
+impl LinearizableSize {
+    /// Direct calculator access for sibling policies that embed this one
+    /// (`OptimisticSize` reuses the whole update-side protocol).
+    pub(super) fn calc(&self) -> &SizeCalculator {
+        &self.calc
+    }
 }
 
 impl SizePolicy for LinearizableSize {

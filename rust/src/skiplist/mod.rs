@@ -534,7 +534,7 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
 
     fn contains(&self, k: u64) -> bool {
         let _guard = ebr::pin();
-        let _op = self.policy.enter();
+        let _op = self.policy.enter_read();
 
         // Wait-free traversal (no unlinking).
         let mut pred: *mut SkipNode<P> = std::ptr::null_mut();

@@ -1,0 +1,267 @@
+//! Linearizability tests for the optimized size methods (`HandshakeSize`,
+//! `OptimisticSize`) on all four structures, via the `history` checker:
+//! recorded update histories must be legal (`history::validate`), `size()`
+//! must track the running size exactly where the recording stream is the
+//! linearization order, and the paper's Figure 1/2 anomaly probes must
+//! never fire.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering::SeqCst};
+use std::sync::Arc;
+
+use concurrent_size::bench_util::{fig1_anomalies, fig2_anomalies, make_set, STRUCTURES};
+use concurrent_size::cli::PolicyKind;
+use concurrent_size::history::{self, DeltaLog};
+use concurrent_size::proptest_lite;
+use concurrent_size::rng::Xoshiro256;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::prop_assert;
+
+const NEW_POLICIES: [PolicyKind; 2] = [PolicyKind::Handshake, PolicyKind::Optimistic];
+
+fn combos() -> impl Iterator<Item = (&'static str, PolicyKind)> {
+    STRUCTURES
+        .into_iter()
+        .flat_map(|s| NEW_POLICIES.into_iter().map(move |p| (s, p)))
+}
+
+/// Sequential oracle: with one thread, linearizability degenerates to
+/// sequential correctness — `size()` must equal a `BTreeSet` model at
+/// every checkpoint, on every structure, for both new policies.
+#[test]
+fn sequential_model_all_structures() {
+    for (structure, policy) in combos() {
+        let set = make_set(structure, policy, 512).unwrap();
+        let mut model = std::collections::BTreeSet::new();
+        let mut rng = Xoshiro256::new(0x517E);
+        for step in 0..3000 {
+            let k = rng.gen_range_incl(1, 200);
+            match rng.gen_range(3) {
+                0 => assert_eq!(
+                    set.insert(k),
+                    model.insert(k),
+                    "{structure}/{policy:?} insert {k}"
+                ),
+                1 => assert_eq!(
+                    set.delete(k),
+                    model.remove(&k),
+                    "{structure}/{policy:?} delete {k}"
+                ),
+                _ => assert_eq!(
+                    set.contains(k),
+                    model.contains(&k),
+                    "{structure}/{policy:?} contains {k}"
+                ),
+            }
+            if step % 97 == 0 {
+                assert_eq!(
+                    set.size(),
+                    Some(model.len() as i64),
+                    "{structure}/{policy:?} size at step {step}"
+                );
+            }
+        }
+        assert_eq!(set.size(), Some(model.len() as i64), "{structure}/{policy:?}");
+    }
+}
+
+/// DeltaLog history check under concurrent `size()`: a single mutator
+/// records its committed updates (its commit order IS the linearization
+/// order, since it is the only updater), checkpoints `size()` against the
+/// running sum, and a racing size thread asserts every observation stays
+/// in bounds. Afterwards `history::validate` must call the log legal and
+/// its final size must match the structure.
+#[test]
+fn delta_log_history_legal_under_concurrent_size() {
+    for (structure, policy) in combos() {
+        let set: Arc<dyn ConcurrentSet> = Arc::from(make_set(structure, policy, 256).unwrap());
+        let log = DeltaLog::new();
+        let key_space = 64i64;
+        let stop = Arc::new(AtomicBool::new(false));
+        let min_seen = Arc::new(AtomicI64::new(i64::MAX));
+
+        std::thread::scope(|scope| {
+            // Racing size observers (2 threads: exercises size-size
+            // contention too — the handshake mutex, the optimistic
+            // double-collect).
+            for _ in 0..2 {
+                let set = set.clone();
+                let stop = stop.clone();
+                let min_seen = min_seen.clone();
+                scope.spawn(move || {
+                    while !stop.load(SeqCst) {
+                        let s = set.size().unwrap();
+                        min_seen.fetch_min(s, SeqCst);
+                        assert!(
+                            (0..=key_space).contains(&s),
+                            "size {s} out of [0, {key_space}]"
+                        );
+                        // Throttle: periodic (not saturating) sizes — the
+                        // handshake method's intended regime, and it keeps
+                        // the mutator from starving on single-core boxes.
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                });
+            }
+
+            // The single mutator: every successful update goes to the log.
+            let mut rng = Xoshiro256::new(7 + policy as u64);
+            let mut net = 0i64;
+            for step in 0..4000 {
+                let k = rng.gen_range_incl(1, key_space as u64);
+                if rng.gen_bool(0.5) {
+                    if set.insert(k) {
+                        log.record_insert();
+                        net += 1;
+                    }
+                } else if set.delete(k) {
+                    log.record_delete();
+                    net -= 1;
+                }
+                if step % 128 == 0 {
+                    // Only updater ⇒ the exact running size is forced.
+                    assert_eq!(
+                        set.size(),
+                        Some(net),
+                        "{structure}/{policy:?} checkpoint at step {step}"
+                    );
+                }
+            }
+            stop.store(true, SeqCst);
+        });
+
+        let (running, stats) = history::validate(&log.snapshot());
+        assert!(
+            stats.is_legal(),
+            "{structure}/{policy:?}: illegal history {stats:?}"
+        );
+        assert_eq!(
+            Some(stats.final_size),
+            set.size(),
+            "{structure}/{policy:?}: log final vs size()"
+        );
+        assert_eq!(running.last().copied().unwrap_or(0), stats.final_size);
+        assert!(
+            min_seen.load(SeqCst) >= 0,
+            "{structure}/{policy:?}: concurrent size saw negative"
+        );
+    }
+}
+
+/// Multi-writer churn: sizes stay within the live-key bound throughout and
+/// match a membership census at quiescence.
+#[test]
+fn concurrent_churn_bounds_and_quiescent_exactness() {
+    for (structure, policy) in combos() {
+        let set: Arc<dyn ConcurrentSet> = Arc::from(make_set(structure, policy, 256).unwrap());
+        let key_space = 96u64;
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for t in 0..3u64 {
+                let set = set.clone();
+                let stop = stop.clone();
+                scope.spawn(move || {
+                    let mut rng = Xoshiro256::new(t + 1);
+                    while !stop.load(SeqCst) {
+                        let k = rng.gen_range_incl(1, key_space);
+                        if rng.gen_bool(0.5) {
+                            set.insert(k);
+                        } else {
+                            set.delete(k);
+                        }
+                    }
+                });
+            }
+            for _ in 0..150 {
+                let s = set.size().unwrap();
+                assert!(
+                    (0..=key_space as i64).contains(&s),
+                    "{structure}/{policy:?}: size {s} outside [0, {key_space}]"
+                );
+            }
+            stop.store(true, SeqCst);
+        });
+        let live = (1..=key_space).filter(|&k| set.contains(k)).count();
+        assert_eq!(
+            set.size(),
+            Some(live as i64),
+            "{structure}/{policy:?} quiescent census"
+        );
+    }
+}
+
+/// The paper's anomaly probes must stay silent: no Figure 1
+/// (contains=true then size=0) and no Figure 2 (negative size) schedules
+/// on either new policy, on any structure.
+#[test]
+fn no_fig1_fig2_anomalies_on_new_policies() {
+    for (structure, policy) in combos() {
+        let set = make_set(structure, policy, 1024).unwrap();
+        assert_eq!(
+            fig1_anomalies(set.as_ref(), 150),
+            0,
+            "{structure}/{policy:?} exhibited the Figure 1 anomaly"
+        );
+        assert_eq!(
+            fig2_anomalies(set.as_ref(), 50),
+            0,
+            "{structure}/{policy:?} exhibited the Figure 2 anomaly"
+        );
+    }
+}
+
+/// Property: random single-mutator workloads with interleaved size calls
+/// leave a `history::validate`-legal delta log whose running size tracks
+/// `size()` exactly, for both new policies on all four structures.
+#[test]
+fn prop_running_sizes_legal_on_all_structures() {
+    proptest_lite::run_with(
+        "new-policy histories legal",
+        proptest_lite::Config { cases: 6, seed: 0x6A5D },
+        |rng| {
+            for (structure, policy) in combos() {
+                let set = make_set(structure, policy, 128).unwrap();
+                let log = DeltaLog::new();
+                let key_space = 1 + rng.gen_range(48);
+                let mut net = 0i64;
+                for _ in 0..(200 + rng.gen_range(400)) {
+                    let k = rng.gen_range_incl(1, key_space);
+                    match rng.gen_range(4) {
+                        0 | 1 => {
+                            if set.insert(k) {
+                                log.record_insert();
+                                net += 1;
+                            }
+                        }
+                        2 => {
+                            if set.delete(k) {
+                                log.record_delete();
+                                net -= 1;
+                            }
+                        }
+                        _ => {
+                            let s = set.size().unwrap();
+                            prop_assert!(
+                                s == net,
+                                "{structure}/{policy:?}: size {s} != running {net}"
+                            );
+                        }
+                    }
+                }
+                let (running, stats) = history::validate(&log.snapshot());
+                prop_assert!(
+                    stats.is_legal(),
+                    "{structure}/{policy:?}: illegal history {stats:?}"
+                );
+                prop_assert!(
+                    running.last().copied().unwrap_or(0) == net,
+                    "{structure}/{policy:?}: log lost updates"
+                );
+                prop_assert!(
+                    set.size() == Some(net),
+                    "{structure}/{policy:?}: final size mismatch"
+                );
+            }
+            Ok(())
+        },
+    );
+}
