@@ -1,10 +1,15 @@
-//! A small TCP set server with an exact SIZE endpoint — the "reliable
-//! size in a real system" scenario the paper's introduction motivates
-//! (monitoring, admission control, dynamic-language runtimes).
+//! A small TCP set server with exact and bounded-staleness SIZE
+//! endpoints — the "reliable size in a real system" scenario the paper's
+//! introduction motivates (monitoring, admission control,
+//! dynamic-language runtimes).
 //!
-//! Protocol (one command per line): `PUT k` | `DEL k` | `HAS k` | `SIZE` |
-//! `QUIT`. Responses: `1`/`0` for ops, the exact count for `SIZE`, and
-//! `ERR ...` for malformed input or a store whose policy has no `size()`.
+//! Protocol (one command per line): `PUT k` | `DEL k` | `HAS k` | `SIZE`
+//! | `SIZE~ [ms]` | `QUIT`. Responses: `1`/`0` for ops, the exact count
+//! for `SIZE` (served through the store's combining arbiter, so
+//! concurrent SIZE clients share one collect), a possibly-stale count
+//! for `SIZE~` (wait-free published read, at most `ms` — default 50 —
+//! milliseconds old), and `ERR ...` for malformed input or a store whose
+//! policy has no `size()`.
 //!
 //! Connections are served by a **bounded worker pool** (never more than
 //! `thread_id::capacity()` handler threads): the per-thread size metadata
@@ -23,6 +28,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use concurrent_size::bench_util;
 use concurrent_size::cli::{Args, PolicyKind};
@@ -33,6 +39,9 @@ type Store = Arc<dyn ConcurrentSet>;
 
 /// Accepted connections waiting for a worker (beyond this, accept blocks).
 const BACKLOG: usize = 1024;
+
+/// Default staleness bound for `SIZE~` when the client names none.
+const DEFAULT_RECENT_MS: u64 = 50;
 
 fn handle(store: &dyn ConcurrentSet, stream: TcpStream) {
     let mut out = match stream.try_clone() {
@@ -60,11 +69,24 @@ fn handle(store: &dyn ConcurrentSet, stream: TcpStream) {
                 Err(_) => "ERR bad key".into(),
             },
             // A store under a size-less policy answers gracefully instead
-            // of panicking the handler.
-            (Some("SIZE"), _) => match store.size() {
-                Some(s) => s.to_string(),
+            // of panicking the handler. Exact SIZEs go through the
+            // combining arbiter: concurrent SIZE clients share one
+            // underlying collect instead of serializing N of them.
+            (Some("SIZE"), _) => match store.size_exact() {
+                Some(v) => v.value.to_string(),
                 None => "ERR size unsupported by this policy".into(),
             },
+            // Bounded-staleness size: wait-free while a recent-enough
+            // published result exists.
+            (Some("SIZE~"), ms) => {
+                match ms.map_or(Ok(DEFAULT_RECENT_MS), str::parse::<u64>) {
+                    Ok(ms) => match store.size_recent(Duration::from_millis(ms)) {
+                        Some(v) => v.value.to_string(),
+                        None => "ERR size unsupported by this policy".into(),
+                    },
+                    Err(_) => "ERR bad staleness".into(),
+                }
+            }
             (Some("QUIT"), _) => return,
             _ => "ERR unknown command".into(),
         };
@@ -174,6 +196,19 @@ fn self_test(store: Store, workers: usize) {
                     let size: i64 = reply.parse().expect("numeric SIZE reply");
                     assert!((0..=1000).contains(&size), "impossible size {size}");
                 }
+                // Bounded-staleness reads must stay in the same range,
+                // with or without an explicit bound.
+                for cmd in ["SIZE~", "SIZE~ 5"] {
+                    let reply = send(cmd.into(), &mut line);
+                    if !reply.starts_with("ERR") {
+                        let size: i64 = reply.parse().expect("numeric SIZE~ reply");
+                        assert!((0..=1000).contains(&size), "impossible SIZE~ {size}");
+                    }
+                }
+                assert!(
+                    send("SIZE~ bogus".into(), &mut line).starts_with("ERR"),
+                    "malformed staleness must be rejected"
+                );
                 send("QUIT".into(), &mut line)
             })
         })
@@ -182,12 +217,20 @@ fn self_test(store: Store, workers: usize) {
         c.join().expect("self-test client failed");
     }
 
-    // Burst: more connections than thread_id::capacity(). The old
-    // thread-per-connection server panicked here; the pool must just
-    // queue them.
+    // Burst: more connections than thread_id::capacity(), all open AT
+    // THE SAME TIME. The old thread-per-connection server panicked in
+    // `acquire_slot` as soon as the live-connection count crossed the
+    // slot capacity; the pool serves `workers` of them and queues the
+    // rest. (Opening them one at a time, as this test once did, never
+    // exercised that claim.)
     let burst = thread_id::capacity() + 16;
-    for i in 0..burst as u64 {
-        let stream = TcpStream::connect(addr).expect("burst connect");
+    let streams: Vec<TcpStream> = (0..burst)
+        .map(|_| TcpStream::connect(addr).expect("burst connect"))
+        .collect();
+    // Every connection is now open concurrently; drain them in accept
+    // order (a queued connection is only served once an earlier QUIT
+    // frees its worker).
+    for (i, stream) in streams.into_iter().enumerate() {
         let mut out = stream.try_clone().unwrap();
         let mut reader = BufReader::new(stream);
         let mut line = String::new();
@@ -206,8 +249,10 @@ fn self_test(store: Store, workers: usize) {
         }
     }
     println!(
-        "kv_server self-test OK: survived {burst}-connection burst, final SIZE = {:?}",
-        store.size()
+        "kv_server self-test OK: survived {burst} concurrently-open connections, \
+         final SIZE = {:?}, arbiter stats = {:?}",
+        store.size(),
+        store.size_stats(),
     );
 }
 

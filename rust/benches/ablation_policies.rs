@@ -1,25 +1,111 @@
 //! Ablation B: the size-methods design space on one structure.
 //!
-//! Sweeps all **six** size policies on the hash table under both paper
-//! mixes with one concurrent size thread: the paper's four (baseline,
-//! wait-free linearizable, Java-style naive, global lock — Section 1) plus
-//! the synchronization-methods study's two optimized methods (handshake,
-//! optimistic — arXiv 2506.16350). Reports workload *and* size-call
-//! throughput so both sides of each method's trade-off are visible:
-//! handshake should lead the update-heavy workload column while paying on
-//! the size column; optimistic should match the paper's workload numbers
-//! with cheaper size calls when collects succeed.
+//! Two scenarios, both recorded to a machine-readable report
+//! (`BENCH_ablation.json` by default, `--json PATH` to override) so the
+//! perf trajectory is tracked PR over PR:
+//!
+//! * **periodic-size** — all **six** size policies under both paper mixes
+//!   with one raw-`size()` thread: the paper's four (baseline, wait-free
+//!   linearizable, Java-style naive, global lock — Section 1) plus the
+//!   synchronization-methods study's two optimized methods (handshake,
+//!   optimistic — arXiv 2506.16350). Handshake should lead the
+//!   update-heavy workload column while paying on the size column;
+//!   optimistic should match the paper's workload numbers with cheaper
+//!   size calls when collects succeed.
+//! * **size-heavy** — the availability-gap mix this PR targets: several
+//!   size threads hammering concurrently (`--size-heavy-threads`,
+//!   default 4) under the update-heavy mix, sweeping the size-call axis
+//!   (`raw` = every caller synchronizes itself, `exact` = combining
+//!   arbiter, `recent` = published wait-free reads). The arbiter's
+//!   combining win shows up as `exact`/`recent` size throughput beating
+//!   `raw` on the serialized policies (handshake, lock), with arbiter
+//!   round/adoption counts recorded alongside.
+
+use std::time::Duration;
 
 use concurrent_size::bench_util::{make_set, BenchScale, MIXES, STRUCTURES};
-use concurrent_size::cli::{Args, PolicyKind};
-use concurrent_size::harness::run;
-use concurrent_size::metrics::{fmt_rate, Table};
-use concurrent_size::workload;
+use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
+use concurrent_size::harness::{run, SizeCall};
+use concurrent_size::metrics::{fmt_rate, json_escape, json_f64, Table};
+use concurrent_size::workload::{self, Mix, UPDATE_HEAVY};
+
+/// One measured configuration, ready for the JSON report.
+struct Record {
+    scenario: &'static str,
+    policy: PolicyKind,
+    mix: Mix,
+    size_threads: usize,
+    size_call: &'static str,
+    workload_ops_per_sec: f64,
+    size_ops_per_sec: f64,
+    arbiter_rounds: u64,
+    arbiter_adoptions: u64,
+    arbiter_recent_hits: u64,
+}
+
+impl Record {
+    fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"scenario\":\"{}\",\"policy\":\"{}\",\"mix\":\"{}\",",
+                "\"size_threads\":{},\"size_call\":\"{}\",",
+                "\"workload_ops_per_sec\":{},\"size_ops_per_sec\":{},",
+                "\"arbiter_rounds\":{},\"arbiter_adoptions\":{},",
+                "\"arbiter_recent_hits\":{}}}"
+            ),
+            json_escape(self.scenario),
+            json_escape(self.policy.label()),
+            json_escape(self.mix.label()),
+            self.size_threads,
+            json_escape(self.size_call),
+            json_f64(self.workload_ops_per_sec),
+            json_f64(self.size_ops_per_sec),
+            self.arbiter_rounds,
+            self.arbiter_adoptions,
+            self.arbiter_recent_hits,
+        )
+    }
+}
+
+/// Mean workload/size throughput plus end-of-run arbiter stats over
+/// `runs` fresh prefilled sets (after `warmup` discarded runs).
+fn measure(
+    structure: &str,
+    kind: PolicyKind,
+    scale: &BenchScale,
+    w: usize,
+    s: usize,
+    mix: Mix,
+    size_call: SizeCall,
+) -> (f64, f64, concurrent_size::size::ArbiterStats) {
+    let mut workload_sum = 0.0;
+    let mut size_sum = 0.0;
+    let mut stats = concurrent_size::size::ArbiterStats::default();
+    for i in 0..(scale.repeat.warmup + scale.repeat.runs) {
+        let set = make_set(structure, kind, scale.initial as usize)
+            .unwrap_or_else(|| panic!("unknown structure {structure:?}"));
+        let mut cfg = scale.config(w, s, mix, scale.initial);
+        cfg.size_call = size_call;
+        workload::prefill(set.as_ref(), scale.initial, cfg.key_range, scale.seed);
+        let res = run(set.as_ref(), &cfg);
+        if i >= scale.repeat.warmup {
+            workload_sum += res.workload_throughput();
+            size_sum += res.size_throughput();
+            stats = set.size_stats().unwrap_or_default();
+        }
+        concurrent_size::ebr::collect();
+    }
+    let n = scale.repeat.runs as f64;
+    (workload_sum / n, size_sum / n, stats)
+}
 
 fn main() {
     let args = Args::from_env();
     let scale = BenchScale::from_args(&args);
     let w = args.get_usize("workload-threads", 4);
+    let heavy_size_threads = args.get_usize("size-heavy-threads", 4);
+    let staleness = Duration::from_millis(args.get_u64("staleness-ms", 1));
+    let json_path = args.get("json").unwrap_or("BENCH_ablation.json").to_string();
     let structure = args.get("structure").unwrap_or("hashtable").to_string();
     if !STRUCTURES.contains(&structure.as_str()) {
         eprintln!(
@@ -29,41 +115,43 @@ fn main() {
         std::process::exit(2);
     }
 
+    let mut records: Vec<Record> = Vec::new();
+
     println!("=== Ablation: size methods on {structure} ===");
     println!(
-        "(initial={} keys, {w} workload threads + 1 size thread, {} runs of {}s)",
+        "(initial={} keys, {w} workload threads, {} runs of {}s)",
         scale.initial, scale.repeat.runs, scale.secs
     );
 
+    // -- Scenario 1: both paper mixes, one raw size thread --------------
     for mix in MIXES {
-        println!("\n-- {} workload --", mix.label());
+        println!("\n-- {} workload + 1 size thread --", mix.label());
         let mut table = Table::new(&["policy", "workload ops/s", "size ops/s", "linearizable?"]);
         for kind in PolicyKind::ALL {
-            let with_size_thread = kind.provides_size();
-            let mut workload_sum = 0.0;
-            let mut size_sum = 0.0;
-            for i in 0..(scale.repeat.warmup + scale.repeat.runs) {
-                let set = make_set(&structure, kind, scale.initial as usize)
-                    .unwrap_or_else(|| panic!("unknown structure {structure:?}"));
-                let cfg = scale.config(w, usize::from(with_size_thread), mix, scale.initial);
-                workload::prefill(set.as_ref(), scale.initial, cfg.key_range, scale.seed);
-                let res = run(set.as_ref(), &cfg);
-                if i >= scale.repeat.warmup {
-                    workload_sum += res.workload_throughput();
-                    size_sum += res.size_throughput();
-                }
-                concurrent_size::ebr::collect();
-            }
-            let n = scale.repeat.runs as f64;
+            let s = usize::from(kind.provides_size());
+            let (workload_tput, size_tput, _) =
+                measure(&structure, kind, &scale, w, s, mix, SizeCall::Raw);
+            records.push(Record {
+                scenario: "periodic-size",
+                policy: kind,
+                mix,
+                size_threads: s,
+                size_call: SizeCall::Raw.label(),
+                workload_ops_per_sec: workload_tput,
+                size_ops_per_sec: size_tput,
+                arbiter_rounds: 0,
+                arbiter_adoptions: 0,
+                arbiter_recent_hits: 0,
+            });
             table.row(&[
                 kind.label().to_string(),
-                fmt_rate(workload_sum / n),
-                if with_size_thread {
-                    fmt_rate(size_sum / n)
+                fmt_rate(workload_tput),
+                if s == 1 {
+                    fmt_rate(size_tput)
                 } else {
                     "-".into()
                 },
-                if with_size_thread {
+                if s == 1 {
                     (if kind.linearizable() { "yes" } else { "NO" }).to_string()
                 } else {
                     "n/a".into()
@@ -71,5 +159,85 @@ fn main() {
             ]);
         }
         table.print();
+    }
+
+    // -- Scenario 2: the size-heavy availability-gap mix ----------------
+    println!(
+        "\n-- size-heavy: update-heavy workload + {heavy_size_threads} size threads \
+         (recent staleness {staleness:?}) --"
+    );
+    let mut table = Table::new(&[
+        "policy",
+        "size call",
+        "workload ops/s",
+        "size ops/s",
+        "rounds",
+        "adopted",
+        "recent hits",
+    ]);
+    for kind in PolicyKind::ALL {
+        if !kind.provides_size() {
+            continue;
+        }
+        for call_kind in SizeCallKind::ALL {
+            let call = SizeCall::from_kind(call_kind, staleness);
+            let (workload_tput, size_tput, stats) = measure(
+                &structure,
+                kind,
+                &scale,
+                w,
+                heavy_size_threads,
+                UPDATE_HEAVY,
+                call,
+            );
+            records.push(Record {
+                scenario: "size-heavy",
+                policy: kind,
+                mix: UPDATE_HEAVY,
+                size_threads: heavy_size_threads,
+                size_call: call.label(),
+                workload_ops_per_sec: workload_tput,
+                size_ops_per_sec: size_tput,
+                arbiter_rounds: stats.rounds,
+                arbiter_adoptions: stats.adoptions,
+                arbiter_recent_hits: stats.recent_hits,
+            });
+            table.row(&[
+                kind.label().to_string(),
+                call.label().to_string(),
+                fmt_rate(workload_tput),
+                fmt_rate(size_tput),
+                stats.rounds.to_string(),
+                stats.adoptions.to_string(),
+                stats.recent_hits.to_string(),
+            ]);
+        }
+    }
+    table.print();
+
+    // -- Machine-readable report ----------------------------------------
+    let rows: Vec<String> = records.iter().map(Record::to_json).collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"ablation_policies\",\"structure\":\"{}\",",
+            "\"config\":{{\"initial\":{},\"secs\":{},\"runs\":{},\"warmup\":{},",
+            "\"workload_threads\":{},\"size_heavy_threads\":{},",
+            "\"staleness_ms\":{},\"seed\":{}}},\n",
+            "\"results\":[\n{}\n]}}\n"
+        ),
+        json_escape(&structure),
+        scale.initial,
+        json_f64(scale.secs),
+        scale.repeat.runs,
+        scale.repeat.warmup,
+        w,
+        heavy_size_threads,
+        staleness.as_millis(),
+        scale.seed,
+        rows.join(",\n"),
+    );
+    match std::fs::write(&json_path, &json) {
+        Ok(()) => println!("\nwrote {} records to {json_path}", records.len()),
+        Err(e) => eprintln!("\nfailed to write {json_path}: {e}"),
     }
 }

@@ -25,7 +25,8 @@ fn main() {
 
     println!("=== Figure 12: size scalability ===");
     println!(
-        "(initial={} keys, {w} workload threads, size-thread ladder {:?}; paper: 32 workload, s=1..16)",
+        "(initial={} keys, {w} workload threads, size-thread ladder {:?}; \
+         paper: 32 workload, s=1..16)",
         scale.initial, scale.size_threads
     );
 

@@ -126,12 +126,22 @@ pub fn make_set(
 pub type SetFactory<'a> = &'a (dyn Fn(u64) -> Box<dyn ConcurrentSet> + Sync);
 
 /// Measure mean workload throughput over fresh prefilled sets.
-pub fn measure_workload(factory: SetFactory, scale: &BenchScale, cfg: &RunConfig, initial: u64) -> Stats {
+pub fn measure_workload(
+    factory: SetFactory,
+    scale: &BenchScale,
+    cfg: &RunConfig,
+    initial: u64,
+) -> Stats {
     measure_metric(factory, scale, cfg, initial, |r| r.workload_throughput())
 }
 
 /// Measure mean size-thread throughput.
-pub fn measure_size_tput(factory: SetFactory, scale: &BenchScale, cfg: &RunConfig, initial: u64) -> Stats {
+pub fn measure_size_tput(
+    factory: SetFactory,
+    scale: &BenchScale,
+    cfg: &RunConfig,
+    initial: u64,
+) -> Stats {
     measure_metric(factory, scale, cfg, initial, |r| r.size_throughput())
 }
 
@@ -168,9 +178,29 @@ mod tests {
                 assert!(set.insert(7), "{structure}/{policy:?} insert");
                 assert!(set.contains(7));
                 match policy.provides_size() {
-                    true => assert_eq!(set.size(), Some(1), "{structure}/{policy:?}"),
-                    false => assert_eq!(set.size(), None, "{structure}/{policy:?}"),
+                    true => {
+                        assert_eq!(set.size(), Some(1), "{structure}/{policy:?}");
+                        assert_eq!(
+                            set.size_exact().map(|v| v.value),
+                            Some(1),
+                            "{structure}/{policy:?} size_exact"
+                        );
+                        assert_eq!(
+                            set.size_recent(std::time::Duration::from_secs(1))
+                                .map(|v| v.value),
+                            Some(1),
+                            "{structure}/{policy:?} size_recent"
+                        );
+                    }
+                    false => {
+                        assert_eq!(set.size(), None, "{structure}/{policy:?}");
+                        assert_eq!(set.size_exact(), None, "{structure}/{policy:?}");
+                    }
                 }
+                assert!(
+                    set.size_stats().is_some(),
+                    "{structure}/{policy:?} must expose arbiter stats"
+                );
             }
         }
         assert!(make_set("btree", PolicyKind::Baseline, 0).is_none());

@@ -22,7 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 
 use crate::ebr;
 use crate::set_api::ConcurrentSet;
-use crate::size::{SizeOpts, SizePolicy};
+use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
 use crate::thread_id;
 
 /// Sentinel keys (Ellen et al.'s ∞1 < ∞2). Application keys must be
@@ -122,6 +122,7 @@ pub struct BstSet<P: SizePolicy> {
     root: *mut BstNode<P>,
     policy: P,
     graveyard: Graveyard,
+    arbiter: SizeArbiter,
 }
 
 unsafe impl<P: SizePolicy> Send for BstSet<P> {}
@@ -143,11 +144,17 @@ impl<P: SizePolicy> BstSet<P> {
             root: BstNode::<P>::internal(INF2, l1 as u64, l2 as u64),
             policy,
             graveyard: Graveyard::new(),
+            arbiter: SizeArbiter::new(),
         }
     }
 
     pub fn policy(&self) -> &P {
         &self.policy
+    }
+
+    /// The combining size arbiter behind `size_exact` / `size_recent`.
+    pub fn arbiter(&self) -> &SizeArbiter {
+        &self.arbiter
     }
 
     /// Ellen et al. Search: returns gparent/parent/leaf and the update
@@ -540,6 +547,18 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
             "BST<{}>",
             std::any::type_name::<P>().rsplit("::").next().unwrap()
         )
+    }
+
+    fn size_exact(&self) -> Option<crate::size::SizeView> {
+        self.arbiter.exact_for(&self.policy)
+    }
+
+    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
+        self.arbiter.recent_for(&self.policy, max_staleness)
+    }
+
+    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
+        Some(self.arbiter.stats())
     }
 }
 

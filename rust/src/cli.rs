@@ -81,6 +81,40 @@ impl PolicyKind {
     }
 }
 
+/// The three ways a size thread (or server endpoint) can read the size,
+/// selectable via `--size-call` on `csize bench` and the ablation bench:
+/// the policy's raw `size()`, the arbiter's combining `size_exact()`, or
+/// the published bounded-staleness `size_recent()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeCallKind {
+    Raw,
+    Exact,
+    Recent,
+}
+
+impl SizeCallKind {
+    /// Every call kind, in ablation-report order.
+    pub const ALL: [SizeCallKind; 3] =
+        [SizeCallKind::Raw, SizeCallKind::Exact, SizeCallKind::Recent];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "raw" => SizeCallKind::Raw,
+            "exact" => SizeCallKind::Exact,
+            "recent" => SizeCallKind::Recent,
+            _ => return None,
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SizeCallKind::Raw => "raw",
+            SizeCallKind::Exact => "exact",
+            SizeCallKind::Recent => "recent",
+        }
+    }
+}
+
 /// Parsed command line: one optional subcommand plus `--key [value]` pairs.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -216,6 +250,14 @@ mod tests {
         assert_eq!(PolicyKind::parse("size"), Some(PolicyKind::Linearizable));
         assert_eq!(PolicyKind::parse("nosize"), Some(PolicyKind::Baseline));
         assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn size_call_kind_parses_all_spellings() {
+        for kind in SizeCallKind::ALL {
+            assert_eq!(SizeCallKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(SizeCallKind::parse("bogus"), None);
     }
 
     #[test]

@@ -9,9 +9,48 @@
 use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 use std::time::{Duration, Instant};
 
+use crate::cli::SizeCallKind;
 use crate::metrics::Stats;
 use crate::set_api::ConcurrentSet;
 use crate::workload::{self, Mix, OpStream, OpType};
+
+/// How the size threads call `size` (the arbiter ablation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeCall {
+    /// The policy's own `size()`: every caller synchronizes itself.
+    Raw,
+    /// Combining `size_exact()` through the structure's arbiter.
+    Exact,
+    /// Published wait-free `size_recent` under the given staleness bound.
+    Recent(Duration),
+}
+
+impl SizeCall {
+    /// Build from the CLI spelling plus the staleness `Recent` should use
+    /// (the single conversion point for every CLI surface).
+    pub fn from_kind(kind: SizeCallKind, staleness: Duration) -> Self {
+        match kind {
+            SizeCallKind::Raw => SizeCall::Raw,
+            SizeCallKind::Exact => SizeCall::Exact,
+            SizeCallKind::Recent => SizeCall::Recent(staleness),
+        }
+    }
+
+    /// The CLI-facing kind of this call (drops the staleness payload).
+    pub fn kind(self) -> SizeCallKind {
+        match self {
+            SizeCall::Raw => SizeCallKind::Raw,
+            SizeCall::Exact => SizeCallKind::Exact,
+            SizeCall::Recent(_) => SizeCallKind::Recent,
+        }
+    }
+
+    /// Report label (delegates to [`SizeCallKind::label`], the single
+    /// source of truth for the spellings).
+    pub fn label(self) -> &'static str {
+        self.kind().label()
+    }
+}
 
 /// Configuration of one timed run.
 #[derive(Clone, Debug)]
@@ -24,6 +63,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// Fig. 13 mode: run 100-op uniform-type batches and time each type.
     pub per_type_timing: bool,
+    /// Which size path the size threads drive.
+    pub size_call: SizeCall,
 }
 
 impl RunConfig {
@@ -36,6 +77,7 @@ impl RunConfig {
             key_range,
             seed: 0xBEEF,
             per_type_timing: false,
+            size_call: SizeCall::Raw,
         }
     }
 }
@@ -119,10 +161,16 @@ pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
             let stop = &stop;
             let set: &dyn ConcurrentSet = set;
             let _ = t;
+            let size_call = cfg.size_call;
             workers.push(scope.spawn(move || {
                 let mut sizes = 0u64;
                 while !stop.load(SeqCst) {
-                    let s = set.size().expect("size thread on a size-less structure");
+                    let s = match size_call {
+                        SizeCall::Raw => set.size(),
+                        SizeCall::Exact => set.size_exact().map(|v| v.value),
+                        SizeCall::Recent(bound) => set.size_recent(bound).map(|v| v.value),
+                    }
+                    .expect("size thread on a size-less structure");
                     debug_assert!(s >= 0, "linearizable size went negative");
                     sizes += 1;
                 }
@@ -245,6 +293,28 @@ mod tests {
             let res = run(set.as_ref(), &quick_cfg(2, 1));
             assert!(res.workload_ops > 0, "{policy:?} starved the workload");
             assert!(res.size_ops > 0, "{policy:?} starved size calls");
+        }
+    }
+
+    #[test]
+    fn run_drives_arbitrated_size_calls() {
+        // Size threads must work through every SizeCall path, including
+        // the wait-free recent reads with a tight staleness bound.
+        for call in [
+            SizeCall::Exact,
+            SizeCall::Recent(Duration::from_micros(500)),
+        ] {
+            let set =
+                crate::bench_util::make_set("hashtable", crate::cli::PolicyKind::Handshake, 512)
+                    .unwrap();
+            workload::prefill(set.as_ref(), 512, key_range(512, UPDATE_HEAVY), 3);
+            let mut cfg = quick_cfg(2, 2);
+            cfg.size_call = call;
+            let res = run(set.as_ref(), &cfg);
+            assert!(res.workload_ops > 0, "{call:?} starved the workload");
+            assert!(res.size_ops > 0, "{call:?} starved size calls");
+            let stats = set.size_stats().expect("arbitrated structure");
+            assert!(stats.rounds > 0, "{call:?} never collected");
         }
     }
 

@@ -10,7 +10,7 @@ use std::sync::atomic::AtomicU64;
 
 use crate::list;
 use crate::set_api::ConcurrentSet;
-use crate::size::{SizeOpts, SizePolicy};
+use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
 
 /// Fibonacci multiplicative hash: spreads sequential keys across buckets.
 #[inline]
@@ -22,6 +22,7 @@ pub struct HashTableSet<P: SizePolicy> {
     buckets: Box<[AtomicU64]>,
     mask: u64,
     policy: P,
+    arbiter: SizeArbiter,
 }
 
 unsafe impl<P: SizePolicy> Send for HashTableSet<P> {}
@@ -44,6 +45,7 @@ impl<P: SizePolicy> HashTableSet<P> {
             buckets: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
             mask: capacity as u64 - 1,
             policy,
+            arbiter: SizeArbiter::new(),
         }
     }
 
@@ -54,6 +56,11 @@ impl<P: SizePolicy> HashTableSet<P> {
 
     pub fn policy(&self) -> &P {
         &self.policy
+    }
+
+    /// The combining size arbiter behind `size_exact` / `size_recent`.
+    pub fn arbiter(&self) -> &SizeArbiter {
+        &self.arbiter
     }
 
     pub fn capacity(&self) -> usize {
@@ -87,6 +94,18 @@ impl<P: SizePolicy> ConcurrentSet for HashTableSet<P> {
             "HashTable<{}>",
             std::any::type_name::<P>().rsplit("::").next().unwrap()
         )
+    }
+
+    fn size_exact(&self) -> Option<crate::size::SizeView> {
+        self.arbiter.exact_for(&self.policy)
+    }
+
+    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
+        self.arbiter.recent_for(&self.policy, max_staleness)
+    }
+
+    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
+        Some(self.arbiter.stats())
     }
 }
 

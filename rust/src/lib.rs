@@ -31,6 +31,17 @@
 //!
 //!   `cargo bench --bench ablation_policies` sweeps all six on one
 //!   structure; every policy plugs into all four structures generically.
+//!
+//!   On top of the policies sits the **size arbiter**
+//!   ([`size::SizeArbiter`]): every structure embeds one, and the
+//!   [`set_api::ConcurrentSet`] freshness API routes through it —
+//!   `size_exact()` is linearizable with *combining* (concurrent callers
+//!   share one underlying collect: one handshake serves a whole batch),
+//!   and `size_recent(max_staleness)` is a wait-free published read under
+//!   a bounded-staleness contract ([`size::SizeView`] carries the value,
+//!   an age upper bound, and provenance). The size-heavy scenario of
+//!   `ablation_policies` quantifies both against raw per-caller `size()`
+//!   and records the sweep to `BENCH_ablation.json`.
 //! * [`list`], [`hashtable`], [`skiplist`], [`bst`] — the evaluated data
 //!   structures, each generic over the size policy (paper Section 9).
 //! * [`snapshot`], [`vcas`] — the snapshot-based competitors

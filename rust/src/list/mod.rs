@@ -23,7 +23,7 @@ use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 
 use crate::ebr;
 use crate::set_api::{ConcurrentSet, MAX_KEY};
-use crate::size::{SizeOpts, SizePolicy};
+use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
 use crate::thread_id;
 
 const MARK: u64 = 1;
@@ -332,6 +332,7 @@ pub(crate) unsafe fn drop_chain<P: SizePolicy>(head: &AtomicU64) {
 pub struct LinkedListSet<P: SizePolicy> {
     head: AtomicU64,
     policy: P,
+    arbiter: SizeArbiter,
 }
 
 unsafe impl<P: SizePolicy> Send for LinkedListSet<P> {}
@@ -343,10 +344,7 @@ impl<P: SizePolicy> LinkedListSet<P> {
     }
 
     pub fn with_opts(max_threads: usize, opts: SizeOpts) -> Self {
-        Self {
-            head: AtomicU64::new(0),
-            policy: P::new(max_threads, opts),
-        }
+        Self::with_policy(P::new(max_threads, opts))
     }
 
     /// Build around an externally-configured policy (demos use this to set
@@ -355,11 +353,17 @@ impl<P: SizePolicy> LinkedListSet<P> {
         Self {
             head: AtomicU64::new(0),
             policy,
+            arbiter: SizeArbiter::new(),
         }
     }
 
     pub fn policy(&self) -> &P {
         &self.policy
+    }
+
+    /// The combining size arbiter behind `size_exact` / `size_recent`.
+    pub fn arbiter(&self) -> &SizeArbiter {
+        &self.arbiter
     }
 
     /// Quiescent full count (tests).
@@ -382,7 +386,22 @@ impl<P: SizePolicy> ConcurrentSet for LinkedListSet<P> {
         self.policy.size()
     }
     fn name(&self) -> String {
-        format!("LinkedList<{}>", std::any::type_name::<P>().rsplit("::").next().unwrap())
+        format!(
+            "LinkedList<{}>",
+            std::any::type_name::<P>().rsplit("::").next().unwrap()
+        )
+    }
+
+    fn size_exact(&self) -> Option<crate::size::SizeView> {
+        self.arbiter.exact_for(&self.policy)
+    }
+
+    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
+        self.arbiter.recent_for(&self.policy, max_staleness)
+    }
+
+    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
+        Some(self.arbiter.stats())
     }
 }
 

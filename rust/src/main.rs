@@ -3,7 +3,8 @@
 //! Subcommands:
 //! * `demo`     — quick functional tour of every structure/policy combo.
 //! * `bench`    — one ad-hoc throughput run (`--structure`, `--policy`,
-//!   `--threads`, `--size-threads`, `--secs`, `--initial`, `--mix`).
+//!   `--threads`, `--size-threads`, `--secs`, `--initial`, `--mix`,
+//!   `--size-call raw|exact|recent`, `--staleness-ms`).
 //! * `analyze`  — run a workload with epoch sampling and push the samples
 //!   through the AOT-compiled Pallas pipeline (PJRT).
 //! * `verify`   — anomaly hunt: show the naive policy violating
@@ -16,8 +17,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use concurrent_size::bench_util;
-use concurrent_size::cli::{Args, PolicyKind};
-use concurrent_size::harness::{run, RunConfig};
+use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
+use concurrent_size::harness::{run, RunConfig, SizeCall};
 use concurrent_size::metrics::fmt_rate;
 use concurrent_size::set_api::ConcurrentSet;
 use concurrent_size::size::{LinearizableSize, NaiveSize, SizePolicy};
@@ -98,8 +99,12 @@ fn cmd_demo() {
         for k in 1..=50u64 {
             set.delete(k * 2);
         }
+        let exact = set.size_exact().map(|v| v.value);
+        let recent = set
+            .size_recent(Duration::from_millis(50))
+            .map(|v| (v.value, v.age));
         println!(
-            "{:<12} size={:<10} linearizable={}",
+            "{:<12} size={:<10} exact={exact:<8?} recent={recent:?} linearizable={}",
             kind.label(),
             format!("{:?}", set.size()),
             if kind.provides_size() {
@@ -119,6 +124,15 @@ fn cmd_bench(args: &Args) {
     let w = args.get_usize("threads", 4);
     let s = args.get_usize("size-threads", 1);
     let secs = args.get_f64("secs", 2.0);
+    let call_spelling = args.get("size-call").unwrap_or("raw");
+    let Some(call_kind) = SizeCallKind::parse(call_spelling) else {
+        eprintln!("unknown --size-call {call_spelling:?} (use raw|exact|recent)");
+        std::process::exit(2);
+    };
+    let size_call = SizeCall::from_kind(
+        call_kind,
+        Duration::from_millis(args.get_u64("staleness-ms", 1)),
+    );
 
     let set = make_set(&structure, &policy, initial);
     let range = key_range(initial as u64, mix);
@@ -132,15 +146,25 @@ fn cmd_bench(args: &Args) {
     let size_threads = if set.size().is_some() { s } else { 0 };
     let mut cfg = RunConfig::new(w, size_threads, mix, range);
     cfg.duration = Duration::from_secs_f64(secs);
+    cfg.size_call = size_call;
     let res = run(set.as_ref(), &cfg);
     println!(
-        "{:<24} mix={} w={w} s={} -> workload {} ops/s, size {} ops/s",
+        "{:<24} mix={} w={w} s={} call={} -> workload {} ops/s, size {} ops/s",
         set.name(),
         mix.label(),
         cfg.size_threads,
+        size_call.label(),
         fmt_rate(res.workload_throughput()),
         fmt_rate(res.size_throughput()),
     );
+    if let Some(stats) = set.size_stats() {
+        if stats.rounds + stats.recent_hits > 0 {
+            println!(
+                "arbiter: {} rounds, {} adopted, {} recent hits, {} refreshes",
+                stats.rounds, stats.adoptions, stats.recent_hits, stats.recent_refreshes
+            );
+        }
+    }
 }
 
 fn cmd_analyze(args: &Args) {

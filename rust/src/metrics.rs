@@ -70,6 +70,34 @@ pub fn fmt_rate(ops_per_sec: f64) -> String {
     }
 }
 
+/// Escape a string for inclusion in a JSON document (no serde offline;
+/// the machine-readable bench reports hand-assemble their JSON).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a float as a JSON value (`null` for non-finite numbers, which
+/// raw JSON cannot represent).
+pub fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".into()
+    }
+}
+
 /// Fixed-width table printer used by the figure benches.
 pub struct Table {
     headers: Vec<String>,
@@ -159,6 +187,21 @@ mod tests {
         assert_eq!(fmt_rate(12_345_678.0), "12.35M");
         assert_eq!(fmt_rate(4_200.0), "4.2K");
         assert_eq!(fmt_rate(9.0), "9.0");
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("x\ny"), "x\\ny");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn json_f64_rejects_non_finite() {
+        assert_eq!(json_f64(1.5), "1.500");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
     }
 
     #[test]

@@ -29,13 +29,18 @@ impl Default for Config {
 
 /// Run `prop` over `config.cases` random cases; panics with the case seed on
 /// the first failure (re-run with `CSIZE_PROP_SEED=<seed> CSIZE_PROP_CASES=1`).
-pub fn run_with(name: &str, config: Config, mut prop: impl FnMut(&mut Xoshiro256) -> Result<(), String>) {
+pub fn run_with(
+    name: &str,
+    config: Config,
+    mut prop: impl FnMut(&mut Xoshiro256) -> Result<(), String>,
+) {
     for case in 0..config.cases {
         let case_seed = config.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Xoshiro256::new(case_seed);
         if let Err(msg) = prop(&mut rng) {
             panic!(
-                "property '{name}' failed on case {case}/{} (CSIZE_PROP_SEED={case_seed} to reproduce): {msg}",
+                "property '{name}' failed on case {case}/{} \
+                 (CSIZE_PROP_SEED={case_seed} to reproduce): {msg}",
                 config.cases
             );
         }

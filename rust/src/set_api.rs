@@ -6,6 +6,18 @@
 //! skip-list implementation doubles as a map via [`crate::skiplist`]'s
 //! value variant — the paper makes the identical simplification ("we refer
 //! only to sets for brevity, but all our claims apply to dictionaries").
+//!
+//! Beyond the raw `size()` (each caller pays its policy's own
+//! synchronization), the trait exposes the arbiter-backed freshness API:
+//! [`ConcurrentSet::size_exact`] (linearizable, concurrent callers share
+//! one collect) and [`ConcurrentSet::size_recent`] (wait-free published
+//! read under a bounded-staleness contract). The four transformable
+//! structures override these with their embedded [`crate::size::SizeArbiter`];
+//! the defaults keep external/competitor structures source-compatible.
+
+use std::time::Duration;
+
+use crate::size::{ArbiterStats, SizeView};
 
 /// Object-safe set interface used by the workload harness, so one driver
 /// benches every structure/policy combination.
@@ -17,10 +29,36 @@ pub trait ConcurrentSet: Send + Sync {
     fn delete(&self, k: u64) -> bool;
     /// Membership test.
     fn contains(&self, k: u64) -> bool;
-    /// The structure's `size()`, if its policy provides one.
+    /// The structure's `size()`, if its policy provides one. Every caller
+    /// pays the policy's own synchronization (see [`Self::size_exact`]
+    /// for the combining path).
     fn size(&self) -> Option<i64>;
     /// Structure name for reports (e.g. `SizeSkipList`).
     fn name(&self) -> String;
+
+    /// Linearizable size through the structure's combining arbiter:
+    /// concurrent callers register in one queue and a single underlying
+    /// collect (handshake, double-collect, snapshot, ...) serves them
+    /// all at one shared linearization point. Default: the raw policy
+    /// size, taken directly.
+    fn size_exact(&self) -> Option<SizeView> {
+        self.size().map(SizeView::fresh)
+    }
+
+    /// Bounded-staleness size: a wait-free published read when a result
+    /// at most `max_staleness` old exists, otherwise a fresh combining
+    /// collect. The returned [`SizeView::age`] upper-bounds the true
+    /// staleness. Default: falls through to [`Self::size_exact`].
+    fn size_recent(&self, max_staleness: Duration) -> Option<SizeView> {
+        let _ = max_staleness;
+        self.size_exact()
+    }
+
+    /// Diagnostics from the structure's size arbiter (`None` when the
+    /// structure has none).
+    fn size_stats(&self) -> Option<ArbiterStats> {
+        None
+    }
 }
 
 /// Largest insertable key (`u64::MAX` is the tail sentinel).

@@ -1,0 +1,426 @@
+//! The size arbiter: a combining front-end over any [`SizePolicy`]'s
+//! `size()`, plus a published last-result channel for wait-free
+//! bounded-staleness reads.
+//!
+//! ## Why
+//!
+//! Every policy in this crate makes each `size()` caller pay for its own
+//! synchronization: the paper's wait-free method re-runs (or joins) a
+//! counter collect per call, `OptimisticSize` re-runs its double-collect,
+//! and `HandshakeSize` callers *serialize behind a mutex and freeze the
+//! structure once each* — so a size-hammering workload (the `kv_server`
+//! `SIZE` endpoint under load) collapses exactly where it should scale.
+//! The synchronization-methods study (arXiv 2506.16350) names the fix:
+//! batch concurrent size calls behind one collect, and publish the result
+//! so readers that tolerate bounded staleness never synchronize at all —
+//! the announce-and-share structure of linearizable-iterator frameworks
+//! (Agarwal et al., arXiv 1705.08885) applied to a single scalar.
+//!
+//! ## Protocol
+//!
+//! `size_exact(collect)` is a *combining* linearizable size:
+//!
+//! 1. A caller registers by reading `round_started` (its **ticket**).
+//! 2. It tries to become the **combiner** (`try_lock`; waiters never
+//!    block on the lock). The combiner optionally dwells for
+//!    [`SizeArbiter::set_combine_window`] so concurrent callers can pile
+//!    on, bumps `round_started`, runs the underlying collect **once**,
+//!    swaps the result into `published` (EBR-reclaimed), and bumps
+//!    `round_done`.
+//! 3. A caller that observes `round_done > ticket` *adopts* the
+//!    published result instead of collecting. Correctness: the round
+//!    that raised `round_done` above the ticket incremented
+//!    `round_started` after the ticket was read (the counter is
+//!    monotone), so its collect — and hence its linearization point —
+//!    lies inside the adopter's call window. Adopted reads are
+//!    linearizable, and N concurrent callers cost one collect.
+//!
+//! `size_recent(max_staleness, collect)` reads `published` under an EBR
+//! pin — one wait-free load. Results are stamped at **round start**
+//! (before the collect), so `age` over-approximates true staleness and
+//! the bound is conservative. Only when the published result is older
+//! than `max_staleness` (or absent) does the call fall into the
+//! `size_exact` path.
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
+use std::sync::{Mutex, MutexGuard, TryLockError};
+use std::time::{Duration, Instant};
+
+use crate::ebr;
+
+use super::policy::SizePolicy;
+use super::spin_backoff;
+
+/// One size reading plus its freshness provenance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SizeView {
+    /// The size value.
+    pub value: i64,
+    /// Upper bound on the reading's staleness: zero for a linearizable
+    /// read (the linearization point lies inside the call), positive for
+    /// a published `size_recent` hit (stamped at the producing round's
+    /// start, so true staleness is never larger).
+    pub age: Duration,
+    /// Arbiter round that produced the value (0 = taken outside any
+    /// arbiter, e.g. through the default [`ConcurrentSet`] path).
+    ///
+    /// [`ConcurrentSet`]: crate::set_api::ConcurrentSet
+    pub round: u64,
+    /// Whether another caller's collect served this reading.
+    pub shared: bool,
+}
+
+impl SizeView {
+    /// A reading taken directly by the caller: fresh by construction.
+    pub fn fresh(value: i64) -> Self {
+        Self {
+            value,
+            age: Duration::ZERO,
+            round: 0,
+            shared: false,
+        }
+    }
+}
+
+/// Arbiter diagnostics (the ablation bench records these).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArbiterStats {
+    /// Combine rounds performed — each is exactly one underlying collect
+    /// (one handshake, one double-collect, ...).
+    pub rounds: u64,
+    /// `size_exact` calls served by another caller's round.
+    pub adoptions: u64,
+    /// `size_recent` calls satisfied wait-free from the published result.
+    pub recent_hits: u64,
+    /// `size_recent` calls that were too stale and ran/joined a round.
+    pub recent_refreshes: u64,
+}
+
+/// The published result of one combine round.
+struct Published {
+    value: i64,
+    round: u64,
+    /// Nanoseconds since the arbiter's origin, stamped at round *start*.
+    at_nanos: u64,
+}
+
+pub struct SizeArbiter {
+    origin: Instant,
+    /// Rounds started: bumped by each combiner *before* it collects.
+    /// A caller's ticket is a load of this counter; monotonicity is what
+    /// makes adopted results linearizable (see module docs).
+    round_started: AtomicU64,
+    /// Rounds completed; trails `round_started` by at most one (the lock
+    /// serializes combiners).
+    round_done: AtomicU64,
+    /// Latest result (null until the first round); EBR-reclaimed.
+    published: AtomicPtr<Published>,
+    /// Combiner election. Waiters only ever `try_lock`, so nobody blocks
+    /// on it — they spin on `round_done` and adopt.
+    combine_lock: Mutex<()>,
+    /// Combiner dwell before collecting, in nanos (0 = collect at once).
+    combine_window: AtomicU64,
+    adoptions: AtomicU64,
+    recent_hits: AtomicU64,
+    recent_refreshes: AtomicU64,
+}
+
+impl Default for SizeArbiter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SizeArbiter {
+    pub fn new() -> Self {
+        Self {
+            origin: Instant::now(),
+            round_started: AtomicU64::new(0),
+            round_done: AtomicU64::new(0),
+            published: AtomicPtr::new(std::ptr::null_mut()),
+            combine_lock: Mutex::new(()),
+            combine_window: AtomicU64::new(0),
+            adoptions: AtomicU64::new(0),
+            recent_hits: AtomicU64::new(0),
+            recent_refreshes: AtomicU64::new(0),
+        }
+    }
+
+    /// Batched/amortized collects: make each combiner dwell for `window`
+    /// before collecting so concurrent callers can register and share the
+    /// round. Off by default (latency-neutral); size-hammering servers
+    /// trade a bounded latency bump for a large drop in collect count.
+    pub fn set_combine_window(&self, window: Duration) {
+        self.combine_window.store(window.as_nanos() as u64, SeqCst);
+    }
+
+    pub fn stats(&self) -> ArbiterStats {
+        ArbiterStats {
+            rounds: self.round_done.load(SeqCst),
+            adoptions: self.adoptions.load(SeqCst),
+            recent_hits: self.recent_hits.load(SeqCst),
+            recent_refreshes: self.recent_refreshes.load(SeqCst),
+        }
+    }
+
+    /// Completed combine rounds so far.
+    pub fn rounds(&self) -> u64 {
+        self.round_done.load(SeqCst)
+    }
+
+    /// Poison-tolerant `try_lock` (a panicking combiner must not wedge
+    /// every future size call into the spin loop).
+    fn try_combine_lock(&self) -> Option<MutexGuard<'_, ()>> {
+        match self.combine_lock.try_lock() {
+            Ok(g) => Some(g),
+            Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
+            Err(TryLockError::WouldBlock) => None,
+        }
+    }
+
+    /// Linearizable size with combining: at most one underlying `collect`
+    /// runs per round, no matter how many callers arrive concurrently.
+    /// The returned view has `age == 0`; `shared` says whether this call
+    /// adopted another caller's round.
+    ///
+    /// Contract: do **not** call while holding a policy op guard. The
+    /// combiner's collect may need every in-flight operation to drain
+    /// (handshake) or take a write lock (lock policy); a guard-holding
+    /// waiter would then wedge the round. Structure operations never call
+    /// size internally, so this only concerns direct policy-API users.
+    pub fn size_exact(&self, collect: impl FnOnce() -> i64) -> SizeView {
+        let ticket = self.round_started.load(SeqCst);
+        let mut collect = Some(collect);
+        let mut spins = 0u32;
+        loop {
+            if self.round_done.load(SeqCst) > ticket {
+                // A round that started after our registration completed:
+                // its published value is linearizable within our window
+                // (any even-newer value in `published` started later
+                // still — also fine).
+                let _pin = ebr::pin();
+                let p = unsafe { self.published.load(SeqCst).as_ref() }
+                    .expect("round_done > 0 implies a published result");
+                self.adoptions.fetch_add(1, Relaxed);
+                return SizeView {
+                    value: p.value,
+                    age: Duration::ZERO,
+                    round: p.round,
+                    shared: true,
+                };
+            }
+            if let Some(_lock) = self.try_combine_lock() {
+                if self.round_done.load(SeqCst) > ticket {
+                    // Satisfied while we raced for the lock; adopt above.
+                    continue;
+                }
+                // We are the combiner: dwell first so late arrivals can
+                // join this round, then stamp. The stamp precedes the
+                // collect (whose linearization point dates the value), so
+                // `age` stays a conservative staleness bound — without
+                // baking the dwell into every published result's age.
+                let window = self.combine_window.load(Relaxed);
+                if window > 0 {
+                    std::thread::sleep(Duration::from_nanos(window));
+                }
+                let at_nanos = self.origin.elapsed().as_nanos() as u64;
+                // The ticketing point comes AFTER the dwell: callers that
+                // arrived during it still hold tickets below `started`,
+                // so this round satisfies them — that is what lets the
+                // dwell recruit a batch. It must stay BEFORE the collect:
+                // adopters rely on the collect (and its linearization
+                // point) starting after their ticket load.
+                let started = self.round_started.fetch_add(1, SeqCst) + 1;
+                let value = (collect.take().expect("combiner runs once"))();
+                let fresh = Box::into_raw(Box::new(Published {
+                    value,
+                    round: started,
+                    at_nanos,
+                }));
+                let old = self.published.swap(fresh, SeqCst);
+                self.round_done.store(started, SeqCst);
+                if !old.is_null() {
+                    // Unreachable through `published` after the swap;
+                    // pinned readers are protected by EBR's grace period.
+                    let _pin = ebr::pin();
+                    unsafe { ebr::retire(old) };
+                }
+                return SizeView {
+                    value,
+                    age: Duration::ZERO,
+                    round: started,
+                    shared: false,
+                };
+            }
+            // A combiner is collecting on our behalf; wait for its round.
+            spin_backoff(spins);
+            spins = spins.saturating_add(1);
+        }
+    }
+
+    /// Bounded-staleness size: one wait-free EBR-pinned load when the
+    /// published result is at most `max_staleness` old, otherwise a fresh
+    /// (combining) collect. The returned `age` upper-bounds the true
+    /// staleness and never exceeds `max_staleness`. A zero bound always
+    /// refreshes (a same-clock-tick publish would otherwise be
+    /// indistinguishable from an exact read on coarse monotonic clocks).
+    pub fn size_recent(&self, max_staleness: Duration, collect: impl FnOnce() -> i64) -> SizeView {
+        if !max_staleness.is_zero() {
+            let _pin = ebr::pin();
+            if let Some(p) = unsafe { self.published.load(SeqCst).as_ref() } {
+                let now = self.origin.elapsed().as_nanos() as u64;
+                let age = Duration::from_nanos(now.saturating_sub(p.at_nanos));
+                if age <= max_staleness {
+                    self.recent_hits.fetch_add(1, Relaxed);
+                    return SizeView {
+                        value: p.value,
+                        age,
+                        round: p.round,
+                        shared: true,
+                    };
+                }
+            }
+        }
+        self.recent_refreshes.fetch_add(1, Relaxed);
+        self.size_exact(collect)
+    }
+
+    /// [`Self::size_exact`] wired to a policy: `None` for size-less
+    /// policies, so every structure exposes the API identically.
+    pub fn exact_for<P: SizePolicy>(&self, policy: &P) -> Option<SizeView> {
+        if !P::HAS_SIZE {
+            return None;
+        }
+        Some(self.size_exact(|| policy.size().expect("HAS_SIZE policy returned no size")))
+    }
+
+    /// [`Self::size_recent`] wired to a policy (see [`Self::exact_for`]).
+    pub fn recent_for<P: SizePolicy>(
+        &self,
+        policy: &P,
+        max_staleness: Duration,
+    ) -> Option<SizeView> {
+        if !P::HAS_SIZE {
+            return None;
+        }
+        Some(self.size_recent(max_staleness, || {
+            policy.size().expect("HAS_SIZE policy returned no size")
+        }))
+    }
+}
+
+impl Drop for SizeArbiter {
+    fn drop(&mut self) {
+        let p = *self.published.get_mut();
+        if !p.is_null() {
+            drop(unsafe { Box::from_raw(p) });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_exact_rounds_and_values() {
+        let a = SizeArbiter::new();
+        let v = a.size_exact(|| 7);
+        assert_eq!(v.value, 7);
+        assert_eq!(v.round, 1);
+        assert!(!v.shared);
+        assert_eq!(v.age, Duration::ZERO);
+        let v2 = a.size_exact(|| 9);
+        assert_eq!((v2.value, v2.round), (9, 2));
+        assert_eq!(a.stats().rounds, 2);
+        assert_eq!(a.stats().adoptions, 0);
+    }
+
+    #[test]
+    fn recent_hits_published_without_new_round() {
+        let a = SizeArbiter::new();
+        a.size_exact(|| 42);
+        for _ in 0..50 {
+            let v = a.size_recent(Duration::from_secs(60), || panic!("must not collect"));
+            assert_eq!(v.value, 42);
+            assert_eq!(v.round, 1);
+            assert!(v.shared);
+            assert!(v.age <= Duration::from_secs(60));
+        }
+        let s = a.stats();
+        assert_eq!(s.rounds, 1, "hits must not start rounds");
+        assert_eq!(s.recent_hits, 50);
+        assert_eq!(s.recent_refreshes, 0);
+    }
+
+    #[test]
+    fn recent_refreshes_when_stale_or_unpublished() {
+        let a = SizeArbiter::new();
+        // Nothing published yet: must collect.
+        let v = a.size_recent(Duration::from_secs(60), || 5);
+        assert_eq!((v.value, v.round), (5, 1));
+        assert_eq!(v.age, Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(3));
+        // Published result now older than the bound: must re-collect.
+        let v2 = a.size_recent(Duration::from_micros(1), || 6);
+        assert_eq!((v2.value, v2.round), (6, 2));
+        assert_eq!(a.stats().recent_refreshes, 2);
+    }
+
+    #[test]
+    fn concurrent_exact_callers_share_rounds() {
+        let a = Arc::new(SizeArbiter::new());
+        // Dwell long enough that hammering threads must overlap a round.
+        a.set_combine_window(Duration::from_micros(800));
+        let collects = Arc::new(AtomicU64::new(0));
+        const THREADS: usize = 4;
+        const CALLS: u64 = 25;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let a = a.clone();
+                let collects = collects.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..CALLS {
+                        let v = a.size_exact(|| {
+                            collects.fetch_add(1, SeqCst);
+                            11
+                        });
+                        assert_eq!(v.value, 11);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = THREADS as u64 * CALLS;
+        let s = a.stats();
+        assert_eq!(s.rounds, collects.load(SeqCst), "one collect per round");
+        assert!(
+            s.rounds < total,
+            "combining failed: {} rounds for {} calls",
+            s.rounds,
+            total
+        );
+        assert!(s.adoptions > 0, "no caller ever shared a round");
+        assert_eq!(s.rounds + s.adoptions, total);
+    }
+
+    #[test]
+    fn adopted_round_starts_inside_callers_window() {
+        // A round completed entirely BEFORE the call registers must never
+        // be adopted: a fresh exact call after quiescence re-collects.
+        let a = SizeArbiter::new();
+        assert_eq!(a.size_exact(|| 1).round, 1);
+        let v = a.size_exact(|| 2);
+        assert_eq!(v.round, 2, "stale round adopted");
+        assert_eq!(v.value, 2);
+    }
+
+    #[test]
+    fn stats_start_zeroed() {
+        assert_eq!(SizeArbiter::new().stats(), ArbiterStats::default());
+    }
+}

@@ -39,17 +39,13 @@
 //! guarantees are the trade.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, TryLockError};
 
 use crate::pad::CachePadded;
 use crate::thread_id;
 
 use super::policy::SizePolicy;
-use super::{OpKind, SizeOpts};
-
-/// Spins before each yield while parked on the flag or draining a slot
-/// (single-core containers need the yield to make progress at all).
-const SPINS_BEFORE_YIELD: u32 = 64;
+use super::{spin_wait_while, OpKind, SizeOpts};
 
 /// Per-thread epoch/ack slot: even = quiescent, odd = inside an operation.
 /// Monotonically increasing, so a stuck reader can tell "same op" from
@@ -93,15 +89,7 @@ impl Drop for HandshakeGuard<'_> {
 impl HandshakeSize {
     #[inline]
     fn park_while_flag_up(&self) {
-        let mut spins = 0u32;
-        while self.size_flag.load(SeqCst) {
-            spins += 1;
-            if spins < SPINS_BEFORE_YIELD {
-                std::hint::spin_loop();
-            } else {
-                std::thread::yield_now();
-            }
-        }
+        spin_wait_while(|| self.size_flag.load(SeqCst));
     }
 
     #[inline]
@@ -131,6 +119,7 @@ impl SizePolicy for HandshakeSize {
     where
         Self: 'a;
     const TRACKED: bool = false;
+    const HAS_SIZE: bool = true;
 
     fn new(max_threads: usize, _opts: SizeOpts) -> Self {
         Self {
@@ -208,22 +197,68 @@ impl SizePolicy for HandshakeSize {
     }
 
     fn size(&self) -> Option<i64> {
-        let _serialize = self.size_lock.lock().unwrap();
-        self.size_flag.store(true, SeqCst);
-        // Drain: wait until every thread is at a quiescent point. Threads
-        // that entered before the flag finish their op; threads entering
-        // after it park (see `enter`), so after this sweep nothing moves.
-        for slot in self.ack.iter() {
-            let mut spins = 0u32;
-            while slot.load(SeqCst) % 2 == 1 {
-                spins += 1;
-                if spins < SPINS_BEFORE_YIELD {
-                    std::hint::spin_loop();
-                } else {
-                    std::thread::yield_now();
+        // The caller's own ack slot must be excluded from the drain: if
+        // this thread holds its own op guard (odd slot), spinning on it
+        // would self-deadlock — nobody else can flip it even. Skipping is
+        // sound: the caller's counter bumps are its own writes, already
+        // visible to the sum below.
+        let me = thread_id::current();
+        let my_slot: &AtomicU64 = &self.ack[me];
+        let held_guard = my_slot.load(SeqCst) % 2 == 1;
+        let _serialize: MutexGuard<'_, ()> = if held_guard {
+            // Cross-deadlock avoidance: another guard-holding size()
+            // caller may own the lock and spin on OUR odd slot while we
+            // block on the lock. Back our slot out to even while waiting
+            // (our bumps so far are already visible; the enclosing op
+            // simply linearizes after any handshake that overlaps the
+            // wait) and restore the odd parity below, once we hold the
+            // lock and no handshake can be mid-drain.
+            loop {
+                match self.size_lock.try_lock() {
+                    Ok(g) => break g,
+                    Err(TryLockError::Poisoned(p)) => break p.into_inner(),
+                    Err(TryLockError::WouldBlock) => {
+                        let v = my_slot.load(Relaxed);
+                        if v % 2 == 1 {
+                            my_slot.store(v + 1, SeqCst);
+                        }
+                        std::thread::yield_now();
+                    }
                 }
             }
+        } else {
+            // Poison-tolerant, matching the try_lock branch: one
+            // panicking size() caller must not wedge all future ones.
+            self.size_lock.lock().unwrap_or_else(|p| p.into_inner())
+        };
+        if held_guard {
+            // Restore the parity the enclosing guard's Drop expects. The
+            // flag is down and we hold the lock, so no drain can observe
+            // the flip mid-sweep.
+            let v = my_slot.load(Relaxed);
+            if v % 2 == 0 {
+                my_slot.store(v + 1, SeqCst);
+            }
         }
+        let my_parity = my_slot.load(SeqCst) % 2;
+        self.size_flag.store(true, SeqCst);
+        // Drain: wait until every other thread is at a quiescent point.
+        // Threads that entered before the flag finish their op; threads
+        // entering after it park (see `enter`), so after this sweep
+        // nothing moves.
+        for (tid, slot) in self.ack.iter().enumerate() {
+            if tid == me {
+                continue;
+            }
+            spin_wait_while(|| slot.load(SeqCst) % 2 == 1);
+        }
+        // While we hold the flag and the size lock, this thread cannot
+        // enter or leave an operation — its slot parity must be frozen.
+        debug_assert_eq!(
+            self.ack[me].load(SeqCst) % 2,
+            my_parity,
+            "caller's ack slot changed parity during its own handshake"
+        );
         // Quiescent window: the counter sum is the exact current size, and
         // any point in this window is a valid linearization point.
         let mut total = 0i64;
@@ -306,6 +341,49 @@ mod tests {
         }
         assert_eq!(p.ack[tid].load(SeqCst) % 2, 0);
         assert!(p.ack[tid].load(SeqCst) > before, "slot must be monotone");
+    }
+
+    #[test]
+    fn size_inside_own_op_guard_does_not_self_deadlock() {
+        // Regression: the drain sweep used to spin forever on the
+        // caller's OWN odd ack slot when size() ran under an op guard.
+        let p = policy();
+        let g = p.enter();
+        p.commit_insert(&(), 0);
+        p.commit_insert(&(), 0);
+        assert_eq!(p.size(), Some(2), "size under own guard must return");
+        assert_eq!(p.handshake_count(), 1);
+        drop(g);
+        assert_eq!(p.size(), Some(2));
+    }
+
+    #[test]
+    fn concurrent_guard_holding_sizers_do_not_cross_deadlock() {
+        // Two threads each hold their own op guard and call size()
+        // concurrently: the lock winner must not spin forever on the
+        // waiter's odd slot (the waiter backs its slot out while parked
+        // on the lock).
+        let p = Arc::new(policy());
+        let ready = Arc::new(std::sync::Barrier::new(2));
+        let sizers: Vec<_> = (0..2)
+            .map(|_| {
+                let p = p.clone();
+                let ready = ready.clone();
+                std::thread::spawn(move || {
+                    let _g = p.enter();
+                    p.commit_insert(&(), 0);
+                    ready.wait();
+                    p.size().unwrap()
+                })
+            })
+            .collect();
+        for s in sizers {
+            // Each caller sees at least its own committed insert; the
+            // other thread's may still be mid-flight (backed-out slot).
+            let seen = s.join().unwrap();
+            assert!((1..=2).contains(&seen), "impossible size {seen}");
+        }
+        assert_eq!(p.size(), Some(2));
     }
 
     #[test]

@@ -16,18 +16,50 @@
 //!   Petrank, arXiv 2506.16350): a blocking handshake that makes updates
 //!   nearly free, and an optimistic double-collect with a wait-free
 //!   fallback (see `handshake.rs` / `optimistic.rs`).
+//! * [`SizeArbiter`], [`SizeView`] — the combining size front-end
+//!   (`arbiter.rs`): concurrent `size_exact()` callers share one
+//!   underlying collect, and the published last result serves
+//!   `size_recent(max_staleness)` with a single wait-free load. Every
+//!   structure embeds one, over every policy.
 
+mod arbiter;
 mod calculator;
 mod counters_snapshot;
 mod handshake;
 mod optimistic;
 mod policy;
 
+pub use arbiter::{ArbiterStats, SizeArbiter, SizeView};
 pub use calculator::{SizeCalculator, SizeOpts};
 pub use counters_snapshot::{CountersSnapshot, INVALID_CELL, INVALID_SIZE};
 pub use handshake::HandshakeSize;
 pub use optimistic::{OptimisticSize, OPTIMISTIC_MAX_RETRIES};
 pub use policy::{LinearizableSize, LockSize, NaiveSize, NoSize, SizePolicy};
+
+/// Spins before each yield in the size subsystem's wait loops
+/// (single-core containers need the yield to make progress at all).
+pub(crate) const SPINS_BEFORE_YIELD: u32 = 64;
+
+/// One step of a spin-then-yield backoff: spin-hint for the first
+/// [`SPINS_BEFORE_YIELD`] steps, then yield the core.
+#[inline]
+pub(crate) fn spin_backoff(step: u32) {
+    if step < SPINS_BEFORE_YIELD {
+        std::hint::spin_loop();
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+/// Spin-then-yield until `cond` turns false.
+#[inline]
+pub(crate) fn spin_wait_while(cond: impl Fn() -> bool) {
+    let mut step = 0u32;
+    while cond() {
+        spin_backoff(step);
+        step = step.saturating_add(1);
+    }
+}
 
 /// Operation kind: index into the per-thread counter pair (paper line 1:
 /// `INSERT = 0, DELETE = 1`).

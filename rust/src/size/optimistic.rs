@@ -24,10 +24,12 @@
 //! announce CAS, and — crucially — concurrent updates never enter the
 //! forwarding path (`updateMetadata` lines 80–83 only fire while a
 //! snapshot is announced as collecting, which the optimistic path never
-//! does). After [`OPTIMISTIC_MAX_RETRIES`] failed rounds (update-heavy
-//! contention), it falls back to the paper's wait-free
-//! [`super::SizeCalculator::compute`], so `size()` stays lock-free with a
-//! wait-free fallback bound rather than spinning unboundedly.
+//! does). After the configured retry budget (default
+//! [`OPTIMISTIC_MAX_RETRIES`]; see [`OptimisticSize::with_max_retries`])
+//! is exhausted under update-heavy contention, it falls back to the
+//! paper's wait-free [`super::SizeCalculator::compute`], so `size()`
+//! stays lock-free with a wait-free fallback bound rather than spinning
+//! unboundedly.
 //!
 //! ## Trade-off (when this method wins)
 //!
@@ -42,7 +44,8 @@ use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 use super::policy::SizePolicy;
 use super::{LinearizableSize, OpKind, SizeCalculator, SizeOpts};
 
-/// Failed double-collect rounds before falling back to the wait-free path.
+/// Default failed double-collect rounds before falling back to the
+/// wait-free path.
 pub const OPTIMISTIC_MAX_RETRIES: usize = 8;
 
 pub struct OptimisticSize {
@@ -52,6 +55,9 @@ pub struct OptimisticSize {
     /// Times `size()` exhausted its retries and took the wait-free path
     /// (diagnostics for the ablation bench).
     fallbacks: AtomicU64,
+    /// Per-instance retry budget (ROADMAP: per-structure tuning); a
+    /// budget of 0 makes every `size()` take the wait-free path.
+    max_retries: usize,
 }
 
 impl OptimisticSize {
@@ -59,18 +65,31 @@ impl OptimisticSize {
     pub fn fallback_count(&self) -> u64 {
         self.fallbacks.load(SeqCst)
     }
+
+    /// Build with an explicit double-collect retry budget instead of
+    /// [`OPTIMISTIC_MAX_RETRIES`].
+    pub fn with_max_retries(max_threads: usize, opts: SizeOpts, max_retries: usize) -> Self {
+        Self {
+            inner: LinearizableSize::new(max_threads, opts),
+            fallbacks: AtomicU64::new(0),
+            max_retries,
+        }
+    }
+
+    /// The configured retry budget.
+    pub fn max_retries(&self) -> usize {
+        self.max_retries
+    }
 }
 
 impl SizePolicy for OptimisticSize {
     type InfoSlot = AtomicU64;
     type OpGuard<'a> = ();
     const TRACKED: bool = true;
+    const HAS_SIZE: bool = true;
 
     fn new(max_threads: usize, opts: SizeOpts) -> Self {
-        Self {
-            inner: LinearizableSize::new(max_threads, opts),
-            fallbacks: AtomicU64::new(0),
-        }
+        Self::with_max_retries(max_threads, opts, OPTIMISTIC_MAX_RETRIES)
     }
 
     #[inline(always)]
@@ -131,7 +150,7 @@ impl SizePolicy for OptimisticSize {
             return Some(calc.compute());
         }
         let mut snap = [0u64; 2 * crate::MAX_THREADS];
-        'retry: for _ in 0..OPTIMISTIC_MAX_RETRIES {
+        'retry: for _ in 0..self.max_retries {
             for tid in 0..n {
                 snap[2 * tid] = calc.counter(tid, OpKind::Insert);
                 snap[2 * tid + 1] = calc.counter(tid, OpKind::Delete);

@@ -50,6 +50,10 @@ pub trait SizePolicy: Send + Sync + Sized + 'static {
     /// compile away).
     const TRACKED: bool;
 
+    /// Whether [`Self::size`] returns `Some` — lets the arbiter wiring
+    /// answer size-less policies without paying for a call.
+    const HAS_SIZE: bool;
+
     fn new(max_threads: usize, opts: SizeOpts) -> Self;
 
     /// Enter an update operation (Fig. 3 wraps every op; only `LockSize`
@@ -114,6 +118,7 @@ impl SizePolicy for NoSize {
     type InfoSlot = ();
     type OpGuard<'a> = ();
     const TRACKED: bool = false;
+    const HAS_SIZE: bool = false;
 
     fn new(_: usize, _: SizeOpts) -> Self {
         NoSize
@@ -168,6 +173,7 @@ impl SizePolicy for LinearizableSize {
     type InfoSlot = AtomicU64;
     type OpGuard<'a> = ();
     const TRACKED: bool = true;
+    const HAS_SIZE: bool = true;
 
     fn new(max_threads: usize, opts: SizeOpts) -> Self {
         Self {
@@ -278,6 +284,7 @@ impl SizePolicy for NaiveSize {
     type InfoSlot = ();
     type OpGuard<'a> = ();
     const TRACKED: bool = false;
+    const HAS_SIZE: bool = true;
 
     fn new(_: usize, _: SizeOpts) -> Self {
         Self {
@@ -342,6 +349,7 @@ impl SizePolicy for LockSize {
     type InfoSlot = ();
     type OpGuard<'a> = std::sync::RwLockReadGuard<'a, ()>;
     const TRACKED: bool = false;
+    const HAS_SIZE: bool = true;
 
     fn new(_: usize, _: SizeOpts) -> Self {
         Self {

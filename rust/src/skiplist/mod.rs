@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
 use crate::ebr;
 use crate::rng::Xoshiro256;
 use crate::set_api::{ConcurrentSet, MAX_KEY};
-use crate::size::{SizeOpts, SizePolicy};
+use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
 use crate::thread_id;
 
 pub(crate) const MAX_LEVEL: usize = 20;
@@ -273,6 +273,7 @@ pub struct SkipListSet<P: SizePolicy> {
     policy: P,
     /// Deferred-reclamation parking lot (see [`Graveyard`]).
     graveyard: Graveyard,
+    arbiter: SizeArbiter,
 }
 
 unsafe impl<P: SizePolicy> Send for SkipListSet<P> {}
@@ -292,11 +293,17 @@ impl<P: SizePolicy> SkipListSet<P> {
             head: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
             policy,
             graveyard: Graveyard::new(),
+            arbiter: SizeArbiter::new(),
         }
     }
 
     pub fn policy(&self) -> &P {
         &self.policy
+    }
+
+    /// The combining size arbiter behind `size_exact` / `size_recent`.
+    pub fn arbiter(&self) -> &SizeArbiter {
+        &self.arbiter
     }
 
     #[inline]
@@ -589,6 +596,18 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
             "SkipList<{}>",
             std::any::type_name::<P>().rsplit("::").next().unwrap()
         )
+    }
+
+    fn size_exact(&self) -> Option<crate::size::SizeView> {
+        self.arbiter.exact_for(&self.policy)
+    }
+
+    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
+        self.arbiter.recent_for(&self.policy, max_staleness)
+    }
+
+    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
+        Some(self.arbiter.stats())
     }
 }
 

@@ -262,7 +262,11 @@ mod tests {
         for c in churners {
             c.join().unwrap();
         }
-        assert_eq!(s.size().unwrap(),
-                   s.chunks.iter().map(|c| list::quiescent_count_at::<NoSize>(&c.head)).sum::<usize>() as i64);
+        let census: usize = s
+            .chunks
+            .iter()
+            .map(|c| list::quiescent_count_at::<NoSize>(&c.head))
+            .sum();
+        assert_eq!(s.size().unwrap(), census as i64);
     }
 }

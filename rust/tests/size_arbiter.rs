@@ -1,0 +1,381 @@
+//! Integration tests for the combining size arbiter (`size_exact`) and
+//! the published bounded-staleness reads (`size_recent`) across all four
+//! structures and all six policies, plus the `OptimisticSize`
+//! retry-budget sweep.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering::SeqCst};
+use std::sync::Arc;
+use std::time::Duration;
+
+use concurrent_size::bench_util::{make_set, STRUCTURES};
+use concurrent_size::cli::PolicyKind;
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::history::{self, DeltaLog};
+use concurrent_size::prop_assert;
+use concurrent_size::proptest_lite;
+use concurrent_size::rng::Xoshiro256;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{HandshakeSize, OpKind, OptimisticSize, SizeOpts, SizePolicy};
+use concurrent_size::MAX_THREADS;
+
+const NEW_POLICIES: [PolicyKind; 2] = [PolicyKind::Handshake, PolicyKind::Optimistic];
+
+/// The PR's headline claim: N threads hammering `size_exact()` on the
+/// handshake policy share combine rounds, so the handshake count grows by
+/// one per *batch* — strictly fewer handshakes than calls — instead of
+/// one per call as with raw serialized `size()`.
+#[test]
+fn combining_batches_handshakes_below_call_count() {
+    let set = Arc::new(HashTableSet::<HandshakeSize>::new(MAX_THREADS, 256));
+    for k in 1..=40u64 {
+        set.insert(k);
+    }
+    // Dwell long enough that the hammering threads must overlap a round
+    // even on a single-core box (the sleep yields the core to them).
+    set.arbiter().set_combine_window(Duration::from_micros(800));
+    const THREADS: u64 = 4;
+    const CALLS: u64 = 25;
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let set = set.clone();
+            std::thread::spawn(move || {
+                for _ in 0..CALLS {
+                    let v = set.size_exact().expect("handshake provides size");
+                    assert_eq!(v.value, 40);
+                    assert_eq!(v.age, Duration::ZERO, "exact reads are fresh");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = THREADS * CALLS;
+    let handshakes = set.policy().handshake_count();
+    let stats = set.size_stats().unwrap();
+    assert_eq!(
+        handshakes, stats.rounds,
+        "every combine round is exactly one handshake"
+    );
+    assert!(
+        handshakes < total,
+        "no combining: {handshakes} handshakes for {total} size_exact calls"
+    );
+    assert!(stats.adoptions > 0, "no call ever shared a round");
+    assert_eq!(stats.rounds + stats.adoptions, total);
+}
+
+/// `size_recent` within the staleness bound is a published read: no
+/// handshake flag is raised (the handshake count stays frozen) and no new
+/// arbiter round starts.
+#[test]
+fn recent_reads_raise_no_handshake_flag() {
+    let set = HashTableSet::<HandshakeSize>::new(MAX_THREADS, 256);
+    for k in 1..=17u64 {
+        set.insert(k);
+    }
+    let exact = set.size_exact().unwrap();
+    assert_eq!(exact.value, 17);
+    let h0 = set.policy().handshake_count();
+    let rounds0 = set.size_stats().unwrap().rounds;
+    for _ in 0..200 {
+        let v = set.size_recent(Duration::from_secs(600)).unwrap();
+        assert_eq!(v.value, 17);
+        assert!(v.shared);
+        assert!(v.age <= Duration::from_secs(600));
+    }
+    assert_eq!(
+        set.policy().handshake_count(),
+        h0,
+        "size_recent hit must not raise the handshake flag"
+    );
+    assert_eq!(set.size_stats().unwrap().rounds, rounds0);
+    assert_eq!(set.size_stats().unwrap().recent_hits, 200);
+}
+
+/// A published result older than the bound forces a fresh combine round,
+/// which observes updates made since the last publish.
+#[test]
+fn recent_refreshes_once_stale() {
+    let set = HashTableSet::<HandshakeSize>::new(MAX_THREADS, 64);
+    set.insert(1);
+    assert_eq!(set.size_exact().unwrap().value, 1);
+    set.insert(2);
+    std::thread::sleep(Duration::from_millis(5));
+    let v = set.size_recent(Duration::from_millis(1)).unwrap();
+    assert_eq!(v.value, 2, "stale publish must be refreshed");
+    assert_eq!(v.age, Duration::ZERO);
+    assert_eq!(set.size_stats().unwrap().recent_refreshes, 1);
+}
+
+/// `size_exact` keeps today's linearizable semantics under combining: a
+/// single recording mutator's DeltaLog must stay legal, its checkpoints
+/// must match `size_exact` exactly, and racing `size_exact` threads must
+/// never observe an out-of-bounds value — on all four structures, for
+/// both optimized policies.
+#[test]
+fn exact_history_linearizable_under_combining() {
+    for structure in STRUCTURES {
+        for policy in NEW_POLICIES {
+            let set: Arc<dyn ConcurrentSet> =
+                Arc::from(make_set(structure, policy, 256).unwrap());
+            let log = DeltaLog::new();
+            let key_space = 64i64;
+            let stop = Arc::new(AtomicBool::new(false));
+            let min_seen = Arc::new(AtomicI64::new(i64::MAX));
+            let exact_calls = Arc::new(AtomicU64::new(0));
+
+            std::thread::scope(|scope| {
+                for _ in 0..2 {
+                    let set = set.clone();
+                    let stop = stop.clone();
+                    let min_seen = min_seen.clone();
+                    let exact_calls = exact_calls.clone();
+                    scope.spawn(move || {
+                        while !stop.load(SeqCst) {
+                            let v = set.size_exact().unwrap();
+                            exact_calls.fetch_add(1, SeqCst);
+                            min_seen.fetch_min(v.value, SeqCst);
+                            assert!(
+                                (0..=key_space).contains(&v.value),
+                                "size {} out of [0, {key_space}]",
+                                v.value
+                            );
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                    });
+                }
+
+                let mut rng = Xoshiro256::new(31 + policy as u64);
+                let mut net = 0i64;
+                for step in 0..3000 {
+                    let k = rng.gen_range_incl(1, key_space as u64);
+                    if rng.gen_bool(0.5) {
+                        if set.insert(k) {
+                            log.record_insert();
+                            net += 1;
+                        }
+                    } else if set.delete(k) {
+                        log.record_delete();
+                        net -= 1;
+                    }
+                    if step % 128 == 0 {
+                        // Only updater ⇒ the exact running size is forced.
+                        assert_eq!(
+                            set.size_exact().map(|v| v.value),
+                            Some(net),
+                            "{structure}/{policy:?} checkpoint at step {step}"
+                        );
+                    }
+                }
+                stop.store(true, SeqCst);
+            });
+
+            let (running, stats) = history::validate(&log.snapshot());
+            assert!(
+                stats.is_legal(),
+                "{structure}/{policy:?}: illegal history {stats:?}"
+            );
+            assert_eq!(
+                Some(stats.final_size),
+                set.size_exact().map(|v| v.value),
+                "{structure}/{policy:?}: log final vs size_exact()"
+            );
+            assert_eq!(running.last().copied().unwrap_or(0), stats.final_size);
+            assert!(
+                min_seen.load(SeqCst) >= 0,
+                "{structure}/{policy:?}: concurrent size_exact saw negative"
+            );
+            let arb = set.size_stats().unwrap();
+            assert!(
+                arb.rounds <= exact_calls.load(SeqCst) + 3000 / 128 + 4,
+                "{structure}/{policy:?}: more rounds than exact calls"
+            );
+        }
+    }
+}
+
+/// Staleness-bound property: with a single mutator, `size_recent` either
+/// hits the published result — whose value is exactly the size at the
+/// last publish and whose age respects the bound — or refreshes to the
+/// exact current size with age zero.
+#[test]
+fn prop_recent_respects_staleness_contract() {
+    proptest_lite::run_with(
+        "size_recent staleness contract",
+        proptest_lite::Config {
+            cases: 4,
+            seed: 0xA3B1,
+        },
+        |rng| {
+            for structure in STRUCTURES {
+                for policy in NEW_POLICIES {
+                    let set = make_set(structure, policy, 128).unwrap();
+                    let mut net = 0i64;
+                    let mut published = None::<i64>;
+                    let key_space = 1 + rng.gen_range(40);
+                    for _ in 0..(150 + rng.gen_range(250)) {
+                        let k = rng.gen_range_incl(1, key_space);
+                        match rng.gen_range(6) {
+                            0 | 1 => {
+                                if set.insert(k) {
+                                    net += 1;
+                                }
+                            }
+                            2 => {
+                                if set.delete(k) {
+                                    net -= 1;
+                                }
+                            }
+                            3 => {
+                                let v = set.size_exact().unwrap();
+                                prop_assert!(
+                                    v.value == net,
+                                    "{structure}/{policy:?}: exact {} != net {net}",
+                                    v.value
+                                );
+                                published = Some(net);
+                            }
+                            4 => {
+                                // Generous bound: must hit the published
+                                // value, or (before any publish) refresh.
+                                let bound = Duration::from_secs(3600);
+                                let v = set.size_recent(bound).unwrap();
+                                prop_assert!(v.age <= bound, "age above bound");
+                                match published {
+                                    Some(p) => prop_assert!(
+                                        v.value == p,
+                                        "{structure}/{policy:?}: recent {} != published {p}",
+                                        v.value
+                                    ),
+                                    None => {
+                                        prop_assert!(
+                                            v.value == net && v.age == Duration::ZERO,
+                                            "unpublished recent must refresh exactly"
+                                        );
+                                        published = Some(net);
+                                    }
+                                }
+                            }
+                            _ => {
+                                // Zero bound: always refreshes to exact.
+                                let v = set.size_recent(Duration::ZERO).unwrap();
+                                prop_assert!(
+                                    v.value == net && v.age == Duration::ZERO,
+                                    "{structure}/{policy:?}: zero-staleness recent \
+                                     {} != net {net}",
+                                    v.value
+                                );
+                                published = Some(net);
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The freshness API answers coherently for every structure × policy:
+/// `None` exactly when the policy is size-less, values agreeing with the
+/// raw `size()` at quiescence, and arbiter stats exposed on all four
+/// transformable structures.
+#[test]
+fn freshness_api_covers_all_structures_and_policies() {
+    for structure in STRUCTURES {
+        for policy in PolicyKind::ALL {
+            let set = make_set(structure, policy, 64).unwrap();
+            for k in 1..=9u64 {
+                set.insert(k);
+            }
+            assert!(
+                set.size_stats().is_some(),
+                "{structure}/{policy:?}: arbiter stats missing"
+            );
+            match policy.provides_size() {
+                false => {
+                    assert_eq!(set.size_exact(), None, "{structure}/{policy:?}");
+                    assert_eq!(
+                        set.size_recent(Duration::from_millis(1)),
+                        None,
+                        "{structure}/{policy:?}"
+                    );
+                }
+                true => {
+                    let exact = set.size_exact().unwrap();
+                    assert_eq!(exact.value, 9, "{structure}/{policy:?}");
+                    assert!(exact.round > 0, "arbiter must stamp rounds");
+                    let recent = set.size_recent(Duration::from_secs(60)).unwrap();
+                    assert_eq!(recent.value, 9, "{structure}/{policy:?}");
+                    assert_eq!(set.size(), Some(9), "{structure}/{policy:?}");
+                }
+            }
+        }
+    }
+}
+
+/// `OptimisticSize` retry-budget sweep: under churn the fallback counter
+/// stays sane for every budget — it never exceeds the number of size
+/// calls, a zero budget falls back on *every* call, and quiescent collects
+/// never fall back on any positive budget.
+#[test]
+fn optimistic_retry_budget_sweep() {
+    for retries in [0usize, 1, 2, 8, 32] {
+        let p = Arc::new(OptimisticSize::with_max_retries(
+            8,
+            SizeOpts::default(),
+            retries,
+        ));
+        assert_eq!(p.max_retries(), retries);
+        let stop = Arc::new(AtomicBool::new(false));
+        let churners: Vec<_> = (0..3usize)
+            .map(|t| {
+                let p = p.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    // Per-thread legal (insert-then-delete) histories,
+                    // driven straight into the calculator.
+                    let mut c = 0u64;
+                    while !stop.load(SeqCst) {
+                        c += 1;
+                        let i = concurrent_size::size::UpdateInfo { tid: t, counter: c }.pack();
+                        let calc = p.calculator().unwrap();
+                        calc.update_metadata(i, OpKind::Insert);
+                        calc.update_metadata(i, OpKind::Delete);
+                    }
+                })
+            })
+            .collect();
+        const SIZES: u64 = 800;
+        for _ in 0..SIZES {
+            let s = p.size().unwrap();
+            assert!(
+                (0..=3).contains(&s),
+                "budget {retries}: non-linearizable size {s}"
+            );
+        }
+        stop.store(true, SeqCst);
+        for c in churners {
+            c.join().unwrap();
+        }
+        let fallbacks = p.fallback_count();
+        assert!(
+            fallbacks <= SIZES,
+            "budget {retries}: {fallbacks} fallbacks for {SIZES} calls"
+        );
+        if retries == 0 {
+            assert_eq!(
+                fallbacks, SIZES,
+                "a zero budget must take the wait-free path every call"
+            );
+        }
+        // Quiescent collects succeed on the first double-collect for any
+        // positive budget: the counter must stop moving.
+        let quiesced = p.fallback_count();
+        assert_eq!(p.size(), Some(0));
+        if retries > 0 {
+            assert_eq!(p.fallback_count(), quiesced, "quiescent collect fell back");
+        }
+    }
+}
