@@ -4,12 +4,16 @@
 //! dynamic-language runtimes).
 //!
 //! Protocol (one command per line): `PUT k` | `DEL k` | `HAS k` | `SIZE`
-//! | `SIZE~ [ms]` | `QUIT`. Responses: `1`/`0` for ops, the exact count
-//! for `SIZE` (served through the store's combining arbiter, so
-//! concurrent SIZE clients share one collect), a possibly-stale count
+//! | `SIZE~ [ms]` | `SIZE?` | `QUIT`. Responses: `1`/`0` for ops, the
+//! exact count for `SIZE` (served through the store's combining arbiter,
+//! so concurrent SIZE clients share one collect), a possibly-stale count
 //! for `SIZE~` (wait-free published read, at most `ms` — default 50 —
-//! milliseconds old), and `ERR ...` for malformed input or a store whose
-//! policy has no `size()`.
+//! milliseconds old; with `--refresh-ms` a background `SizeRefresher`
+//! keeps the publication warm so these reads are passive), a bounded-lag
+//! O(shards) estimate for `SIZE?` (the sharded counter mirror,
+//! `--size-shards`), and `ERR ...` for malformed input or a store whose
+//! policy cannot serve the request. Run with `--help` for the full flag
+//! list.
 //!
 //! Connections are served by a **bounded worker pool** (never more than
 //! `thread_id::capacity()` handler threads): the per-thread size metadata
@@ -21,18 +25,20 @@
 //! ```bash
 //! cargo run --release --example kv_server               # self-test mode
 //! cargo run --release --example kv_server -- --listen 127.0.0.1:7171 \
-//!     [--policy linearizable|handshake|optimistic|...] [--workers N]
+//!     [--policy linearizable|handshake|optimistic|...] [--workers N] \
+//!     [--refresh-ms 5] [--size-shards auto]
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::mpsc::{Receiver, sync_channel};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use concurrent_size::bench_util;
 use concurrent_size::cli::{Args, PolicyKind};
 use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{detect_shards, SizeOpts};
 use concurrent_size::thread_id;
 
 type Store = Arc<dyn ConcurrentSet>;
@@ -87,6 +93,12 @@ fn handle(store: &dyn ConcurrentSet, stream: TcpStream) {
                     Err(_) => "ERR bad staleness".into(),
                 }
             }
+            // Bounded-lag estimate from the sharded counter mirror: the
+            // cheapest probe the store offers (O(shards), no arbiter).
+            (Some("SIZE?"), _) => match store.size_estimate() {
+                Some(v) => v.to_string(),
+                None => "ERR estimate unavailable (no sharded mirror)".into(),
+            },
             (Some("QUIT"), _) => return,
             _ => "ERR unknown command".into(),
         };
@@ -197,12 +209,13 @@ fn self_test(store: Store, workers: usize) {
                     assert!((0..=1000).contains(&size), "impossible size {size}");
                 }
                 // Bounded-staleness reads must stay in the same range,
-                // with or without an explicit bound.
-                for cmd in ["SIZE~", "SIZE~ 5"] {
+                // with or without an explicit bound — and so must the
+                // sharded estimate, when the store carries a mirror.
+                for cmd in ["SIZE~", "SIZE~ 5", "SIZE?"] {
                     let reply = send(cmd.into(), &mut line);
                     if !reply.starts_with("ERR") {
-                        let size: i64 = reply.parse().expect("numeric SIZE~ reply");
-                        assert!((0..=1000).contains(&size), "impossible SIZE~ {size}");
+                        let size: i64 = reply.parse().expect("numeric size reply");
+                        assert!((0..=1000).contains(&size), "impossible {cmd} -> {size}");
                     }
                 }
                 assert!(
@@ -248,24 +261,75 @@ fn self_test(store: Store, workers: usize) {
             assert_eq!(live, 4 * 200);
         }
     }
+    // The sharded mirror must agree exactly at quiescence.
+    if let Some(estimate) = store.size_estimate() {
+        assert_eq!(estimate, 4 * 200, "quiescent SIZE? estimate drifted");
+    }
     println!(
         "kv_server self-test OK: survived {burst} concurrently-open connections, \
-         final SIZE = {:?}, arbiter stats = {:?}",
+         final SIZE = {:?}, SIZE? = {:?}, arbiter stats = {:?}",
         store.size(),
+        store.size_estimate(),
         store.size_stats(),
+    );
+}
+
+fn usage() {
+    println!(
+        "kv_server — concurrent-size TCP set server
+
+USAGE:
+  kv_server [--listen ADDR] [--policy P] [--workers N]
+            [--refresh-ms MS] [--size-shards auto|N]
+
+FLAGS:
+  --listen ADDR     serve on ADDR; without it the binary runs its self-test
+  --policy P        size policy: baseline|linearizable|naive|lock|handshake|
+                    optimistic (default linearizable)
+  --workers N       handler pool size (default 16, clamped to half the
+                    thread-slot capacity)
+  --refresh-ms MS   background SizeRefresher period in milliseconds: keeps
+                    the published size warm so SIZE~ reads are passive
+                    (default: off when serving, 5 in self-test mode)
+  --size-shards S   stripe count of the sharded counter mirror behind SIZE?
+                    ('auto' = machine-detected, 0 = disabled; default auto)
+  --help            this text
+
+PROTOCOL (one command per line):
+  PUT k | DEL k | HAS k   -> 1 / 0
+  SIZE                    -> exact linearizable count (combining arbiter)
+  SIZE~ [ms]              -> count at most ms (default {DEFAULT_RECENT_MS}) milliseconds stale
+  SIZE?                   -> O(shards) bounded-lag estimate
+  QUIT"
     );
 }
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    if args.has_flag("help") {
+        usage();
+        return;
+    }
     let policy = args.get("policy").unwrap_or("linearizable");
     let Some(kind) = PolicyKind::parse(policy) else {
-        eprintln!("unknown --policy {policy:?}");
+        eprintln!("unknown --policy {policy:?} (--help for the list)");
         std::process::exit(2);
     };
-    let store: Store =
-        Arc::from(bench_util::make_set("hashtable", kind, 1 << 16).expect("hashtable factory"));
+    let opts = SizeOpts::default().with_shards(args.size_shards(detect_shards()));
+    let store: Store = Arc::from(
+        bench_util::make_set_opts("hashtable", kind, 1 << 16, opts).expect("hashtable factory"),
+    );
     let workers = clamp_workers(args.get_usize("workers", 16));
+    let serving = args.get("listen").is_some();
+    // Self-test mode exercises the daemon path by default; a served store
+    // only runs one when asked.
+    let refresh_ms = args.get_f64("refresh-ms", if serving { 0.0 } else { 5.0 });
+    if refresh_ms > 0.0 {
+        let period = Duration::from_secs_f64(refresh_ms / 1e3);
+        if store.set_refresh_period(Some(period)) {
+            println!("size refresher running every {period:?}");
+        }
+    }
     match args.get("listen") {
         Some(addr) => serve(&addr.to_string(), store, workers).expect("serve"),
         None => self_test(store, workers),

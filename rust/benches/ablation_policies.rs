@@ -1,6 +1,6 @@
 //! Ablation B: the size-methods design space on one structure.
 //!
-//! Two scenarios, both recorded to a machine-readable report
+//! Three scenarios, all recorded to a machine-readable report
 //! (`BENCH_ablation.json` by default, `--json PATH` to override) so the
 //! perf trajectory is tracked PR over PR:
 //!
@@ -16,17 +16,24 @@
 //!   size threads hammering concurrently (`--size-heavy-threads`,
 //!   default 4) under the update-heavy mix, sweeping the size-call axis
 //!   (`raw` = every caller synchronizes itself, `exact` = combining
-//!   arbiter, `recent` = published wait-free reads). The arbiter's
+//!   arbiter, `recent` = published wait-free reads, `refresh` = published
+//!   reads kept warm by a background `SizeRefresher`). The arbiter's
 //!   combining win shows up as `exact`/`recent` size throughput beating
 //!   `raw` on the serialized policies (handshake, lock), with arbiter
 //!   round/adoption counts recorded alongside.
+//! * **scale** — the sharded-mirror × refresh-period grid on the two
+//!   calculator-backed policies: `--size-shards`-style stripe counts
+//!   crossed with `SizeRefresher` periods under `refresh` size calls,
+//!   recording daemon rounds and the optimistic retry-budget auto-tuner's
+//!   end state alongside both throughputs.
 
 use std::time::Duration;
 
-use concurrent_size::bench_util::{make_set, BenchScale, MIXES, STRUCTURES};
+use concurrent_size::bench_util::{BenchScale, make_set_opts, MIXES, STRUCTURES};
 use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
 use concurrent_size::harness::{run, SizeCall};
 use concurrent_size::metrics::{fmt_rate, json_escape, json_f64, Table};
+use concurrent_size::size::{detect_shards, SizeOpts};
 use concurrent_size::workload::{self, Mix, UPDATE_HEAVY};
 
 /// One measured configuration, ready for the JSON report.
@@ -36,11 +43,16 @@ struct Record {
     mix: Mix,
     size_threads: usize,
     size_call: &'static str,
+    shards: usize,
+    refresh_us: u64,
     workload_ops_per_sec: f64,
     size_ops_per_sec: f64,
     arbiter_rounds: u64,
     arbiter_adoptions: u64,
     arbiter_recent_hits: u64,
+    daemon_rounds: u64,
+    fallbacks: u64,
+    retry_budget: u64,
 }
 
 impl Record {
@@ -49,43 +61,61 @@ impl Record {
             concat!(
                 "{{\"scenario\":\"{}\",\"policy\":\"{}\",\"mix\":\"{}\",",
                 "\"size_threads\":{},\"size_call\":\"{}\",",
+                "\"shards\":{},\"refresh_us\":{},",
                 "\"workload_ops_per_sec\":{},\"size_ops_per_sec\":{},",
                 "\"arbiter_rounds\":{},\"arbiter_adoptions\":{},",
-                "\"arbiter_recent_hits\":{}}}"
+                "\"arbiter_recent_hits\":{},\"daemon_rounds\":{},",
+                "\"fallbacks\":{},\"retry_budget\":{}}}"
             ),
             json_escape(self.scenario),
             json_escape(self.policy.label()),
             json_escape(self.mix.label()),
             self.size_threads,
             json_escape(self.size_call),
+            self.shards,
+            self.refresh_us,
             json_f64(self.workload_ops_per_sec),
             json_f64(self.size_ops_per_sec),
             self.arbiter_rounds,
             self.arbiter_adoptions,
             self.arbiter_recent_hits,
+            self.daemon_rounds,
+            self.fallbacks,
+            self.retry_budget,
         )
     }
+}
+
+/// One measurement cell: everything `measure` needs beyond the shared
+/// scale (the grid scenarios vary shards and the daemon period per cell).
+#[derive(Clone, Copy)]
+struct Cell {
+    kind: PolicyKind,
+    w: usize,
+    s: usize,
+    mix: Mix,
+    size_call: SizeCall,
+    shards: usize,
+    refresh_period: Option<Duration>,
 }
 
 /// Mean workload/size throughput plus end-of-run arbiter stats over
 /// `runs` fresh prefilled sets (after `warmup` discarded runs).
 fn measure(
     structure: &str,
-    kind: PolicyKind,
     scale: &BenchScale,
-    w: usize,
-    s: usize,
-    mix: Mix,
-    size_call: SizeCall,
+    cell: Cell,
 ) -> (f64, f64, concurrent_size::size::ArbiterStats) {
     let mut workload_sum = 0.0;
     let mut size_sum = 0.0;
     let mut stats = concurrent_size::size::ArbiterStats::default();
+    let opts = SizeOpts::default().with_shards(cell.shards);
     for i in 0..(scale.repeat.warmup + scale.repeat.runs) {
-        let set = make_set(structure, kind, scale.initial as usize)
+        let set = make_set_opts(structure, cell.kind, scale.initial as usize, opts)
             .unwrap_or_else(|| panic!("unknown structure {structure:?}"));
-        let mut cfg = scale.config(w, s, mix, scale.initial);
-        cfg.size_call = size_call;
+        let mut cfg = scale.config(cell.w, cell.s, cell.mix, scale.initial);
+        cfg.size_call = cell.size_call;
+        cfg.refresh_period = cell.refresh_period;
         workload::prefill(set.as_ref(), scale.initial, cfg.key_range, scale.seed);
         let res = run(set.as_ref(), &cfg);
         if i >= scale.repeat.warmup {
@@ -129,19 +159,32 @@ fn main() {
         let mut table = Table::new(&["policy", "workload ops/s", "size ops/s", "linearizable?"]);
         for kind in PolicyKind::ALL {
             let s = usize::from(kind.provides_size());
-            let (workload_tput, size_tput, _) =
-                measure(&structure, kind, &scale, w, s, mix, SizeCall::Raw);
+            let cell = Cell {
+                kind,
+                w,
+                s,
+                mix,
+                size_call: SizeCall::Raw,
+                shards: 0,
+                refresh_period: None,
+            };
+            let (workload_tput, size_tput, _) = measure(&structure, &scale, cell);
             records.push(Record {
                 scenario: "periodic-size",
                 policy: kind,
                 mix,
                 size_threads: s,
                 size_call: SizeCall::Raw.label(),
+                shards: 0,
+                refresh_us: 0,
                 workload_ops_per_sec: workload_tput,
                 size_ops_per_sec: size_tput,
                 arbiter_rounds: 0,
                 arbiter_adoptions: 0,
                 arbiter_recent_hits: 0,
+                daemon_rounds: 0,
+                fallbacks: 0,
+                retry_budget: 0,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -181,26 +224,32 @@ fn main() {
         }
         for call_kind in SizeCallKind::ALL {
             let call = SizeCall::from_kind(call_kind, staleness);
-            let (workload_tput, size_tput, stats) = measure(
-                &structure,
+            let cell = Cell {
                 kind,
-                &scale,
                 w,
-                heavy_size_threads,
-                UPDATE_HEAVY,
-                call,
-            );
+                s: heavy_size_threads,
+                mix: UPDATE_HEAVY,
+                size_call: call,
+                shards: 0,
+                refresh_period: None,
+            };
+            let (workload_tput, size_tput, stats) = measure(&structure, &scale, cell);
             records.push(Record {
                 scenario: "size-heavy",
                 policy: kind,
                 mix: UPDATE_HEAVY,
                 size_threads: heavy_size_threads,
                 size_call: call.label(),
+                shards: 0,
+                refresh_us: 0,
                 workload_ops_per_sec: workload_tput,
                 size_ops_per_sec: size_tput,
                 arbiter_rounds: stats.rounds,
                 arbiter_adoptions: stats.adoptions,
                 arbiter_recent_hits: stats.recent_hits,
+                daemon_rounds: stats.daemon_rounds,
+                fallbacks: stats.fallbacks,
+                retry_budget: stats.retry_budget,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -211,6 +260,70 @@ fn main() {
                 stats.adoptions.to_string(),
                 stats.recent_hits.to_string(),
             ]);
+        }
+    }
+    table.print();
+
+    // -- Scenario 3: scale — sharded mirror × refresh period -------------
+    let detected = detect_shards();
+    let shard_axis = [0usize, detected];
+    let refresh_axis_us = args.get_u64_list("refresh-us", &[500, 2000]);
+    println!(
+        "\n-- scale: update-heavy + 2 refresh-served size threads \
+         (shards x refresh period; auto-detected shards = {detected}) --"
+    );
+    let mut table = Table::new(&[
+        "policy",
+        "shards",
+        "refresh us",
+        "workload ops/s",
+        "size ops/s",
+        "daemon rounds",
+        "fallbacks",
+        "budget",
+    ]);
+    for kind in [PolicyKind::Linearizable, PolicyKind::Optimistic] {
+        for &shards in &shard_axis {
+            for &refresh_us in &refresh_axis_us {
+                let period = Duration::from_micros(refresh_us);
+                let cell = Cell {
+                    kind,
+                    w,
+                    s: 2,
+                    mix: UPDATE_HEAVY,
+                    size_call: SizeCall::Refresh(staleness),
+                    shards,
+                    refresh_period: Some(period),
+                };
+                let (workload_tput, size_tput, stats) = measure(&structure, &scale, cell);
+                records.push(Record {
+                    scenario: "scale",
+                    policy: kind,
+                    mix: UPDATE_HEAVY,
+                    size_threads: 2,
+                    size_call: SizeCallKind::Refresh.label(),
+                    shards,
+                    refresh_us,
+                    workload_ops_per_sec: workload_tput,
+                    size_ops_per_sec: size_tput,
+                    arbiter_rounds: stats.rounds,
+                    arbiter_adoptions: stats.adoptions,
+                    arbiter_recent_hits: stats.recent_hits,
+                    daemon_rounds: stats.daemon_rounds,
+                    fallbacks: stats.fallbacks,
+                    retry_budget: stats.retry_budget,
+                });
+                table.row(&[
+                    kind.label().to_string(),
+                    shards.to_string(),
+                    refresh_us.to_string(),
+                    fmt_rate(workload_tput),
+                    fmt_rate(size_tput),
+                    stats.daemon_rounds.to_string(),
+                    stats.fallbacks.to_string(),
+                    stats.retry_budget.to_string(),
+                ]);
+            }
         }
     }
     table.print();

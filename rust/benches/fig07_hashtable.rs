@@ -5,7 +5,7 @@
 //! thread ladder; reports baseline vs transformed throughput and the ratio
 //! (the paper observes ratios of 80–99%).
 
-use concurrent_size::bench_util::{overhead_figure, BenchScale};
+use concurrent_size::bench_util::{BenchScale, overhead_figure};
 use concurrent_size::cli::Args;
 use concurrent_size::hashtable::HashTableSet;
 use concurrent_size::set_api::ConcurrentSet;

@@ -1,7 +1,7 @@
 //! Figure 8 reproduction: overhead of the size mechanism on BST operations
 //! (paper Section 9, Fig. 8). Same grid as Figure 7.
 
-use concurrent_size::bench_util::{overhead_figure, BenchScale};
+use concurrent_size::bench_util::{BenchScale, overhead_figure};
 use concurrent_size::bst::BstSet;
 use concurrent_size::cli::Args;
 use concurrent_size::set_api::ConcurrentSet;

@@ -1,7 +1,7 @@
 //! Figure 9 reproduction: overhead of the size mechanism on skip-list
 //! operations (paper Section 9, Fig. 9). Same grid as Figure 7.
 
-use concurrent_size::bench_util::{overhead_figure, BenchScale};
+use concurrent_size::bench_util::{BenchScale, overhead_figure};
 use concurrent_size::cli::Args;
 use concurrent_size::set_api::ConcurrentSet;
 use concurrent_size::size::{LinearizableSize, NoSize};

@@ -9,7 +9,7 @@
 //! Setup (scaled): 1 size thread + `--workload-threads` workload threads,
 //! per the paper's "one size thread and 31 workload threads".
 
-use concurrent_size::bench_util::{measure_size_tput, BenchScale, MIXES};
+use concurrent_size::bench_util::{BenchScale, measure_size_tput, MIXES};
 use concurrent_size::bst::BstSet;
 use concurrent_size::cli::Args;
 use concurrent_size::hashtable::HashTableSet;

@@ -7,7 +7,7 @@
 //! reports SnapshotSkipList at ~1 size/s on 1M keys and quotes
 //! SizeSkipList ≥ 54806× SnapshotSkipList, SizeBST 83–60423× VcasBST-64.
 
-use concurrent_size::bench_util::{measure_size_tput, BenchScale, MIXES};
+use concurrent_size::bench_util::{BenchScale, measure_size_tput, MIXES};
 use concurrent_size::cli::Args;
 use concurrent_size::metrics::{fmt_rate, Table};
 use concurrent_size::set_api::ConcurrentSet;

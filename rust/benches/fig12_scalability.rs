@@ -6,7 +6,7 @@
 //! transformed structures, while the snapshot competitors sit orders of
 //! magnitude below.
 
-use concurrent_size::bench_util::{measure_size_tput, BenchScale, MIXES};
+use concurrent_size::bench_util::{BenchScale, measure_size_tput, MIXES};
 use concurrent_size::bst::BstSet;
 use concurrent_size::cli::Args;
 use concurrent_size::hashtable::HashTableSet;

@@ -15,13 +15,13 @@ use std::time::Duration;
 
 use crate::bst::BstSet;
 use crate::cli::{Args, PolicyKind};
-use crate::harness::{run, Repeat, RunConfig};
+use crate::harness::{Repeat, run, RunConfig};
 use crate::hashtable::HashTableSet;
 use crate::list::LinkedListSet;
 use crate::metrics::{fmt_rate, Stats, Table};
 use crate::set_api::ConcurrentSet;
 use crate::size::{
-    HandshakeSize, LinearizableSize, LockSize, NaiveSize, NoSize, OptimisticSize,
+    HandshakeSize, LinearizableSize, LockSize, NaiveSize, NoSize, OptimisticSize, SizeOpts,
 };
 use crate::skiplist::SkipListSet;
 use crate::workload::{self, key_range, Mix, READ_HEAVY, UPDATE_HEAVY};
@@ -80,44 +80,58 @@ pub const STRUCTURES: [&str; 4] = ["hashtable", "skiplist", "bst", "list"];
 /// Build `structure` instantiated with `policy` — the one factory behind
 /// `csize bench`, the ablation benches and `kv_server`, so every surface
 /// speaks the same six-policy vocabulary. `expected` sizes the hash table;
-/// `None` for an unknown structure name.
+/// `None` for an unknown structure name. Uses the default [`SizeOpts`]
+/// (sharded mirror off); see [`make_set_opts`] for the tuned variant.
 pub fn make_set(
     structure: &str,
     policy: PolicyKind,
     expected: usize,
 ) -> Option<Box<dyn ConcurrentSet>> {
+    make_set_opts(structure, policy, expected, SizeOpts::default())
+}
+
+/// [`make_set`] with explicit [`SizeOpts`] — the path CLI surfaces use to
+/// thread `--size-shards` (and the `ablation_opts` toggles) into any
+/// structure/policy combination.
+pub fn make_set_opts(
+    structure: &str,
+    policy: PolicyKind,
+    expected: usize,
+    opts: SizeOpts,
+) -> Option<Box<dyn ConcurrentSet>> {
     use PolicyKind::*;
+    let t = MAX_THREADS;
     Some(match (structure, policy) {
-        ("hashtable", Baseline) => Box::new(HashTableSet::<NoSize>::new(MAX_THREADS, expected)),
+        ("hashtable", Baseline) => Box::new(HashTableSet::<NoSize>::with_opts(t, expected, opts)),
         ("hashtable", Linearizable) => {
-            Box::new(HashTableSet::<LinearizableSize>::new(MAX_THREADS, expected))
+            Box::new(HashTableSet::<LinearizableSize>::with_opts(t, expected, opts))
         }
-        ("hashtable", Naive) => Box::new(HashTableSet::<NaiveSize>::new(MAX_THREADS, expected)),
-        ("hashtable", Lock) => Box::new(HashTableSet::<LockSize>::new(MAX_THREADS, expected)),
+        ("hashtable", Naive) => Box::new(HashTableSet::<NaiveSize>::with_opts(t, expected, opts)),
+        ("hashtable", Lock) => Box::new(HashTableSet::<LockSize>::with_opts(t, expected, opts)),
         ("hashtable", Handshake) => {
-            Box::new(HashTableSet::<HandshakeSize>::new(MAX_THREADS, expected))
+            Box::new(HashTableSet::<HandshakeSize>::with_opts(t, expected, opts))
         }
         ("hashtable", Optimistic) => {
-            Box::new(HashTableSet::<OptimisticSize>::new(MAX_THREADS, expected))
+            Box::new(HashTableSet::<OptimisticSize>::with_opts(t, expected, opts))
         }
-        ("skiplist", Baseline) => Box::new(SkipListSet::<NoSize>::new(MAX_THREADS)),
-        ("skiplist", Linearizable) => Box::new(SkipListSet::<LinearizableSize>::new(MAX_THREADS)),
-        ("skiplist", Naive) => Box::new(SkipListSet::<NaiveSize>::new(MAX_THREADS)),
-        ("skiplist", Lock) => Box::new(SkipListSet::<LockSize>::new(MAX_THREADS)),
-        ("skiplist", Handshake) => Box::new(SkipListSet::<HandshakeSize>::new(MAX_THREADS)),
-        ("skiplist", Optimistic) => Box::new(SkipListSet::<OptimisticSize>::new(MAX_THREADS)),
-        ("bst", Baseline) => Box::new(BstSet::<NoSize>::new(MAX_THREADS)),
-        ("bst", Linearizable) => Box::new(BstSet::<LinearizableSize>::new(MAX_THREADS)),
-        ("bst", Naive) => Box::new(BstSet::<NaiveSize>::new(MAX_THREADS)),
-        ("bst", Lock) => Box::new(BstSet::<LockSize>::new(MAX_THREADS)),
-        ("bst", Handshake) => Box::new(BstSet::<HandshakeSize>::new(MAX_THREADS)),
-        ("bst", Optimistic) => Box::new(BstSet::<OptimisticSize>::new(MAX_THREADS)),
-        ("list", Baseline) => Box::new(LinkedListSet::<NoSize>::new(MAX_THREADS)),
-        ("list", Linearizable) => Box::new(LinkedListSet::<LinearizableSize>::new(MAX_THREADS)),
-        ("list", Naive) => Box::new(LinkedListSet::<NaiveSize>::new(MAX_THREADS)),
-        ("list", Lock) => Box::new(LinkedListSet::<LockSize>::new(MAX_THREADS)),
-        ("list", Handshake) => Box::new(LinkedListSet::<HandshakeSize>::new(MAX_THREADS)),
-        ("list", Optimistic) => Box::new(LinkedListSet::<OptimisticSize>::new(MAX_THREADS)),
+        ("skiplist", Baseline) => Box::new(SkipListSet::<NoSize>::with_opts(t, opts)),
+        ("skiplist", Linearizable) => Box::new(SkipListSet::<LinearizableSize>::with_opts(t, opts)),
+        ("skiplist", Naive) => Box::new(SkipListSet::<NaiveSize>::with_opts(t, opts)),
+        ("skiplist", Lock) => Box::new(SkipListSet::<LockSize>::with_opts(t, opts)),
+        ("skiplist", Handshake) => Box::new(SkipListSet::<HandshakeSize>::with_opts(t, opts)),
+        ("skiplist", Optimistic) => Box::new(SkipListSet::<OptimisticSize>::with_opts(t, opts)),
+        ("bst", Baseline) => Box::new(BstSet::<NoSize>::with_opts(t, opts)),
+        ("bst", Linearizable) => Box::new(BstSet::<LinearizableSize>::with_opts(t, opts)),
+        ("bst", Naive) => Box::new(BstSet::<NaiveSize>::with_opts(t, opts)),
+        ("bst", Lock) => Box::new(BstSet::<LockSize>::with_opts(t, opts)),
+        ("bst", Handshake) => Box::new(BstSet::<HandshakeSize>::with_opts(t, opts)),
+        ("bst", Optimistic) => Box::new(BstSet::<OptimisticSize>::with_opts(t, opts)),
+        ("list", Baseline) => Box::new(LinkedListSet::<NoSize>::with_opts(t, opts)),
+        ("list", Linearizable) => Box::new(LinkedListSet::<LinearizableSize>::with_opts(t, opts)),
+        ("list", Naive) => Box::new(LinkedListSet::<NaiveSize>::with_opts(t, opts)),
+        ("list", Lock) => Box::new(LinkedListSet::<LockSize>::with_opts(t, opts)),
+        ("list", Handshake) => Box::new(LinkedListSet::<HandshakeSize>::with_opts(t, opts)),
+        ("list", Optimistic) => Box::new(LinkedListSet::<OptimisticSize>::with_opts(t, opts)),
         _ => return None,
     })
 }
@@ -177,25 +191,22 @@ mod tests {
                     .unwrap_or_else(|| panic!("no factory for {structure}/{policy:?}"));
                 assert!(set.insert(7), "{structure}/{policy:?} insert");
                 assert!(set.contains(7));
-                match policy.provides_size() {
-                    true => {
-                        assert_eq!(set.size(), Some(1), "{structure}/{policy:?}");
-                        assert_eq!(
-                            set.size_exact().map(|v| v.value),
-                            Some(1),
-                            "{structure}/{policy:?} size_exact"
-                        );
-                        assert_eq!(
-                            set.size_recent(std::time::Duration::from_secs(1))
-                                .map(|v| v.value),
-                            Some(1),
-                            "{structure}/{policy:?} size_recent"
-                        );
-                    }
-                    false => {
-                        assert_eq!(set.size(), None, "{structure}/{policy:?}");
-                        assert_eq!(set.size_exact(), None, "{structure}/{policy:?}");
-                    }
+                if policy.provides_size() {
+                    assert_eq!(set.size(), Some(1), "{structure}/{policy:?}");
+                    assert_eq!(
+                        set.size_exact().map(|v| v.value),
+                        Some(1),
+                        "{structure}/{policy:?} size_exact"
+                    );
+                    assert_eq!(
+                        set.size_recent(std::time::Duration::from_secs(1))
+                            .map(|v| v.value),
+                        Some(1),
+                        "{structure}/{policy:?} size_recent"
+                    );
+                } else {
+                    assert_eq!(set.size(), None, "{structure}/{policy:?}");
+                    assert_eq!(set.size_exact(), None, "{structure}/{policy:?}");
                 }
                 assert!(
                     set.size_stats().is_some(),
@@ -204,6 +215,36 @@ mod tests {
             }
         }
         assert!(make_set("btree", PolicyKind::Baseline, 0).is_none());
+    }
+
+    #[test]
+    fn opts_factory_threads_the_sharded_mirror() {
+        for structure in STRUCTURES {
+            for (policy, mirrored) in [
+                (PolicyKind::Linearizable, true),
+                (PolicyKind::Optimistic, true),
+                (PolicyKind::Handshake, false), // no calculator => no mirror
+            ] {
+                let opts = SizeOpts::default().with_shards(2);
+                let set = make_set_opts(structure, policy, 64, opts).unwrap();
+                for k in 1..=5u64 {
+                    set.insert(k);
+                }
+                if mirrored {
+                    assert_eq!(
+                        set.size_estimate(),
+                        Some(5),
+                        "{structure}/{policy:?} estimate at quiescence"
+                    );
+                } else {
+                    assert_eq!(set.size_estimate(), None, "{structure}/{policy:?}");
+                }
+                // Default opts keep the mirror off everywhere.
+                let plain = make_set(structure, policy, 64).unwrap();
+                plain.insert(1);
+                assert_eq!(plain.size_estimate(), None, "{structure}/{policy:?}");
+            }
+        }
     }
 }
 

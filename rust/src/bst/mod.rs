@@ -19,10 +19,11 @@
 //! linearization point before treating the key as absent.
 
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Arc;
 
 use crate::ebr;
 use crate::set_api::ConcurrentSet;
-use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
+use crate::size::{RefresherSlot, SizeArbiter, SizeCore, SizeOpts, SizePolicy};
 use crate::thread_id;
 
 /// Sentinel keys (Ellen et al.'s ∞1 < ∞2). Application keys must be
@@ -120,9 +121,10 @@ struct SearchResult<P: SizePolicy> {
 
 pub struct BstSet<P: SizePolicy> {
     root: *mut BstNode<P>,
-    policy: P,
+    /// Policy + arbiter, shared with the optional refresher daemon.
+    core: Arc<SizeCore<P>>,
     graveyard: Graveyard,
-    arbiter: SizeArbiter,
+    refresher: RefresherSlot,
 }
 
 unsafe impl<P: SizePolicy> Send for BstSet<P> {}
@@ -142,19 +144,19 @@ impl<P: SizePolicy> BstSet<P> {
         let l2 = BstNode::<P>::leaf(INF2);
         Self {
             root: BstNode::<P>::internal(INF2, l1 as u64, l2 as u64),
-            policy,
+            core: Arc::new(SizeCore::new(policy)),
             graveyard: Graveyard::new(),
-            arbiter: SizeArbiter::new(),
+            refresher: RefresherSlot::new(),
         }
     }
 
     pub fn policy(&self) -> &P {
-        &self.policy
+        &self.core.policy
     }
 
     /// The combining size arbiter behind `size_exact` / `size_recent`.
     pub fn arbiter(&self) -> &SizeArbiter {
-        &self.arbiter
+        &self.core.arbiter
     }
 
     /// Ellen et al. Search: returns gparent/parent/leaf and the update
@@ -273,7 +275,7 @@ impl<P: SizePolicy> BstSet<P> {
     fn help_marked(&self, info: *mut Info<P>) {
         let d = unsafe { &*info };
         if P::TRACKED {
-            self.policy.commit_delete(d.packed_delete);
+            self.core.policy.commit_delete(d.packed_delete);
         }
         let p = unsafe { &*d.parent };
         let l = d.leaf as u64;
@@ -375,10 +377,10 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
     fn insert(&self, k: u64) -> bool {
         debug_assert!(k <= BST_MAX_KEY);
         let _guard = ebr::pin();
-        let _op = self.policy.enter();
+        let _op = self.core.policy.enter();
         let tid = thread_id::current();
 
-        let packed = self.policy.begin_insert(tid);
+        let packed = self.core.policy.begin_insert(tid);
         let mut new_leaf: *mut BstNode<P> = std::ptr::null_mut();
         let mut new_internal: *mut BstNode<P> = std::ptr::null_mut();
 
@@ -390,12 +392,12 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
                 // in which case help it finish, then retry (Fig. 3 ll.19-21).
                 if let Some(dpacked) = Self::marked_delete_of(s.pupdate, s.leaf) {
                     if P::TRACKED {
-                        self.policy.commit_delete(dpacked);
+                        self.core.policy.commit_delete(dpacked);
                     }
                     self.help(s.pupdate);
                     continue;
                 }
-                self.policy.help_insert(&l.insert_info); // Fig. 3 ll.17-18
+                self.core.policy.help_insert(&l.insert_info); // Fig. 3 ll.17-18
                 unsafe { free_unpublished(new_leaf, new_internal) };
                 return false;
             }
@@ -438,7 +440,8 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
                     self.help_insert_op(info);
                     // Original linearization (ichild) passed: reach the new
                     // linearization point (Fig. 3 line 25).
-                    self.policy
+                    self.core
+                        .policy
                         .commit_insert(unsafe { &(*new_leaf).insert_info }, packed);
                     return true;
                 }
@@ -452,10 +455,10 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
 
     fn delete(&self, k: u64) -> bool {
         let _guard = ebr::pin();
-        let _op = self.policy.enter();
+        let _op = self.core.policy.enter();
         let tid = thread_id::current();
 
-        let packed = self.policy.begin_delete(tid);
+        let packed = self.core.policy.begin_delete(tid);
 
         loop {
             let s = self.search(k);
@@ -464,12 +467,12 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
                 return false; // Fig. 3 line 29
             }
             // Fig. 3 line 33: ensure the found node's insert is linearized.
-            self.policy.help_insert(&l.insert_info);
+            self.core.policy.help_insert(&l.insert_info);
             // Found but already logically deleted (marked): help its
             // metadata, fail (Fig. 3 ll.30-32).
             if let Some(dpacked) = Self::marked_delete_of(s.pupdate, s.leaf) {
                 if P::TRACKED {
-                    self.policy.commit_delete(dpacked);
+                    self.core.policy.commit_delete(dpacked);
                 }
                 return false;
             }
@@ -503,7 +506,7 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
                     self.park_info(s.gpupdate);
                     if self.help_delete_op(info) {
                         if !P::TRACKED {
-                            self.policy.commit_delete(0); // naive/lock bump
+                            self.core.policy.commit_delete(0); // naive/lock bump
                         }
                         return true;
                     }
@@ -519,7 +522,7 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
 
     fn contains(&self, k: u64) -> bool {
         let _guard = ebr::pin();
-        let _op = self.policy.enter_read();
+        let _op = self.core.policy.enter_read();
 
         let s = self.search(k);
         let l = unsafe { &*s.leaf };
@@ -530,35 +533,21 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
             // Logically deleted under the adapted linearization: help its
             // metadata before reporting absence (Fig. 3 ll.12-13).
             if P::TRACKED {
-                self.policy.commit_delete(dpacked);
+                self.core.policy.commit_delete(dpacked);
             }
             return false;
         }
-        self.policy.help_insert(&l.insert_info); // Fig. 3 ll.9-10
+        self.core.policy.help_insert(&l.insert_info); // Fig. 3 ll.9-10
         true
     }
 
-    fn size(&self) -> Option<i64> {
-        self.policy.size()
-    }
+    crate::size::impl_size_surface!();
 
     fn name(&self) -> String {
         format!(
             "BST<{}>",
             std::any::type_name::<P>().rsplit("::").next().unwrap()
         )
-    }
-
-    fn size_exact(&self) -> Option<crate::size::SizeView> {
-        self.arbiter.exact_for(&self.policy)
-    }
-
-    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
-        self.arbiter.recent_for(&self.policy, max_staleness)
-    }
-
-    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
-        Some(self.arbiter.stats())
     }
 }
 

@@ -81,27 +81,35 @@ impl PolicyKind {
     }
 }
 
-/// The three ways a size thread (or server endpoint) can read the size,
+/// The four ways a size thread (or server endpoint) can read the size,
 /// selectable via `--size-call` on `csize bench` and the ablation bench:
-/// the policy's raw `size()`, the arbiter's combining `size_exact()`, or
-/// the published bounded-staleness `size_recent()`.
+/// the policy's raw `size()`, the arbiter's combining `size_exact()`, the
+/// published bounded-staleness `size_recent()`, or `refresh` — the same
+/// `size_recent()` with a background [`crate::size::SizeRefresher`]
+/// keeping the publication warm, so reads are passive.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SizeCallKind {
     Raw,
     Exact,
     Recent,
+    Refresh,
 }
 
 impl SizeCallKind {
     /// Every call kind, in ablation-report order.
-    pub const ALL: [SizeCallKind; 3] =
-        [SizeCallKind::Raw, SizeCallKind::Exact, SizeCallKind::Recent];
+    pub const ALL: [SizeCallKind; 4] = [
+        SizeCallKind::Raw,
+        SizeCallKind::Exact,
+        SizeCallKind::Recent,
+        SizeCallKind::Refresh,
+    ];
 
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "raw" => SizeCallKind::Raw,
             "exact" => SizeCallKind::Exact,
             "recent" => SizeCallKind::Recent,
+            "refresh" => SizeCallKind::Refresh,
             _ => return None,
         })
     }
@@ -111,6 +119,7 @@ impl SizeCallKind {
             SizeCallKind::Raw => "raw",
             SizeCallKind::Exact => "exact",
             SizeCallKind::Recent => "recent",
+            SizeCallKind::Refresh => "refresh",
         }
     }
 }
@@ -189,6 +198,20 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// The `--size-shards` convention shared by every CLI surface:
+    /// absent → `default` stripes, `auto` → machine-detected
+    /// ([`crate::size::detect_shards`]), `0` → mirror disabled, `N` → `N`
+    /// stripes. Pass `0` as `default` to keep the mirror off unless asked.
+    pub fn size_shards(&self, default: usize) -> usize {
+        match self.get("size-shards") {
+            None => default,
+            Some("auto") => crate::size::detect_shards(),
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--size-shards expects an integer or 'auto', got {v:?}")
+            }),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -258,6 +281,22 @@ mod tests {
             assert_eq!(SizeCallKind::parse(kind.label()), Some(kind));
         }
         assert_eq!(SizeCallKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn size_shards_spellings() {
+        assert_eq!(args("b").size_shards(0), 0);
+        assert_eq!(args("b").size_shards(4), 4);
+        assert_eq!(args("b --size-shards 6").size_shards(0), 6);
+        assert_eq!(args("b --size-shards 0").size_shards(4), 0);
+        let auto = args("b --size-shards auto").size_shards(0);
+        assert!((1..=crate::MAX_THREADS).contains(&auto));
+    }
+
+    #[test]
+    #[should_panic(expected = "--size-shards expects an integer or 'auto'")]
+    fn size_shards_rejects_garbage() {
+        args("b --size-shards many").size_shards(0);
     }
 
     #[test]

@@ -23,16 +23,22 @@ pub enum SizeCall {
     Exact,
     /// Published wait-free `size_recent` under the given staleness bound.
     Recent(Duration),
+    /// `size_recent` under the given bound **with a background
+    /// `SizeRefresher`** keeping the publication warm — [`run`] starts a
+    /// daemon (period [`RunConfig::refresh_period`], default half the
+    /// bound) for the duration of the run, so size threads read passively.
+    Refresh(Duration),
 }
 
 impl SizeCall {
-    /// Build from the CLI spelling plus the staleness `Recent` should use
-    /// (the single conversion point for every CLI surface).
+    /// Build from the CLI spelling plus the staleness `Recent`/`Refresh`
+    /// should use (the single conversion point for every CLI surface).
     pub fn from_kind(kind: SizeCallKind, staleness: Duration) -> Self {
         match kind {
             SizeCallKind::Raw => SizeCall::Raw,
             SizeCallKind::Exact => SizeCall::Exact,
             SizeCallKind::Recent => SizeCall::Recent(staleness),
+            SizeCallKind::Refresh => SizeCall::Refresh(staleness),
         }
     }
 
@@ -42,6 +48,7 @@ impl SizeCall {
             SizeCall::Raw => SizeCallKind::Raw,
             SizeCall::Exact => SizeCallKind::Exact,
             SizeCall::Recent(_) => SizeCallKind::Recent,
+            SizeCall::Refresh(_) => SizeCallKind::Refresh,
         }
     }
 
@@ -65,6 +72,10 @@ pub struct RunConfig {
     pub per_type_timing: bool,
     /// Which size path the size threads drive.
     pub size_call: SizeCall,
+    /// Explicit `SizeRefresher` period for the run. `None` + a
+    /// [`SizeCall::Refresh`] call derives half its staleness bound; `None`
+    /// otherwise runs no daemon.
+    pub refresh_period: Option<Duration>,
 }
 
 impl RunConfig {
@@ -78,7 +89,17 @@ impl RunConfig {
             seed: 0xBEEF,
             per_type_timing: false,
             size_call: SizeCall::Raw,
+            refresh_period: None,
         }
+    }
+
+    /// The daemon period this config implies (see
+    /// [`Self::refresh_period`]); `None` means no daemon.
+    pub fn effective_refresh_period(&self) -> Option<Duration> {
+        self.refresh_period.or(match self.size_call {
+            SizeCall::Refresh(staleness) => Some(staleness / 2),
+            _ => None,
+        })
     }
 }
 
@@ -115,9 +136,16 @@ impl RunResult {
     }
 }
 
-/// One timed run over `set`.
+/// One timed run over `set`. A config implying a refresh daemon (see
+/// [`RunConfig::effective_refresh_period`]) starts the structure's
+/// `SizeRefresher` for the duration of the run and stops it before
+/// returning.
 pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
     let stop = AtomicBool::new(false);
+    let refresh = cfg.effective_refresh_period();
+    if let Some(period) = refresh {
+        set.set_refresh_period(Some(period));
+    }
     let start = Instant::now();
     let mut result = RunResult::default();
 
@@ -168,7 +196,9 @@ pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
                     let s = match size_call {
                         SizeCall::Raw => set.size(),
                         SizeCall::Exact => set.size_exact().map(|v| v.value),
-                        SizeCall::Recent(bound) => set.size_recent(bound).map(|v| v.value),
+                        SizeCall::Recent(bound) | SizeCall::Refresh(bound) => {
+                            set.size_recent(bound).map(|v| v.value)
+                        }
                     }
                     .expect("size thread on a size-less structure");
                     debug_assert!(s >= 0, "linearizable size went negative");
@@ -193,6 +223,9 @@ pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
     });
 
     result.elapsed = start.elapsed();
+    if refresh.is_some() {
+        set.set_refresh_period(None); // joins the daemon before returning
+    }
     result
 }
 
@@ -316,6 +349,48 @@ mod tests {
             let stats = set.size_stats().expect("arbitrated structure");
             assert!(stats.rounds > 0, "{call:?} never collected");
         }
+    }
+
+    #[test]
+    fn run_drives_refresh_mode_with_a_daemon() {
+        // `refresh` size calls must be served overwhelmingly by the
+        // daemon's publications: recent hits dominate, and daemon rounds
+        // are recorded. The daemon must also be gone when run() returns.
+        use crate::cli::PolicyKind;
+        let set = crate::bench_util::make_set("hashtable", PolicyKind::Optimistic, 512).unwrap();
+        workload::prefill(set.as_ref(), 512, key_range(512, UPDATE_HEAVY), 3);
+        let mut cfg = quick_cfg(2, 2);
+        cfg.size_call = SizeCall::Refresh(Duration::from_millis(5));
+        cfg.duration = Duration::from_millis(150);
+        let res = run(set.as_ref(), &cfg);
+        assert!(res.workload_ops > 0);
+        assert!(res.size_ops > 0);
+        let stats = set.size_stats().unwrap();
+        assert!(stats.daemon_rounds > 0, "daemon never drove a round");
+        assert!(stats.recent_hits > 0, "published reads never hit");
+        let rounds = stats.daemon_rounds;
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(
+            set.size_stats().unwrap().daemon_rounds,
+            rounds,
+            "daemon still running after run() returned"
+        );
+    }
+
+    #[test]
+    fn effective_refresh_period_derivation() {
+        let mut cfg = quick_cfg(1, 1);
+        assert_eq!(cfg.effective_refresh_period(), None);
+        cfg.size_call = SizeCall::Refresh(Duration::from_millis(4));
+        assert_eq!(
+            cfg.effective_refresh_period(),
+            Some(Duration::from_millis(2))
+        );
+        cfg.refresh_period = Some(Duration::from_millis(7));
+        assert_eq!(
+            cfg.effective_refresh_period(),
+            Some(Duration::from_millis(7))
+        );
     }
 
     #[test]

@@ -7,10 +7,11 @@
 //! table — the metadata is per *thread*, not per bucket (paper Section 5).
 
 use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
 
 use crate::list;
 use crate::set_api::ConcurrentSet;
-use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
+use crate::size::{RefresherSlot, SizeArbiter, SizeCore, SizeOpts, SizePolicy};
 
 /// Fibonacci multiplicative hash: spreads sequential keys across buckets.
 #[inline]
@@ -21,8 +22,9 @@ fn spread(k: u64) -> u64 {
 pub struct HashTableSet<P: SizePolicy> {
     buckets: Box<[AtomicU64]>,
     mask: u64,
-    policy: P,
-    arbiter: SizeArbiter,
+    /// Policy + arbiter, shared with the optional refresher daemon.
+    core: Arc<SizeCore<P>>,
+    refresher: RefresherSlot,
 }
 
 unsafe impl<P: SizePolicy> Send for HashTableSet<P> {}
@@ -44,8 +46,8 @@ impl<P: SizePolicy> HashTableSet<P> {
         Self {
             buckets: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
             mask: capacity as u64 - 1,
-            policy,
-            arbiter: SizeArbiter::new(),
+            core: Arc::new(SizeCore::new(policy)),
+            refresher: RefresherSlot::new(),
         }
     }
 
@@ -55,12 +57,12 @@ impl<P: SizePolicy> HashTableSet<P> {
     }
 
     pub fn policy(&self) -> &P {
-        &self.policy
+        &self.core.policy
     }
 
     /// The combining size arbiter behind `size_exact` / `size_recent`.
     pub fn arbiter(&self) -> &SizeArbiter {
-        &self.arbiter
+        &self.core.arbiter
     }
 
     pub fn capacity(&self) -> usize {
@@ -78,34 +80,22 @@ impl<P: SizePolicy> HashTableSet<P> {
 
 impl<P: SizePolicy> ConcurrentSet for HashTableSet<P> {
     fn insert(&self, k: u64) -> bool {
-        list::insert_at(&self.policy, self.bucket(k), k)
+        list::insert_at(&self.core.policy, self.bucket(k), k)
     }
     fn delete(&self, k: u64) -> bool {
-        list::delete_at(&self.policy, self.bucket(k), k)
+        list::delete_at(&self.core.policy, self.bucket(k), k)
     }
     fn contains(&self, k: u64) -> bool {
-        list::contains_at(&self.policy, self.bucket(k), k)
+        list::contains_at(&self.core.policy, self.bucket(k), k)
     }
-    fn size(&self) -> Option<i64> {
-        self.policy.size()
-    }
+
+    crate::size::impl_size_surface!();
+
     fn name(&self) -> String {
         format!(
             "HashTable<{}>",
             std::any::type_name::<P>().rsplit("::").next().unwrap()
         )
-    }
-
-    fn size_exact(&self) -> Option<crate::size::SizeView> {
-        self.arbiter.exact_for(&self.policy)
-    }
-
-    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
-        self.arbiter.recent_for(&self.policy, max_staleness)
-    }
-
-    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
-        Some(self.arbiter.stats())
     }
 }
 

@@ -14,6 +14,12 @@
 //! both with a pure-Rust oracle and, in the e2e example, through the
 //! AOT-compiled Pallas pipeline (`prefix_scan` / `history_stats`), which
 //! must agree bit-exactly.
+//!
+//! For *concurrent* histories — where commit order is unknowable — the
+//! [`monitor`] submodule generalizes the checker: timestamped op/size
+//! events with an interval-order justification bound per size call.
+
+pub mod monitor;
 
 use std::sync::Mutex;
 

@@ -1,0 +1,321 @@
+//! Online size-linearizability monitor: timestamped op/size histories
+//! with an interval-order justification check.
+//!
+//! The [`super::DeltaLog`] checker handles the degenerate case where one
+//! recording stream serializes every update: commit order *is*
+//! linearization order, so running prefix sums pin each size exactly.
+//! This module generalizes it to fully concurrent histories. Each update
+//! and each `size()` call is recorded with its invocation/response
+//! timestamps (one monotonic clock for all threads); a size return `v` is
+//! **justified** iff some linearization of the recorded history assigns
+//! the size call a point `t` inside its window at which the running size
+//! is `v`. Exhaustive linearization search is exponential, so the monitor
+//! checks the standard interval bound, which is a *necessary* condition —
+//! it never flags a legal history (no false positives), though an exotic
+//! illegal one could slip through:
+//!
+//! * every successful update whose response precedes the size call's
+//!   invocation must be counted (its linearization point is before any
+//!   `t` in the window);
+//! * an update whose invocation follows the size call's response cannot
+//!   be counted;
+//! * updates overlapping the window are free: any subset sum is
+//!   reachable because deltas are ±1;
+//! * and the set started empty, so no point can have a negative running
+//!   size — `v < 0` is never justified (the paper's Figure 2 anomaly).
+//!
+//! Hence `v` must lie in `[max(definite − overlapping deletes, 0),
+//! definite + overlapping inserts]`. With no concurrency the overlap
+//! sets are empty and the check collapses to the DeltaLog prefix sums.
+//!
+//! Bounded-staleness reads (`size_recent`) are checked by widening the
+//! window backward by the reported [`crate::size::SizeView::age`]
+//! ([`Monitor::commit_size_with_slack`]): the value was exact at some
+//! point at most `age` before the read, so justification is against the
+//! widened window.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One successful update: ±1 delta with its call window (nanoseconds
+/// since the monitor's origin).
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateEvent {
+    pub inv: u64,
+    pub resp: u64,
+    pub delta: i64,
+}
+
+/// One size observation with its (possibly slack-widened) call window.
+#[derive(Clone, Copy, Debug)]
+pub struct SizeEvent {
+    pub inv: u64,
+    pub resp: u64,
+    pub value: i64,
+}
+
+/// A size return no linearization of the recorded history justifies.
+#[derive(Clone, Copy, Debug)]
+pub struct Violation {
+    pub event: SizeEvent,
+    /// The justified range the value fell outside of.
+    pub low: i64,
+    pub high: i64,
+}
+
+/// Outcome of [`Monitor::verify`] / [`check`].
+#[derive(Debug, Default)]
+pub struct Report {
+    pub updates: usize,
+    pub sizes_checked: usize,
+    pub violations: Vec<Violation>,
+    /// Net delta of all recorded updates (the exact quiescent size when
+    /// the monitor saw every update).
+    pub final_net: i64,
+}
+
+impl Report {
+    pub fn is_ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// In-flight call handle: captures the invocation timestamp.
+#[derive(Clone, Copy, Debug)]
+pub struct Timer {
+    inv: u64,
+}
+
+/// Thread-safe history recorder (see module docs).
+pub struct Monitor {
+    origin: Instant,
+    updates: Mutex<Vec<UpdateEvent>>,
+    sizes: Mutex<Vec<SizeEvent>>,
+}
+
+impl Default for Monitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Monitor {
+    pub fn new() -> Self {
+        Self {
+            origin: Instant::now(),
+            updates: Mutex::new(Vec::new()),
+            sizes: Mutex::new(Vec::new()),
+        }
+    }
+
+    #[inline]
+    fn now(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    /// Stamp the invocation of an operation about to run.
+    #[inline]
+    pub fn begin(&self) -> Timer {
+        Timer { inv: self.now() }
+    }
+
+    /// Record a completed *successful* update (`delta` ±1). Failed
+    /// updates and `contains` don't move the size — don't record them.
+    pub fn commit_update(&self, timer: Timer, delta: i64) {
+        let resp = self.now();
+        self.updates.lock().unwrap().push(UpdateEvent {
+            inv: timer.inv,
+            resp,
+            delta,
+        });
+    }
+
+    /// Record a completed linearizable size observation.
+    pub fn commit_size(&self, timer: Timer, value: i64) {
+        self.commit_size_with_slack(timer, value, Duration::ZERO);
+    }
+
+    /// Record a size observation whose value may date back `slack`
+    /// before the invocation (a `size_recent` hit reports its `age`).
+    pub fn commit_size_with_slack(&self, timer: Timer, value: i64, slack: Duration) {
+        let resp = self.now();
+        let inv = timer.inv.saturating_sub(slack.as_nanos() as u64);
+        self.sizes.lock().unwrap().push(SizeEvent { inv, resp, value });
+    }
+
+    /// Check every recorded size observation against the recorded
+    /// updates (call after all recording threads joined).
+    pub fn verify(&self) -> Report {
+        let updates = self.updates.lock().unwrap();
+        let sizes = self.sizes.lock().unwrap();
+        check(&updates, &sizes)
+    }
+}
+
+/// Per-sign event times, sorted for binary search.
+struct SignIndex {
+    /// Response times of +1 (resp. −1) updates, sorted.
+    resp: Vec<u64>,
+    /// Invocation times, sorted.
+    inv: Vec<u64>,
+}
+
+impl SignIndex {
+    fn build(updates: &[UpdateEvent], sign: i64) -> Self {
+        let mut resp: Vec<u64> = updates
+            .iter()
+            .filter(|u| u.delta.signum() == sign)
+            .map(|u| u.resp)
+            .collect();
+        let mut inv: Vec<u64> = updates
+            .iter()
+            .filter(|u| u.delta.signum() == sign)
+            .map(|u| u.inv)
+            .collect();
+        resp.sort_unstable();
+        inv.sort_unstable();
+        Self { resp, inv }
+    }
+
+    /// Updates of this sign that definitely precede `t` (resp < t).
+    fn done_before(&self, t: u64) -> usize {
+        self.resp.partition_point(|&r| r < t)
+    }
+
+    /// Updates of this sign invoked at or before `t` (inv <= t).
+    fn started_by(&self, t: u64) -> usize {
+        self.inv.partition_point(|&i| i <= t)
+    }
+}
+
+/// The pure checking core behind [`Monitor::verify`] (separated so tests
+/// can feed synthetic histories).
+pub fn check(updates: &[UpdateEvent], sizes: &[SizeEvent]) -> Report {
+    debug_assert!(
+        updates.iter().all(|u| u.delta == 1 || u.delta == -1),
+        "monitor updates must be unit deltas"
+    );
+    let plus = SignIndex::build(updates, 1);
+    let minus = SignIndex::build(updates, -1);
+    let mut report = Report {
+        updates: updates.len(),
+        sizes_checked: sizes.len(),
+        final_net: plus.resp.len() as i64 - minus.resp.len() as i64,
+        violations: Vec::new(),
+    };
+    for &s in sizes {
+        let definite_plus = plus.done_before(s.inv);
+        let definite_minus = minus.done_before(s.inv);
+        let definite = definite_plus as i64 - definite_minus as i64;
+        // Overlapping = started by the response, not finished before the
+        // invocation. Equal timestamps count as overlap: the coarser the
+        // clock, the looser (never the stricter) the bound.
+        let overlap_plus = plus.started_by(s.resp) - definite_plus;
+        let overlap_minus = minus.started_by(s.resp) - definite_minus;
+        let low = (definite - overlap_minus as i64).max(0);
+        let high = definite + overlap_plus as i64;
+        if s.value < low || s.value > high {
+            report.violations.push(Violation {
+                event: s,
+                low,
+                high,
+            });
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn up(inv: u64, resp: u64, delta: i64) -> UpdateEvent {
+        UpdateEvent { inv, resp, delta }
+    }
+
+    fn sz(inv: u64, resp: u64, value: i64) -> SizeEvent {
+        SizeEvent { inv, resp, value }
+    }
+
+    #[test]
+    fn sequential_history_pins_exact_sizes() {
+        // Updates strictly before the size call: its value is forced.
+        let updates = [up(0, 1, 1), up(2, 3, 1), up(4, 5, -1)];
+        assert!(check(&updates, &[sz(10, 11, 1)]).is_ok());
+        for wrong in [0, 2, -1] {
+            let r = check(&updates, &[sz(10, 11, wrong)]);
+            assert_eq!(r.violations.len(), 1, "value {wrong} must be rejected");
+            assert_eq!((r.violations[0].low, r.violations[0].high), (1, 1));
+        }
+    }
+
+    #[test]
+    fn overlapping_updates_widen_the_range() {
+        // One insert done, one insert and one delete in flight.
+        let updates = [up(0, 1, 1), up(5, 20, 1), up(6, 21, -1)];
+        for fine in [0, 1, 2] {
+            assert!(check(&updates, &[sz(10, 11, fine)]).is_ok(), "size {fine}");
+        }
+        for wrong in [-1, 3] {
+            assert!(!check(&updates, &[sz(10, 11, wrong)]).is_ok(), "{wrong}");
+        }
+    }
+
+    #[test]
+    fn negative_sizes_are_never_justified() {
+        // Figure 2 shape: a delete's effect observed before its insert's.
+        let updates = [up(0, 30, 1), up(5, 25, -1)];
+        let r = check(&updates, &[sz(10, 12, -1)]);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].low, 0, "floor must clamp at empty-set");
+    }
+
+    #[test]
+    fn updates_after_the_window_cannot_count() {
+        let updates = [up(20, 21, 1)];
+        assert!(check(&updates, &[sz(5, 6, 0)]).is_ok());
+        assert!(!check(&updates, &[sz(5, 6, 1)]).is_ok());
+    }
+
+    #[test]
+    fn empty_history_accepts_only_zero() {
+        assert!(check(&[], &[sz(0, 1, 0)]).is_ok());
+        assert!(!check(&[], &[sz(0, 1, 1)]).is_ok());
+    }
+
+    #[test]
+    fn monitor_records_and_verifies_end_to_end() {
+        let m = Monitor::new();
+        let t = m.begin();
+        m.commit_update(t, 1);
+        let t = m.begin();
+        m.commit_update(t, 1);
+        let t = m.begin();
+        m.commit_size(t, 2);
+        let t = m.begin();
+        m.commit_update(t, -1);
+        let t = m.begin();
+        m.commit_size(t, 1);
+        let report = m.verify();
+        assert!(report.is_ok(), "{:?}", report.violations);
+        assert_eq!(report.updates, 3);
+        assert_eq!(report.sizes_checked, 2);
+        assert_eq!(report.final_net, 1);
+    }
+
+    #[test]
+    fn slack_widens_justification_backward() {
+        let m = Monitor::new();
+        let t = m.begin();
+        m.commit_update(t, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        // A stale read of 0 predating the insert: justified only with
+        // slack covering the insert's window.
+        let t = m.begin();
+        m.commit_size_with_slack(t, 0, Duration::from_secs(1));
+        assert!(m.verify().is_ok());
+        let t = m.begin();
+        m.commit_size(t, 0); // no slack: the insert is definite by now
+        assert!(!m.verify().is_ok());
+    }
+}

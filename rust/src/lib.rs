@@ -42,6 +42,23 @@
 //!   an age upper bound, and provenance). The size-heavy scenario of
 //!   `ablation_policies` quantifies both against raw per-caller `size()`
 //!   and records the sweep to `BENCH_ablation.json`.
+//!
+//!   The **size scale layer** sits alongside: [`size::ShardedCounters`]
+//!   (`sharded.rs`) is a striped cache-padded mirror of the metadata —
+//!   synced at the protocol's exactly-once counter-CAS point — whose
+//!   batched reconciliation collect serves O(shards) bounded-lag
+//!   estimates (`ConcurrentSet::size_estimate`, `--size-shards`, the
+//!   `kv_server` `SIZE?` probe); [`size::SizeRefresher`] (`refresher.rs`)
+//!   is an owned background daemon per structure that periodically
+//!   drives the arbiter's round (`ConcurrentSet::set_refresh_period`,
+//!   `--size-call refresh`, `kv_server --refresh-ms`) so `size_recent`
+//!   becomes a truly passive read, with join-on-drop shutdown; and
+//!   [`size::OptimisticSize`] auto-tunes its retry budget from observed
+//!   fallback rates (surfaced in [`size::ArbiterStats`]). The
+//!   `ablation_policies` `scale` scenario sweeps the shards ×
+//!   refresh-period grid. Concurrent histories are checked by the online
+//!   [`history::monitor`] (`rust/tests/linearizability.rs` runs it over
+//!   all six policies × four structures).
 //! * [`list`], [`hashtable`], [`skiplist`], [`bst`] — the evaluated data
 //!   structures, each generic over the size policy (paper Section 9).
 //! * [`snapshot`], [`vcas`] — the snapshot-based competitors

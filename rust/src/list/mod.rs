@@ -20,10 +20,11 @@
 //! Unlinked nodes are retired through [`crate::ebr`].
 
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Arc;
 
 use crate::ebr;
 use crate::set_api::{ConcurrentSet, MAX_KEY};
-use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
+use crate::size::{RefresherSlot, SizeArbiter, SizeCore, SizeOpts, SizePolicy};
 use crate::thread_id;
 
 const MARK: u64 = 1;
@@ -331,8 +332,9 @@ pub(crate) unsafe fn drop_chain<P: SizePolicy>(head: &AtomicU64) {
 /// Fig. 3; also the base structure of the hash table's buckets).
 pub struct LinkedListSet<P: SizePolicy> {
     head: AtomicU64,
-    policy: P,
-    arbiter: SizeArbiter,
+    /// Policy + arbiter, shared with the optional refresher daemon.
+    core: Arc<SizeCore<P>>,
+    refresher: RefresherSlot,
 }
 
 unsafe impl<P: SizePolicy> Send for LinkedListSet<P> {}
@@ -352,18 +354,18 @@ impl<P: SizePolicy> LinkedListSet<P> {
     pub fn with_policy(policy: P) -> Self {
         Self {
             head: AtomicU64::new(0),
-            policy,
-            arbiter: SizeArbiter::new(),
+            core: Arc::new(SizeCore::new(policy)),
+            refresher: RefresherSlot::new(),
         }
     }
 
     pub fn policy(&self) -> &P {
-        &self.policy
+        &self.core.policy
     }
 
     /// The combining size arbiter behind `size_exact` / `size_recent`.
     pub fn arbiter(&self) -> &SizeArbiter {
-        &self.arbiter
+        &self.core.arbiter
     }
 
     /// Quiescent full count (tests).
@@ -374,34 +376,22 @@ impl<P: SizePolicy> LinkedListSet<P> {
 
 impl<P: SizePolicy> ConcurrentSet for LinkedListSet<P> {
     fn insert(&self, k: u64) -> bool {
-        insert_at(&self.policy, &self.head, k)
+        insert_at(&self.core.policy, &self.head, k)
     }
     fn delete(&self, k: u64) -> bool {
-        delete_at(&self.policy, &self.head, k)
+        delete_at(&self.core.policy, &self.head, k)
     }
     fn contains(&self, k: u64) -> bool {
-        contains_at(&self.policy, &self.head, k)
+        contains_at(&self.core.policy, &self.head, k)
     }
-    fn size(&self) -> Option<i64> {
-        self.policy.size()
-    }
+
+    crate::size::impl_size_surface!();
+
     fn name(&self) -> String {
         format!(
             "LinkedList<{}>",
             std::any::type_name::<P>().rsplit("::").next().unwrap()
         )
-    }
-
-    fn size_exact(&self) -> Option<crate::size::SizeView> {
-        self.arbiter.exact_for(&self.policy)
-    }
-
-    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
-        self.arbiter.recent_for(&self.policy, max_staleness)
-    }
-
-    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
-        Some(self.arbiter.stats())
     }
 }
 

@@ -4,7 +4,9 @@
 //! * `demo`     — quick functional tour of every structure/policy combo.
 //! * `bench`    — one ad-hoc throughput run (`--structure`, `--policy`,
 //!   `--threads`, `--size-threads`, `--secs`, `--initial`, `--mix`,
-//!   `--size-call raw|exact|recent`, `--staleness-ms`).
+//!   `--size-call raw|exact|recent|refresh`, `--staleness-ms`,
+//!   `--refresh-ms` for an explicit daemon period, `--size-shards
+//!   auto|N` for the sharded counter mirror).
 //! * `analyze`  — run a workload with epoch sampling and push the samples
 //!   through the AOT-compiled Pallas pipeline (PJRT).
 //! * `verify`   — anomaly hunt: show the naive policy violating
@@ -26,12 +28,17 @@ use concurrent_size::skiplist::SkipListSet;
 use concurrent_size::snapshot::SnapshotSkipList;
 use concurrent_size::vcas::VcasSet;
 use concurrent_size::workload::{self, key_range, Mix, READ_HEAVY, UPDATE_HEAVY};
-use concurrent_size::{analytics, runtime, MAX_THREADS};
+use concurrent_size::{analytics, MAX_THREADS, runtime};
 
-fn make_set(structure: &str, policy: &str, initial: usize) -> Box<dyn ConcurrentSet> {
+fn make_set(
+    structure: &str,
+    policy: &str,
+    initial: usize,
+    opts: concurrent_size::size::SizeOpts,
+) -> Box<dyn ConcurrentSet> {
     // Snapshot-based competitors carry their own size mechanism and ignore
     // the policy; everything else goes through the shared six-policy
-    // factory (`bench_util::make_set`).
+    // factory (`bench_util::make_set_opts`).
     match structure {
         "snapshot-skiplist" => return Box::new(SnapshotSkipList::new(MAX_THREADS)),
         "vcas" => return Box::new(VcasSet::new(MAX_THREADS, initial)),
@@ -43,7 +50,7 @@ fn make_set(structure: &str, policy: &str, initial: usize) -> Box<dyn Concurrent
         );
         std::process::exit(2);
     };
-    match bench_util::make_set(structure, kind, initial) {
+    match bench_util::make_set_opts(structure, kind, initial, opts) {
         Some(set) => set,
         None => {
             eprintln!(
@@ -76,7 +83,7 @@ fn cmd_demo() {
         "snapshot-skiplist",
         "vcas",
     ] {
-        let set = make_set(structure, "size", 1024);
+        let set = make_set(structure, "size", 1024, Default::default());
         for k in 1..=100u64 {
             set.insert(k);
         }
@@ -92,7 +99,7 @@ fn cmd_demo() {
     }
     println!("\n-- size policies (hash table) --");
     for kind in PolicyKind::ALL {
-        let set = make_set("hashtable", kind.label(), 1024);
+        let set = make_set("hashtable", kind.label(), 1024, Default::default());
         for k in 1..=100u64 {
             set.insert(k);
         }
@@ -126,15 +133,17 @@ fn cmd_bench(args: &Args) {
     let secs = args.get_f64("secs", 2.0);
     let call_spelling = args.get("size-call").unwrap_or("raw");
     let Some(call_kind) = SizeCallKind::parse(call_spelling) else {
-        eprintln!("unknown --size-call {call_spelling:?} (use raw|exact|recent)");
+        eprintln!("unknown --size-call {call_spelling:?} (use raw|exact|recent|refresh)");
         std::process::exit(2);
     };
     let size_call = SizeCall::from_kind(
         call_kind,
         Duration::from_millis(args.get_u64("staleness-ms", 1)),
     );
+    let refresh_ms = args.get_f64("refresh-ms", 0.0);
+    let opts = concurrent_size::size::SizeOpts::default().with_shards(args.size_shards(0));
 
-    let set = make_set(&structure, &policy, initial);
+    let set = make_set(&structure, &policy, initial, opts);
     let range = key_range(initial as u64, mix);
     println!(
         "prefilling {} with {initial} keys (range [1,{range}])...",
@@ -147,6 +156,9 @@ fn cmd_bench(args: &Args) {
     let mut cfg = RunConfig::new(w, size_threads, mix, range);
     cfg.duration = Duration::from_secs_f64(secs);
     cfg.size_call = size_call;
+    if refresh_ms > 0.0 {
+        cfg.refresh_period = Some(Duration::from_secs_f64(refresh_ms / 1e3));
+    }
     let res = run(set.as_ref(), &cfg);
     println!(
         "{:<24} mix={} w={w} s={} call={} -> workload {} ops/s, size {} ops/s",
@@ -160,10 +172,24 @@ fn cmd_bench(args: &Args) {
     if let Some(stats) = set.size_stats() {
         if stats.rounds + stats.recent_hits > 0 {
             println!(
-                "arbiter: {} rounds, {} adopted, {} recent hits, {} refreshes",
-                stats.rounds, stats.adoptions, stats.recent_hits, stats.recent_refreshes
+                "arbiter: {} rounds ({} daemon-driven), {} adopted, {} recent hits, \
+                 {} refreshes",
+                stats.rounds,
+                stats.daemon_rounds,
+                stats.adoptions,
+                stats.recent_hits,
+                stats.recent_refreshes
             );
         }
+        if stats.retry_budget > 0 {
+            println!(
+                "optimistic tuning: budget {} after {} fallbacks",
+                stats.retry_budget, stats.fallbacks
+            );
+        }
+    }
+    if let Some(estimate) = set.size_estimate() {
+        println!("sharded estimate at quiescence: {estimate}");
     }
 }
 

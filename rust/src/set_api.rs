@@ -54,6 +54,26 @@ pub trait ConcurrentSet: Send + Sync {
         self.size_exact()
     }
 
+    /// O(shards) bounded-lag size estimate from the policy's sharded
+    /// counter mirror: the cheapest probe the structure offers, **not**
+    /// linearizable (it may trail the exact size by the number of
+    /// in-flight operations; exact at quiescence). `None` when the policy
+    /// has no calculator or the mirror is disabled (`SizeOpts::shards`).
+    fn size_estimate(&self) -> Option<i64> {
+        None
+    }
+
+    /// Start (`Some(period)`), retune, or stop (`None`) the structure's
+    /// background [`crate::size::SizeRefresher`]: an owned daemon that
+    /// periodically drives the arbiter's round so `size_recent` becomes a
+    /// passive published read. Returns whether a daemon is running after
+    /// the call; the default (structures without an arbiter) ignores the
+    /// request. The daemon is stopped and joined when the structure drops.
+    fn set_refresh_period(&self, period: Option<Duration>) -> bool {
+        let _ = period;
+        false
+    }
+
     /// Diagnostics from the structure's size arbiter (`None` when the
     /// structure has none).
     fn size_stats(&self) -> Option<ArbiterStats> {

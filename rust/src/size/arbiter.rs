@@ -82,7 +82,14 @@ impl SizeView {
     }
 }
 
-/// Arbiter diagnostics (the ablation bench records these).
+/// Arbiter diagnostics (the ablation bench records these). The last three
+/// fields come from outside the arbiter proper — the structure's
+/// `size_stats()` merges in its [`SizeRefresher`] round count and the
+/// policy's [`SizeTuning`] — so one struct carries the whole size-path
+/// telemetry.
+///
+/// [`SizeRefresher`]: super::SizeRefresher
+/// [`SizeTuning`]: super::SizeTuning
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ArbiterStats {
     /// Combine rounds performed — each is exactly one underlying collect
@@ -94,6 +101,13 @@ pub struct ArbiterStats {
     pub recent_hits: u64,
     /// `size_recent` calls that were too stale and ran/joined a round.
     pub recent_refreshes: u64,
+    /// Rounds driven by the structure's background `SizeRefresher`
+    /// (0 when no daemon ran).
+    pub daemon_rounds: u64,
+    /// Policy-level size fallbacks (`OptimisticSize`; 0 otherwise).
+    pub fallbacks: u64,
+    /// Policy-level current retry budget (`OptimisticSize`; 0 otherwise).
+    pub retry_budget: u64,
 }
 
 /// The published result of one combine round.
@@ -160,12 +174,37 @@ impl SizeArbiter {
             adoptions: self.adoptions.load(SeqCst),
             recent_hits: self.recent_hits.load(SeqCst),
             recent_refreshes: self.recent_refreshes.load(SeqCst),
+            daemon_rounds: 0,
+            fallbacks: 0,
+            retry_budget: 0,
         }
     }
 
     /// Completed combine rounds so far.
     pub fn rounds(&self) -> u64 {
         self.round_done.load(SeqCst)
+    }
+
+    /// The latest published result, with its age measured now (`None`
+    /// before the first round). A pure read: touches no round state and
+    /// records no stats — the refresher uses it to skip redundant rounds,
+    /// tests use it to observe publication.
+    pub fn published_view(&self) -> Option<SizeView> {
+        let _pin = ebr::pin();
+        unsafe { self.published.load(SeqCst).as_ref() }.map(|p| {
+            let now = self.origin.elapsed().as_nanos() as u64;
+            SizeView {
+                value: p.value,
+                age: Duration::from_nanos(now.saturating_sub(p.at_nanos)),
+                round: p.round,
+                shared: true,
+            }
+        })
+    }
+
+    /// Age of the latest published result (`None` before the first round).
+    pub fn published_age(&self) -> Option<Duration> {
+        self.published_view().map(|v| v.age)
     }
 
     /// Poison-tolerant `try_lock` (a panicking combiner must not wedge
@@ -422,5 +461,23 @@ mod tests {
     #[test]
     fn stats_start_zeroed() {
         assert_eq!(SizeArbiter::new().stats(), ArbiterStats::default());
+    }
+
+    #[test]
+    fn published_view_tracks_rounds_without_stats_noise() {
+        let a = SizeArbiter::new();
+        assert_eq!(a.published_view(), None);
+        assert_eq!(a.published_age(), None);
+        a.size_exact(|| 13);
+        let v = a.published_view().expect("round published");
+        assert_eq!((v.value, v.round, v.shared), (13, 1, true));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(a.published_age().unwrap() >= Duration::from_millis(2));
+        let s = a.stats();
+        assert_eq!(
+            (s.recent_hits, s.recent_refreshes, s.adoptions),
+            (0, 0, 0),
+            "published_view must record no stats"
+        );
     }
 }

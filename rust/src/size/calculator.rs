@@ -10,11 +10,11 @@ use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering::SeqCst};
 
 use crate::pad::CachePadded;
 
-use super::{CountersSnapshot, OpKind, UpdateInfo};
+use super::{CountersSnapshot, OpKind, ShardedCounters, UpdateInfo};
 use crate::ebr;
 
 /// Optimization toggles (paper Section 7); all enabled by default, exposed
-/// for the `ablation_opts` bench.
+/// for the `ablation_opts` bench — plus the sharded-mirror scale knob.
 #[derive(Clone, Copy, Debug)]
 pub struct SizeOpts {
     /// §7.1 — clear a node's insert-info slot once its insert is reflected,
@@ -25,6 +25,11 @@ pub struct SizeOpts {
     pub backoff: bool,
     /// §7.3 — return an already-agreed size early instead of re-collecting.
     pub early_size_check: bool,
+    /// Stripe count of the sharded counter mirror behind
+    /// [`SizeCalculator::approx_size`] (`0` = mirror disabled, the
+    /// default — the paper path stays bit-identical). CLI surfaces set
+    /// this from `--size-shards` (`auto` = [`super::detect_shards`]).
+    pub shards: usize,
 }
 
 impl Default for SizeOpts {
@@ -33,6 +38,7 @@ impl Default for SizeOpts {
             clear_insert_info: true,
             backoff: true,
             early_size_check: true,
+            shards: 0,
         }
     }
 }
@@ -42,7 +48,14 @@ impl SizeOpts {
         clear_insert_info: false,
         backoff: false,
         early_size_check: false,
+        shards: 0,
     };
+
+    /// `self` with the sharded mirror set to `shards` stripes.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
 }
 
 /// Bounded backoff: at most `ROUNDS` waits of up to `MAX_SPINS` spin hints,
@@ -57,6 +70,9 @@ pub struct SizeCalculator {
     /// The most recent `CountersSnapshot` (paper Fig. 4). Old instances are
     /// EBR-retired on replacement.
     counters_snapshot: AtomicPtr<CountersSnapshot>,
+    /// Optional striped mirror of the metadata (see `sharded.rs`): kept in
+    /// sync at the exactly-once counter-CAS win, read by [`Self::approx_size`].
+    sharded: Option<ShardedCounters>,
     opts: SizeOpts,
     nthreads: usize,
 }
@@ -72,6 +88,7 @@ impl SizeCalculator {
                 .map(|_| CachePadded::new([AtomicU64::new(0), AtomicU64::new(0)]))
                 .collect(),
             counters_snapshot: AtomicPtr::new(Box::into_raw(dummy)),
+            sharded: (opts.shards > 0).then(|| ShardedCounters::new(opts.shards)),
             opts,
             nthreads,
         }
@@ -171,8 +188,14 @@ impl SizeCalculator {
         let cell = &self.metadata[tid][kind as usize];
 
         // Lines 78–79: reflect the operation (exactly-once via monotone CAS).
-        if cell.load(SeqCst) == counter - 1 {
-            let _ = cell.compare_exchange(counter - 1, counter, SeqCst, SeqCst);
+        // The CAS winner — initiator or helper, whoever lands it — also
+        // bumps the sharded mirror, preserving exactly-once for the stripes.
+        if cell.load(SeqCst) == counter - 1
+            && cell.compare_exchange(counter - 1, counter, SeqCst, SeqCst).is_ok()
+        {
+            if let Some(sharded) = &self.sharded {
+                sharded.record(tid, kind);
+            }
         }
 
         // Lines 80–83: forward to an ongoing collection. The check order
@@ -194,6 +217,20 @@ impl SizeCalculator {
     pub fn create_update_info(&self, kind: OpKind, tid: usize) -> u64 {
         let counter = self.metadata[tid][kind as usize].load(SeqCst) + 1;
         UpdateInfo { tid, counter }.pack()
+    }
+
+    /// The sharded counter mirror, when `SizeOpts::shards` enabled one.
+    pub fn sharded(&self) -> Option<&ShardedCounters> {
+        self.sharded.as_ref()
+    }
+
+    /// O(shards) bounded-lag size estimate from the sharded mirror
+    /// (`None` when the mirror is disabled): the batched reconciliation
+    /// collect of `sharded.rs`. Exact at quiescence; mid-churn it may
+    /// trail the exact size by up to the number of in-flight operations.
+    /// Use [`Self::compute`] for a linearizable size.
+    pub fn approx_size(&self) -> Option<i64> {
+        self.sharded.as_ref().map(ShardedCounters::reconcile)
     }
 
     /// Raw counter sample `[tid][ins, del]` for the offline analytics
@@ -338,6 +375,39 @@ mod tests {
         for u in updaters {
             u.join().unwrap();
         }
+    }
+
+    #[test]
+    fn sharded_mirror_disabled_by_default() {
+        let sc = SizeCalculator::new(2, SizeOpts::default());
+        assert!(sc.sharded().is_none());
+        assert_eq!(sc.approx_size(), None);
+    }
+
+    #[test]
+    fn sharded_mirror_tracks_the_metadata() {
+        let sc = SizeCalculator::new(8, SizeOpts::default().with_shards(2));
+        assert_eq!(sc.sharded().unwrap().shards(), 2);
+        assert_eq!(sc.approx_size(), Some(0));
+        for tid in 0..4 {
+            sc.update_metadata(info(tid, 1), OpKind::Insert);
+            sc.update_metadata(info(tid, 2), OpKind::Insert);
+        }
+        sc.update_metadata(info(0, 1), OpKind::Delete);
+        assert_eq!(sc.compute(), 7);
+        assert_eq!(sc.approx_size(), Some(7), "exact at quiescence");
+    }
+
+    #[test]
+    fn sharded_mirror_counts_helped_commits_once() {
+        // A helper repeating update_metadata must not double-bump stripes.
+        let sc = SizeCalculator::new(4, SizeOpts::default().with_shards(4));
+        let i1 = info(1, 1);
+        sc.update_metadata(i1, OpKind::Insert);
+        sc.update_metadata(i1, OpKind::Insert);
+        sc.update_metadata(i1, OpKind::Insert);
+        assert_eq!(sc.approx_size(), Some(1));
+        assert_eq!(sc.sharded().unwrap().collect(), (1, 0));
     }
 
     #[test]

@@ -45,7 +45,7 @@ use crate::pad::CachePadded;
 use crate::thread_id;
 
 use super::policy::SizePolicy;
-use super::{spin_wait_while, OpKind, SizeOpts};
+use super::{OpKind, SizeOpts, spin_wait_while};
 
 /// Per-thread epoch/ack slot: even = quiescent, odd = inside an operation.
 /// Monotonically increasing, so a stuck reader can tell "same op" from

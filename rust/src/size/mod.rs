@@ -21,6 +21,15 @@
 //!   underlying collect, and the published last result serves
 //!   `size_recent(max_staleness)` with a single wait-free load. Every
 //!   structure embeds one, over every policy.
+//! * [`ShardedCounters`] — the scale layer (`sharded.rs`): a striped,
+//!   cache-padded mirror of the metadata kept in sync at the exactly-once
+//!   counter-CAS point, whose batched reconciliation collect serves
+//!   O(shards) bounded-lag size estimates (`--size-shards`).
+//! * [`SizeCore`], [`SizeRefresher`], [`RefresherSlot`] — the background
+//!   refresh layer (`refresher.rs`): an owned daemon per structure that
+//!   periodically drives the arbiter's round so `size_recent` becomes a
+//!   truly passive published read (`set_refresh_period`), with clean
+//!   join-on-drop shutdown.
 
 mod arbiter;
 mod calculator;
@@ -28,13 +37,57 @@ mod counters_snapshot;
 mod handshake;
 mod optimistic;
 mod policy;
+mod refresher;
+mod sharded;
 
 pub use arbiter::{ArbiterStats, SizeArbiter, SizeView};
 pub use calculator::{SizeCalculator, SizeOpts};
 pub use counters_snapshot::{CountersSnapshot, INVALID_CELL, INVALID_SIZE};
 pub use handshake::HandshakeSize;
-pub use optimistic::{OptimisticSize, OPTIMISTIC_MAX_RETRIES};
-pub use policy::{LinearizableSize, LockSize, NaiveSize, NoSize, SizePolicy};
+pub use optimistic::{OPTIMISTIC_MAX_RETRIES, OPTIMISTIC_TUNE_MAX, OptimisticSize};
+pub use policy::{LinearizableSize, LockSize, NaiveSize, NoSize, SizePolicy, SizeTuning};
+pub use refresher::{MIN_REFRESH_PERIOD, RefresherSlot, SizeCore, SizeRefresher};
+pub use sharded::{detect_shards, ShardedCounters};
+
+/// Expands to the six shared [`ConcurrentSet`] size-surface methods —
+/// raw `size`, arbiter-backed `size_exact`/`size_recent`, the sharded
+/// `size_estimate`, `set_refresh_period` and merged `size_stats` — for a
+/// structure embedding `core: Arc<SizeCore<P>>` and
+/// `refresher: RefresherSlot` (all four structures do). One definition
+/// keeps the four `impl ConcurrentSet` blocks in lockstep.
+///
+/// [`ConcurrentSet`]: crate::set_api::ConcurrentSet
+macro_rules! impl_size_surface {
+    () => {
+        fn size(&self) -> Option<i64> {
+            self.core.policy.size()
+        }
+
+        fn size_exact(&self) -> Option<crate::size::SizeView> {
+            self.core.arbiter.exact_for(&self.core.policy)
+        }
+
+        fn size_recent(
+            &self,
+            max_staleness: std::time::Duration,
+        ) -> Option<crate::size::SizeView> {
+            self.core.arbiter.recent_for(&self.core.policy, max_staleness)
+        }
+
+        fn size_estimate(&self) -> Option<i64> {
+            self.core.policy.calculator().and_then(|c| c.approx_size())
+        }
+
+        fn set_refresh_period(&self, period: Option<std::time::Duration>) -> bool {
+            self.refresher.set(&self.core, period)
+        }
+
+        fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
+            Some(self.core.stats(self.refresher.rounds()))
+        }
+    };
+}
+pub(crate) use impl_size_surface;
 
 /// Spins before each yield in the size subsystem's wait loops
 /// (single-core containers need the yield to make progress at all).

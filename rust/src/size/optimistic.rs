@@ -39,14 +39,21 @@
 //! collect keeps failing and the method degrades gracefully to exactly
 //! the paper's cost (plus the wasted sweeps).
 
-use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::SeqCst};
 
-use super::policy::SizePolicy;
+use super::policy::{SizePolicy, SizeTuning};
 use super::{LinearizableSize, OpKind, SizeCalculator, SizeOpts};
 
 /// Default failed double-collect rounds before falling back to the
-/// wait-free path.
+/// wait-free path (also the auto-tuner's starting budget).
 pub const OPTIMISTIC_MAX_RETRIES: usize = 8;
+
+/// Auto-tune ceiling: the budget never grows past this.
+pub const OPTIMISTIC_TUNE_MAX: usize = 4 * OPTIMISTIC_MAX_RETRIES;
+
+/// First-try successes in a row before the auto-tuner grows the budget
+/// by one (growth is slow; shrinking on fallback is a halving).
+const TUNE_GROW_STREAK: u64 = 16;
 
 pub struct OptimisticSize {
     /// The embedded paper policy: carries the calculator and the entire
@@ -55,9 +62,15 @@ pub struct OptimisticSize {
     /// Times `size()` exhausted its retries and took the wait-free path
     /// (diagnostics for the ablation bench).
     fallbacks: AtomicU64,
-    /// Per-instance retry budget (ROADMAP: per-structure tuning); a
-    /// budget of 0 makes every `size()` take the wait-free path.
-    max_retries: usize,
+    /// Per-instance retry budget. Fixed by [`Self::with_max_retries`]
+    /// (0 makes every `size()` take the wait-free path); otherwise
+    /// auto-tuned within `[1, OPTIMISTIC_TUNE_MAX]` from observed
+    /// fallback rates (ROADMAP: per-structure retry-budget auto-tuning).
+    budget: AtomicUsize,
+    /// Whether the budget adapts (off for `with_max_retries` instances).
+    auto_tune: bool,
+    /// Consecutive first-try successes (auto-tune growth trigger).
+    streak: AtomicU64,
 }
 
 impl OptimisticSize {
@@ -66,19 +79,60 @@ impl OptimisticSize {
         self.fallbacks.load(SeqCst)
     }
 
-    /// Build with an explicit double-collect retry budget instead of
-    /// [`OPTIMISTIC_MAX_RETRIES`].
+    /// Build with an explicit, *fixed* double-collect retry budget
+    /// instead of the auto-tuned default.
     pub fn with_max_retries(max_threads: usize, opts: SizeOpts, max_retries: usize) -> Self {
         Self {
             inner: LinearizableSize::new(max_threads, opts),
             fallbacks: AtomicU64::new(0),
-            max_retries,
+            budget: AtomicUsize::new(max_retries),
+            auto_tune: false,
+            streak: AtomicU64::new(0),
         }
     }
 
-    /// The configured retry budget.
+    /// The current retry budget (the configured value for fixed-budget
+    /// instances, the adapted one for auto-tuned instances).
     pub fn max_retries(&self) -> usize {
-        self.max_retries
+        self.budget.load(Relaxed)
+    }
+
+    /// Whether this instance adapts its budget to observed fallbacks.
+    pub fn auto_tuned(&self) -> bool {
+        self.auto_tune
+    }
+
+    /// Auto-tune bookkeeping after an optimistic collect that succeeded
+    /// on attempt `attempt` (0-based). Racy relaxed updates are fine —
+    /// the budget is a heuristic, bounded on every path.
+    #[inline]
+    fn note_success(&self, attempt: usize) {
+        if !self.auto_tune {
+            return;
+        }
+        if attempt == 0 {
+            let streak = self.streak.fetch_add(1, Relaxed) + 1;
+            if streak % TUNE_GROW_STREAK == 0 {
+                let budget = self.budget.load(Relaxed);
+                if budget < OPTIMISTIC_TUNE_MAX {
+                    self.budget.store(budget + 1, Relaxed);
+                }
+            }
+        } else {
+            self.streak.store(0, Relaxed);
+        }
+    }
+
+    /// Auto-tune bookkeeping after a fallback: halve the budget (floor 1)
+    /// so a contended instance stops burning sweeps it will not cash in.
+    #[inline]
+    fn note_fallback(&self) {
+        if !self.auto_tune {
+            return;
+        }
+        self.streak.store(0, Relaxed);
+        let budget = self.budget.load(Relaxed);
+        self.budget.store((budget / 2).max(1), Relaxed);
     }
 }
 
@@ -89,7 +143,9 @@ impl SizePolicy for OptimisticSize {
     const HAS_SIZE: bool = true;
 
     fn new(max_threads: usize, opts: SizeOpts) -> Self {
-        Self::with_max_retries(max_threads, opts, OPTIMISTIC_MAX_RETRIES)
+        let mut p = Self::with_max_retries(max_threads, opts, OPTIMISTIC_MAX_RETRIES);
+        p.auto_tune = true;
+        p
     }
 
     #[inline(always)]
@@ -150,7 +206,7 @@ impl SizePolicy for OptimisticSize {
             return Some(calc.compute());
         }
         let mut snap = [0u64; 2 * crate::MAX_THREADS];
-        'retry: for _ in 0..self.max_retries {
+        'retry: for attempt in 0..self.budget.load(Relaxed) {
             for tid in 0..n {
                 snap[2 * tid] = calc.counter(tid, OpKind::Insert);
                 snap[2 * tid + 1] = calc.counter(tid, OpKind::Delete);
@@ -170,14 +226,23 @@ impl SizePolicy for OptimisticSize {
                 .map(|p| p[0] as i64 - p[1] as i64)
                 .sum();
             debug_assert!(total >= 0, "optimistic size went negative: {total}");
+            self.note_success(attempt);
             return Some(total);
         }
         self.fallbacks.fetch_add(1, SeqCst);
+        self.note_fallback();
         Some(calc.compute())
     }
 
     fn calculator(&self) -> Option<&SizeCalculator> {
         Some(self.inner.calc())
+    }
+
+    fn tuning(&self) -> Option<SizeTuning> {
+        Some(SizeTuning {
+            fallbacks: self.fallback_count(),
+            retry_budget: self.budget.load(Relaxed) as u64,
+        })
     }
 }
 
@@ -263,5 +328,55 @@ mod tests {
     fn calculator_is_exposed_for_analytics() {
         let p = policy();
         assert!(p.calculator().is_some());
+    }
+
+    #[test]
+    fn fixed_budget_instances_never_tune() {
+        let p = OptimisticSize::with_max_retries(4, SizeOpts::default(), 2);
+        assert!(!p.auto_tuned());
+        for _ in 0..200 {
+            let _ = p.size();
+        }
+        assert_eq!(p.max_retries(), 2, "fixed budget drifted");
+        assert_eq!(p.tuning().unwrap().retry_budget, 2);
+    }
+
+    #[test]
+    fn auto_tuner_shrinks_on_fallbacks_and_regrows_on_success() {
+        let p = policy();
+        assert!(p.auto_tuned());
+        assert_eq!(p.max_retries(), OPTIMISTIC_MAX_RETRIES);
+        // Simulate observed fallbacks: the budget halves toward 1.
+        for _ in 0..10 {
+            p.note_fallback();
+        }
+        assert_eq!(p.max_retries(), 1, "halving must floor at 1");
+        // A long first-try success streak grows it back, one step per
+        // TUNE_GROW_STREAK successes, never past the ceiling.
+        for _ in 0..(TUNE_GROW_STREAK * 3) {
+            p.note_success(0);
+        }
+        assert_eq!(p.max_retries(), 4);
+        for _ in 0..(TUNE_GROW_STREAK * 10 * OPTIMISTIC_TUNE_MAX as u64) {
+            p.note_success(0);
+        }
+        assert_eq!(p.max_retries(), OPTIMISTIC_TUNE_MAX, "ceiling respected");
+        // A retried (non-first-try) success resets the growth streak.
+        p.note_success(1);
+        assert_eq!(p.streak.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn quiescent_sizes_keep_budget_and_report_tuning() {
+        let p = policy();
+        for _ in 0..(TUNE_GROW_STREAK * 2) {
+            assert_eq!(p.size(), Some(0));
+        }
+        let t = p.tuning().unwrap();
+        assert_eq!(t.fallbacks, 0);
+        assert!(
+            t.retry_budget >= OPTIMISTIC_MAX_RETRIES as u64,
+            "uncontended instance must not shrink its budget"
+        );
     }
 }

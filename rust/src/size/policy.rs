@@ -32,6 +32,18 @@ use crate::pad::CachePadded;
 
 use super::{OpKind, SizeCalculator, SizeOpts};
 
+/// Read-side tuning diagnostics of a policy with an adaptive size path
+/// (today: [`super::OptimisticSize`]'s retry-budget auto-tuner). Surfaced
+/// through [`super::ArbiterStats`] by every structure's `size_stats()`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SizeTuning {
+    /// Times `size()` exhausted its optimistic budget and fell back to
+    /// the wait-free path.
+    pub fallbacks: u64,
+    /// The current retry budget (fixed or auto-tuned).
+    pub retry_budget: u64,
+}
+
 /// Compile-time hooks a size-aware data structure invokes at the points the
 /// paper's transformation prescribes (Fig. 3). `InfoSlot` is the per-node
 /// storage for published `UpdateInfo` (zero-sized when untracked).
@@ -105,6 +117,12 @@ pub trait SizePolicy: Send + Sync + Sized + 'static {
 
     /// Access to the underlying calculator (tracked policies only).
     fn calculator(&self) -> Option<&SizeCalculator> {
+        None
+    }
+
+    /// Read-side tuning diagnostics (`None` unless the policy adapts its
+    /// size path — see [`SizeTuning`]).
+    fn tuning(&self) -> Option<SizeTuning> {
         None
     }
 }

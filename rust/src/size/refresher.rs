@@ -1,0 +1,319 @@
+//! The background `SizeRefresher` daemon: periodic publication so
+//! `size_recent` becomes a truly passive read.
+//!
+//! The arbiter (`arbiter.rs`) publishes a result only when some caller
+//! drives a round, so the first `size_recent` after a quiet spell always
+//! pays for a collect — the availability gap ROADMAP's "background size
+//! thread" item names. A [`SizeRefresher`] closes it: one owned thread
+//! per structure wakes every `period`, checks whether the published
+//! result is already fresh enough (a caller-driven round within the
+//! period makes the wake a no-op), and otherwise drives one combining
+//! round through [`SizeArbiter::exact_for`]. With a daemon running,
+//! `size_recent(d)` for any `d ≥ period + collect latency` is served by
+//! the published result essentially always — one wait-free EBR-pinned
+//! load — while its `SizeView::age ≤ d` bound keeps holding verbatim
+//! (staleness enforcement lives in `size_recent` itself and is untouched).
+//!
+//! ## Ownership
+//!
+//! The daemon must outlive neither the policy nor the arbiter it drives,
+//! so both live in a shared [`SizeCore`] (`Arc`ed by the structure and by
+//! the daemon thread). Structures hold the daemon in a [`RefresherSlot`]
+//! — interior-mutable so `ConcurrentSet::set_refresh_period` works
+//! through `&self` — and dropping the slot (or the structure) signals the
+//! thread through a condvar and **joins it**: shutdown is synchronous,
+//! no refresh can run after the structure's drop completes.
+
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::policy::SizePolicy;
+use super::{ArbiterStats, SizeArbiter};
+
+/// Shortest accepted refresh period: below this the daemon would degrade
+/// into a busy loop that starves the workload it is meant to serve.
+pub const MIN_REFRESH_PERIOD: Duration = Duration::from_micros(50);
+
+/// The shared heart of a size-aware structure: its policy instance plus
+/// the combining arbiter in front of it. Structures `Arc` one so the
+/// [`SizeRefresher`] thread can keep driving rounds without borrowing the
+/// structure itself.
+pub struct SizeCore<P: SizePolicy> {
+    pub policy: P,
+    pub arbiter: SizeArbiter,
+}
+
+impl<P: SizePolicy> SizeCore<P> {
+    pub fn new(policy: P) -> Self {
+        Self {
+            policy,
+            arbiter: SizeArbiter::new(),
+        }
+    }
+
+    /// Arbiter stats merged with the policy's [`super::SizeTuning`] and
+    /// the given daemon round count — the one `size_stats()` body shared
+    /// by all four structures.
+    pub fn stats(&self, daemon_rounds: u64) -> ArbiterStats {
+        let mut stats = self.arbiter.stats();
+        if let Some(tuning) = self.policy.tuning() {
+            stats.fallbacks = tuning.fallbacks;
+            stats.retry_budget = tuning.retry_budget;
+        }
+        stats.daemon_rounds = daemon_rounds;
+        stats
+    }
+}
+
+/// Condvar-guarded daemon state (one per running refresher).
+struct Shared {
+    stop: Mutex<bool>,
+    wake: Condvar,
+    /// Rounds this daemon actually drove (fresh-enough wakes are skipped).
+    rounds: AtomicU64,
+}
+
+fn lock_stop(shared: &Shared) -> MutexGuard<'_, bool> {
+    shared.stop.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// An owned background thread that periodically refreshes one structure's
+/// published size. Dropping it stops and joins the thread.
+pub struct SizeRefresher {
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+    period: Duration,
+}
+
+impl SizeRefresher {
+    /// Spawn a daemon driving `core`'s arbiter every `period` (clamped to
+    /// [`MIN_REFRESH_PERIOD`]). `None` when the policy has no `size()` —
+    /// there is nothing to publish.
+    pub fn spawn<P: SizePolicy>(core: Arc<SizeCore<P>>, period: Duration) -> Option<Self> {
+        if !P::HAS_SIZE {
+            return None;
+        }
+        let period = period.max(MIN_REFRESH_PERIOD);
+        let shared = Arc::new(Shared {
+            stop: Mutex::new(false),
+            wake: Condvar::new(),
+            rounds: AtomicU64::new(0),
+        });
+        let thread_shared = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("size-refresher".into())
+            .spawn(move || Self::run(core, thread_shared, period))
+            .expect("failed to spawn size-refresher thread");
+        Some(Self {
+            shared,
+            handle: Some(handle),
+            period,
+        })
+    }
+
+    fn run<P: SizePolicy>(core: Arc<SizeCore<P>>, shared: Arc<Shared>, period: Duration) {
+        let mut stopped = lock_stop(&shared);
+        loop {
+            if *stopped {
+                return;
+            }
+            drop(stopped);
+            // A caller-driven round within the period makes this wake a
+            // no-op — the daemon only fills publication gaps.
+            let stale = match core.arbiter.published_age() {
+                None => true,
+                Some(age) => age >= period,
+            };
+            if stale {
+                // Count only rounds this daemon actually drove: an
+                // adopted view means a concurrent caller's round served
+                // the refresh (its collect, not ours).
+                if let Some(view) = core.arbiter.exact_for(&core.policy) {
+                    if !view.shared {
+                        shared.rounds.fetch_add(1, SeqCst);
+                    }
+                }
+            }
+            stopped = lock_stop(&shared);
+            if *stopped {
+                return;
+            }
+            let (guard, _timeout) = shared
+                .wake
+                .wait_timeout(stopped, period)
+                .unwrap_or_else(|p| p.into_inner());
+            stopped = guard;
+        }
+    }
+
+    /// The configured refresh period (post-clamp).
+    pub fn period(&self) -> Duration {
+        self.period
+    }
+
+    /// Rounds this daemon drove so far (skipped fresh wakes not counted).
+    pub fn rounds(&self) -> u64 {
+        self.shared.rounds.load(SeqCst)
+    }
+}
+
+impl Drop for SizeRefresher {
+    fn drop(&mut self) {
+        *lock_stop(&self.shared) = true;
+        self.shared.wake.notify_all();
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// A structure's refresher mount point: `set_refresh_period` installs,
+/// replaces, or stops the daemon through `&self`, and the daemon round
+/// counter survives daemon replacement so `ArbiterStats::daemon_rounds`
+/// stays monotone.
+#[derive(Default)]
+pub struct RefresherSlot {
+    slot: Mutex<Option<SizeRefresher>>,
+    /// Rounds accumulated by daemons that were since stopped/replaced.
+    retired_rounds: AtomicU64,
+}
+
+impl RefresherSlot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Option<SizeRefresher>> {
+        self.slot.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// `Some(period)` (re)starts the daemon at that period, `None` stops
+    /// it; the previous daemon — if any — is joined before any new one
+    /// spawns. Returns whether a daemon is running after the call
+    /// (`false` for `None` and for size-less policies).
+    pub fn set<P: SizePolicy>(&self, core: &Arc<SizeCore<P>>, period: Option<Duration>) -> bool {
+        // Swap the old daemon out and release the slot lock BEFORE the
+        // join: a shutdown can take a full collect (handshake drain), and
+        // stats readers share this mutex — they must never block on it.
+        let old = self.lock().take();
+        self.retire(old);
+        match period {
+            Some(p) => {
+                let fresh = SizeRefresher::spawn(core.clone(), p);
+                let running = fresh.is_some();
+                // Normally a no-op: `displaced` is only Some when another
+                // set() raced in between the take above and this store.
+                let displaced = std::mem::replace(&mut *self.lock(), fresh);
+                self.retire(displaced);
+                running
+            }
+            None => false,
+        }
+    }
+
+    /// Stop-and-join a daemon (slot lock NOT held) and fold its rounds
+    /// into the cumulative counter — counted after the join, so a round
+    /// completing during shutdown is not lost.
+    fn retire(&self, daemon: Option<SizeRefresher>) {
+        if let Some(daemon) = daemon {
+            let shared = Arc::clone(&daemon.shared);
+            drop(daemon); // synchronous stop + join
+            self.retired_rounds.fetch_add(shared.rounds.load(SeqCst), SeqCst);
+        }
+    }
+
+    /// Daemon-driven rounds across the current and all previous daemons.
+    pub fn rounds(&self) -> u64 {
+        let slot = self.lock();
+        self.retired_rounds.load(SeqCst) + slot.as_ref().map_or(0, SizeRefresher::rounds)
+    }
+
+    /// The running daemon's period, when one is active.
+    pub fn period(&self) -> Option<Duration> {
+        self.lock().as_ref().map(SizeRefresher::period)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::{LinearizableSize, NoSize, SizeOpts};
+    use std::time::Instant;
+
+    fn core() -> Arc<SizeCore<LinearizableSize>> {
+        Arc::new(SizeCore::new(LinearizableSize::new(8, SizeOpts::default())))
+    }
+
+    fn wait_for(mut cond: impl FnMut() -> bool, what: &str) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn refresher_publishes_without_any_caller() {
+        let core = core();
+        let r = SizeRefresher::spawn(core.clone(), Duration::from_micros(100)).unwrap();
+        wait_for(|| core.arbiter.rounds() >= 2, "two daemon rounds");
+        assert!(r.rounds() >= 2);
+        assert!(core.arbiter.published_view().is_some());
+        drop(r);
+    }
+
+    #[test]
+    fn refresher_stops_on_drop() {
+        let core = core();
+        let r = SizeRefresher::spawn(core.clone(), Duration::from_micros(100)).unwrap();
+        wait_for(|| core.arbiter.rounds() >= 1, "first daemon round");
+        drop(r); // joins: no refresh may run past this point
+        let rounds = core.arbiter.rounds();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(core.arbiter.rounds(), rounds, "daemon survived drop");
+    }
+
+    #[test]
+    fn refresher_declines_sizeless_policies() {
+        let core = Arc::new(SizeCore::new(NoSize::new(8, SizeOpts::default())));
+        assert!(SizeRefresher::spawn(core, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn period_is_clamped_to_minimum() {
+        let r = SizeRefresher::spawn(core(), Duration::ZERO).unwrap();
+        assert_eq!(r.period(), MIN_REFRESH_PERIOD);
+    }
+
+    #[test]
+    fn slot_replaces_and_stops_daemons() {
+        let core = core();
+        let slot = RefresherSlot::new();
+        assert!(!slot.set(&core, None), "stopping an empty slot is a no-op");
+        assert!(slot.set(&core, Some(Duration::from_micros(100))));
+        wait_for(|| slot.rounds() >= 1, "slot daemon round");
+        // Replacement keeps the cumulative round counter monotone.
+        assert!(slot.set(&core, Some(Duration::from_millis(5))));
+        let after_swap = slot.rounds();
+        assert!(after_swap >= 1);
+        assert_eq!(slot.period(), Some(Duration::from_millis(5)));
+        assert!(!slot.set(&core, None));
+        assert_eq!(slot.period(), None);
+        assert!(slot.rounds() >= after_swap);
+    }
+
+    #[test]
+    fn core_stats_merges_tuning_and_daemon_rounds() {
+        let core = Arc::new(SizeCore::new(crate::size::OptimisticSize::new(
+            8,
+            SizeOpts::default(),
+        )));
+        let _ = core.arbiter.exact_for(&core.policy);
+        let stats = core.stats(7);
+        assert_eq!(stats.rounds, 1);
+        assert_eq!(stats.daemon_rounds, 7);
+        assert!(stats.retry_budget > 0, "optimistic tuning must surface");
+    }
+}

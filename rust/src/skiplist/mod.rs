@@ -17,11 +17,12 @@
 //! Physical removal: mark every level top-down, then `find` unlinks.
 
 use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Arc;
 
 use crate::ebr;
 use crate::rng::Xoshiro256;
 use crate::set_api::{ConcurrentSet, MAX_KEY};
-use crate::size::{SizeArbiter, SizeOpts, SizePolicy};
+use crate::size::{RefresherSlot, SizeArbiter, SizeCore, SizeOpts, SizePolicy};
 use crate::thread_id;
 
 pub(crate) const MAX_LEVEL: usize = 20;
@@ -270,10 +271,11 @@ fn random_level() -> usize {
 pub struct SkipListSet<P: SizePolicy> {
     /// Sentinel head tower (key conceptually −∞; never compared).
     head: Box<[AtomicU64; MAX_LEVEL]>,
-    policy: P,
+    /// Policy + arbiter, shared with the optional refresher daemon.
+    core: Arc<SizeCore<P>>,
     /// Deferred-reclamation parking lot (see [`Graveyard`]).
     graveyard: Graveyard,
-    arbiter: SizeArbiter,
+    refresher: RefresherSlot,
 }
 
 unsafe impl<P: SizePolicy> Send for SkipListSet<P> {}
@@ -291,19 +293,19 @@ impl<P: SizePolicy> SkipListSet<P> {
     pub fn with_policy(policy: P) -> Self {
         Self {
             head: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
-            policy,
+            core: Arc::new(SizeCore::new(policy)),
             graveyard: Graveyard::new(),
-            arbiter: SizeArbiter::new(),
+            refresher: RefresherSlot::new(),
         }
     }
 
     pub fn policy(&self) -> &P {
-        &self.policy
+        &self.core.policy
     }
 
     /// The combining size arbiter behind `size_exact` / `size_recent`.
     pub fn arbiter(&self) -> &SizeArbiter {
-        &self.arbiter
+        &self.core.arbiter
     }
 
     #[inline]
@@ -350,7 +352,7 @@ impl<P: SizePolicy> SkipListSet<P> {
                     let (deleted, dinfo) = deletion_state(curr_ref);
                     if deleted {
                         if P::TRACKED {
-                            self.policy.commit_delete(dinfo); // before unlink
+                            self.core.policy.commit_delete(dinfo); // before unlink
                         }
                         mark_tower(curr_ref);
                         let succ_w = curr_ref.next[lvl].load(SeqCst) & !MARK;
@@ -418,10 +420,10 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
     fn insert(&self, k: u64) -> bool {
         debug_assert!(k <= MAX_KEY);
         let _guard = ebr::pin();
-        let _op = self.policy.enter();
+        let _op = self.core.policy.enter();
         let tid = thread_id::current();
 
-        let packed = self.policy.begin_insert(tid);
+        let packed = self.core.policy.begin_insert(tid);
         let mut preds = [std::ptr::null_mut(); MAX_LEVEL];
         let mut succs = [0u64; MAX_LEVEL];
         let mut new_node: *mut SkipNode<P> = std::ptr::null_mut();
@@ -430,7 +432,7 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
         loop {
             if let Some(found) = self.find(k, &mut preds, &mut succs) {
                 // Present in an unmarked node: help, fail (Fig. 3 ll.16–18).
-                self.policy.help_insert(unsafe { &(*found).insert_info });
+                self.core.policy.help_insert(unsafe { &(*found).insert_info });
                 if !new_node.is_null() {
                     drop(unsafe { Box::from_raw(new_node) });
                 }
@@ -456,7 +458,7 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
             unsafe { on_link(new_node, 0, &self.graveyard) };
             // Reach the new linearization point before anything else
             // (Fig. 3 line 25).
-            self.policy.commit_insert(&new_ref.insert_info, packed);
+            self.core.policy.commit_insert(&new_ref.insert_info, packed);
 
             // Link upper levels (best effort; abandoned if node is deleted).
             'link: for lvl in 1..level {
@@ -504,7 +506,7 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
 
     fn delete(&self, k: u64) -> bool {
         let _guard = ebr::pin();
-        let _op = self.policy.enter();
+        let _op = self.core.policy.enter();
         let tid = thread_id::current();
 
         let mut preds = [std::ptr::null_mut(); MAX_LEVEL];
@@ -518,11 +520,11 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
             let node = unsafe { &*found };
 
             if P::TRACKED {
-                self.policy.help_insert(&node.insert_info); // line 33
-                let packed = self.policy.begin_delete(tid); // line 34
+                self.core.policy.help_insert(&node.insert_info); // line 33
+                let packed = self.core.policy.begin_delete(tid); // line 34
                 // Line 35: the marking step = installing delete-info.
                 let winner = P::try_claim_delete(&node.delete_info, packed);
-                self.policy.commit_delete(winner); // line 36: before unlink
+                self.core.policy.commit_delete(winner); // line 36: before unlink
                 mark_tower(node);
                 // Physical unlink via find (also retires the node).
                 self.find(k, &mut preds, &mut succs);
@@ -530,7 +532,7 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
             } else {
                 let outcome = mark_tower(node);
                 if outcome.bottom_won {
-                    self.policy.commit_delete(0); // naive/lock counter bump
+                    self.core.policy.commit_delete(0); // naive/lock counter bump
                     self.find(k, &mut preds, &mut succs); // physical unlink
                     return true;
                 }
@@ -541,7 +543,7 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
 
     fn contains(&self, k: u64) -> bool {
         let _guard = ebr::pin();
-        let _op = self.policy.enter_read();
+        let _op = self.core.policy.enter_read();
 
         // Wait-free traversal (no unlinking).
         let mut pred: *mut SkipNode<P> = std::ptr::null_mut();
@@ -579,35 +581,21 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
         let (deleted, dinfo) = deletion_state(node);
         if deleted {
             if P::TRACKED {
-                self.policy.commit_delete(dinfo); // Fig. 3 ll.12–13
+                self.core.policy.commit_delete(dinfo); // Fig. 3 ll.12–13
             }
             return false;
         }
-        self.policy.help_insert(&node.insert_info); // Fig. 3 ll.9–10
+        self.core.policy.help_insert(&node.insert_info); // Fig. 3 ll.9–10
         true
     }
 
-    fn size(&self) -> Option<i64> {
-        self.policy.size()
-    }
+    crate::size::impl_size_surface!();
 
     fn name(&self) -> String {
         format!(
             "SkipList<{}>",
             std::any::type_name::<P>().rsplit("::").next().unwrap()
         )
-    }
-
-    fn size_exact(&self) -> Option<crate::size::SizeView> {
-        self.arbiter.exact_for(&self.policy)
-    }
-
-    fn size_recent(&self, max_staleness: std::time::Duration) -> Option<crate::size::SizeView> {
-        self.arbiter.recent_for(&self.policy, max_staleness)
-    }
-
-    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
-        Some(self.arbiter.stats())
     }
 }
 

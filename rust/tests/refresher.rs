@@ -1,0 +1,253 @@
+//! Integration tests for the background `SizeRefresher` daemon: the
+//! bounded-staleness contract under arbitrary refresh periods (proptest),
+//! monotone consistency of published values with applied deltas, clean
+//! start/retune/stop through the `ConcurrentSet` surface, and the
+//! HandshakeSize stress regression guarding the PR 3 deadlock fixes
+//! under the new daemon.
+
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use concurrent_size::bench_util::{make_set, STRUCTURES};
+use concurrent_size::cli::PolicyKind;
+use concurrent_size::list::LinkedListSet;
+use concurrent_size::prop_assert;
+use concurrent_size::proptest_lite;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::{HandshakeSize, SizePolicy};
+use concurrent_size::MAX_THREADS;
+
+fn wait_until(mut cond: impl FnMut() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// The daemon publishes on its own: with no size caller at all, rounds
+/// accumulate and a later `size_recent` is served from the publication —
+/// on every structure.
+#[test]
+fn daemon_turns_size_recent_into_a_passive_read() {
+    for structure in STRUCTURES {
+        let set = make_set(structure, PolicyKind::Linearizable, 64).unwrap();
+        for k in 1..=17u64 {
+            set.insert(k);
+        }
+        assert!(set.set_refresh_period(Some(Duration::from_micros(200))));
+        wait_until(
+            || set.size_stats().unwrap().daemon_rounds >= 2,
+            "daemon rounds",
+        );
+        let v = set.size_recent(Duration::from_secs(60)).unwrap();
+        assert_eq!(v.value, 17, "{structure}: published value");
+        assert!(v.shared, "{structure}: must hit the publication");
+        let stats = set.size_stats().unwrap();
+        assert!(stats.recent_hits >= 1, "{structure}: no passive hit");
+        assert!(!set.set_refresh_period(None));
+        let rounds = set.size_stats().unwrap().daemon_rounds;
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(
+            set.size_stats().unwrap().daemon_rounds,
+            rounds,
+            "{structure}: daemon survived stop"
+        );
+    }
+}
+
+/// Structures without a size (baseline policy) refuse the daemon.
+#[test]
+fn sizeless_policies_refuse_the_daemon() {
+    let set = make_set("hashtable", PolicyKind::Baseline, 64).unwrap();
+    assert!(!set.set_refresh_period(Some(Duration::from_millis(1))));
+    assert_eq!(set.size_stats().unwrap().daemon_rounds, 0);
+}
+
+/// ISSUE 4 satellite — the staleness contract, propertized: for random
+/// refresh periods and random staleness bounds, every `size_recent(d)`
+/// served while a refresher runs satisfies `age <= d`, values are always
+/// sizes the set actually passed through (monotone phases force this),
+/// and the published stream is consistent with the applied deltas.
+#[test]
+fn prop_refresher_staleness_contract() {
+    proptest_lite::run_with(
+        "refresher staleness contract",
+        proptest_lite::Config {
+            cases: 6,
+            seed: 0xD43,
+        },
+        |rng| {
+            let policy = if rng.gen_bool(0.5) {
+                PolicyKind::Linearizable
+            } else {
+                PolicyKind::Optimistic
+            };
+            let set = make_set("list", policy, 64).unwrap();
+            let period = Duration::from_micros(100 + rng.gen_range(2_000));
+            prop_assert!(
+                set.set_refresh_period(Some(period)),
+                "daemon must start (period {period:?})"
+            );
+            let total = 40 + rng.gen_range(60);
+
+            // Phase 1: insert-only. Published values may lag but can only
+            // grow, and never past the applied count.
+            let mut last = 0i64;
+            for k in 1..=total {
+                set.insert(k);
+                let bound = Duration::from_micros(1 + rng.gen_range(3_000));
+                let v = set.size_recent(bound).unwrap();
+                prop_assert!(v.age <= bound, "age {:?} above bound {bound:?}", v.age);
+                prop_assert!(
+                    (0..=k as i64).contains(&v.value),
+                    "insert phase: size {} outside [0, {k}]",
+                    v.value
+                );
+                prop_assert!(
+                    v.value >= last,
+                    "insert-only published stream regressed: {} < {last}",
+                    v.value
+                );
+                last = v.value;
+            }
+
+            // Boundary pin: force a fresh publication at exactly `total`.
+            // Without it a stale phase-1 publication could be served
+            // first and a later (fresh) read could legitimately report a
+            // LARGER value, breaking the mirrored monotonicity check
+            // below. After this read, every round the phase-2 stream can
+            // serve was collected with all inserts applied.
+            let v = set.size_recent(Duration::ZERO).unwrap();
+            prop_assert!(
+                v.value == total as i64,
+                "boundary exact read {} != {total}",
+                v.value
+            );
+
+            // Phase 2: delete-only. The same argument, mirrored.
+            let mut last = total as i64;
+            for k in 1..=total {
+                set.delete(k);
+                let bound = Duration::from_micros(1 + rng.gen_range(3_000));
+                let v = set.size_recent(bound).unwrap();
+                prop_assert!(v.age <= bound, "age {:?} above bound {bound:?}", v.age);
+                prop_assert!(
+                    (0..=total as i64).contains(&v.value),
+                    "delete phase: impossible size {}",
+                    v.value
+                );
+                prop_assert!(
+                    v.value <= last,
+                    "delete-only published stream grew: {} > {last}",
+                    v.value
+                );
+                last = v.value;
+            }
+
+            // Quiescent: any fresh-enough read converges to the truth.
+            let v = set.size_recent(Duration::ZERO).unwrap();
+            prop_assert!(v.value == 0, "quiescent zero-staleness read {}", v.value);
+            set.set_refresh_period(None);
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 4 satellite — stress regression: a refresher daemon (whose
+/// combiner freezes the structure via the handshake), combining
+/// `size_exact` callers, and guard-holding updaters — some calling the
+/// policy's raw `size()` *while holding their op guard* (the PR 3
+/// deadlock schedules) — must all make progress concurrently. The test
+/// completing is the assertion; a deadlock hangs it.
+#[test]
+fn handshake_daemon_combiners_and_guard_holders_make_progress() {
+    let set = Arc::new(LinkedListSet::<HandshakeSize>::new(MAX_THREADS));
+    assert!(set.set_refresh_period(Some(Duration::from_micros(200))));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|scope| {
+        // Combining exact callers (no guards held: arbiter contract).
+        for _ in 0..2 {
+            let set = set.clone();
+            scope.spawn(move || {
+                for _ in 0..400 {
+                    let v = set.size_exact().unwrap();
+                    assert!(v.value >= 0);
+                }
+            });
+        }
+        // Guard-holding updaters; every 16th op calls raw size() under
+        // its own guard (self- and cross-deadlock regression paths).
+        let updaters: Vec<_> = (0..2)
+            .map(|_| {
+                let set = set.clone();
+                scope.spawn(move || {
+                    let policy = set.policy();
+                    for i in 0..800u64 {
+                        {
+                            let _g = policy.enter();
+                            policy.commit_insert(&(), 0);
+                            if i % 16 == 0 {
+                                assert!(policy.size().unwrap() >= 0);
+                            }
+                        }
+                        {
+                            let _g = policy.enter();
+                            policy.commit_delete(0);
+                        }
+                    }
+                })
+            })
+            .collect();
+        // A background churn thread through the set API proper.
+        {
+            let set = set.clone();
+            let stop = stop.clone();
+            scope.spawn(move || {
+                let mut k = 0u64;
+                while !stop.load(SeqCst) {
+                    k += 1;
+                    set.insert(k % 32);
+                    set.delete(k % 32);
+                }
+            });
+        }
+        for u in updaters {
+            u.join().unwrap();
+        }
+        stop.store(true, SeqCst);
+    });
+
+    set.set_refresh_period(None);
+    assert_eq!(
+        set.size_exact().unwrap().value,
+        0,
+        "paired ops must cancel out"
+    );
+    let stats = set.size_stats().unwrap();
+    assert!(stats.daemon_rounds > 0, "daemon starved");
+    assert!(stats.rounds > 0);
+}
+
+/// Retuning replaces the daemon atomically and keeps the cumulative
+/// daemon-round counter monotone across generations.
+#[test]
+fn retuning_the_period_replaces_the_daemon() {
+    let set = make_set("skiplist", PolicyKind::Optimistic, 64).unwrap();
+    set.insert(1);
+    assert!(set.set_refresh_period(Some(Duration::from_micros(100))));
+    wait_until(
+        || set.size_stats().unwrap().daemon_rounds >= 1,
+        "first generation round",
+    );
+    let before = set.size_stats().unwrap().daemon_rounds;
+    assert!(set.set_refresh_period(Some(Duration::from_micros(150))));
+    wait_until(
+        || set.size_stats().unwrap().daemon_rounds > before,
+        "second generation round",
+    );
+    assert!(set.size_stats().unwrap().daemon_rounds >= before);
+    set.set_refresh_period(None);
+}

@@ -293,23 +293,20 @@ fn freshness_api_covers_all_structures_and_policies() {
                 set.size_stats().is_some(),
                 "{structure}/{policy:?}: arbiter stats missing"
             );
-            match policy.provides_size() {
-                false => {
-                    assert_eq!(set.size_exact(), None, "{structure}/{policy:?}");
-                    assert_eq!(
-                        set.size_recent(Duration::from_millis(1)),
-                        None,
-                        "{structure}/{policy:?}"
-                    );
-                }
-                true => {
-                    let exact = set.size_exact().unwrap();
-                    assert_eq!(exact.value, 9, "{structure}/{policy:?}");
-                    assert!(exact.round > 0, "arbiter must stamp rounds");
-                    let recent = set.size_recent(Duration::from_secs(60)).unwrap();
-                    assert_eq!(recent.value, 9, "{structure}/{policy:?}");
-                    assert_eq!(set.size(), Some(9), "{structure}/{policy:?}");
-                }
+            if policy.provides_size() {
+                let exact = set.size_exact().unwrap();
+                assert_eq!(exact.value, 9, "{structure}/{policy:?}");
+                assert!(exact.round > 0, "arbiter must stamp rounds");
+                let recent = set.size_recent(Duration::from_secs(60)).unwrap();
+                assert_eq!(recent.value, 9, "{structure}/{policy:?}");
+                assert_eq!(set.size(), Some(9), "{structure}/{policy:?}");
+            } else {
+                assert_eq!(set.size_exact(), None, "{structure}/{policy:?}");
+                assert_eq!(
+                    set.size_recent(Duration::from_millis(1)),
+                    None,
+                    "{structure}/{policy:?}"
+                );
             }
         }
     }
