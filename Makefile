@@ -1,0 +1,71 @@
+# Build / test / bench entry points. CI (.github/workflows/ci.yml) calls
+# exactly these targets, so a local `make <target>` reproduces the CI run
+# bit for bit — no inline-shell drift between the two.
+
+CARGO  ?= cargo
+PYTHON ?= python3
+ARTIFACTS ?= artifacts
+
+# CI-scale ablation knobs (tiny on purpose: these runs exist so the bench
+# recorder and its JSON schema can't silently rot, not to produce
+# publishable numbers). Override: make bench-smoke SMOKE_FLAGS='--secs 1'.
+SMOKE_FLAGS ?= --secs 0.1 --runs 1 --warmup 0 --initial 2000 \
+  --workload-threads 2 --size-heavy-threads 2 --refresh-us 300,1000
+
+.PHONY: build test pytest bench-smoke schema-check server-smoke artifacts \
+  fmt-check lint clean
+
+## Release build of the library, the csize binary, and every example
+## (kv_server is an example, so --examples is not optional).
+build:
+	$(CARGO) build --release --bins --examples
+
+## Tier-1 verify: the whole Rust test suite.
+test:
+	$(CARGO) test -q
+
+## Kernel tests (needs jax[cpu] + pytest; CI installs them).
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+## Format and lint gates, same invocations CI runs.
+fmt-check:
+	$(CARGO) fmt --check
+
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+## Six-policy ablation smoke run; writes BENCH_ablation.json.
+bench-smoke:
+	$(CARGO) bench --bench ablation_policies -- $(SMOKE_FLAGS)
+
+## Schema sanity for the bench recorder's report: required keys (incl.
+## shards / refresh_us / daemon_rounds), no NaN, no negative throughput.
+schema-check:
+	$(PYTHON) scripts/check_ablation_schema.py BENCH_ablation.json
+
+## Boot the reactor server and drive the full protocol — including an
+## overload burst that must observe ERR OVERLOAD — failing loud on hangs.
+server-smoke: build
+	timeout 120 bash scripts/server_smoke.sh
+
+## The AOT artifact flow: release binaries + ablation smoke + schema
+## check, collected with rendered figures into $(ARTIFACTS)/. The steps
+## run as sequential sub-makes (not prerequisites) because their order is
+## data flow, not a dependency DAG: schema-check validates the report
+## bench-smoke just wrote, so `make -j artifacts` must not reorder them
+## (or bless a stale report).
+artifacts:
+	$(MAKE) build
+	$(MAKE) bench-smoke
+	$(MAKE) schema-check
+	mkdir -p $(ARTIFACTS)
+	cp BENCH_ablation.json $(ARTIFACTS)/
+	cp target/release/csize $(ARTIFACTS)/
+	cp target/release/examples/kv_server $(ARTIFACTS)/
+	$(PYTHON) scripts/make_figures.py BENCH_ablation.json $(ARTIFACTS)
+	@echo "--- artifacts ---" && ls -l $(ARTIFACTS)
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS) BENCH_ablation.json

@@ -1,311 +1,87 @@
-//! A small TCP set server with exact and bounded-staleness SIZE
-//! endpoints — the "reliable size in a real system" scenario the paper's
-//! introduction motivates (monitoring, admission control,
-//! dynamic-language runtimes).
+//! Thin CLI shim over [`concurrent_size::server`] — the reactor-based TCP
+//! set server with exact, bounded-staleness, and estimated SIZE endpoints
+//! plus size-driven admission control (the "reliable size in a real
+//! system" scenario the paper's introduction motivates).
 //!
-//! Protocol (one command per line): `PUT k` | `DEL k` | `HAS k` | `SIZE`
-//! | `SIZE~ [ms]` | `SIZE?` | `QUIT`. Responses: `1`/`0` for ops, the
-//! exact count for `SIZE` (served through the store's combining arbiter,
-//! so concurrent SIZE clients share one collect), a possibly-stale count
-//! for `SIZE~` (wait-free published read, at most `ms` — default 50 —
-//! milliseconds old; with `--refresh-ms` a background `SizeRefresher`
-//! keeps the publication warm so these reads are passive), a bounded-lag
-//! O(shards) estimate for `SIZE?` (the sharded counter mirror,
-//! `--size-shards`), and `ERR ...` for malformed input or a store whose
-//! policy cannot serve the request. Run with `--help` for the full flag
-//! list.
-//!
-//! Connections are served by a **bounded worker pool** (never more than
-//! `thread_id::capacity()` handler threads): the per-thread size metadata
-//! has a fixed number of slots, so the old thread-per-connection design
-//! panicked in `acquire_slot` on the 65th live connection. Workers pull
-//! accepted sockets from a backlog channel and serve one connection at a
-//! time; excess clients queue instead of crashing the server.
+//! All the machinery lives in the library (`rust/src/server/`): the
+//! nonblocking reactor multiplexing every connection on one thread, the
+//! bounded handler pool executing store ops, the watermark admission gate
+//! shedding `PUT`s with `ERR OVERLOAD`, and the `STATS` telemetry line.
+//! This file only parses flags, builds the store, and — without
+//! `--listen` — runs a self-test that drives the server over real
+//! sockets: protocol checks, a client swarm, a concurrent-connection
+//! burst far past the old thread-slot panic threshold, and STATS/daemon
+//! assertions derived from the *configured* `--refresh-ms` (a slow CI
+//! machine changes the timing, not the contract).
 //!
 //! ```bash
 //! cargo run --release --example kv_server               # self-test mode
 //! cargo run --release --example kv_server -- --listen 127.0.0.1:7171 \
 //!     [--policy linearizable|handshake|optimistic|...] [--workers N] \
-//!     [--refresh-ms 5] [--size-shards auto]
+//!     [--refresh-ms 5] [--size-shards auto] [--reactor sleep|spin] \
+//!     [--admission-high N [--admission-low N]] [--max-conns N]
 //! ```
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{Receiver, sync_channel};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use concurrent_size::bench_util;
 use concurrent_size::cli::{Args, PolicyKind};
+use concurrent_size::harness;
+use concurrent_size::server::{BlockingClient, DEFAULT_RECENT_MS, parse_stats, Server, ServerConfig};
 use concurrent_size::set_api::ConcurrentSet;
 use concurrent_size::size::{detect_shards, SizeOpts};
 use concurrent_size::thread_id;
+use concurrent_size::workload::UPDATE_HEAVY;
 
 type Store = Arc<dyn ConcurrentSet>;
 
-/// Accepted connections waiting for a worker (beyond this, accept blocks).
-const BACKLOG: usize = 1024;
-
-/// Default staleness bound for `SIZE~` when the client names none.
-const DEFAULT_RECENT_MS: u64 = 50;
-
-fn handle(store: &dyn ConcurrentSet, stream: TcpStream) {
-    let mut out = match stream.try_clone() {
-        Ok(out) => out,
-        Err(_) => return,
-    };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => return,
-        };
-        let mut parts = line.split_whitespace();
-        let reply = match (parts.next(), parts.next()) {
-            (Some("PUT"), Some(k)) => match k.parse::<u64>() {
-                Ok(k) => (store.insert(k) as i64).to_string(),
-                Err(_) => "ERR bad key".into(),
-            },
-            (Some("DEL"), Some(k)) => match k.parse::<u64>() {
-                Ok(k) => (store.delete(k) as i64).to_string(),
-                Err(_) => "ERR bad key".into(),
-            },
-            (Some("HAS"), Some(k)) => match k.parse::<u64>() {
-                Ok(k) => (store.contains(k) as i64).to_string(),
-                Err(_) => "ERR bad key".into(),
-            },
-            // A store under a size-less policy answers gracefully instead
-            // of panicking the handler. Exact SIZEs go through the
-            // combining arbiter: concurrent SIZE clients share one
-            // underlying collect instead of serializing N of them.
-            (Some("SIZE"), _) => match store.size_exact() {
-                Some(v) => v.value.to_string(),
-                None => "ERR size unsupported by this policy".into(),
-            },
-            // Bounded-staleness size: wait-free while a recent-enough
-            // published result exists.
-            (Some("SIZE~"), ms) => {
-                match ms.map_or(Ok(DEFAULT_RECENT_MS), str::parse::<u64>) {
-                    Ok(ms) => match store.size_recent(Duration::from_millis(ms)) {
-                        Some(v) => v.value.to_string(),
-                        None => "ERR size unsupported by this policy".into(),
-                    },
-                    Err(_) => "ERR bad staleness".into(),
-                }
-            }
-            // Bounded-lag estimate from the sharded counter mirror: the
-            // cheapest probe the store offers (O(shards), no arbiter).
-            (Some("SIZE?"), _) => match store.size_estimate() {
-                Some(v) => v.to_string(),
-                None => "ERR estimate unavailable (no sharded mirror)".into(),
-            },
-            (Some("QUIT"), _) => return,
-            _ => "ERR unknown command".into(),
-        };
-        if writeln!(out, "{reply}").is_err() {
-            return;
-        }
-    }
-}
-
-/// Cap the pool so handler threads (plus the accept thread, the main
-/// thread, and a little slack for test clients) always fit in the
-/// per-thread metadata slots.
-fn clamp_workers(requested: usize) -> usize {
-    requested.clamp(1, thread_id::capacity() / 2)
-}
-
-/// Spawn `workers` handler threads draining `rx`; returns their handles.
-fn spawn_pool(
-    store: &Store,
-    rx: Receiver<TcpStream>,
-    workers: usize,
-) -> Vec<std::thread::JoinHandle<()>> {
-    let rx = Arc::new(Mutex::new(rx));
-    (0..workers)
-        .map(|_| {
-            let store = store.clone();
-            let rx = rx.clone();
-            std::thread::spawn(move || loop {
-                // Hold the lock only to dequeue, not while serving.
-                let stream = match rx.lock().unwrap().recv() {
-                    Ok(s) => s,
-                    Err(_) => return, // acceptor gone: drain and exit
-                };
-                handle(store.as_ref(), stream);
-            })
-        })
-        .collect()
-}
-
-/// Accept loop feeding the pool. Exits when the listener errors out.
-fn accept_into_pool(listener: TcpListener, store: Store, workers: usize) {
-    let (tx, rx) = sync_channel::<TcpStream>(BACKLOG);
-    let pool = spawn_pool(&store, rx, workers);
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                if tx.send(s).is_err() {
-                    break;
-                }
-            }
-            Err(e) => {
-                // Transient accept failures (ECONNABORTED, EMFILE, ...)
-                // must not take the whole server down.
-                eprintln!("kv_server: accept failed: {e}");
-                continue;
-            }
-        }
-    }
-    drop(tx);
-    for w in pool {
-        let _ = w.join();
-    }
-}
-
-fn serve(addr: &str, store: Store, workers: usize) -> std::io::Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    println!(
-        "kv_server listening on {addr} (PUT/DEL/HAS/SIZE/QUIT; {workers} workers)"
-    );
-    accept_into_pool(listener, store, workers);
-    Ok(())
-}
-
-/// Self-test: spin up the server on an ephemeral port, drive it with
-/// concurrent clients plus a connection burst beyond the thread-slot
-/// capacity, and check the SIZE endpoint against ground truth.
-fn self_test(store: Store, workers: usize) {
-    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
-    let addr = listener.local_addr().unwrap();
-    {
-        let store = store.clone();
-        std::thread::spawn(move || accept_into_pool(listener, store, workers));
-    }
-
-    let clients: Vec<_> = (0..4u64)
-        .map(|c| {
-            std::thread::spawn(move || {
-                let stream = TcpStream::connect(addr).expect("connect");
-                let mut out = stream.try_clone().unwrap();
-                let mut reader = BufReader::new(stream);
-                let mut line = String::new();
-                let mut send = |cmd: String, line: &mut String| {
-                    writeln!(out, "{cmd}").unwrap();
-                    line.clear();
-                    reader.read_line(line).unwrap();
-                    line.trim().to_string()
-                };
-                for k in (c * 1000)..(c * 1000 + 250) {
-                    assert_eq!(send(format!("PUT {k}"), &mut line), "1");
-                }
-                for k in (c * 1000)..(c * 1000 + 50) {
-                    assert_eq!(send(format!("DEL {k}"), &mut line), "1");
-                }
-                // A size-less policy (--policy baseline) answers ERR here.
-                let reply = send("SIZE".into(), &mut line);
-                if !reply.starts_with("ERR") {
-                    let size: i64 = reply.parse().expect("numeric SIZE reply");
-                    assert!((0..=1000).contains(&size), "impossible size {size}");
-                }
-                // Bounded-staleness reads must stay in the same range,
-                // with or without an explicit bound — and so must the
-                // sharded estimate, when the store carries a mirror.
-                for cmd in ["SIZE~", "SIZE~ 5", "SIZE?"] {
-                    let reply = send(cmd.into(), &mut line);
-                    if !reply.starts_with("ERR") {
-                        let size: i64 = reply.parse().expect("numeric size reply");
-                        assert!((0..=1000).contains(&size), "impossible {cmd} -> {size}");
-                    }
-                }
-                assert!(
-                    send("SIZE~ bogus".into(), &mut line).starts_with("ERR"),
-                    "malformed staleness must be rejected"
-                );
-                send("QUIT".into(), &mut line)
-            })
-        })
-        .collect();
-    for c in clients {
-        c.join().expect("self-test client failed");
-    }
-
-    // Burst: more connections than thread_id::capacity(), all open AT
-    // THE SAME TIME. The old thread-per-connection server panicked in
-    // `acquire_slot` as soon as the live-connection count crossed the
-    // slot capacity; the pool serves `workers` of them and queues the
-    // rest. (Opening them one at a time, as this test once did, never
-    // exercised that claim.)
-    let burst = thread_id::capacity() + 16;
-    let streams: Vec<TcpStream> = (0..burst)
-        .map(|_| TcpStream::connect(addr).expect("burst connect"))
-        .collect();
-    // Every connection is now open concurrently; drain them in accept
-    // order (a queued connection is only served once an earlier QUIT
-    // frees its worker).
-    for (i, stream) in streams.into_iter().enumerate() {
-        let mut out = stream.try_clone().unwrap();
-        let mut reader = BufReader::new(stream);
-        let mut line = String::new();
-        writeln!(out, "HAS {}", i % 7).unwrap();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.trim() == "0" || line.trim() == "1", "burst reply {line:?}");
-        writeln!(out, "QUIT").unwrap();
-    }
-
-    // With a size-less policy (--policy baseline) fall back to a census.
-    match store.size() {
-        Some(s) => assert_eq!(s, 4 * 200),
-        None => {
-            let live = (0..4000u64).filter(|&k| store.contains(k)).count();
-            assert_eq!(live, 4 * 200);
-        }
-    }
-    // The sharded mirror must agree exactly at quiescence.
-    if let Some(estimate) = store.size_estimate() {
-        assert_eq!(estimate, 4 * 200, "quiescent SIZE? estimate drifted");
-    }
-    println!(
-        "kv_server self-test OK: survived {burst} concurrently-open connections, \
-         final SIZE = {:?}, SIZE? = {:?}, arbiter stats = {:?}",
-        store.size(),
-        store.size_estimate(),
-        store.size_stats(),
-    );
-}
-
 fn usage() {
     println!(
-        "kv_server — concurrent-size TCP set server
+        "kv_server — concurrent-size TCP set server (reactor + admission control)
 
 USAGE:
-  kv_server [--listen ADDR] [--policy P] [--workers N]
-            [--refresh-ms MS] [--size-shards auto|N]
+  kv_server [--listen ADDR] [--policy P] [--workers N] [--max-conns N]
+            [--refresh-ms MS] [--size-shards auto|N] [--reactor sleep|spin]
+            [--admission-high N [--admission-low N]]
 
 FLAGS:
-  --listen ADDR     serve on ADDR; without it the binary runs its self-test
-  --policy P        size policy: baseline|linearizable|naive|lock|handshake|
-                    optimistic (default linearizable)
-  --workers N       handler pool size (default 16, clamped to half the
-                    thread-slot capacity)
-  --refresh-ms MS   background SizeRefresher period in milliseconds: keeps
-                    the published size warm so SIZE~ reads are passive
-                    (default: off when serving, 5 in self-test mode)
-  --size-shards S   stripe count of the sharded counter mirror behind SIZE?
-                    ('auto' = machine-detected, 0 = disabled; default auto)
-  --help            this text
+  --listen ADDR       serve on ADDR (port 0 = ephemeral; the real address is
+                      printed); without it the binary runs its self-test
+  --policy P          size policy: baseline|linearizable|naive|lock|handshake|
+                      optimistic (default linearizable)
+  --workers N         handler pool size (default 16, clamped to half the
+                      thread-slot capacity; the reactor itself is 1 thread no
+                      matter how many connections are live)
+  --max-conns N       live-connection ceiling (default 4096); excess clients
+                      get 'ERR server full'
+  --refresh-ms MS     background SizeRefresher period in milliseconds: keeps
+                      the published size warm so SIZE~ reads are passive
+                      (default: off when serving, 5 in self-test mode)
+  --size-shards S     stripe count of the sharded counter mirror behind SIZE?
+                      and admission control ('auto' = machine-detected,
+                      0 = disabled; default auto)
+  --reactor M         reactor idle mode: sleep (default, ~0 idle CPU) | spin
+                      (busy-poll, lowest latency)
+  --admission-high N  shed PUTs with ERR OVERLOAD once the size estimate
+                      reaches N (admission control off unless given)
+  --admission-low N   readmit once the estimate drains to N (default: high/2;
+                      the gap is the hysteresis band)
+  --help              this text (exits 0 without binding a socket)
 
 PROTOCOL (one command per line):
-  PUT k | DEL k | HAS k   -> 1 / 0
+  PUT k | DEL k | HAS k   -> 1 / 0; PUT answers ERR OVERLOAD while shedding
   SIZE                    -> exact linearizable count (combining arbiter)
   SIZE~ [ms]              -> count at most ms (default {DEFAULT_RECENT_MS}) milliseconds stale
-  SIZE?                   -> O(shards) bounded-lag estimate
-  QUIT"
+  SIZE?                   -> O(shards) bounded-lag estimate (never negative)
+  STATS                   -> key=value server + size telemetry, one line
+  QUIT                    -> close (no reply)"
     );
 }
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    // --help must exit 0 without binding a socket (CI help-gates on this).
     if args.has_flag("help") {
         usage();
         return;
@@ -315,11 +91,17 @@ fn main() {
         eprintln!("unknown --policy {policy:?} (--help for the list)");
         std::process::exit(2);
     };
+    let config = match ServerConfig::from_args(&args) {
+        Ok(config) => config,
+        Err(msg) => {
+            eprintln!("kv_server: {msg} (--help for usage)");
+            std::process::exit(2);
+        }
+    };
     let opts = SizeOpts::default().with_shards(args.size_shards(detect_shards()));
     let store: Store = Arc::from(
         bench_util::make_set_opts("hashtable", kind, 1 << 16, opts).expect("hashtable factory"),
     );
-    let workers = clamp_workers(args.get_usize("workers", 16));
     let serving = args.get("listen").is_some();
     // Self-test mode exercises the daemon path by default; a served store
     // only runs one when asked.
@@ -331,7 +113,166 @@ fn main() {
         }
     }
     match args.get("listen") {
-        Some(addr) => serve(&addr.to_string(), store, workers).expect("serve"),
-        None => self_test(store, workers),
+        Some(addr) => {
+            let server = Server::bind(addr, store, config).expect("bind");
+            println!(
+                "kv_server listening on {} ({} handler threads; \
+                 PUT/DEL/HAS/SIZE/SIZE~/SIZE?/STATS/QUIT)",
+                server.local_addr(),
+                server.handler_threads(),
+            );
+            server.wait();
+        }
+        None => self_test(store, config, refresh_ms),
     }
+}
+
+/// Self-test: boot the real server on an ephemeral port and drive it over
+/// sockets — protocol checks from concurrent clients, a swarm, a burst of
+/// connections far past the old per-connection thread-slot limit, and
+/// STATS under the running refresher. Staleness bounds are derived from
+/// the configured `--refresh-ms` (not hard-coded) so slow CI machines
+/// shift timing without breaking the assertions.
+fn self_test(store: Store, config: ServerConfig, refresh_ms: f64) {
+    let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind");
+    let addr = server.local_addr();
+    // A bound the daemon can beat comfortably: two periods (one period
+    // would race the publication instant itself), floored at the protocol
+    // default when no daemon runs.
+    let recent_ms = if refresh_ms > 0.0 {
+        ((2.0 * refresh_ms).ceil() as u64).max(1)
+    } else {
+        DEFAULT_RECENT_MS
+    };
+
+    let clients: Vec<_> = (0..4u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = BlockingClient::connect(addr);
+                for k in (c * 1000)..(c * 1000 + 250) {
+                    assert_eq!(client.cmd(&format!("PUT {k}")), "1");
+                }
+                for k in (c * 1000)..(c * 1000 + 50) {
+                    assert_eq!(client.cmd(&format!("DEL {k}")), "1");
+                }
+                // A size-less policy (--policy baseline) answers ERR here.
+                let reply = client.cmd("SIZE");
+                if !reply.starts_with("ERR") {
+                    let size: i64 = reply.parse().expect("numeric SIZE reply");
+                    assert!((0..=1000).contains(&size), "impossible size {size}");
+                }
+                // Bounded-staleness reads must stay in range under the
+                // bound derived from the configured refresh period — and
+                // so must the sharded estimate, when a mirror exists.
+                for cmd in ["SIZE~".to_string(), format!("SIZE~ {recent_ms}"), "SIZE?".into()] {
+                    let reply = client.cmd(&cmd);
+                    if !reply.starts_with("ERR") {
+                        let size: i64 = reply.parse().expect("numeric size reply");
+                        assert!((0..=1000).contains(&size), "impossible {cmd} -> {size}");
+                    }
+                }
+                assert!(
+                    client.cmd("SIZE~ bogus").starts_with("ERR"),
+                    "malformed staleness must be rejected"
+                );
+                assert!(client.cmd("GARBAGE").starts_with("ERR"), "junk must get ERR");
+                // Key 999 is in nobody's range: proves the connection
+                // survives bad commands without racing other clients.
+                assert_eq!(client.cmd("HAS 999"), "0", "conn must survive a bad command");
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("self-test client failed");
+    }
+
+    // Burst: hold far more connections open AT THE SAME TIME than there
+    // are thread-id slots (the old thread-per-connection server panicked
+    // past `capacity()`; the old pool held excess clients hostage behind
+    // `workers` live ones). The reactor must hold them all concurrently
+    // while the pool stays at `handler_threads() <= capacity()/2`.
+    let burst = (thread_id::capacity() * 4).max(256);
+    let mut streams: Vec<BlockingClient> =
+        (0..burst).map(|_| BlockingClient::connect(addr)).collect();
+    for (i, client) in streams.iter_mut().enumerate() {
+        client.send(format!("HAS {}", i % 7));
+    }
+    for client in &mut streams {
+        let reply = client.recv().expect("burst reply");
+        assert!(reply == "0" || reply == "1", "burst reply {reply:?}");
+    }
+    // Every burst reply arrived and nothing QUIT yet, so all burst
+    // connections are provably open — and accepted — right now.
+    let live = server.stats().live_conns;
+    assert!(live >= burst, "reactor holds {live} connections, wanted >= {burst}");
+    assert!(server.handler_threads() <= thread_id::capacity() / 2);
+    drop(streams);
+
+    // Swarm load over the server path (clients >> thread slots is fine:
+    // swarm clients hold sockets, not slots).
+    let swarm = harness::client_swarm(addr, 8, 500, UPDATE_HEAVY, 4096, 0xBEEF)
+        .expect("swarm against self-test server");
+    assert_eq!(swarm.ops, 8 * 500, "every swarm command must get a reply");
+    if config.admission.is_none() {
+        assert_eq!(swarm.overloads, 0, "no admission gate configured");
+    }
+    // Size probes answer ERR under a size-less policy or a disabled
+    // mirror; only a fully capable store must be error-free.
+    if store.size().is_some() && store.size_estimate().is_some() {
+        assert_eq!(swarm.errors, 0, "swarm must not see protocol errors");
+    }
+
+    // STATS must parse as key=value integers while the refresher daemon
+    // runs; with a daemon configured, wait (bounded by periods derived
+    // from --refresh-ms, not wall-clock guesses) until it has driven
+    // rounds.
+    let mut probe = BlockingClient::connect(addr);
+    let stats = parse_stats(&probe.cmd("STATS")).expect("STATS must parse");
+    assert!(stats.contains_key("conns") && stats.contains_key("daemon_rounds"));
+    if refresh_ms > 0.0 && store.size().is_some() {
+        let period = Duration::from_secs_f64(refresh_ms / 1e3);
+        let deadline = Instant::now() + (period * 400).max(Duration::from_secs(2));
+        loop {
+            let stats = parse_stats(&probe.cmd("STATS")).expect("STATS must parse");
+            if stats["daemon_rounds"] > 0 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "refresher drove no rounds within the derived deadline"
+            );
+            std::thread::sleep(period);
+        }
+    }
+
+    // Ground truth at quiescence, as before.
+    // Census the whole touched key space: protocol clients use 0..3250,
+    // the swarm 0..4096.
+    match store.size() {
+        Some(s) => {
+            let live = (0..4096u64).filter(|&k| store.contains(k)).count() as i64;
+            assert_eq!(s, live, "exact size disagrees with a census");
+        }
+        None => {
+            // The swarm perturbed the key space, so only sanity holds
+            // for a size-less store: the census must run and be nonempty.
+            let live = (0..4096u64).filter(|&k| store.contains(k)).count();
+            assert!(live > 0, "census found an empty store after the run");
+        }
+    }
+    // The sharded mirror must agree exactly at quiescence.
+    if let Some(estimate) = store.size_estimate() {
+        assert_eq!(estimate, store.size().unwrap_or(estimate), "SIZE? drifted");
+    }
+    println!(
+        "kv_server self-test OK: {burst} concurrently-open connections on \
+         {} handler threads, swarm {} ops ({:.0} ops/s), final SIZE = {:?}, \
+         SIZE? = {:?}, stats = {:?}",
+        server.handler_threads(),
+        swarm.ops,
+        swarm.throughput(),
+        store.size(),
+        store.size_estimate(),
+        server.stats(),
+    );
 }

@@ -178,6 +178,20 @@ impl Args {
         self.get_u64(key, default as u64) as usize
     }
 
+    /// Optional integer: `None` when the flag is absent (panics on
+    /// garbage, like [`Self::get_u64`]). For flags whose mere presence
+    /// changes behavior — `--admission-high` with no default makes
+    /// admission control opt-in — so a value-less spelling (`--foo` with
+    /// the value forgotten) fails loudly instead of silently reading as
+    /// "absent" and disabling the feature the caller asked for.
+    pub fn get_opt_u64(&self, key: &str) -> Option<u64> {
+        if self.has_flag(key) {
+            panic!("--{key} expects an integer value, got none");
+        }
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got {v:?}")))
@@ -243,6 +257,27 @@ mod tests {
         let a = args("x");
         assert_eq!(a.get_u64("missing", 7), 7);
         assert_eq!(a.get_f64("missing", 0.5), 0.5);
+    }
+
+    #[test]
+    fn optional_integers() {
+        let a = args("serve --admission-high 1000");
+        assert_eq!(a.get_opt_u64("admission-high"), Some(1000));
+        assert_eq!(a.get_opt_u64("admission-low"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "--admission-high expects an integer")]
+    fn optional_integer_rejects_garbage() {
+        args("serve --admission-high lots").get_opt_u64("admission-high");
+    }
+
+    #[test]
+    #[should_panic(expected = "--admission-high expects an integer value, got none")]
+    fn optional_integer_rejects_valueless_flag() {
+        // `--admission-high` with the value forgotten (next token is
+        // another flag) must not silently read as "absent".
+        args("serve --admission-high --listen 1:2").get_opt_u64("admission-high");
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! reports per-category operation counts. A per-op-type mode times
 //! 100-operation uniform batches for the Figure 13 breakdown.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 use std::time::{Duration, Instant};
 
@@ -227,6 +229,111 @@ pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
         set.set_refresh_period(None); // joins the daemon before returning
     }
     result
+}
+
+/// Aggregate result of one [`client_swarm`] run against a live
+/// [`crate::server::Server`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwarmResult {
+    /// Replies received (one per command sent).
+    pub ops: u64,
+    /// `ERR OVERLOAD` replies — `PUT`s shed by admission control.
+    pub overloads: u64,
+    /// Other `ERR` replies (0 against a size-capable, mirrored store).
+    pub errors: u64,
+    pub elapsed: Duration,
+}
+
+impl SwarmResult {
+    pub fn throughput(&self) -> f64 {
+        self.ops as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+/// How often a swarm client probes the size endpoints instead of driving
+/// the workload mix (every Nth command cycles `SIZE~`/`SIZE?`).
+const SWARM_PROBE_EVERY: u64 = 61;
+
+/// The server-path load mode: `clients` TCP connections each drive
+/// `ops_per_client` commands from the workload mix (`PUT`/`DEL`/`HAS`
+/// per [`Mix`], with a periodic `SIZE~`/`SIZE?` probe mixed in) and read
+/// every reply. This benchmarks the whole reactor + handler-pool +
+/// admission path rather than the bare structure; the server tests and
+/// `make server-smoke` both drive it.
+///
+/// Client threads never touch the store in-process, so they consume **no**
+/// [`crate::thread_id`] slots — swarms far wider than the thread-slot
+/// capacity are exactly the point (the reactor multiplexes them).
+pub fn client_swarm(
+    addr: SocketAddr,
+    clients: usize,
+    ops_per_client: u64,
+    mix: Mix,
+    key_range: u64,
+    seed: u64,
+) -> std::io::Result<SwarmResult> {
+    let start = Instant::now();
+    let mut result = SwarmResult::default();
+    let outcomes: Vec<std::io::Result<(u64, u64, u64)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> std::io::Result<(u64, u64, u64)> {
+                    let stream = TcpStream::connect(addr)?;
+                    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+                    let mut out = stream.try_clone()?;
+                    let mut reader = BufReader::new(stream);
+                    let mut ops_stream = OpStream::new(seed ^ ((c as u64) << 24), mix, key_range);
+                    let (mut ops, mut overloads, mut errors) = (0u64, 0u64, 0u64);
+                    let mut line = String::new();
+                    for i in 0..ops_per_client {
+                        let cmd = if i % SWARM_PROBE_EVERY == SWARM_PROBE_EVERY - 1 {
+                            if (i / SWARM_PROBE_EVERY) % 2 == 0 {
+                                "SIZE~ 50".to_string()
+                            } else {
+                                "SIZE?".to_string()
+                            }
+                        } else {
+                            let (op, key) = ops_stream.next();
+                            match op {
+                                OpType::Insert => format!("PUT {key}"),
+                                OpType::Delete => format!("DEL {key}"),
+                                OpType::Contains => format!("HAS {key}"),
+                            }
+                        };
+                        writeln!(out, "{cmd}")?;
+                        line.clear();
+                        if reader.read_line(&mut line)? == 0 {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::UnexpectedEof,
+                                "server closed mid-swarm",
+                            ));
+                        }
+                        ops += 1;
+                        let reply = line.trim();
+                        if reply == "ERR OVERLOAD" {
+                            overloads += 1;
+                        } else if reply.starts_with("ERR") {
+                            errors += 1;
+                        }
+                    }
+                    writeln!(out, "QUIT")?;
+                    Ok((ops, overloads, errors))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("swarm client panicked"))
+            .collect()
+    });
+    for outcome in outcomes {
+        let (ops, overloads, errors) = outcome?;
+        result.ops += ops;
+        result.overloads += overloads;
+        result.errors += errors;
+    }
+    result.elapsed = start.elapsed();
+    Ok(result)
 }
 
 /// Repeated measurement with warmup (paper: 5 warmup + 10 measured runs;

@@ -75,6 +75,16 @@
 //!   loaders fail gracefully and the pipeline consumers skip.
 //! * [`history`] — operation logging + the offline size-linearizability
 //!   checker (rust oracle, cross-checked against the Pallas pipeline).
+//! * [`server`] — the async TCP front-end over any [`set_api::ConcurrentSet`]:
+//!   a std-only nonblocking **reactor** (one thread multiplexing thousands
+//!   of connections through per-connection read/write buffers and
+//!   partial-line state machines) feeding a handler pool bounded by
+//!   [`thread_id::capacity`], with **size-driven admission control** —
+//!   incoming `PUT`s are checked against high/low watermarks on the
+//!   `size_estimate` probe (hysteresis; `ERR OVERLOAD` sheds) — and a
+//!   `STATS` endpoint merging server gauges with [`size::ArbiterStats`].
+//!   `examples/kv_server.rs` is a thin CLI shim over it; `make
+//!   server-smoke` boots it in CI.
 //!
 //! ## Quickstart
 //!
@@ -105,6 +115,7 @@ pub mod pad;
 pub mod proptest_lite;
 pub mod rng;
 pub mod runtime;
+pub mod server;
 pub mod set_api;
 pub mod size;
 pub mod skiplist;

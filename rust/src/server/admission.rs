@@ -1,0 +1,196 @@
+//! Size-driven admission control: the "reliable size in a real system"
+//! scenario the paper's introduction motivates, closed end to end.
+//!
+//! The server consults the store's O(shards) bounded-lag probe
+//! (`ConcurrentSet::size_estimate`, the [`crate::size::ShardedCounters`]
+//! mirror from the scale layer) on every incoming `PUT` and compares it
+//! against a high/low watermark pair with **hysteresis**:
+//!
+//! * estimate ≥ `high` → start **shedding**: `PUT`s get
+//!   [`super::proto::OVERLOAD_REPLY`] without touching the store (deletes,
+//!   reads and every size probe stay admitted — they are what drains the
+//!   overload and what monitoring needs while it happens);
+//! * once shedding, stay shedding until the estimate falls **to or below
+//!   `low`** — the band between the watermarks absorbs estimate jitter
+//!   (the probe may trail the exact size by the in-flight ops), so
+//!   admission does not flap at the boundary.
+//!
+//! The estimate is clamped at zero before any comparison: the mirror's
+//! reconciliation sweep already clamps (exact at quiescence, never
+//! negative), and this layer re-asserts the contract so a shed decision
+//! can never be justified by an absurd negative reading — the proptest in
+//! `rust/tests/server.rs` pins both layers.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
+
+/// High/low occupancy watermarks, in keys. `low <= high`; the gap is the
+/// hysteresis band.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Watermarks {
+    /// Shed `PUT`s once the estimate reaches this.
+    pub high: i64,
+    /// Readmit only once the estimate has drained back to this.
+    pub low: i64,
+}
+
+impl Watermarks {
+    /// Build a validated pair. Panics on `low > high` or a negative
+    /// `high` — both are configuration errors worth failing loudly on
+    /// (CLI surfaces validate first and exit 2 instead).
+    pub fn new(high: i64, low: i64) -> Self {
+        assert!(high >= 0, "admission high watermark must be >= 0, got {high}");
+        assert!(low <= high, "admission low watermark {low} above high {high}");
+        Self { high, low: low.max(0) }
+    }
+}
+
+/// The admission gate: watermark state plus shed telemetry. One per
+/// server; every decision is a couple of atomic ops, cheap enough for the
+/// per-`PUT` hot path.
+pub struct Admission {
+    marks: Watermarks,
+    /// Hysteresis state: currently shedding?
+    shedding: AtomicBool,
+    /// `PUT`s shed so far (the `STATS` `shed=` field).
+    shed: AtomicU64,
+    /// Total decisions taken (shed + admitted), for rate accounting.
+    decisions: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(marks: Watermarks) -> Self {
+        Self {
+            marks,
+            shedding: AtomicBool::new(false),
+            shed: AtomicU64::new(0),
+            decisions: AtomicU64::new(0),
+        }
+    }
+
+    /// The clamped-estimate contract, in one place: a missing probe (no
+    /// sharded mirror) reads as 0 — admission never sheds on a store it
+    /// cannot measure — and a negative reading (impossible per the mirror
+    /// contract, re-asserted here) clamps to 0.
+    pub fn clamp(estimate: Option<i64>) -> i64 {
+        estimate.unwrap_or(0).max(0)
+    }
+
+    /// Decide one incoming `PUT` given the store's current size estimate;
+    /// `true` admits, `false` sheds. Applies the hysteresis transition
+    /// described in the module docs.
+    pub fn admit(&self, estimate: Option<i64>) -> bool {
+        let est = Self::clamp(estimate);
+        debug_assert!(est >= 0, "clamped estimate went negative");
+        self.decisions.fetch_add(1, Relaxed);
+        let shed = if self.shedding.load(SeqCst) {
+            if est <= self.marks.low {
+                self.shedding.store(false, SeqCst);
+                false
+            } else {
+                true
+            }
+        } else if est >= self.marks.high {
+            self.shedding.store(true, SeqCst);
+            true
+        } else {
+            false
+        };
+        if shed {
+            self.shed.fetch_add(1, Relaxed);
+        }
+        !shed
+    }
+
+    /// Whether the gate is currently shedding (the `STATS` `admitting=`
+    /// field is the negation).
+    pub fn shedding(&self) -> bool {
+        self.shedding.load(SeqCst)
+    }
+
+    /// `PUT`s shed so far.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Relaxed)
+    }
+
+    /// Total decisions taken so far.
+    pub fn decisions(&self) -> u64 {
+        self.decisions.load(Relaxed)
+    }
+
+    /// The configured watermarks.
+    pub fn watermarks(&self) -> Watermarks {
+        self.marks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(high: i64, low: i64) -> Admission {
+        Admission::new(Watermarks::new(high, low))
+    }
+
+    #[test]
+    fn admits_below_high_watermark() {
+        let a = gate(10, 5);
+        for est in [0, 3, 9] {
+            assert!(a.admit(Some(est)), "est={est} must admit");
+        }
+        assert!(!a.shedding());
+        assert_eq!(a.shed_count(), 0);
+        assert_eq!(a.decisions(), 3);
+    }
+
+    #[test]
+    fn sheds_at_high_and_holds_through_the_band() {
+        let a = gate(10, 5);
+        assert!(!a.admit(Some(10)), "reaching high must shed");
+        assert!(a.shedding());
+        // Hysteresis: anywhere in (low, high) stays shedding.
+        for est in [9, 7, 6] {
+            assert!(!a.admit(Some(est)), "est={est} inside the band must stay shed");
+        }
+        assert_eq!(a.shed_count(), 4);
+    }
+
+    #[test]
+    fn readmits_only_at_or_below_low() {
+        let a = gate(10, 5);
+        assert!(!a.admit(Some(12)));
+        assert!(!a.admit(Some(6)), "one above low: still shedding");
+        assert!(a.admit(Some(5)), "at low: readmit");
+        assert!(!a.shedding());
+        // Fresh climb re-triggers at high, not before.
+        assert!(a.admit(Some(9)));
+        assert!(!a.admit(Some(11)));
+    }
+
+    #[test]
+    fn clamps_absurd_estimates() {
+        assert_eq!(Admission::clamp(None), 0);
+        assert_eq!(Admission::clamp(Some(-7)), 0);
+        assert_eq!(Admission::clamp(Some(i64::MIN)), 0);
+        assert_eq!(Admission::clamp(Some(42)), 42);
+        // A negative reading can never justify shedding...
+        let a = gate(10, 5);
+        assert!(a.admit(Some(-1_000_000)));
+        // ...and a missing mirror admits everything.
+        assert!(a.admit(None));
+        assert_eq!(a.shed_count(), 0);
+    }
+
+    #[test]
+    fn equal_watermarks_degenerate_band() {
+        let a = gate(4, 4);
+        assert!(a.admit(Some(3)));
+        assert!(!a.admit(Some(4)), "at high: shed");
+        assert!(a.admit(Some(4)), "at low (== high): readmit immediately");
+    }
+
+    #[test]
+    #[should_panic(expected = "low watermark")]
+    fn rejects_inverted_watermarks() {
+        Watermarks::new(5, 10);
+    }
+}

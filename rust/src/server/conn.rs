@@ -1,0 +1,307 @@
+//! Per-connection state for the reactor: nonblocking read/write buffers
+//! and the partial-line state machine.
+//!
+//! A connection owns a nonblocking [`TcpStream`] plus three pieces of
+//! state the reactor multiplexes over:
+//!
+//! * a [`LineBuffer`] accumulating read bytes until a `\n` completes a
+//!   command (clients may trickle a line over many packets, or batch many
+//!   lines into one);
+//! * a FIFO of [`Pending`] work — parsed requests and precomputed error
+//!   replies interleaved **in arrival order**, so a malformed line's
+//!   `ERR` answer never overtakes the reply of an earlier valid command
+//!   still in the handler pool;
+//! * a write buffer with a partial-write cursor, flushed as the socket
+//!   accepts bytes.
+//!
+//! At most one request per connection is in flight in the handler pool
+//! (`in_flight`); the next pending entry dispatches only when its reply
+//! comes back. That pipelines the *reactor* across thousands of
+//! connections while keeping per-connection replies strictly ordered.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+use super::proto::{self, MAX_LINE, Request};
+
+/// Ordered per-connection work: a parsed request, or an error reply that
+/// must go out in sequence with the requests around it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum Pending {
+    Req(Request),
+    Reply(String),
+}
+
+/// Growable byte accumulator that yields complete `\n`-terminated lines,
+/// tolerating `\r\n` and enforcing [`MAX_LINE`]. Pure (no I/O), so the
+/// partial-line handling is testable without sockets.
+#[derive(Default)]
+pub(crate) struct LineBuffer {
+    buf: Vec<u8>,
+}
+
+/// A line longer than [`MAX_LINE`] arrived (terminated or not).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct LineTooLong;
+
+/// Most bytes one connection may read per reactor tick: keeps a single
+/// fire-hosing client from starving the sweep, and bounds how far past
+/// the queue caps one tick can overshoot.
+const READ_BUDGET: usize = 16 * 1024;
+
+/// Stop reading a connection once this many parsed-but-unserved entries
+/// queue up (a pipelining client that never reads its replies); TCP
+/// backpressure then pushes back on the sender. Reads resume as dispatch
+/// drains the queue.
+const PENDING_CAP: usize = 1024;
+
+/// Stop reading a connection once this many reply bytes sit unflushed —
+/// the client is not draining its side, so stop growing ours.
+const OUTBUF_CAP: usize = 64 * 1024;
+
+impl LineBuffer {
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Next complete line (without its terminator, `\r` stripped), or
+    /// `Err(LineTooLong)` when a line's *content* exceeds [`MAX_LINE`] —
+    /// whether its terminator already arrived (an over-long line is
+    /// rejected, not served) or not (an unterminated prefix must not
+    /// buffer without bound). Terminator bytes (`\n` and a preceding
+    /// `\r`) never count against the cap, so LF and CRLF clients get the
+    /// same limit; the unterminated check leaves one byte of slack for a
+    /// `\r` whose `\n` is still in flight. The caller answers and closes.
+    pub fn next_line(&mut self) -> Option<Result<String, LineTooLong>> {
+        match self.buf.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                let content = i - usize::from(i > 0 && self.buf[i - 1] == b'\r');
+                if content > MAX_LINE {
+                    return Some(Err(LineTooLong));
+                }
+                let mut line: Vec<u8> = self.buf.drain(..=i).collect();
+                line.pop(); // the \n
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                Some(Ok(String::from_utf8_lossy(&line).into_owned()))
+            }
+            None if self.buf.len() > MAX_LINE + 1 => Some(Err(LineTooLong)),
+            None => None,
+        }
+    }
+}
+
+/// One client connection, owned by the reactor.
+pub(crate) struct Conn {
+    stream: TcpStream,
+    lines: LineBuffer,
+    outbuf: Vec<u8>,
+    /// Bytes of `outbuf` already written (partial-write cursor).
+    written: usize,
+    pub pending: VecDeque<Pending>,
+    /// A request from this connection is in the handler pool.
+    pub in_flight: bool,
+    /// Serve what is queued, flush, then close (QUIT / EOF / protocol
+    /// violation). No further input is read.
+    pub closing: bool,
+    /// Hard failure: drop the connection without flushing.
+    pub dead: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> std::io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        Ok(Self {
+            stream,
+            lines: LineBuffer::default(),
+            outbuf: Vec::new(),
+            written: 0,
+            pending: VecDeque::new(),
+            in_flight: false,
+            closing: false,
+            dead: false,
+        })
+    }
+
+    /// Drain readable bytes (bounded by [`READ_BUDGET`]) and parse
+    /// complete lines into `pending`. Backpressure: a connection whose
+    /// pending queue or write buffer is over its cap is not read at all —
+    /// the kernel socket buffer fills and TCP pushes back on the client —
+    /// so per-connection memory stays bounded no matter how hard a client
+    /// pipelines without reading. Returns whether any progress was made
+    /// (the reactor's idle signal).
+    pub fn pump_read(&mut self) -> bool {
+        if self.closing
+            || self.dead
+            || self.pending.len() >= PENDING_CAP
+            || self.outbuf.len() - self.written >= OUTBUF_CAP
+        {
+            return false;
+        }
+        let mut progress = false;
+        let mut budget = READ_BUDGET;
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                // EOF: the client is done sending; serve what is
+                // buffered, flush, then close.
+                Ok(0) => {
+                    self.closing = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.lines.push(&chunk[..n]);
+                    progress = true;
+                    budget = budget.saturating_sub(n);
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return progress;
+                }
+            }
+        }
+        while let Some(line) = self.lines.next_line() {
+            match line {
+                Ok(text) => match proto::parse(&text) {
+                    Ok(req) => self.pending.push_back(Pending::Req(req)),
+                    Err(reply) => self.pending.push_back(Pending::Reply(reply)),
+                },
+                Err(LineTooLong) => {
+                    self.pending.push_back(Pending::Reply("ERR line too long".into()));
+                    self.closing = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Queue one reply line for writing.
+    pub fn enqueue_reply(&mut self, reply: &str) {
+        self.outbuf.extend_from_slice(reply.as_bytes());
+        self.outbuf.push(b'\n');
+    }
+
+    /// Write as much of the out-buffer as the socket accepts. Returns
+    /// whether any bytes moved.
+    pub fn pump_write(&mut self) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut progress = false;
+        while self.written < self.outbuf.len() {
+            match self.stream.write(&self.outbuf[self.written..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return progress;
+                }
+                Ok(n) => {
+                    self.written += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return progress;
+                }
+            }
+        }
+        if self.written > 0 && self.written == self.outbuf.len() {
+            self.outbuf.clear();
+            self.written = 0;
+        }
+        progress
+    }
+
+    /// Whether the reactor should drop this connection now: dead, or
+    /// cleanly finished (closing, nothing queued, nothing in flight,
+    /// everything flushed).
+    pub fn should_close(&self) -> bool {
+        self.dead
+            || (self.closing
+                && !self.in_flight
+                && self.pending.is_empty()
+                && self.written == self.outbuf.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_buffer_splits_batched_lines() {
+        let mut lb = LineBuffer::default();
+        lb.push(b"PUT 1\nDEL 2\r\nHAS 3\n");
+        assert_eq!(lb.next_line(), Some(Ok("PUT 1".into())));
+        assert_eq!(lb.next_line(), Some(Ok("DEL 2".into())));
+        assert_eq!(lb.next_line(), Some(Ok("HAS 3".into())));
+        assert_eq!(lb.next_line(), None);
+    }
+
+    #[test]
+    fn line_buffer_reassembles_trickled_bytes() {
+        let mut lb = LineBuffer::default();
+        lb.push(b"PU");
+        assert_eq!(lb.next_line(), None);
+        lb.push(b"T 4");
+        assert_eq!(lb.next_line(), None);
+        lb.push(b"2\nHA");
+        assert_eq!(lb.next_line(), Some(Ok("PUT 42".into())));
+        assert_eq!(lb.next_line(), None);
+        lb.push(b"S 1\n");
+        assert_eq!(lb.next_line(), Some(Ok("HAS 1".into())));
+    }
+
+    #[test]
+    fn line_buffer_rejects_unbounded_lines() {
+        // One byte of slack beyond MAX_LINE is reserved for a CRLF's \r
+        // whose \n has not arrived; past that, reject.
+        let mut lb = LineBuffer::default();
+        lb.push(&[b'x'; MAX_LINE + 1]);
+        assert_eq!(lb.next_line(), None, "could still be a max-length CRLF line");
+        lb.push(b"x");
+        assert_eq!(lb.next_line(), Some(Err(LineTooLong)));
+    }
+
+    #[test]
+    fn line_buffer_accepts_exactly_max_line_terminated() {
+        // LF and CRLF clients get the same content limit: terminator
+        // bytes never count against MAX_LINE.
+        for terminator in [b"\n".as_slice(), b"\r\n".as_slice()] {
+            let mut lb = LineBuffer::default();
+            let mut long = vec![b'y'; MAX_LINE];
+            long.extend_from_slice(terminator);
+            lb.push(&long);
+            assert_eq!(lb.next_line(), Some(Ok("y".repeat(MAX_LINE))));
+        }
+    }
+
+    #[test]
+    fn line_buffer_rejects_overlong_even_when_terminated() {
+        // The cap must hold when the whole line (terminator included)
+        // arrives in one burst, not just for slow-trickling clients.
+        let mut lb = LineBuffer::default();
+        let mut long = vec![b'z'; MAX_LINE + 1];
+        long.push(b'\n');
+        lb.push(&long);
+        assert_eq!(lb.next_line(), Some(Err(LineTooLong)));
+    }
+
+    #[test]
+    fn empty_lines_are_lines() {
+        let mut lb = LineBuffer::default();
+        lb.push(b"\n\n");
+        assert_eq!(lb.next_line(), Some(Ok(String::new())));
+        assert_eq!(lb.next_line(), Some(Ok(String::new())));
+        assert_eq!(lb.next_line(), None);
+    }
+}

@@ -1,0 +1,434 @@
+//! The async server subsystem: a std-only nonblocking TCP front-end over
+//! any [`ConcurrentSet`], with size-driven admission control.
+//!
+//! This is the paper's motivating scenario made load-bearing: the
+//! introduction argues a reliable concurrent size exists *for* real
+//! systems — monitoring and admission control — and this module wires the
+//! crate's whole size stack into exactly those paths:
+//!
+//! * the **reactor** ([`reactor`]) — one thread multiplexing every
+//!   connection over nonblocking sockets with per-connection read/write
+//!   buffers and partial-line state machines ([`conn`]), replacing the
+//!   old bounded worker pool where each live connection consumed a
+//!   [`crate::thread_id`] slot (the 65th connection used to panic; the
+//!   pool that replaced it queued excess clients behind `workers`
+//!   connections). The reactor holds thousands of connections open while
+//!   a small **handler pool** — never more than
+//!   [`crate::thread_id::capacity`]`/2` threads — executes the store
+//!   operations;
+//! * **admission control** ([`admission`]) — every incoming `PUT`
+//!   consults `ConcurrentSet::size_estimate` (the O(shards) bounded-lag
+//!   probe of [`crate::size::ShardedCounters`]) against high/low
+//!   watermarks with hysteresis, shedding with `ERR OVERLOAD` while the
+//!   store drains;
+//! * the **protocol** ([`proto`]) — `PUT`/`DEL`/`HAS`/`SIZE`/`SIZE~`/
+//!   `SIZE?`/`STATS`/`QUIT`, where `STATS` exposes the server gauges
+//!   (live/peak connections, reactor queue depth, shed count, admission
+//!   state) merged with [`crate::size::ArbiterStats`].
+//!
+//! `examples/kv_server.rs` is a thin CLI shim over [`Server::bind`];
+//! `rust/tests/server.rs` drives hundreds of concurrent connections and
+//! the overload path; `make server-smoke` boots it in CI on every push.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::SeqCst};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cli::Args;
+use crate::set_api::ConcurrentSet;
+use crate::thread_id;
+
+mod admission;
+mod conn;
+pub mod proto;
+mod reactor;
+
+pub use admission::{Admission, Watermarks};
+pub use proto::{DEFAULT_RECENT_MS, OVERLOAD_REPLY, parse_stats, Request};
+
+use reactor::{Completion, Job, Reactor, ReactorConfig};
+
+/// What the reactor does when a full tick makes no progress.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IdleStrategy {
+    /// Nap briefly (default): ~0 CPU when idle, sub-millisecond wakeup.
+    Sleep(Duration),
+    /// Busy-spin with `yield_now`: lowest latency, burns a core.
+    Spin,
+}
+
+/// Default idle nap: short enough that a sequential request/response
+/// client sees sub-100µs added latency, long enough that an idle server
+/// is invisible in `top`.
+pub const IDLE_NAP: Duration = Duration::from_micros(50);
+
+impl IdleStrategy {
+    /// Parse the `--reactor` CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sleep" => Some(IdleStrategy::Sleep(IDLE_NAP)),
+            "spin" => Some(IdleStrategy::Spin),
+            _ => None,
+        }
+    }
+}
+
+/// Server construction knobs (all CLI-reachable through
+/// [`ServerConfig::from_args`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Handler pool size; clamped at bind time to half the thread-slot
+    /// capacity so handlers (plus the reactor, main thread, refresher and
+    /// test clients) always fit the per-thread size metadata.
+    pub handlers: usize,
+    /// Live-connection ceiling; beyond it new clients get `ERR server
+    /// full` and are dropped instead of exhausting fds.
+    pub max_conns: usize,
+    /// Admission watermarks; `None` admits everything.
+    pub admission: Option<Watermarks>,
+    /// Reactor idle behavior.
+    pub idle: IdleStrategy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            handlers: 16,
+            max_conns: 4096,
+            admission: None,
+            idle: IdleStrategy::Sleep(IDLE_NAP),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Build from CLI flags: `--workers N`, `--max-conns N`,
+    /// `--admission-high N [--admission-low N]` (low defaults to half of
+    /// high; low alone is an error), `--reactor sleep|spin`. `Err` carries
+    /// the usage message.
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let defaults = Self::default();
+        let high = args.get_opt_u64("admission-high");
+        let low = args.get_opt_u64("admission-low");
+        let admission = match (high, low) {
+            (None, None) => None,
+            (None, Some(_)) => {
+                return Err("--admission-low needs --admission-high".into());
+            }
+            (Some(high), low) => {
+                let high = i64::try_from(high).map_err(|_| "--admission-high too large")?;
+                let low = match low {
+                    Some(low) => i64::try_from(low).map_err(|_| "--admission-low too large")?,
+                    None => high / 2,
+                };
+                if low > high {
+                    return Err(format!(
+                        "--admission-low {low} must not exceed --admission-high {high}"
+                    ));
+                }
+                Some(Watermarks::new(high, low))
+            }
+        };
+        let idle = match args.get("reactor") {
+            None => defaults.idle,
+            Some(s) => IdleStrategy::parse(s)
+                .ok_or_else(|| format!("--reactor expects sleep|spin, got {s:?}"))?,
+        };
+        Ok(Self {
+            handlers: args.get_usize("workers", defaults.handlers),
+            max_conns: args.get_usize("max-conns", defaults.max_conns),
+            admission,
+            idle,
+        })
+    }
+}
+
+/// Point-in-time server telemetry (the `STATS` endpoint renders this plus
+/// the store's size stats; [`Server::stats`] returns it in-process).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub live_conns: usize,
+    /// High-water mark of simultaneously live connections.
+    pub peak_conns: usize,
+    /// Requests dispatched to the handler pool and not yet completed.
+    pub queue_depth: usize,
+    pub handlers: usize,
+    /// Connections accepted over the server's lifetime.
+    pub accepted: u64,
+    /// `PUT`s shed by admission control.
+    pub shed: u64,
+    /// `false` while admission control is shedding.
+    pub admitting: bool,
+}
+
+/// State shared between the reactor thread and the [`Server`] handle.
+pub(crate) struct Shared {
+    pub stop: AtomicBool,
+    pub live: AtomicUsize,
+    pub peak: AtomicUsize,
+    pub queue: AtomicUsize,
+    pub accepted: AtomicU64,
+    pub admission: Option<Admission>,
+}
+
+impl Shared {
+    fn new(admission: Option<Watermarks>) -> Self {
+        Self {
+            stop: AtomicBool::new(false),
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            queue: AtomicUsize::new(0),
+            accepted: AtomicU64::new(0),
+            admission: admission.map(Admission::new),
+        }
+    }
+
+    pub(crate) fn snapshot(&self, handlers: usize) -> ServerStats {
+        ServerStats {
+            live_conns: self.live.load(SeqCst),
+            peak_conns: self.peak.load(SeqCst),
+            queue_depth: self.queue.load(SeqCst),
+            handlers,
+            accepted: self.accepted.load(SeqCst),
+            shed: self.admission.as_ref().map_or(0, Admission::shed_count),
+            admitting: self.admission.as_ref().is_none_or(|a| !a.shedding()),
+        }
+    }
+}
+
+/// A running server: the reactor thread plus its handler pool. Dropping
+/// the handle stops the reactor and joins every thread (shutdown is
+/// synchronous, like the size refresher's).
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    handlers: usize,
+    reactor: Option<JoinHandle<()>>,
+    pool: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port — [`Self::local_addr`]
+    /// reports the real one) and start serving `store` under `config`.
+    pub fn bind(
+        addr: &str,
+        store: Arc<dyn ConcurrentSet>,
+        config: ServerConfig,
+    ) -> io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let handlers = config.handlers.clamp(1, thread_id::capacity() / 2);
+        let shared = Arc::new(Shared::new(config.admission));
+
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<Completion>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let pool: Vec<JoinHandle<()>> = (0..handlers)
+            .map(|i| {
+                let store = store.clone();
+                let job_rx = job_rx.clone();
+                let done_tx = done_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("kv-handler-{i}"))
+                    .spawn(move || handler_loop(store, &job_rx, &done_tx))
+                    .expect("spawn kv handler")
+            })
+            .collect();
+        // The reactor's receiver must see disconnect once the pool exits.
+        drop(done_tx);
+
+        let reactor = Reactor::new(
+            listener,
+            store,
+            shared.clone(),
+            job_tx,
+            done_rx,
+            ReactorConfig { idle: config.idle, max_conns: config.max_conns, handlers },
+        );
+        let reactor = std::thread::Builder::new()
+            .name("kv-reactor".into())
+            .spawn(move || reactor.run())
+            .expect("spawn kv reactor");
+
+        Ok(Self {
+            shared,
+            addr,
+            handlers,
+            reactor: Some(reactor),
+            pool,
+        })
+    }
+
+    /// The bound address (the real port when bound to port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Handler pool size after clamping — by construction at most
+    /// [`thread_id::capacity`]`/2`, no matter how many connections are
+    /// live.
+    pub fn handler_threads(&self) -> usize {
+        self.handlers
+    }
+
+    /// Current server telemetry (same numbers the `STATS` endpoint serves).
+    pub fn stats(&self) -> ServerStats {
+        self.shared.snapshot(self.handlers)
+    }
+
+    /// Block the calling thread on the reactor (serve-forever mode; the
+    /// reactor only exits when another handle to the process raises stop
+    /// or the process dies). Threads are joined on drop afterwards.
+    pub fn wait(mut self) {
+        if let Some(reactor) = self.reactor.take() {
+            let _ = reactor.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, SeqCst);
+        if let Some(reactor) = self.reactor.take() {
+            // The reactor drops its job sender on exit, draining the pool.
+            let _ = reactor.join();
+        }
+        for handle in self.pool.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// A minimal blocking protocol client: one connection, one line in or
+/// out at a time. This is the **test/driver** client shared by the
+/// kv_server self-test and the integration suite (and handy for poking a
+/// live server from code); every method panics with a pointed message on
+/// I/O errors — a broken pipe mid-test IS the failure. The wide-load,
+/// error-counting path is [`crate::harness::client_swarm`].
+pub struct BlockingClient {
+    out: TcpStream,
+    reader: BufReader<TcpStream>,
+    line: String,
+}
+
+impl BlockingClient {
+    /// Connect with a 30-second read timeout, so a wedged server fails a
+    /// test loudly instead of hanging it.
+    pub fn connect(addr: SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).expect("client connect");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("client read timeout");
+        Self {
+            out: stream.try_clone().expect("client stream clone"),
+            reader: BufReader::new(stream),
+            line: String::new(),
+        }
+    }
+
+    /// Send one command line without waiting for its reply (pipelining).
+    pub fn send(&mut self, cmd: impl AsRef<str>) {
+        writeln!(self.out, "{}", cmd.as_ref()).expect("client write");
+    }
+
+    /// Read the next reply line; `None` when the server closed cleanly.
+    pub fn recv(&mut self) -> Option<String> {
+        self.line.clear();
+        let n = self.reader.read_line(&mut self.line).expect("client read");
+        (n > 0).then(|| self.line.trim().to_string())
+    }
+
+    /// One command round trip; panics if the server closed instead.
+    pub fn cmd(&mut self, cmd: impl AsRef<str>) -> String {
+        self.send(cmd);
+        self.recv().expect("server closed mid-command")
+    }
+}
+
+/// One handler thread: dequeue, execute against the store, send the reply
+/// back to the reactor. Exits when the reactor (job sender) goes away.
+fn handler_loop(
+    store: Arc<dyn ConcurrentSet>,
+    jobs: &Mutex<Receiver<Job>>,
+    done: &Sender<Completion>,
+) {
+    loop {
+        // Hold the lock only to dequeue (the guard dies with the `let`),
+        // not while executing the store operation.
+        let job = match jobs.lock().unwrap_or_else(|p| p.into_inner()).recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let reply = proto::execute(store.as_ref(), job.req);
+        if done.send(Completion { token: job.token, reply }).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn config_defaults() {
+        let cfg = ServerConfig::from_args(&args("")).unwrap();
+        assert_eq!(cfg.handlers, 16);
+        assert_eq!(cfg.max_conns, 4096);
+        assert!(cfg.admission.is_none());
+        assert_eq!(cfg.idle, IdleStrategy::Sleep(IDLE_NAP));
+    }
+
+    #[test]
+    fn config_parses_admission_and_reactor() {
+        let cfg = ServerConfig::from_args(&args(
+            "--workers 4 --max-conns 128 --admission-high 100 --admission-low 40 --reactor spin",
+        ))
+        .unwrap();
+        assert_eq!(cfg.handlers, 4);
+        assert_eq!(cfg.max_conns, 128);
+        assert_eq!(cfg.admission, Some(Watermarks { high: 100, low: 40 }));
+        assert_eq!(cfg.idle, IdleStrategy::Spin);
+    }
+
+    #[test]
+    fn config_low_defaults_to_half_high() {
+        let cfg = ServerConfig::from_args(&args("--admission-high 100")).unwrap();
+        assert_eq!(cfg.admission, Some(Watermarks { high: 100, low: 50 }));
+    }
+
+    #[test]
+    fn config_rejects_bad_combinations() {
+        assert!(ServerConfig::from_args(&args("--admission-low 5")).is_err());
+        assert!(ServerConfig::from_args(&args("--admission-high 5 --admission-low 9")).is_err());
+        assert!(ServerConfig::from_args(&args("--reactor epoll")).is_err());
+    }
+
+    #[test]
+    fn idle_strategy_spellings() {
+        assert_eq!(IdleStrategy::parse("sleep"), Some(IdleStrategy::Sleep(IDLE_NAP)));
+        assert_eq!(IdleStrategy::parse("spin"), Some(IdleStrategy::Spin));
+        assert_eq!(IdleStrategy::parse("poll"), None);
+    }
+
+    #[test]
+    fn handler_clamp_respects_thread_capacity() {
+        let store: Arc<dyn ConcurrentSet> = Arc::from(
+            crate::bench_util::make_set("hashtable", crate::cli::PolicyKind::Linearizable, 64)
+                .unwrap(),
+        );
+        let config = ServerConfig { handlers: 10_000, ..Default::default() };
+        let server = Server::bind("127.0.0.1:0", store, config).unwrap();
+        assert!(server.handler_threads() <= thread_id::capacity() / 2);
+        assert!(server.local_addr().port() != 0);
+    }
+}

@@ -1,0 +1,285 @@
+//! The kv line protocol: parsing and store-side execution.
+//!
+//! One command per `\n`-terminated line (a trailing `\r` is tolerated):
+//!
+//! | command      | reply                                                |
+//! |--------------|------------------------------------------------------|
+//! | `PUT k`      | `1`/`0`, or `ERR OVERLOAD` when admission sheds      |
+//! | `DEL k`      | `1`/`0`                                              |
+//! | `HAS k`      | `1`/`0`                                              |
+//! | `SIZE`       | exact linearizable count (combining arbiter)         |
+//! | `SIZE~ [ms]` | count at most `ms` (default 50) milliseconds stale   |
+//! | `SIZE?`      | O(shards) bounded-lag estimate (never negative)      |
+//! | `STATS`      | one line of `key=value` server + size telemetry      |
+//! | `QUIT`       | no reply; the server closes the connection           |
+//!
+//! Parsing is separated from I/O so the reactor's partial-line state
+//! machine ([`super::conn`]) hands complete lines here, and so the
+//! grammar is unit-testable without a socket. Execution is split by
+//! blocking behavior: [`execute`] runs the store operations a handler
+//! thread may block on (`SIZE` can wait on a handshake drain), while
+//! `SIZE?`/`STATS`/`QUIT` are answered inline by the reactor — that is
+//! what keeps the cheap probes live while the handler pool is saturated.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::set_api::ConcurrentSet;
+use crate::size::ArbiterStats;
+
+use super::ServerStats;
+
+/// Default staleness bound for `SIZE~` when the client names none.
+pub const DEFAULT_RECENT_MS: u64 = 50;
+
+/// Longest accepted command line, in bytes. Commands are tiny; anything
+/// larger is a protocol violation (or garbage) and closes the connection
+/// instead of growing an unbounded buffer.
+pub const MAX_LINE: usize = 256;
+
+/// Reply when admission control sheds a `PUT` (the `429`-style signal
+/// clients back off on).
+pub const OVERLOAD_REPLY: &str = "ERR OVERLOAD";
+
+const ERR_NO_SIZE: &str = "ERR size unsupported by this policy";
+const ERR_NO_ESTIMATE: &str = "ERR estimate unavailable (no sharded mirror)";
+
+/// One parsed client command.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Request {
+    Put(u64),
+    Del(u64),
+    Has(u64),
+    /// Exact linearizable size through the combining arbiter.
+    Size,
+    /// Bounded-staleness size; the payload is the bound in milliseconds.
+    SizeRecent(u64),
+    /// O(shards) bounded-lag estimate from the sharded mirror.
+    SizeEstimate,
+    /// Server + size telemetry as one `key=value` line.
+    Stats,
+    /// Close the connection (after flushing earlier replies).
+    Quit,
+}
+
+impl Request {
+    /// Whether the reactor answers this request inline instead of hopping
+    /// through the handler pool. Inline requests must never block: `SIZE?`
+    /// is an O(shards) load sweep and `STATS` reads counters, so both keep
+    /// answering while every handler is wedged in a blocking `SIZE`.
+    pub fn inline(self) -> bool {
+        matches!(self, Request::SizeEstimate | Request::Stats | Request::Quit)
+    }
+
+    /// Whether admission control applies (only `PUT` grows the store).
+    pub fn grows_store(self) -> bool {
+        matches!(self, Request::Put(_))
+    }
+}
+
+fn parse_key(k: Option<&str>) -> Result<u64, String> {
+    k.ok_or_else(|| "ERR missing key".to_string())?
+        .parse()
+        .map_err(|_| "ERR bad key".to_string())
+}
+
+/// Parse one complete line. `Err` carries the exact reply to send back —
+/// a malformed command is answered, in order, without killing the
+/// connection.
+pub fn parse(line: &str) -> Result<Request, String> {
+    let mut parts = line.split_whitespace();
+    match (parts.next(), parts.next()) {
+        (Some("PUT"), k) => Ok(Request::Put(parse_key(k)?)),
+        (Some("DEL"), k) => Ok(Request::Del(parse_key(k)?)),
+        (Some("HAS"), k) => Ok(Request::Has(parse_key(k)?)),
+        (Some("SIZE"), _) => Ok(Request::Size),
+        (Some("SIZE~"), ms) => match ms.map_or(Ok(DEFAULT_RECENT_MS), str::parse) {
+            Ok(ms) => Ok(Request::SizeRecent(ms)),
+            Err(_) => Err("ERR bad staleness".into()),
+        },
+        (Some("SIZE?"), _) => Ok(Request::SizeEstimate),
+        (Some("STATS"), _) => Ok(Request::Stats),
+        (Some("QUIT"), _) => Ok(Request::Quit),
+        (None, _) => Err("ERR empty command".into()),
+        _ => Err("ERR unknown command".into()),
+    }
+}
+
+/// Execute a pool-side request against the store. Only non-[`inline`]
+/// requests belong here; an inline one answers with an error instead of
+/// panicking a handler thread (a dead handler would silently shrink the
+/// pool).
+///
+/// [`inline`]: Request::inline
+pub fn execute(store: &dyn ConcurrentSet, req: Request) -> String {
+    match req {
+        Request::Put(k) => i64::from(store.insert(k)).to_string(),
+        Request::Del(k) => i64::from(store.delete(k)).to_string(),
+        Request::Has(k) => i64::from(store.contains(k)).to_string(),
+        Request::Size => match store.size_exact() {
+            Some(v) => v.value.to_string(),
+            None => ERR_NO_SIZE.into(),
+        },
+        Request::SizeRecent(ms) => match store.size_recent(Duration::from_millis(ms)) {
+            Some(v) => v.value.to_string(),
+            None => ERR_NO_SIZE.into(),
+        },
+        Request::SizeEstimate | Request::Stats | Request::Quit => {
+            debug_assert!(false, "inline request {req:?} reached the pool");
+            "ERR internal: inline request routed to pool".into()
+        }
+    }
+}
+
+/// The `SIZE?` reply: the sharded mirror's bounded-lag estimate, clamped
+/// at zero at the protocol edge as well (the mirror already clamps its
+/// reconciliation sweep — see `ConcurrentSet::size_estimate` — but a
+/// monitoring endpoint must never print a negative count).
+pub fn estimate_reply(store: &dyn ConcurrentSet) -> String {
+    match store.size_estimate() {
+        Some(v) => v.max(0).to_string(),
+        None => ERR_NO_ESTIMATE.into(),
+    }
+}
+
+/// The `STATS` reply: one space-separated `key=value` line merging the
+/// server gauges (connections, queue depth, shed count, admission state)
+/// with the store's [`ArbiterStats`]. Stable, grep/parse-friendly — the
+/// admission-control tests and the CI smoke client both split on
+/// whitespace and `=`.
+pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
+    format!(
+        "conns={} peak={} queue={} handlers={} accepted={} shed={} admitting={} \
+         rounds={} adoptions={} recent_hits={} recent_refreshes={} daemon_rounds={} \
+         fallbacks={} retry_budget={}",
+        server.live_conns,
+        server.peak_conns,
+        server.queue_depth,
+        server.handlers,
+        server.accepted,
+        server.shed,
+        u8::from(server.admitting),
+        size.rounds,
+        size.adoptions,
+        size.recent_hits,
+        size.recent_refreshes,
+        size.daemon_rounds,
+        size.fallbacks,
+        size.retry_budget,
+    )
+}
+
+/// Parse a [`stats_reply`] line back into its integer fields — the
+/// client-side inverse, shared by the self-test and the integration
+/// tests so the two never drift from the render format. `Err` names the
+/// offending pair.
+pub fn parse_stats(line: &str) -> Result<HashMap<String, u64>, String> {
+    line.split_whitespace()
+        .map(|pair| {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("bad STATS pair {pair:?}"))?;
+            let v = v
+                .parse()
+                .map_err(|_| format!("non-numeric STATS value {pair:?}"))?;
+            Ok((k.to_string(), v))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_util::make_set;
+    use crate::cli::PolicyKind;
+
+    #[test]
+    fn parses_every_command() {
+        assert_eq!(parse("PUT 7"), Ok(Request::Put(7)));
+        assert_eq!(parse("DEL 7"), Ok(Request::Del(7)));
+        assert_eq!(parse("HAS 0"), Ok(Request::Has(0)));
+        assert_eq!(parse("SIZE"), Ok(Request::Size));
+        assert_eq!(parse("SIZE~"), Ok(Request::SizeRecent(DEFAULT_RECENT_MS)));
+        assert_eq!(parse("SIZE~ 5"), Ok(Request::SizeRecent(5)));
+        assert_eq!(parse("SIZE?"), Ok(Request::SizeEstimate));
+        assert_eq!(parse("STATS"), Ok(Request::Stats));
+        assert_eq!(parse("QUIT"), Ok(Request::Quit));
+        assert_eq!(parse("  PUT   9  "), Ok(Request::Put(9)));
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_err_replies() {
+        assert_eq!(parse("PUT"), Err("ERR missing key".into()));
+        assert_eq!(parse("PUT x"), Err("ERR bad key".into()));
+        assert_eq!(parse("SIZE~ bogus"), Err("ERR bad staleness".into()));
+        assert_eq!(parse("NOPE 1"), Err("ERR unknown command".into()));
+        assert_eq!(parse(""), Err("ERR empty command".into()));
+        assert_eq!(parse("   "), Err("ERR empty command".into()));
+    }
+
+    #[test]
+    fn inline_classification() {
+        for req in [Request::SizeEstimate, Request::Stats, Request::Quit] {
+            assert!(req.inline(), "{req:?}");
+        }
+        for req in [
+            Request::Put(1),
+            Request::Del(1),
+            Request::Has(1),
+            Request::Size,
+            Request::SizeRecent(1),
+        ] {
+            assert!(!req.inline(), "{req:?}");
+        }
+        assert!(Request::Put(1).grows_store());
+        assert!(!Request::Del(1).grows_store());
+    }
+
+    #[test]
+    fn execute_runs_store_ops() {
+        let store = make_set("hashtable", PolicyKind::Linearizable, 64).unwrap();
+        assert_eq!(execute(store.as_ref(), Request::Put(3)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Put(3)), "0");
+        assert_eq!(execute(store.as_ref(), Request::Has(3)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Size), "1");
+        assert_eq!(execute(store.as_ref(), Request::SizeRecent(50)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Del(3)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Size), "0");
+    }
+
+    #[test]
+    fn execute_answers_gracefully_without_size() {
+        let store = make_set("hashtable", PolicyKind::Baseline, 64).unwrap();
+        assert_eq!(execute(store.as_ref(), Request::Size), ERR_NO_SIZE);
+        assert_eq!(execute(store.as_ref(), Request::SizeRecent(5)), ERR_NO_SIZE);
+        assert_eq!(estimate_reply(store.as_ref()), ERR_NO_ESTIMATE);
+    }
+
+    #[test]
+    fn stats_reply_is_key_value_parseable() {
+        let server = ServerStats {
+            live_conns: 3,
+            peak_conns: 300,
+            queue_depth: 2,
+            handlers: 4,
+            accepted: 310,
+            shed: 7,
+            admitting: true,
+        };
+        let line = stats_reply(&server, &ArbiterStats::default());
+        let stats = parse_stats(&line).expect("round-trip parse");
+        for want in ["conns", "peak", "queue", "handlers", "shed", "admitting", "daemon_rounds"] {
+            assert!(stats.contains_key(want), "missing {want} in {line}");
+        }
+        assert_eq!(stats["peak"], 300);
+        assert_eq!(stats["admitting"], 1);
+        assert_eq!(stats["shed"], 7);
+    }
+
+    #[test]
+    fn parse_stats_rejects_garbage() {
+        assert!(parse_stats("conns").is_err());
+        assert!(parse_stats("conns=many").is_err());
+        assert_eq!(parse_stats("").unwrap().len(), 0);
+    }
+}

@@ -59,6 +59,13 @@ pub trait ConcurrentSet: Send + Sync {
     /// linearizable (it may trail the exact size by the number of
     /// in-flight operations; exact at quiescence). `None` when the policy
     /// has no calculator or the mirror is disabled (`SizeOpts::shards`).
+    ///
+    /// **Clamp contract:** a returned estimate is never negative — the
+    /// mirror clamps its reconciliation sweep at zero. Admission control
+    /// ([`crate::server::Admission`]) relies on this: a shed decision must
+    /// never be justified by an absurd negative reading, so it re-clamps
+    /// defensively and a proptest in `rust/tests/server.rs` pins both
+    /// layers.
     fn size_estimate(&self) -> Option<i64> {
         None
     }

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Schema sanity check for BENCH_ablation.json (CI: `make schema-check`).
+
+The ablation bench hand-rolls its JSON (the offline build has no serde),
+so a silently-broken recorder could upload garbage artifacts forever.
+This gate pins the contract:
+
+* top-level keys: bench / structure / config / results;
+* config carries every scale knob the sweeps are keyed on;
+* every record carries the full field set — including the scale-layer
+  `shards` / `refresh_us` / `daemon_rounds` fields added in PR 4 — with
+  finite, non-negative numerics (NaN/Infinity literals are rejected at
+  parse time);
+* at least one record actually measured something (positive workload
+  throughput), so an all-zero report can't slip through.
+
+Stdlib only. Exit 0 on success, 1 with a pointed message otherwise.
+"""
+
+import json
+import math
+import sys
+
+TOP_KEYS = {"bench", "structure", "config", "results"}
+CONFIG_KEYS = {
+    "initial",
+    "secs",
+    "runs",
+    "warmup",
+    "workload_threads",
+    "size_heavy_threads",
+    "staleness_ms",
+    "seed",
+}
+RECORD_KEYS = {
+    "scenario",
+    "policy",
+    "mix",
+    "size_threads",
+    "size_call",
+    "shards",
+    "refresh_us",
+    "workload_ops_per_sec",
+    "size_ops_per_sec",
+    "arbiter_rounds",
+    "arbiter_adoptions",
+    "arbiter_recent_hits",
+    "daemon_rounds",
+    "fallbacks",
+    "retry_budget",
+}
+THROUGHPUT_KEYS = ("workload_ops_per_sec", "size_ops_per_sec")
+COUNTER_KEYS = (
+    "size_threads",
+    "shards",
+    "refresh_us",
+    "arbiter_rounds",
+    "arbiter_adoptions",
+    "arbiter_recent_hits",
+    "daemon_rounds",
+    "fallbacks",
+    "retry_budget",
+)
+SCENARIOS = {"periodic-size", "size-heavy", "scale"}
+POLICIES = {"baseline", "linearizable", "naive", "lock", "handshake", "optimistic"}
+
+
+def fail(msg):
+    print(f"schema-check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            report = json.load(
+                f,
+                parse_constant=lambda name: fail(
+                    f"non-finite constant {name!r} in the report"
+                ),
+            )
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if missing := TOP_KEYS - report.keys():
+        fail(f"missing top-level keys: {sorted(missing)}")
+    if missing := CONFIG_KEYS - report["config"].keys():
+        fail(f"missing config keys: {sorted(missing)}")
+
+    records = report["results"]
+    if not isinstance(records, list) or not records:
+        fail("results must be a non-empty list")
+
+    for i, rec in enumerate(records):
+        where = f"results[{i}]"
+        if missing := RECORD_KEYS - rec.keys():
+            fail(f"{where} missing keys: {sorted(missing)}")
+        if rec["scenario"] not in SCENARIOS:
+            fail(f"{where} unknown scenario {rec['scenario']!r}")
+        if rec["policy"] not in POLICIES:
+            fail(f"{where} unknown policy {rec['policy']!r}")
+        for key in THROUGHPUT_KEYS:
+            v = rec[key]
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                fail(f"{where}.{key} is not numeric: {v!r}")
+            if not math.isfinite(v):
+                fail(f"{where}.{key} is not finite: {v!r}")
+            if v < 0:
+                fail(f"{where}.{key} is negative: {v!r}")
+        for key in COUNTER_KEYS:
+            v = rec[key]
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                fail(f"{where}.{key} must be a non-negative integer, got {v!r}")
+
+    if not any(rec["workload_ops_per_sec"] > 0 for rec in records):
+        fail("no record measured positive workload throughput (dead recorder?)")
+
+    scenarios = sorted({rec["scenario"] for rec in records})
+    print(
+        f"schema-check: OK — {len(records)} records, scenarios {scenarios}, "
+        f"structure {report['structure']!r}"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_ablation.json")

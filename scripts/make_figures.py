@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Render artifact figures from BENCH_ablation.json (`make artifacts`).
+
+Produces, stdlib-only (the CI artifact flow must not need matplotlib):
+
+* `ablation_policies.svg` — horizontal bar chart of workload throughput
+  per size policy, one facet per workload mix (periodic-size scenario).
+  Single measure -> single hue; every bar carries a direct value label
+  (the fill is deliberately light, so labels do the precise reading) and
+  identity lives in the row labels, never in color.
+* `ablation_summary.txt` — the full record table, the figure's
+  text/table view.
+
+Usage: make_figures.py BENCH_ablation.json OUTDIR
+"""
+
+import json
+import sys
+
+# Chart tokens (light surface; values from a validated palette).
+SURFACE = "#fcfcfb"
+INK = "#0b0b0b"
+INK_MUTED = "#52514e"
+GRID = "#e4e3df"
+BAR = "#2a78d6"
+FONT = "font-family='system-ui, -apple-system, Segoe UI, sans-serif'"
+
+LABEL_W, BAR_MAX_W, BAR_H, BAR_GAP = 120, 380, 18, 8
+PAD, VALUE_W = 16, 86
+FACET_TITLE_H, FACET_GAP = 34, 18
+
+
+def fmt_rate(v):
+    for cut, suffix in ((1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if v >= cut:
+            return f"{v / cut:.2f}{suffix} ops/s"
+    return f"{v:.0f} ops/s"
+
+
+def rounded_bar(x, y, w, h, r=4):
+    """Bar with a flat baseline edge and a 4px-rounded data end."""
+    if w <= r:
+        return f"M{x},{y} h{max(w, 1)} v{h} h-{max(w, 1)} z"
+    return (
+        f"M{x},{y} h{w - r} a{r},{r} 0 0 1 {r},{r} v{h - 2 * r} "
+        f"a{r},{r} 0 0 1 -{r},{r} h-{w - r} z"
+    )
+
+
+def facet(rows, title, y0, scale_max, out):
+    out.append(
+        f"<text x='{PAD}' y='{y0 + 14}' {FONT} font-size='13' font-weight='600' "
+        f"fill='{INK}'>{title}</text>"
+    )
+    y = y0 + FACET_TITLE_H
+    x0 = PAD + LABEL_W
+    # Recessive baseline, no box.
+    height = len(rows) * (BAR_H + BAR_GAP) - BAR_GAP
+    out.append(
+        f"<line x1='{x0}' y1='{y - 4}' x2='{x0}' y2='{y + height + 4}' "
+        f"stroke='{GRID}' stroke-width='1'/>"
+    )
+    for policy, value in rows:
+        w = 0 if scale_max <= 0 else round(BAR_MAX_W * value / scale_max)
+        cy = y + BAR_H / 2 + 4
+        out.append(
+            f"<text x='{x0 - 8}' y='{cy}' {FONT} font-size='12' fill='{INK}' "
+            f"text-anchor='end'>{policy}</text>"
+        )
+        out.append(f"<path d='{rounded_bar(x0, y, w, BAR_H)}' fill='{BAR}'/>")
+        out.append(
+            f"<text x='{x0 + w + 8}' y='{cy}' {FONT} font-size='11' "
+            f"fill='{INK_MUTED}'>{fmt_rate(value)}</text>"
+        )
+        y += BAR_H + BAR_GAP
+    return y
+
+
+def render_svg(report):
+    records = [r for r in report["results"] if r["scenario"] == "periodic-size"]
+    mixes = sorted({r["mix"] for r in records})
+    if not records:
+        return None
+    scale_max = max(r["workload_ops_per_sec"] for r in records)
+    width = PAD + LABEL_W + BAR_MAX_W + VALUE_W + PAD
+    body, y = [], PAD + 22
+    body.append(
+        f"<text x='{PAD}' y='{PAD + 8}' {FONT} font-size='14' font-weight='600' "
+        f"fill='{INK}'>Workload throughput by size policy "
+        f"({report['structure']}, smoke scale)</text>"
+    )
+    for mix in mixes:
+        rows = [
+            (r["policy"], r["workload_ops_per_sec"])
+            for r in records
+            if r["mix"] == mix
+        ]
+        y = facet(rows, f"{mix} mix", y, scale_max, body) + FACET_GAP
+    height = y + PAD - FACET_GAP
+    return (
+        f"<svg xmlns='http://www.w3.org/2000/svg' width='{width}' "
+        f"height='{height}' viewBox='0 0 {width} {height}'>"
+        f"<rect width='{width}' height='{height}' fill='{SURFACE}'/>"
+        + "".join(body)
+        + "</svg>\n"
+    )
+
+
+def render_table(report):
+    cols = (
+        "scenario",
+        "policy",
+        "mix",
+        "size_call",
+        "size_threads",
+        "shards",
+        "refresh_us",
+        "workload_ops_per_sec",
+        "size_ops_per_sec",
+        "daemon_rounds",
+    )
+    rows = [cols] + [
+        tuple(str(round(r[c]) if isinstance(r[c], float) else r[c]) for c in cols)
+        for r in report["results"]
+    ]
+    widths = [max(len(row[i]) for row in rows) for i in range(len(cols))]
+    lines = ["  ".join(cell.ljust(w) for cell, w in zip(row, widths)) for row in rows]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines) + "\n"
+
+
+def main(path, outdir):
+    with open(path, encoding="utf-8") as f:
+        report = json.load(f)
+    wrote = []
+    svg = render_svg(report)
+    if svg is not None:
+        with open(f"{outdir}/ablation_policies.svg", "w", encoding="utf-8") as f:
+            f.write(svg)
+        wrote.append("ablation_policies.svg")
+    with open(f"{outdir}/ablation_summary.txt", "w", encoding="utf-8") as f:
+        f.write(render_table(report))
+    wrote.append("ablation_summary.txt")
+    print(f"make_figures: wrote {', '.join(wrote)} to {outdir}/")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2])

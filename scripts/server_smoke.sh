@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Boot the reactor server and drive the full protocol, including an
+# overload burst that must observe ERR OVERLOAD. `make server-smoke`
+# wraps this whole script in `timeout 120`, so a wedged reactor (or a
+# self-test deadlock) fails the CI job loudly instead of hanging it.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=target/release/examples/kv_server
+[ -x "$BIN" ] || { echo "server-smoke: $BIN missing (run make build)"; exit 1; }
+
+echo "== --help must exit 0 without binding a socket =="
+"$BIN" --help >/dev/null
+
+echo "== self-test mode (reactor burst, swarm, refresher-derived staleness) =="
+"$BIN" --refresh-ms 5
+
+echo "== served mode: protocol + admission control over TCP =="
+LOG=$(mktemp)
+"$BIN" --listen 127.0.0.1:0 --size-shards 2 --refresh-ms 5 --workers 4 \
+  --admission-high 64 --admission-low 32 >"$LOG" 2>&1 &
+SERVER_PID=$!
+trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG"' EXIT
+
+# The server prints its real (ephemeral) address; wait for it.
+ADDR=""
+for _ in $(seq 1 100); do
+  ADDR=$(sed -n 's/^kv_server listening on \([0-9.]*:[0-9]*\).*/\1/p' "$LOG" | head -n1)
+  [ -n "$ADDR" ] && break
+  kill -0 "$SERVER_PID" 2>/dev/null || { echo "server died at boot:"; cat "$LOG"; exit 1; }
+  sleep 0.1
+done
+[ -n "$ADDR" ] || { echo "server never reported its address:"; cat "$LOG"; exit 1; }
+echo "server up at $ADDR"
+
+python3 scripts/smoke_client.py "$ADDR"
+
+kill "$SERVER_PID"
+wait "$SERVER_PID" 2>/dev/null || true
+echo "server-smoke OK"

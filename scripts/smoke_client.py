@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Protocol smoke client for `make server-smoke` (CI's server gate).
+
+Drives a live kv_server over TCP: PUT/DEL/HAS, all three SIZE flavors,
+STATS, malformed input — and an overload burst that MUST observe
+`ERR OVERLOAD` (the server under test runs with --admission-high 64
+--admission-low 32) while `SIZE?` keeps answering, followed by a drain
+that must readmit. Stdlib only; exits non-zero with a pointed message on
+the first broken expectation.
+"""
+
+import socket
+import sys
+
+HIGH, LOW = 64, 32  # must match the watermarks server_smoke.sh passes
+
+
+class Client:
+    def __init__(self, addr):
+        host, port = addr.rsplit(":", 1)
+        self.sock = socket.create_connection((host, int(port)), timeout=30)
+        self.reader = self.sock.makefile("r", encoding="ascii", newline="\n")
+
+    def cmd(self, line):
+        self.sock.sendall((line + "\n").encode("ascii"))
+        reply = self.reader.readline()
+        if not reply:
+            raise AssertionError(f"server closed the connection after {line!r}")
+        return reply.strip()
+
+
+def expect(got, want, what):
+    if got != want:
+        raise AssertionError(f"{what}: got {got!r}, wanted {want!r}")
+
+
+def parse_stats(line):
+    stats = {}
+    for pair in line.split():
+        key, value = pair.split("=", 1)
+        stats[key] = int(value)
+    return stats
+
+
+def main(addr):
+    c = Client(addr)
+    probe = Client(addr)  # separate connection for mid-overload probes
+
+    # Basic protocol round-trips.
+    expect(c.cmd("PUT 1"), "1", "fresh PUT")
+    expect(c.cmd("PUT 1"), "0", "duplicate PUT")
+    expect(c.cmd("HAS 1"), "1", "HAS after PUT")
+    expect(c.cmd("DEL 1"), "1", "DEL")
+    expect(c.cmd("HAS 1"), "0", "HAS after DEL")
+    expect(c.cmd("SIZE"), "0", "exact SIZE on empty store")
+
+    # Malformed input answers ERR without killing the connection.
+    assert c.cmd("SIZE~ bogus").startswith("ERR"), "bad staleness must ERR"
+    assert c.cmd("NOPE 1").startswith("ERR"), "unknown command must ERR"
+    expect(c.cmd("HAS 1"), "0", "connection survives bad commands")
+
+    # Overload burst: push past the high watermark; sheds must appear.
+    admitted, sheds = 0, 0
+    for k in range(3 * HIGH):
+        reply = c.cmd(f"PUT {k}")
+        if reply == "ERR OVERLOAD":
+            sheds += 1
+            if sheds == 1:
+                # Mid-shed, the cheap probe keeps answering on another
+                # connection, and STATS reports the shedding state.
+                estimate = int(probe.cmd("SIZE?"))
+                assert estimate >= HIGH, f"shed below high watermark: {estimate}"
+                stats = parse_stats(probe.cmd("STATS"))
+                expect(stats["admitting"], 0, "STATS admitting during shed")
+        elif reply == "1":
+            admitted += 1
+        else:
+            raise AssertionError(f"unexpected PUT reply {reply!r}")
+    assert sheds > 0, "overload burst never observed ERR OVERLOAD"
+    expect(admitted, HIGH, "admitted PUTs up to the high watermark")
+
+    stats = parse_stats(probe.cmd("STATS"))
+    assert stats["shed"] == sheds, f"STATS shed={stats['shed']} != {sheds}"
+
+    # Size endpoints keep working under shed (reads are never shed).
+    assert int(c.cmd("SIZE~ 500")) >= 0, "SIZE~ during shed"
+    assert int(c.cmd("SIZE?")) >= 0, "SIZE? during shed"
+
+    # Drain below the low watermark: PUTs readmit (hysteresis).
+    for k in range(3 * HIGH):
+        reply = c.cmd(f"DEL {k}")
+        assert reply in ("0", "1"), f"DEL must never shed, got {reply!r}"
+    expect(c.cmd("PUT 9999"), "1", "PUT readmitted after drain")
+    stats = parse_stats(probe.cmd("STATS"))
+    expect(stats["admitting"], 1, "STATS admitting after drain")
+    assert stats["daemon_rounds"] > 0, "refresher daemon drove no rounds"
+
+    expect(c.cmd("SIZE"), "1", "exact SIZE after drain")
+    # QUIT has no reply; the server closes the connection.
+    c.sock.sendall(b"QUIT\n")
+    expect(c.reader.readline(), "", "QUIT must close without a reply")
+    print(
+        f"smoke client OK: {admitted} admitted, {sheds} shed, "
+        f"final stats {stats}"
+    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])
