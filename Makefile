@@ -12,8 +12,14 @@ ARTIFACTS ?= artifacts
 SMOKE_FLAGS ?= --secs 0.1 --runs 1 --warmup 0 --initial 2000 \
   --workload-threads 2 --size-heavy-threads 2 --refresh-us 300,1000
 
+# Pinned fault seed (decimal 0xC1A05) for the fuzz smoke: CI failures
+# must replay locally with the exact same schedule. Override:
+# make fuzz-smoke FUZZ_SEED=7.
+FUZZ_SEED ?= 793093
+FUZZ_FLAGS ?= --fault-seed $(FUZZ_SEED) --seeds 2 --ops 800 --structure hashtable
+
 .PHONY: build test pytest bench-smoke schema-check server-smoke artifacts \
-  fmt-check lint clean
+  fuzz-smoke fmt-check lint clean
 
 ## Release build of the library, the csize binary, and every example
 ## (kv_server is an example, so --examples is not optional).
@@ -48,6 +54,16 @@ schema-check:
 ## overload burst that must observe ERR OVERLOAD — failing loud on hangs.
 server-smoke: build
 	timeout 120 bash scripts/server_smoke.sh
+
+## Chaos gate: the fault-injection test suite (feature `faults` arms the
+## injection sites the default build compiles out) plus a pinned-seed
+## `csize fuzz` sweep — six policies under the chaos plane, minimized
+## repro histories dumped to artifacts/ on any violation. timeout-wrapped
+## so a wedged schedule fails loud instead of hanging CI.
+fuzz-smoke:
+	timeout 300 $(CARGO) test -q --features faults
+	timeout 300 $(CARGO) run --release --features faults --bin csize -- \
+	  fuzz $(FUZZ_FLAGS)
 
 ## The AOT artifact flow: release binaries + ablation smoke + schema
 ## check, collected with rendered figures into $(ARTIFACTS)/. The steps

@@ -19,7 +19,9 @@
 //! cargo run --release --example kv_server -- --listen 127.0.0.1:7171 \
 //!     [--policy linearizable|handshake|optimistic|...] [--workers N] \
 //!     [--refresh-ms 5] [--size-shards auto] [--reactor sleep|spin] \
-//!     [--admission-high N [--admission-low N]] [--max-conns N]
+//!     [--admission-high N [--admission-low N]] [--max-conns N] \
+//!     [--request-timeout-ms MS] [--conn-idle-ms MS] [--monitor-sample N] \
+//!     [--fault-seed SEED]   # needs --features faults
 //! ```
 
 use std::sync::Arc;
@@ -44,6 +46,8 @@ USAGE:
   kv_server [--listen ADDR] [--policy P] [--workers N] [--max-conns N]
             [--refresh-ms MS] [--size-shards auto|N] [--reactor sleep|spin]
             [--admission-high N [--admission-low N]]
+            [--request-timeout-ms MS] [--conn-idle-ms MS]
+            [--monitor-sample N] [--fault-seed SEED]
 
 FLAGS:
   --listen ADDR       serve on ADDR (port 0 = ephemeral; the real address is
@@ -67,6 +71,22 @@ FLAGS:
                       reaches N (admission control off unless given)
   --admission-low N   readmit once the estimate drains to N (default: high/2;
                       the gap is the hysteresis band)
+  --request-timeout-ms MS
+                      per-request handler deadline (default 30000, 0 = off):
+                      past it the client gets ERR TIMEOUT, the connection's
+                      pool slot is reclaimed, and the stale reply is dropped
+  --conn-idle-ms MS   reap connections with no protocol progress for MS
+                      (default off; drip-fed bytes that never complete a
+                      line do not count, so slowloris clients are reaped)
+  --monitor-sample N  sampled in-server linearizability monitor: every N
+                      pool requests, record one event window against a
+                      size_exact anchor and check every SIZE in it
+                      (default 0 = off; violations show in STATS and dump
+                      minimized repros under artifacts/)
+  --fault-seed SEED   install the seeded chaos fault plane (delays, yields,
+                      short writes, handler panics, forced optimistic
+                      fallbacks) for the server's lifetime; requires a
+                      build with --features faults (warns otherwise)
   --help              this text (exits 0 without binding a socket)
 
 PROTOCOL (one command per line):
@@ -98,6 +118,19 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Chaos plane: armed for the whole process lifetime (the guard drops
+    // at exit). Without the `faults` feature the install is a no-op, so
+    // warn instead of silently running a healthy server.
+    let _fault_guard = args.get_opt_u64("fault-seed").map(|seed| {
+        if concurrent_size::faults::COMPILED {
+            println!("fault plane armed: chaos profile, seed {seed:#x}");
+        } else {
+            eprintln!(
+                "warning: --fault-seed ignored — rebuild with --features faults to arm the plane"
+            );
+        }
+        concurrent_size::faults::install(concurrent_size::faults::FaultPlane::chaos(seed))
+    });
     let opts = SizeOpts::default().with_shards(args.size_shards(detect_shards()));
     let store: Store = Arc::from(
         bench_util::make_set_opts("hashtable", kind, 1 << 16, opts).expect("hashtable factory"),

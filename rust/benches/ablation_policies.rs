@@ -51,6 +51,7 @@ struct Record {
     arbiter_adoptions: u64,
     arbiter_recent_hits: u64,
     daemon_rounds: u64,
+    daemon_stalls: u64,
     fallbacks: u64,
     retry_budget: u64,
 }
@@ -65,7 +66,7 @@ impl Record {
                 "\"workload_ops_per_sec\":{},\"size_ops_per_sec\":{},",
                 "\"arbiter_rounds\":{},\"arbiter_adoptions\":{},",
                 "\"arbiter_recent_hits\":{},\"daemon_rounds\":{},",
-                "\"fallbacks\":{},\"retry_budget\":{}}}"
+                "\"daemon_stalls\":{},\"fallbacks\":{},\"retry_budget\":{}}}"
             ),
             json_escape(self.scenario),
             json_escape(self.policy.label()),
@@ -80,6 +81,7 @@ impl Record {
             self.arbiter_adoptions,
             self.arbiter_recent_hits,
             self.daemon_rounds,
+            self.daemon_stalls,
             self.fallbacks,
             self.retry_budget,
         )
@@ -183,6 +185,7 @@ fn main() {
                 arbiter_adoptions: 0,
                 arbiter_recent_hits: 0,
                 daemon_rounds: 0,
+                daemon_stalls: 0,
                 fallbacks: 0,
                 retry_budget: 0,
             });
@@ -248,6 +251,7 @@ fn main() {
                 arbiter_adoptions: stats.adoptions,
                 arbiter_recent_hits: stats.recent_hits,
                 daemon_rounds: stats.daemon_rounds,
+                daemon_stalls: stats.daemon_stalls,
                 fallbacks: stats.fallbacks,
                 retry_budget: stats.retry_budget,
             });
@@ -310,6 +314,7 @@ fn main() {
                     arbiter_adoptions: stats.adoptions,
                     arbiter_recent_hits: stats.recent_hits,
                     daemon_rounds: stats.daemon_rounds,
+                    daemon_stalls: stats.daemon_stalls,
                     fallbacks: stats.fallbacks,
                     retry_budget: stats.retry_budget,
                 });

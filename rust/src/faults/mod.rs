@@ -1,0 +1,455 @@
+//! Deterministic fault-injection plane (the chaos layer).
+//!
+//! The size protocol's guarantees — exactly-once counter-CAS, arbiter
+//! combining, bounded staleness, admission hysteresis — are only as good
+//! as the schedules they survive. This module plants **injection sites**
+//! at the protocol's racy edges ([`FaultSite`]) and lets tests and the
+//! `csize fuzz` subcommand install a seed-deterministic [`FaultPlane`]
+//! that perturbs them: delays, yields, forced `OptimisticSize` fallbacks,
+//! handler panics, and partial/short socket writes.
+//!
+//! Determinism: each thread keeps a per-site hit counter, and whether the
+//! `n`-th hit of a site fires is a pure function of
+//! `(seed, site, spec, thread, n)` — a splitmix64 mix — so a pinned seed
+//! replays the same *per-thread* schedule regardless of interleaving.
+//! (Thread ids are assigned in order of first site hit, so schedules are
+//! stable for a fixed thread structure.)
+//!
+//! Cost: the whole runtime is gated behind the `faults` cargo feature.
+//! Without it every hook compiles to an `#[inline(always)]` no-op — the
+//! release binary carries no fault-plane overhead. With the feature on
+//! but no plane installed, each site is a single relaxed atomic load.
+//!
+//! Only one plane can be active per process: [`install`] serializes
+//! installers on a global mutex and the returned [`FaultGuard`] uninstalls
+//! on drop, so concurrent `cargo test` threads that install planes run one
+//! at a time. Targeted injections (`poison_key` / `stall_key`) only
+//! trigger on a specific key, so they cannot disturb unrelated tests that
+//! happen to run while such a plane is active.
+
+use std::time::Duration;
+
+/// Injection points wired through the size subsystem and the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `SizeCalculator::update_metadata`, before the exactly-once
+    /// counter-CAS (widens the window where helpers race the owner).
+    PreCounterCas = 0,
+    /// `SizeCalculator::update_metadata`, after a won counter-CAS
+    /// (delays the sharded-mirror sync and `clear_applied`).
+    PostCounterCas = 1,
+    /// `SizeArbiter::size_exact`, combiner section after winning the
+    /// combine lock, before the round stamp.
+    ArbiterRoundStart = 2,
+    /// `SizeArbiter::size_exact`, combiner section right before the
+    /// publish swap (stretches the collect-to-publish window).
+    ArbiterPublish = 3,
+    /// `SizeRefresher::run`, top of each daemon wake (a `Delay` here
+    /// stalls the refresher and exercises the stall-detection fallback).
+    RefresherTick = 4,
+    /// Server handler pool, before executing a dequeued request
+    /// (`Delay` = stalled handler driving `ERR TIMEOUT`; `Panic` =
+    /// poisoned handler driving the `catch_unwind` path).
+    HandlerDispatch = 5,
+    /// `Conn::pump_write` (a `ShortWrite(n)` caps each syscall at `n`
+    /// bytes, exercising the partial-write cursor).
+    ConnWrite = 6,
+    /// `HandshakeSize::size`, between the flag raise and the ack drain
+    /// (stretches the handshake's quiescence window).
+    HandshakeDrain = 7,
+    /// `OptimisticSize::size` entry (a `Fire` hit forces the wait-free
+    /// fallback as if the double-collect retry budget were exhausted).
+    OptimisticRetry = 8,
+}
+
+impl FaultSite {
+    /// Number of sites (array dimension for per-thread hit counters).
+    pub const COUNT: usize = 9;
+
+    /// All sites, in index order.
+    pub const ALL: [FaultSite; FaultSite::COUNT] = [
+        FaultSite::PreCounterCas,
+        FaultSite::PostCounterCas,
+        FaultSite::ArbiterRoundStart,
+        FaultSite::ArbiterPublish,
+        FaultSite::RefresherTick,
+        FaultSite::HandlerDispatch,
+        FaultSite::ConnWrite,
+        FaultSite::HandshakeDrain,
+        FaultSite::OptimisticRetry,
+    ];
+
+    /// Stable label (README site list, panic messages, fuzz reports).
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultSite::PreCounterCas => "pre-counter-cas",
+            FaultSite::PostCounterCas => "post-counter-cas",
+            FaultSite::ArbiterRoundStart => "arbiter-round-start",
+            FaultSite::ArbiterPublish => "arbiter-publish",
+            FaultSite::RefresherTick => "refresher-tick",
+            FaultSite::HandlerDispatch => "handler-dispatch",
+            FaultSite::ConnWrite => "conn-write",
+            FaultSite::HandshakeDrain => "handshake-drain",
+            FaultSite::OptimisticRetry => "optimistic-retry",
+        }
+    }
+}
+
+/// What a firing site does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// `thread::yield_now()` — the cheapest schedule perturbation.
+    Yield,
+    /// `thread::sleep(d)` — stretches a protocol window.
+    Delay(Duration),
+    /// `panic!` at the site (only safe where a `catch_unwind` contains
+    /// it — the server handler pool; never used at size-subsystem sites
+    /// by the built-in profiles, where unwinding would poison locks).
+    Panic,
+    /// No side effect; makes [`fires`] return `true` (consumed by
+    /// decision sites such as the forced `OptimisticSize` fallback).
+    Fire,
+    /// Cap the next write syscall at `n` bytes ([`write_cap`]).
+    ShortWrite(usize),
+}
+
+/// One armed injection: fire `action` on roughly one in `one_in` hits of
+/// `site` (per thread, deterministically; `one_in = 1` fires always).
+#[derive(Clone, Copy, Debug)]
+pub struct SiteSpec {
+    pub site: FaultSite,
+    pub one_in: u64,
+    pub action: FaultAction,
+}
+
+/// A seed-deterministic fault schedule: a set of armed sites plus
+/// optional key-targeted server injections.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlane {
+    seed: u64,
+    specs: Vec<SiteSpec>,
+    poison_key: Option<u64>,
+    stall_key: Option<(u64, Duration)>,
+}
+
+impl FaultPlane {
+    /// An empty plane (no sites armed) with the given seed.
+    pub fn new(seed: u64) -> Self {
+        FaultPlane {
+            seed,
+            specs: Vec::new(),
+            poison_key: None,
+            stall_key: None,
+        }
+    }
+
+    /// Arm `site` to fire `action` on ~one in `one_in` hits per thread.
+    pub fn with(mut self, site: FaultSite, one_in: u64, action: FaultAction) -> Self {
+        assert!(one_in >= 1, "one_in must be >= 1");
+        self.specs.push(SiteSpec {
+            site,
+            one_in,
+            action,
+        });
+        self
+    }
+
+    /// Arm a targeted handler panic: a `PUT <key>` for exactly this key
+    /// panics in the handler pool (contained by its `catch_unwind`).
+    pub fn with_poison_key(mut self, key: u64) -> Self {
+        self.poison_key = Some(key);
+        self
+    }
+
+    /// Arm a targeted handler stall: a `PUT <key>` for exactly this key
+    /// sleeps `delay` in the handler before executing (drives the
+    /// per-request deadline / `ERR TIMEOUT` path).
+    pub fn with_stall_key(mut self, key: u64, delay: Duration) -> Self {
+        self.stall_key = Some((key, delay));
+        self
+    }
+
+    /// The plane's seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The documented chaos profile used by `csize fuzz` and the
+    /// fuzz-smoke CI job: jitter at every size-protocol edge, a stalled
+    /// refresher, slow + panicking handlers, 1-byte socket writes, and
+    /// forced optimistic fallbacks. Handler panics are contained by the
+    /// pool's `catch_unwind`; no size-subsystem site panics.
+    pub fn chaos(seed: u64) -> Self {
+        FaultPlane::new(seed)
+            .with(FaultSite::PreCounterCas, 7, FaultAction::Yield)
+            .with(
+                FaultSite::PreCounterCas,
+                97,
+                FaultAction::Delay(Duration::from_micros(50)),
+            )
+            .with(FaultSite::PostCounterCas, 5, FaultAction::Yield)
+            .with(
+                FaultSite::ArbiterRoundStart,
+                9,
+                FaultAction::Delay(Duration::from_micros(100)),
+            )
+            .with(FaultSite::ArbiterPublish, 3, FaultAction::Yield)
+            .with(
+                FaultSite::RefresherTick,
+                2,
+                FaultAction::Delay(Duration::from_millis(5)),
+            )
+            .with(
+                FaultSite::HandlerDispatch,
+                13,
+                FaultAction::Delay(Duration::from_millis(2)),
+            )
+            .with(FaultSite::HandlerDispatch, 41, FaultAction::Panic)
+            .with(FaultSite::ConnWrite, 2, FaultAction::ShortWrite(1))
+            .with(FaultSite::HandshakeDrain, 4, FaultAction::Yield)
+            .with(FaultSite::OptimisticRetry, 6, FaultAction::Fire)
+    }
+}
+
+#[cfg(feature = "faults")]
+mod runtime {
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Mutex, MutexGuard, RwLock};
+    use std::time::Duration;
+
+    use super::{FaultAction, FaultPlane, FaultSite};
+
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    static ACTIVE: RwLock<Option<FaultPlane>> = RwLock::new(None);
+    static INSTALL: Mutex<()> = Mutex::new(());
+    static GENERATION: AtomicU64 = AtomicU64::new(0);
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+    thread_local! {
+        /// (plane generation, fault-local thread id, per-site hit counts).
+        static LOCAL: RefCell<(u64, u64, [u64; FaultSite::COUNT])> =
+            const { RefCell::new((0, 0, [0; FaultSite::COUNT])) };
+    }
+
+    /// Scoped installation: uninstalls the plane on drop and serializes
+    /// concurrent installers (tests) on a process-wide mutex.
+    pub struct FaultGuard {
+        _serial: MutexGuard<'static, ()>,
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            ENABLED.store(false, Ordering::SeqCst);
+            *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) = None;
+        }
+    }
+
+    /// Install `plane` for the lifetime of the returned guard.
+    pub fn install(plane: FaultPlane) -> FaultGuard {
+        let serial = INSTALL.lock().unwrap_or_else(|e| e.into_inner());
+        GENERATION.fetch_add(1, Ordering::SeqCst);
+        *ACTIVE.write().unwrap_or_else(|e| e.into_inner()) = Some(plane);
+        ENABLED.store(true, Ordering::SeqCst);
+        FaultGuard { _serial: serial }
+    }
+
+    /// splitmix64 finalizer: the decision hash.
+    fn mix(mut z: u64) -> u64 {
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Evaluate `site` for the calling thread: bump its hit counter and
+    /// return the first armed spec that fires, if any.
+    fn decide(site: FaultSite) -> Option<FaultAction> {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return None;
+        }
+        let generation = GENERATION.load(Ordering::Relaxed);
+        let (tid, n) = LOCAL.with(|local| {
+            let mut local = local.borrow_mut();
+            if local.0 != generation {
+                *local = (generation, local.1, [0; FaultSite::COUNT]);
+            }
+            if local.1 == 0 {
+                local.1 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            }
+            let n = local.2[site as usize];
+            local.2[site as usize] = n + 1;
+            (local.1, n)
+        });
+        let guard = ACTIVE.read().unwrap_or_else(|e| e.into_inner());
+        let plane = guard.as_ref()?;
+        for (j, spec) in plane.specs.iter().enumerate() {
+            if spec.site != site {
+                continue;
+            }
+            let h = mix(
+                plane
+                    .seed
+                    .wrapping_add(mix(((site as u64) << 32) | j as u64))
+                    .wrapping_add(mix(tid))
+                    .wrapping_add(n),
+            );
+            if h % spec.one_in == 0 {
+                return Some(spec.action);
+            }
+        }
+        None
+    }
+
+    /// Perturb the schedule at `site`: yield, sleep, or panic per the
+    /// active plane. (`Fire`/`ShortWrite` hits are inert here.)
+    #[inline]
+    pub fn jitter(site: FaultSite) {
+        match decide(site) {
+            Some(FaultAction::Yield) => std::thread::yield_now(),
+            Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+            Some(FaultAction::Panic) => {
+                panic!("faults: injected panic at {}", site.label())
+            }
+            _ => {}
+        }
+    }
+
+    /// Did a `Fire` spec hit at `site`? (Forced-fallback decisions.)
+    #[inline]
+    pub fn fires(site: FaultSite) -> bool {
+        matches!(decide(site), Some(FaultAction::Fire))
+    }
+
+    /// Cap for the next write syscall: a firing `ShortWrite(n)` at
+    /// `ConnWrite` truncates `len` to `n` (at least 1 byte so writers
+    /// still make progress).
+    #[inline]
+    pub fn write_cap(len: usize) -> usize {
+        match decide(FaultSite::ConnWrite) {
+            Some(FaultAction::ShortWrite(n)) if len > 0 => n.clamp(1, len),
+            _ => len,
+        }
+    }
+
+    /// Is `key` the plane's targeted poison key (handler panic)?
+    #[inline]
+    pub fn poisoned_put(key: u64) -> bool {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return false;
+        }
+        let guard = ACTIVE.read().unwrap_or_else(|e| e.into_inner());
+        guard.as_ref().and_then(|p| p.poison_key) == Some(key)
+    }
+
+    /// Is `key` the plane's targeted stall key? Returns the stall delay.
+    #[inline]
+    pub fn stalled_put(key: u64) -> Option<Duration> {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return None;
+        }
+        let guard = ACTIVE.read().unwrap_or_else(|e| e.into_inner());
+        let (k, d) = guard.as_ref()?.stall_key?;
+        (k == key).then_some(d)
+    }
+}
+
+#[cfg(not(feature = "faults"))]
+mod runtime {
+    use std::time::Duration;
+
+    use super::{FaultPlane, FaultSite};
+
+    /// No-op guard (feature off): nothing was installed.
+    pub struct FaultGuard {
+        _private: (),
+    }
+
+    /// Feature off: accepts and discards the plane so call sites compile
+    /// unchanged; every hook below is a zero-cost no-op.
+    pub fn install(_plane: FaultPlane) -> FaultGuard {
+        FaultGuard { _private: () }
+    }
+
+    #[inline(always)]
+    pub fn jitter(_site: FaultSite) {}
+
+    #[inline(always)]
+    pub fn fires(_site: FaultSite) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn write_cap(len: usize) -> usize {
+        len
+    }
+
+    #[inline(always)]
+    pub fn poisoned_put(_key: u64) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn stalled_put(_key: u64) -> Option<Duration> {
+        None
+    }
+}
+
+pub use runtime::{fires, install, jitter, poisoned_put, stalled_put, write_cap, FaultGuard};
+
+/// Whether the `faults` feature was compiled in (used by `csize fuzz`
+/// and `kv_server --fault-seed` to warn instead of silently no-opping).
+pub const COMPILED: bool = cfg!(feature = "faults");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_indices_are_dense() {
+        for (i, site) in FaultSite::ALL.iter().enumerate() {
+            assert_eq!(*site as usize, i);
+        }
+    }
+
+    #[test]
+    fn plane_builder_accumulates() {
+        let plane = FaultPlane::chaos(7)
+            .with_poison_key(11)
+            .with_stall_key(12, Duration::from_millis(1));
+        assert_eq!(plane.seed(), 7);
+        assert!(plane.specs.len() >= FaultSite::COUNT);
+        assert_eq!(plane.poison_key, Some(11));
+        assert_eq!(plane.stall_key.map(|(k, _)| k), Some(12));
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn targeted_keys_only_fire_when_installed() {
+        assert!(!poisoned_put(99));
+        let guard = install(
+            FaultPlane::new(1)
+                .with_poison_key(99)
+                .with_stall_key(98, Duration::from_millis(3)),
+        );
+        assert!(poisoned_put(99));
+        assert!(!poisoned_put(98));
+        assert_eq!(stalled_put(98), Some(Duration::from_millis(3)));
+        assert_eq!(stalled_put(99), None);
+        drop(guard);
+        assert!(!poisoned_put(99));
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn one_in_one_always_fires() {
+        let _guard = install(FaultPlane::new(3).with(
+            FaultSite::OptimisticRetry,
+            1,
+            FaultAction::Fire,
+        ));
+        for _ in 0..32 {
+            assert!(fires(FaultSite::OptimisticRetry));
+        }
+        assert!(!fires(FaultSite::RefresherTick));
+    }
+}

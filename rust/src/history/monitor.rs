@@ -150,6 +150,12 @@ impl Monitor {
         let sizes = self.sizes.lock().unwrap();
         check(&updates, &sizes)
     }
+
+    /// Snapshot the recorded history — the raw material for repro
+    /// dumping and [`minimize`].
+    pub fn events(&self) -> (Vec<UpdateEvent>, Vec<SizeEvent>) {
+        (self.updates.lock().unwrap().clone(), self.sizes.lock().unwrap().clone())
+    }
 }
 
 /// Per-sign event times, sorted for binary search.
@@ -223,6 +229,95 @@ pub fn check(updates: &[UpdateEvent], sizes: &[SizeEvent]) -> Report {
         }
     }
     report
+}
+
+/// [`check`] generalized to a window that starts mid-history: `anchor` is
+/// a linearizable size observation taken when recording began, and every
+/// recorded update strictly follows it (the recorder only starts once the
+/// anchor completes). Size observations are then justified against
+/// `anchor.value` plus the recorded deltas. `slack` widens both bounds by
+/// the number of operations that may have been in flight — started before
+/// recording, landing inside the window unrecorded (in the live server:
+/// the handler pool size). Sizes overlapping or preceding the anchor are
+/// skipped, not checked (`sizes_checked` counts only the checked ones).
+/// The empty-set floor still applies: no clock slack makes a negative
+/// size justifiable.
+pub fn check_anchored(
+    anchor: &SizeEvent,
+    slack: i64,
+    updates: &[UpdateEvent],
+    sizes: &[SizeEvent],
+) -> Report {
+    debug_assert!(
+        updates.iter().all(|u| u.delta == 1 || u.delta == -1),
+        "monitor updates must be unit deltas"
+    );
+    debug_assert!(slack >= 0, "slack is a count of in-flight ops");
+    let plus = SignIndex::build(updates, 1);
+    let minus = SignIndex::build(updates, -1);
+    let mut report = Report {
+        updates: updates.len(),
+        sizes_checked: 0,
+        final_net: anchor.value + plus.resp.len() as i64 - minus.resp.len() as i64,
+        violations: Vec::new(),
+    };
+    for &s in sizes {
+        if s.inv < anchor.resp {
+            continue;
+        }
+        report.sizes_checked += 1;
+        let definite_plus = plus.done_before(s.inv);
+        let definite_minus = minus.done_before(s.inv);
+        let definite = anchor.value + definite_plus as i64 - definite_minus as i64;
+        let overlap_plus = plus.started_by(s.resp) - definite_plus;
+        let overlap_minus = minus.started_by(s.resp) - definite_minus;
+        let low = (definite - overlap_minus as i64 - slack).max(0);
+        let high = definite + overlap_plus as i64 + slack;
+        if s.value < low || s.value > high {
+            report.violations.push(Violation { event: s, low, high });
+        }
+    }
+    report
+}
+
+/// Greedy one-pass shrink: drop every update whose removal keeps the
+/// violation alive. Shared by [`minimize`] / [`minimize_anchored`].
+fn shrink(
+    updates: &[UpdateEvent],
+    still_fails: impl Fn(&[UpdateEvent]) -> bool,
+) -> Vec<UpdateEvent> {
+    let mut kept = updates.to_vec();
+    let mut i = 0;
+    while i < kept.len() {
+        let removed = kept.remove(i);
+        if still_fails(&kept) {
+            continue; // the violation survives without it: drop for good
+        }
+        kept.insert(i, removed);
+        i += 1;
+    }
+    kept
+}
+
+/// Minimize the update history behind a violating size observation: the
+/// returned subset still fails [`check`] against `size`, and removing any
+/// single remaining update would stop it failing. Turns a thousands-long
+/// fuzz history into a repro a human can read.
+pub fn minimize(updates: &[UpdateEvent], size: &SizeEvent) -> Vec<UpdateEvent> {
+    debug_assert!(!check(updates, std::slice::from_ref(size)).is_ok());
+    shrink(updates, |kept| !check(kept, std::slice::from_ref(size)).is_ok())
+}
+
+/// [`minimize`] for anchored windows (see [`check_anchored`]).
+pub fn minimize_anchored(
+    anchor: &SizeEvent,
+    slack: i64,
+    updates: &[UpdateEvent],
+    size: &SizeEvent,
+) -> Vec<UpdateEvent> {
+    shrink(updates, |kept| {
+        !check_anchored(anchor, slack, kept, std::slice::from_ref(size)).is_ok()
+    })
 }
 
 #[cfg(test)]
@@ -301,6 +396,56 @@ mod tests {
         assert_eq!(report.updates, 3);
         assert_eq!(report.sizes_checked, 2);
         assert_eq!(report.final_net, 1);
+    }
+
+    #[test]
+    fn anchored_check_offsets_by_baseline() {
+        // Anchor: size 10 observed over [0, 5]; two inserts and a delete
+        // recorded after it.
+        let anchor = sz(0, 5, 10);
+        let updates = [up(6, 7, 1), up(8, 9, 1), up(10, 11, -1)];
+        assert!(check_anchored(&anchor, 0, &updates, &[sz(20, 21, 11)]).is_ok());
+        let r = check_anchored(&anchor, 0, &updates, &[sz(20, 21, 10)]);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!((r.violations[0].low, r.violations[0].high), (11, 11));
+        assert_eq!(r.final_net, 11);
+    }
+
+    #[test]
+    fn anchored_check_skips_pre_anchor_sizes_and_applies_slack() {
+        let anchor = sz(0, 5, 100);
+        let updates = [up(6, 7, 1)];
+        // A size overlapping the anchor is not comparable: skipped.
+        let r = check_anchored(&anchor, 0, &updates, &[sz(3, 4, 7)]);
+        assert_eq!(r.sizes_checked, 0);
+        assert!(r.is_ok());
+        // Slack of 2 (in-flight unrecorded ops) widens both bounds.
+        for fine in [99, 103] {
+            assert!(check_anchored(&anchor, 2, &updates, &[sz(10, 11, fine)]).is_ok());
+        }
+        for wrong in [98, 104] {
+            assert!(!check_anchored(&anchor, 2, &updates, &[sz(10, 11, wrong)]).is_ok());
+        }
+    }
+
+    #[test]
+    fn minimize_keeps_a_minimal_failing_core() {
+        // 5 inserts done before the size call; value 99 is impossible no
+        // matter what — the empty update set already fails (value > 0
+        // with nothing recorded), so minimize should strip everything.
+        let updates: Vec<UpdateEvent> = (0..5).map(|i| up(2 * i, 2 * i + 1, 1)).collect();
+        let bad = sz(100, 101, 99);
+        assert_eq!(minimize(&updates, &bad).len(), 0);
+        // A negative size is refuted by the floor alone as well, but a
+        // too-large size of 3 against 2 completed inserts needs... 3 > 2
+        // fails with both kept; dropping one insert still fails (3 > 1);
+        // dropping both still fails (3 > 0): minimal core is empty.
+        // A too-SMALL size keeps its witnesses: value 0 against two
+        // completed inserts fails only while at least one insert remains.
+        let two = [up(0, 1, 1), up(2, 3, 1)];
+        let small = sz(10, 11, 0);
+        let core = minimize(&two, &small);
+        assert_eq!(core.len(), 1, "one definite insert suffices to refute 0");
     }
 
     #[test]

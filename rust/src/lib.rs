@@ -84,7 +84,20 @@
 //!   `size_estimate` probe (hysteresis; `ERR OVERLOAD` sheds) — and a
 //!   `STATS` endpoint merging server gauges with [`size::ArbiterStats`].
 //!   `examples/kv_server.rs` is a thin CLI shim over it; `make
-//!   server-smoke` boots it in CI.
+//!   server-smoke` boots it in CI. The server **self-heals**: pool
+//!   requests carry per-request deadlines (`ERR TIMEOUT`, stale replies
+//!   dropped by request id), handler panics are contained by
+//!   `catch_unwind` (`ERR PANIC`) with pool replenishment, idle and
+//!   slowloris connections are reaped on a protocol-progress clock, and
+//!   a sampled in-server monitor (`--monitor-sample`) checks live
+//!   windows of traffic against a `size_exact` anchor, dumping minimized
+//!   repros of any unjustified size to `artifacts/`.
+//! * [`faults`] — the deterministic **chaos plane** (cargo feature
+//!   `faults`; compiled to zero-cost no-ops otherwise): seeded injection
+//!   sites through the size protocol and the server fire delays, yields,
+//!   panics, short writes and forced fallbacks on a schedule that
+//!   replays exactly from its seed. `csize fuzz` and `make fuzz-smoke`
+//!   drive it; `kv_server --fault-seed` arms it on a live server.
 //!
 //! ## Quickstart
 //!
@@ -106,6 +119,7 @@ pub mod bench_util;
 pub mod bst;
 pub mod cli;
 pub mod ebr;
+pub mod faults;
 pub mod harness;
 pub mod hashtable;
 pub mod history;

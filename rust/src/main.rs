@@ -11,6 +11,12 @@
 //!   through the AOT-compiled Pallas pipeline (PJRT).
 //! * `verify`   — anomaly hunt: show the naive policy violating
 //!   linearizability (paper Figs. 1–2) and the transformed one holding.
+//! * `fuzz`     — seeded fault-schedule fuzzing: drive every
+//!   size-providing policy under the chaos fault plane (`--fault-seed`,
+//!   `--seeds`, `--ops`, `--structure NAME|all`), check each recorded
+//!   history for size-linearizability, and dump minimized repros for any
+//!   violation to `--dump-dir` (default `artifacts/`). Build with
+//!   `--features faults` for actual fault injection.
 //!
 //! Figure reproductions live in `cargo bench` targets (see DESIGN.md §4).
 
@@ -20,8 +26,12 @@ use std::time::Duration;
 
 use concurrent_size::bench_util;
 use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
+use concurrent_size::faults::{self, FaultPlane};
 use concurrent_size::harness::{run, RunConfig, SizeCall};
+use concurrent_size::history::monitor::{minimize, Monitor, UpdateEvent, Violation};
+use concurrent_size::list::LinkedListSet;
 use concurrent_size::metrics::fmt_rate;
+use concurrent_size::rng::Xoshiro256;
 use concurrent_size::set_api::ConcurrentSet;
 use concurrent_size::size::{LinearizableSize, NaiveSize, SizePolicy};
 use concurrent_size::skiplist::SkipListSet;
@@ -279,6 +289,269 @@ fn cmd_verify(args: &Args) {
     println!("verify OK: methodology exhibits no anomalies");
 }
 
+/// Drive one structure/policy combination with seeded updater and sizer
+/// threads (the `rust/tests/linearizability.rs` schedule) and hand back
+/// the recorded history plus the quiescent size.
+fn fuzz_drive(
+    structure: &str,
+    policy: PolicyKind,
+    seed: u64,
+    ops: usize,
+) -> (Monitor, Option<i64>) {
+    const UPDATERS: u64 = 3;
+    const SIZERS: u64 = 2;
+    const KEY_SPACE: u64 = 48;
+    let set: Arc<dyn ConcurrentSet> =
+        Arc::from(bench_util::make_set(structure, policy, 128).expect("structure exists"));
+    let monitor = Monitor::new();
+    std::thread::scope(|scope| {
+        for t in 0..UPDATERS {
+            let set = set.clone();
+            let monitor = &monitor;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(seed ^ ((t + 1) * 0x9E37));
+                for _ in 0..ops {
+                    let k = rng.gen_range_incl(1, KEY_SPACE);
+                    match rng.gen_range(3) {
+                        0 => {
+                            let timer = monitor.begin();
+                            if set.insert(k) {
+                                monitor.commit_update(timer, 1);
+                            }
+                        }
+                        1 => {
+                            let timer = monitor.begin();
+                            if set.delete(k) {
+                                monitor.commit_update(timer, -1);
+                            }
+                        }
+                        _ => {
+                            set.contains(k); // moves no size: not recorded
+                        }
+                    }
+                }
+            });
+        }
+        for t in 0..SIZERS {
+            let set = set.clone();
+            let monitor = &monitor;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(seed ^ ((t + 77) * 0xC0FF));
+                for _ in 0..ops / 4 {
+                    match rng.gen_range(3) {
+                        0 => {
+                            let timer = monitor.begin();
+                            let v = set.size().expect("policy provides size");
+                            monitor.commit_size(timer, v);
+                        }
+                        1 => {
+                            let timer = monitor.begin();
+                            let v = set.size_exact().expect("policy provides size");
+                            monitor.commit_size(timer, v.value);
+                        }
+                        _ => {
+                            // Stale reads are justified within a window
+                            // widened by their reported age.
+                            let timer = monitor.begin();
+                            let bound = Duration::from_micros(rng.gen_range_incl(1, 800));
+                            let v = set.size_recent(bound).expect("policy provides size");
+                            monitor.commit_size_with_slack(timer, v.value, v.age);
+                        }
+                    }
+                    if rng.gen_bool(0.25) {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+    });
+    let quiescent = set.size();
+    (monitor, quiescent)
+}
+
+/// Write a repro file with a minimized update core for each violation
+/// (first 3) and return the file path.
+fn dump_repro(
+    dir: &str,
+    tag: &str,
+    seed: u64,
+    updates: &[UpdateEvent],
+    violations: &[Violation],
+) -> String {
+    use std::fmt::Write as _;
+    let mut body = String::new();
+    let _ = writeln!(body, "# csize fuzz repro: {tag} (fault seed {seed:#x})");
+    let _ = writeln!(body, "# updates recorded: {}", updates.len());
+    for v in violations.iter().take(3) {
+        let _ = writeln!(
+            body,
+            "violation: value={} window=[{}, {}] justified=[{}, {}]",
+            v.event.value, v.event.inv, v.event.resp, v.low, v.high
+        );
+        let core = minimize(updates, &v.event);
+        let _ = writeln!(body, "  minimized repro ({} updates):", core.len());
+        for u in &core {
+            let _ = writeln!(body, "  update delta={:+} window=[{}, {}]", u.delta, u.inv, u.resp);
+        }
+    }
+    if violations.len() > 3 {
+        let _ = writeln!(body, "# ... {} more violations elided", violations.len() - 3);
+    }
+    let _ = std::fs::create_dir_all(dir);
+    let path = format!("{dir}/fuzz-{tag}-{seed:#x}.txt");
+    if let Err(e) = std::fs::write(&path, &body) {
+        eprintln!("fuzz: could not write repro {path}: {e}");
+    }
+    path
+}
+
+/// Reproduce the paper's Figure 2 anomaly on a widened-window
+/// [`NaiveSize`] under the chaos plane; return the repro path once the
+/// monitor flags the negative size (`None` = never reproduced).
+fn fuzz_naive_teeth(seed: u64, dump_dir: &str) -> Option<String> {
+    let _guard = faults::install(FaultPlane::chaos(seed));
+    let mut policy = NaiveSize::new(MAX_THREADS, concurrent_size::size::SizeOpts::default());
+    policy.set_insert_window(Duration::from_micros(800));
+    let set = Arc::new(LinkedListSet::<NaiveSize>::with_policy(policy));
+    let monitor = Monitor::new();
+    let negative_seen = AtomicBool::new(false);
+    for k in 1..=600u64 {
+        std::thread::scope(|scope| {
+            let inserter = set.clone();
+            scope.spawn(move || {
+                inserter.insert(k); // increments only after the window
+            });
+            scope.spawn(|| {
+                let timer = monitor.begin();
+                while !set.delete(k) {
+                    std::hint::spin_loop();
+                }
+                monitor.commit_update(timer, -1);
+            });
+            scope.spawn(|| {
+                for _ in 0..32 {
+                    let timer = monitor.begin();
+                    let v = set.size().unwrap();
+                    monitor.commit_size(timer, v);
+                    if v < 0 {
+                        negative_seen.store(true, SeqCst);
+                        break;
+                    }
+                }
+            });
+        });
+        // The insert is recorded only once it completed (window and
+        // all), mirroring what an online monitor can actually know.
+        let timer = monitor.begin();
+        monitor.commit_update(timer, 1);
+        if negative_seen.load(SeqCst) {
+            break;
+        }
+    }
+    let report = monitor.verify();
+    if report.is_ok() {
+        return None;
+    }
+    let (updates, _) = monitor.events();
+    Some(dump_repro(dump_dir, "naive-fig2", seed, &updates, &report.violations))
+}
+
+fn cmd_fuzz(args: &Args) {
+    let seeds = args.get_usize("seeds", 2);
+    let base_seed = args.get_u64("fault-seed", 0xC1A05);
+    let ops = args.get_usize("ops", 1_200);
+    let structure_arg = args.get("structure").unwrap_or("hashtable").to_string();
+    let dump_dir = args.get("dump-dir").unwrap_or("artifacts").to_string();
+    let structures: Vec<&str> = if structure_arg == "all" {
+        bench_util::STRUCTURES.to_vec()
+    } else if bench_util::STRUCTURES.contains(&structure_arg.as_str()) {
+        vec![structure_arg.as_str()]
+    } else {
+        eprintln!(
+            "unknown --structure {structure_arg:?} (use {}|all)",
+            bench_util::STRUCTURES.join("|")
+        );
+        std::process::exit(2);
+    };
+    if !faults::COMPILED {
+        eprintln!(
+            "note: fault injection not compiled in; running the schedule without chaos \
+             (rebuild with --features faults)"
+        );
+    }
+
+    let mut failures = 0usize;
+    for round in 0..seeds {
+        let seed = base_seed.wrapping_add(round as u64 * 0x9E37_79B9);
+        for &structure in &structures {
+            for policy in PolicyKind::ALL {
+                let label = policy.label();
+                if !policy.provides_size() {
+                    println!("fuzz {structure}/{label}: no size to check; skipped");
+                    continue;
+                }
+                let (monitor, quiescent) = {
+                    let _guard = faults::install(FaultPlane::chaos(seed));
+                    fuzz_drive(structure, policy, seed, ops)
+                };
+                let report = monitor.verify();
+                if let Some(size) = quiescent {
+                    if size != report.final_net {
+                        eprintln!(
+                            "fuzz {structure}/{label} seed={seed:#x}: quiescent size {size} \
+                             != monitor net {}",
+                            report.final_net
+                        );
+                        failures += 1;
+                    }
+                }
+                if report.is_ok() {
+                    println!(
+                        "fuzz {structure}/{label} seed={seed:#x}: clean ({} updates, {} sizes)",
+                        report.updates, report.sizes_checked
+                    );
+                    continue;
+                }
+                let (updates, _) = monitor.events();
+                let tag = format!("{structure}-{label}");
+                let path = dump_repro(&dump_dir, &tag, seed, &updates, &report.violations);
+                if policy.linearizable() {
+                    eprintln!(
+                        "fuzz {structure}/{label} seed={seed:#x}: {} UNJUSTIFIED size \
+                         returns (repro: {path})",
+                        report.violations.len()
+                    );
+                    failures += 1;
+                } else {
+                    println!(
+                        "fuzz {structure}/{label} seed={seed:#x}: caught {} expected \
+                         non-linearizable anomalies (repro: {path})",
+                        report.violations.len()
+                    );
+                }
+            }
+        }
+    }
+
+    // Prove the checker has teeth: force the naive policy's Figure 2
+    // anomaly (negative size) and require the monitor to flag it.
+    println!("fuzz: forcing the naive Figure 2 anomaly (checker teeth)...");
+    match fuzz_naive_teeth(base_seed, &dump_dir) {
+        Some(path) => {
+            println!("fuzz naive-teeth: negative size caught and dumped (repro: {path})");
+        }
+        None => {
+            eprintln!("fuzz naive-teeth: FAILED to catch the forced naive anomaly");
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        eprintln!("fuzz: {failures} failure(s)");
+        std::process::exit(1);
+    }
+    println!("fuzz OK: every linearizable policy justified every size return");
+}
+
 fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
@@ -286,8 +559,9 @@ fn main() {
         Some("bench") => cmd_bench(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("verify") => cmd_verify(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         Some(other) => {
-            eprintln!("unknown subcommand {other:?}; try demo|bench|analyze|verify");
+            eprintln!("unknown subcommand {other:?}; try demo|bench|analyze|verify|fuzz");
             std::process::exit(2);
         }
     }

@@ -22,8 +22,10 @@
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
 
 use super::proto::{self, MAX_LINE, Request};
+use crate::faults;
 
 /// Ordered per-connection work: a parsed request, or an error reply that
 /// must go out in sequence with the requests around it.
@@ -39,6 +41,11 @@ pub(crate) enum Pending {
 #[derive(Default)]
 pub(crate) struct LineBuffer {
     buf: Vec<u8>,
+    /// Mid-overlong-line: the one `Err(LineTooLong)` was already
+    /// reported, and bytes are dropped until the next `\n` resyncs the
+    /// stream. Memory stays bounded because the discarded prefix is never
+    /// buffered.
+    discarding: bool,
 }
 
 /// A line longer than [`MAX_LINE`] arrived (terminated or not).
@@ -72,12 +79,29 @@ impl LineBuffer {
     /// buffer without bound). Terminator bytes (`\n` and a preceding
     /// `\r`) never count against the cap, so LF and CRLF clients get the
     /// same limit; the unterminated check leaves one byte of slack for a
-    /// `\r` whose `\n` is still in flight. The caller answers and closes.
+    /// `\r` whose `\n` is still in flight.
+    ///
+    /// Each overlong line yields exactly one `Err`; the buffer then
+    /// resyncs at the next `\n` and later lines parse normally, so the
+    /// caller can answer the error and keep the connection.
     pub fn next_line(&mut self) -> Option<Result<String, LineTooLong>> {
+        if self.discarding {
+            match self.buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    self.buf.drain(..=i);
+                    self.discarding = false;
+                }
+                None => {
+                    self.buf.clear();
+                    return None;
+                }
+            }
+        }
         match self.buf.iter().position(|&b| b == b'\n') {
             Some(i) => {
                 let content = i - usize::from(i > 0 && self.buf[i - 1] == b'\r');
                 if content > MAX_LINE {
+                    self.buf.drain(..=i);
                     return Some(Err(LineTooLong));
                 }
                 let mut line: Vec<u8> = self.buf.drain(..=i).collect();
@@ -87,10 +111,24 @@ impl LineBuffer {
                 }
                 Some(Ok(String::from_utf8_lossy(&line).into_owned()))
             }
-            None if self.buf.len() > MAX_LINE + 1 => Some(Err(LineTooLong)),
+            None if self.buf.len() > MAX_LINE + 1 => {
+                self.buf.clear();
+                self.discarding = true;
+                Some(Err(LineTooLong))
+            }
             None => None,
         }
     }
+}
+
+/// The one request a connection currently has in the handler pool:
+/// identified so a reply that arrives after its deadline fired can be
+/// recognized as stale and dropped, and timestamped so the reactor's
+/// deadline sweep knows when to give up on it.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct InFlight {
+    pub id: u64,
+    pub since: Instant,
 }
 
 /// One client connection, owned by the reactor.
@@ -101,13 +139,17 @@ pub(crate) struct Conn {
     /// Bytes of `outbuf` already written (partial-write cursor).
     written: usize,
     pub pending: VecDeque<Pending>,
-    /// A request from this connection is in the handler pool.
-    pub in_flight: bool,
+    /// The request from this connection in the handler pool, if any.
+    pub in_flight: Option<InFlight>,
     /// Serve what is queued, flush, then close (QUIT / EOF / protocol
     /// violation). No further input is read.
     pub closing: bool,
     /// Hard failure: drop the connection without flushing.
     pub dead: bool,
+    /// Last *protocol* progress — a complete line parsed or a reply
+    /// enqueued. Raw bytes do not count, so a slowloris client trickling
+    /// a never-ending line still looks idle and gets reaped.
+    pub last_activity: Instant,
 }
 
 impl Conn {
@@ -119,9 +161,10 @@ impl Conn {
             outbuf: Vec::new(),
             written: 0,
             pending: VecDeque::new(),
-            in_flight: false,
+            in_flight: None,
             closing: false,
             dead: false,
+            last_activity: Instant::now(),
         })
     }
 
@@ -169,14 +212,17 @@ impl Conn {
         }
         while let Some(line) = self.lines.next_line() {
             match line {
-                Ok(text) => match proto::parse(&text) {
-                    Ok(req) => self.pending.push_back(Pending::Req(req)),
-                    Err(reply) => self.pending.push_back(Pending::Reply(reply)),
-                },
+                Ok(text) => {
+                    self.last_activity = Instant::now();
+                    match proto::parse(&text) {
+                        Ok(req) => self.pending.push_back(Pending::Req(req)),
+                        Err(reply) => self.pending.push_back(Pending::Reply(reply)),
+                    }
+                }
+                // One in-sequence error per overlong line; the LineBuffer
+                // resyncs at the next newline, so the session survives.
                 Err(LineTooLong) => {
-                    self.pending.push_back(Pending::Reply("ERR line too long".into()));
-                    self.closing = true;
-                    break;
+                    self.pending.push_back(Pending::Reply(proto::TOOLONG_REPLY.into()));
                 }
             }
         }
@@ -185,6 +231,7 @@ impl Conn {
 
     /// Queue one reply line for writing.
     pub fn enqueue_reply(&mut self, reply: &str) {
+        self.last_activity = Instant::now();
         self.outbuf.extend_from_slice(reply.as_bytes());
         self.outbuf.push(b'\n');
     }
@@ -197,7 +244,10 @@ impl Conn {
         }
         let mut progress = false;
         while self.written < self.outbuf.len() {
-            match self.stream.write(&self.outbuf[self.written..]) {
+            // Fault plane: cap each write syscall (short/partial writes),
+            // exercising the partial-write cursor below.
+            let cap = faults::write_cap(self.outbuf.len() - self.written);
+            match self.stream.write(&self.outbuf[self.written..self.written + cap]) {
                 Ok(0) => {
                     self.dead = true;
                     return progress;
@@ -227,9 +277,20 @@ impl Conn {
     pub fn should_close(&self) -> bool {
         self.dead
             || (self.closing
-                && !self.in_flight
+                && self.in_flight.is_none()
                 && self.pending.is_empty()
                 && self.written == self.outbuf.len())
+    }
+
+    /// Whether this connection is quiescent (nothing queued, in flight,
+    /// or unflushed) and has made no protocol progress for `limit` — the
+    /// reap condition for `--conn-idle-ms`. A connection waiting on its
+    /// own slow request is *not* idle; the deadline sweep owns that case.
+    pub fn idle_expired(&self, now: Instant, limit: Duration) -> bool {
+        self.in_flight.is_none()
+            && self.pending.is_empty()
+            && self.written == self.outbuf.len()
+            && now.duration_since(self.last_activity) >= limit
     }
 }
 
@@ -270,6 +331,92 @@ mod tests {
         assert_eq!(lb.next_line(), None, "could still be a max-length CRLF line");
         lb.push(b"x");
         assert_eq!(lb.next_line(), Some(Err(LineTooLong)));
+        // Exactly one error per overlong line: the tail of the same line
+        // keeps draining silently until its newline resyncs the stream.
+        lb.push(&[b'x'; 3 * MAX_LINE]);
+        assert_eq!(lb.next_line(), None);
+        lb.push(b"x\nHAS 9\n");
+        assert_eq!(lb.next_line(), Some(Ok("HAS 9".into())));
+        assert_eq!(lb.next_line(), None);
+    }
+
+    #[test]
+    fn line_buffer_resyncs_after_overlong_terminated_line() {
+        // A complete overlong line costs one Err; the next line parses.
+        let mut lb = LineBuffer::default();
+        let mut burst = vec![b'z'; MAX_LINE + 10];
+        burst.extend_from_slice(b"\nPUT 7\n");
+        lb.push(&burst);
+        assert_eq!(lb.next_line(), Some(Err(LineTooLong)));
+        assert_eq!(lb.next_line(), Some(Ok("PUT 7".into())));
+        assert_eq!(lb.next_line(), None);
+    }
+
+    #[test]
+    fn line_buffer_one_byte_writes_match_batched() {
+        // Satellite: a client trickling one byte per write must see the
+        // exact same line/error sequence as one sending a single burst.
+        crate::proptest_lite::run("line_buffer_one_byte_writes", |rng| {
+            let mut bytes = Vec::new();
+            for _ in 0..rng.gen_range_incl(1, 8) {
+                let len = match rng.gen_range(4) {
+                    0 => rng.gen_range_incl(0, 8) as usize,
+                    1 => MAX_LINE - 1 + rng.gen_range(3) as usize, // straddle the cap
+                    _ => rng.gen_range_incl(1, 2 * MAX_LINE as u64) as usize,
+                };
+                for _ in 0..len {
+                    bytes.push(b'a' + (rng.gen_range(26) as u8));
+                }
+                if rng.gen_range(4) == 0 {
+                    bytes.push(b'\r');
+                }
+                bytes.push(b'\n');
+            }
+
+            let mut batched = LineBuffer::default();
+            batched.push(&bytes);
+            let mut want = Vec::new();
+            while let Some(r) = batched.next_line() {
+                want.push(r);
+            }
+
+            let mut trickled = LineBuffer::default();
+            let mut got = Vec::new();
+            for b in &bytes {
+                trickled.push(std::slice::from_ref(b));
+                while let Some(r) = trickled.next_line() {
+                    got.push(r);
+                }
+            }
+            prop_assert!(
+                got == want,
+                "1-byte writes diverged: got {got:?}, want {want:?} over {} bytes",
+                bytes.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn line_buffer_one_byte_writes_resync_after_overlong() {
+        // Deterministic companion to the property: overlong line fed one
+        // byte at a time yields exactly one Err, then resyncs.
+        let mut lb = LineBuffer::default();
+        let mut errs = 0;
+        let mut lines = Vec::new();
+        let mut stream = vec![b'q'; MAX_LINE + 50];
+        stream.extend_from_slice(b"\nSIZE\n");
+        for b in &stream {
+            lb.push(std::slice::from_ref(b));
+            while let Some(r) = lb.next_line() {
+                match r {
+                    Ok(l) => lines.push(l),
+                    Err(LineTooLong) => errs += 1,
+                }
+            }
+        }
+        assert_eq!(errs, 1);
+        assert_eq!(lines, vec!["SIZE".to_string()]);
     }
 
     #[test]

@@ -39,18 +39,24 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::cli::Args;
+use crate::faults::{self, FaultSite};
 use crate::set_api::ConcurrentSet;
 use crate::thread_id;
 
 mod admission;
 mod conn;
+mod monitor;
 pub mod proto;
 mod reactor;
 
 pub use admission::{Admission, Watermarks};
 pub use proto::{DEFAULT_RECENT_MS, OVERLOAD_REPLY, parse_stats, Request};
 
+use monitor::ServerMonitor;
 use reactor::{Completion, Job, Reactor, ReactorConfig};
+
+/// Where the in-server monitor drops minimized violation repros.
+const ARTIFACT_DIR: &str = "artifacts";
 
 /// What the reactor does when a full tick makes no progress.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -92,6 +98,20 @@ pub struct ServerConfig {
     pub admission: Option<Watermarks>,
     /// Reactor idle behavior.
     pub idle: IdleStrategy,
+    /// Per-request handler deadline (`--request-timeout-ms`, 0 = off):
+    /// past it the client gets `ERR TIMEOUT` and the connection's pool
+    /// slot back; the handler's eventual stale reply is dropped.
+    pub request_timeout: Option<Duration>,
+    /// Idle-connection reaping (`--conn-idle-ms`, 0/absent = off): a
+    /// connection with no *protocol* progress for this long is dropped —
+    /// bytes that never complete a line (slowloris) do not count as
+    /// progress.
+    pub conn_idle: Option<Duration>,
+    /// Sampled linearizability monitoring (`--monitor-sample N`, 0 =
+    /// off): every N pool requests, record one full window of timestamped
+    /// events against a `size_exact` anchor and check it; violations show
+    /// in `STATS` and dump minimized repros under `artifacts/`.
+    pub monitor_sample: u64,
 }
 
 impl Default for ServerConfig {
@@ -101,6 +121,9 @@ impl Default for ServerConfig {
             max_conns: 4096,
             admission: None,
             idle: IdleStrategy::Sleep(IDLE_NAP),
+            request_timeout: Some(Duration::from_secs(30)),
+            conn_idle: None,
+            monitor_sample: 0,
         }
     }
 }
@@ -108,8 +131,10 @@ impl Default for ServerConfig {
 impl ServerConfig {
     /// Build from CLI flags: `--workers N`, `--max-conns N`,
     /// `--admission-high N [--admission-low N]` (low defaults to half of
-    /// high; low alone is an error), `--reactor sleep|spin`. `Err` carries
-    /// the usage message.
+    /// high; low alone is an error), `--reactor sleep|spin`,
+    /// `--request-timeout-ms N` (0 disables), `--conn-idle-ms N`
+    /// (0 disables), `--monitor-sample N` (0 disables). `Err` carries the
+    /// usage message.
     pub fn from_args(args: &Args) -> Result<Self, String> {
         let defaults = Self::default();
         let high = args.get_opt_u64("admission-high");
@@ -138,11 +163,19 @@ impl ServerConfig {
             Some(s) => IdleStrategy::parse(s)
                 .ok_or_else(|| format!("--reactor expects sleep|spin, got {s:?}"))?,
         };
+        let millis_knob = |name: &str, default: Option<Duration>| match args.get_opt_u64(name) {
+            None => default,
+            Some(0) => None,
+            Some(ms) => Some(Duration::from_millis(ms)),
+        };
         Ok(Self {
             handlers: args.get_usize("workers", defaults.handlers),
             max_conns: args.get_usize("max-conns", defaults.max_conns),
             admission,
             idle,
+            request_timeout: millis_knob("request-timeout-ms", defaults.request_timeout),
+            conn_idle: millis_knob("conn-idle-ms", defaults.conn_idle),
+            monitor_sample: args.get_opt_u64("monitor-sample").unwrap_or(defaults.monitor_sample),
         })
     }
 }
@@ -163,6 +196,14 @@ pub struct ServerStats {
     pub shed: u64,
     /// `false` while admission control is shedding.
     pub admitting: bool,
+    /// Requests answered `ERR TIMEOUT` by the deadline sweep.
+    pub timeouts: u64,
+    /// Handler panics contained (`ERR PANIC`) or survived by respawn.
+    pub panics: u64,
+    /// Idle/slowloris connections reaped.
+    pub reaped: u64,
+    /// Unjustified size observations caught by the sampled monitor.
+    pub monitor_violations: u64,
 }
 
 /// State shared between the reactor thread and the [`Server`] handle.
@@ -172,18 +213,26 @@ pub(crate) struct Shared {
     pub peak: AtomicUsize,
     pub queue: AtomicUsize,
     pub accepted: AtomicU64,
+    pub timeouts: AtomicU64,
+    pub panics: AtomicU64,
+    pub reaped: AtomicU64,
     pub admission: Option<Admission>,
+    pub monitor: Option<Arc<ServerMonitor>>,
 }
 
 impl Shared {
-    fn new(admission: Option<Watermarks>) -> Self {
+    fn new(admission: Option<Watermarks>, monitor: Option<Arc<ServerMonitor>>) -> Self {
         Self {
             stop: AtomicBool::new(false),
             live: AtomicUsize::new(0),
             peak: AtomicUsize::new(0),
             queue: AtomicUsize::new(0),
             accepted: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            reaped: AtomicU64::new(0),
             admission: admission.map(Admission::new),
+            monitor,
         }
     }
 
@@ -196,6 +245,10 @@ impl Shared {
             accepted: self.accepted.load(SeqCst),
             shed: self.admission.as_ref().map_or(0, Admission::shed_count),
             admitting: self.admission.as_ref().is_none_or(|a| !a.shedding()),
+            timeouts: self.timeouts.load(SeqCst),
+            panics: self.panics.load(SeqCst),
+            reaped: self.reaped.load(SeqCst),
+            monitor_violations: self.monitor.as_ref().map_or(0, |m| m.violations()),
         }
     }
 }
@@ -223,20 +276,24 @@ impl Server {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let handlers = config.handlers.clamp(1, thread_id::capacity() / 2);
-        let shared = Arc::new(Shared::new(config.admission));
+        let monitor = (config.monitor_sample > 0).then(|| {
+            Arc::new(ServerMonitor::new(config.monitor_sample, handlers as i64, ARTIFACT_DIR))
+        });
+        let shared = Arc::new(Shared::new(config.admission, monitor));
 
         let (job_tx, job_rx) = channel::<Job>();
         let (done_tx, done_rx) = channel::<Completion>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let pool: Vec<JoinHandle<()>> = (0..handlers)
             .map(|i| {
-                let store = store.clone();
-                let job_rx = job_rx.clone();
-                let done_tx = done_tx.clone();
-                std::thread::Builder::new()
-                    .name(format!("kv-handler-{i}"))
-                    .spawn(move || handler_loop(store, &job_rx, &done_tx))
-                    .expect("spawn kv handler")
+                let ctx = HandlerCtx {
+                    index: i,
+                    store: store.clone(),
+                    jobs: job_rx.clone(),
+                    done: done_tx.clone(),
+                    shared: shared.clone(),
+                };
+                spawn_handler(ctx).expect("spawn kv handler")
             })
             .collect();
         // The reactor's receiver must see disconnect once the pool exits.
@@ -248,7 +305,13 @@ impl Server {
             shared.clone(),
             job_tx,
             done_rx,
-            ReactorConfig { idle: config.idle, max_conns: config.max_conns, handlers },
+            ReactorConfig {
+                idle: config.idle,
+                max_conns: config.max_conns,
+                handlers,
+                request_timeout: config.request_timeout,
+                conn_idle: config.conn_idle,
+            },
         );
         let reactor = std::thread::Builder::new()
             .name("kv-reactor".into())
@@ -350,23 +413,96 @@ impl BlockingClient {
     }
 }
 
-/// One handler thread: dequeue, execute against the store, send the reply
-/// back to the reactor. Exits when the reactor (job sender) goes away.
-fn handler_loop(
+/// Everything one pool thread needs, bundled so a panic-respawn can hand
+/// the dead thread's identity to its replacement wholesale.
+struct HandlerCtx {
+    index: usize,
     store: Arc<dyn ConcurrentSet>,
-    jobs: &Mutex<Receiver<Job>>,
-    done: &Sender<Completion>,
-) {
+    jobs: Arc<Mutex<Receiver<Job>>>,
+    done: Sender<Completion>,
+    shared: Arc<Shared>,
+}
+
+/// Pool replenishment: if a handler thread dies by a panic that escaped
+/// the per-request `catch_unwind` (so the per-request containment never
+/// saw it), spawn a replacement with the same context — the pool's
+/// capacity survives any panic, not just in-request ones. Clean exits
+/// (channel disconnect at shutdown) drop with `panicking() == false` and
+/// respawn nothing.
+struct RespawnGuard {
+    ctx: Option<HandlerCtx>,
+}
+
+impl Drop for RespawnGuard {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        if let Some(ctx) = self.ctx.take() {
+            if !ctx.shared.stop.load(SeqCst) {
+                ctx.shared.panics.fetch_add(1, SeqCst);
+                // The replacement is detached; it exits on its own when
+                // the job channel disconnects at shutdown.
+                let _ = spawn_handler(ctx);
+            }
+        }
+    }
+}
+
+fn spawn_handler(ctx: HandlerCtx) -> io::Result<JoinHandle<()>> {
+    std::thread::Builder::new().name(format!("kv-handler-{}", ctx.index)).spawn(move || {
+        let guard = RespawnGuard { ctx: Some(ctx) };
+        handler_loop(guard.ctx.as_ref().expect("ctx taken only on panic"));
+    })
+}
+
+/// One handler thread: dequeue, execute against the store (contained —
+/// see [`execute_contained`]), send the reply back to the reactor. Exits
+/// when the reactor (job sender) goes away.
+fn handler_loop(ctx: &HandlerCtx) {
     loop {
         // Hold the lock only to dequeue (the guard dies with the `let`),
         // not while executing the store operation.
-        let job = match jobs.lock().unwrap_or_else(|p| p.into_inner()).recv() {
+        let job = match ctx.jobs.lock().unwrap_or_else(|p| p.into_inner()).recv() {
             Ok(job) => job,
             Err(_) => return,
         };
-        let reply = proto::execute(store.as_ref(), job.req);
-        if done.send(Completion { token: job.token, reply }).is_err() {
+        let reply = execute_contained(ctx, job.req);
+        let completion = Completion { token: job.token, req_id: job.req_id, reply };
+        if ctx.done.send(completion).is_err() {
             return;
+        }
+    }
+}
+
+/// Execute one pool request inside the self-healing jacket: fault-plane
+/// hooks first (dispatch jitter, targeted stalls, poison panics), then
+/// the store operation — observed by the sampled monitor when one is
+/// configured — all under `catch_unwind`, so a panicking store operation
+/// costs the client one `ERR PANIC` reply instead of the pool a thread.
+fn execute_contained(ctx: &HandlerCtx, req: Request) -> String {
+    let run = || {
+        faults::jitter(FaultSite::HandlerDispatch);
+        if let Request::Put(key) = req {
+            if let Some(delay) = faults::stalled_put(key) {
+                std::thread::sleep(delay);
+            }
+            if faults::poisoned_put(key) {
+                panic!("faults: poisoned PUT {key}");
+            }
+        }
+        match &ctx.shared.monitor {
+            Some(m) => {
+                m.observe(ctx.store.as_ref(), req, || proto::execute(ctx.store.as_ref(), req))
+            }
+            None => proto::execute(ctx.store.as_ref(), req),
+        }
+    };
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(run)) {
+        Ok(reply) => reply,
+        Err(_) => {
+            ctx.shared.panics.fetch_add(1, SeqCst);
+            proto::PANIC_REPLY.into()
         }
     }
 }
@@ -386,6 +522,25 @@ mod tests {
         assert_eq!(cfg.max_conns, 4096);
         assert!(cfg.admission.is_none());
         assert_eq!(cfg.idle, IdleStrategy::Sleep(IDLE_NAP));
+        assert_eq!(cfg.request_timeout, Some(Duration::from_secs(30)));
+        assert_eq!(cfg.conn_idle, None);
+        assert_eq!(cfg.monitor_sample, 0);
+    }
+
+    #[test]
+    fn config_parses_self_healing_knobs() {
+        let cfg = ServerConfig::from_args(&args(
+            "--request-timeout-ms 250 --conn-idle-ms 1500 --monitor-sample 64",
+        ))
+        .unwrap();
+        assert_eq!(cfg.request_timeout, Some(Duration::from_millis(250)));
+        assert_eq!(cfg.conn_idle, Some(Duration::from_millis(1500)));
+        assert_eq!(cfg.monitor_sample, 64);
+        // Zero disables both time knobs.
+        let cfg =
+            ServerConfig::from_args(&args("--request-timeout-ms 0 --conn-idle-ms 0")).unwrap();
+        assert_eq!(cfg.request_timeout, None);
+        assert_eq!(cfg.conn_idle, None);
     }
 
     #[test]

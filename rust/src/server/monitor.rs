@@ -1,0 +1,307 @@
+//! In-server sampled size-linearizability monitor.
+//!
+//! `rust/tests/linearizability.rs` checks size justification offline, on
+//! histories a test harness recorded. This module promotes that checker
+//! into the live server: every `--monitor-sample N` pool requests, the
+//! observing handler takes a linearizable `size_exact` **anchor** and the
+//! pool starts recording a full window of timestamped update/size events.
+//! When the window fills it is checked with
+//! [`crate::history::monitor::check_anchored`] — the anchor supplies the
+//! baseline so the server does not need the history since boot — and
+//! recording switches off until the next sample point. Violations are
+//! counted in the `monitor_violations` `STATS` gauge and a **minimized**
+//! repro history ([`crate::history::monitor::minimize_anchored`]) is
+//! dumped under `artifacts/` for offline analysis.
+//!
+//! Soundness: recording only starts after the anchor's response, so every
+//! recorded update strictly follows it; requests already in flight in the
+//! pool when the window opened may land inside it unrecorded, so the
+//! check runs with a slack of the pool size (they number at most one per
+//! handler). The interval bound plus slack is still a *necessary*
+//! condition — the monitor never flags a legal history — and the
+//! empty-set floor (`size < 0`) needs no slack at all, so the paper's
+//! Figure 2 anomaly is always caught when sampled.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::SeqCst};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::history::monitor::{check_anchored, minimize_anchored, Report, SizeEvent, UpdateEvent};
+use crate::set_api::ConcurrentSet;
+
+use super::proto::Request;
+
+/// Updates per window before it closes and is checked.
+const WINDOW_UPDATES: usize = 256;
+/// Size observations per window before it closes.
+const WINDOW_SIZES: usize = 64;
+/// Most violation dumps one server writes (repros, not a log stream).
+const MAX_DUMPS: u64 = 16;
+
+/// One recording window's growing history.
+#[derive(Default)]
+struct Window {
+    /// The `size_exact` baseline; `None` = not recording.
+    anchor: Option<SizeEvent>,
+    updates: Vec<UpdateEvent>,
+    sizes: Vec<SizeEvent>,
+}
+
+/// See the module docs. One per server, shared by the handler pool.
+pub(crate) struct ServerMonitor {
+    /// Pool requests between windows (the `--monitor-sample` knob).
+    sample_every: u64,
+    /// Unrecorded in-flight ops at window start: the handler pool size.
+    slack: i64,
+    origin: Instant,
+    /// Requests until the next window opens; the decrement that hits zero
+    /// elects its handler to take the anchor.
+    countdown: AtomicU64,
+    recording: AtomicBool,
+    state: Mutex<Window>,
+    violations: AtomicU64,
+    windows_checked: AtomicU64,
+    dump_seq: AtomicU64,
+    dump_dir: PathBuf,
+}
+
+impl ServerMonitor {
+    pub fn new(sample_every: u64, slack: i64, dump_dir: impl Into<PathBuf>) -> Self {
+        assert!(sample_every >= 1, "monitor sample period must be >= 1");
+        Self {
+            sample_every,
+            slack,
+            origin: Instant::now(),
+            countdown: AtomicU64::new(sample_every),
+            recording: AtomicBool::new(false),
+            state: Mutex::new(Window::default()),
+            violations: AtomicU64::new(0),
+            windows_checked: AtomicU64::new(0),
+            dump_seq: AtomicU64::new(0),
+            dump_dir: dump_dir.into(),
+        }
+    }
+
+    /// Total unjustified size observations so far (the `STATS` gauge).
+    pub fn violations(&self) -> u64 {
+        self.violations.load(SeqCst)
+    }
+
+    /// Windows fully recorded and checked (test observability).
+    pub fn windows_checked(&self) -> u64 {
+        self.windows_checked.load(SeqCst)
+    }
+
+    #[inline]
+    fn nanos(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Window> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Execute one pool request under observation: outside a window this
+    /// is a plain `exec()` plus one atomic decrement; inside one, the
+    /// request is timestamped and recorded. Called on handler threads.
+    pub fn observe(
+        &self,
+        store: &dyn ConcurrentSet,
+        req: Request,
+        exec: impl FnOnce() -> String,
+    ) -> String {
+        self.maybe_open_window(store);
+        if !self.recording.load(SeqCst) {
+            return exec();
+        }
+        let inv = self.nanos();
+        let reply = exec();
+        let resp = self.nanos();
+        match req {
+            Request::Put(_) if reply == "1" => self.record_update(inv, resp, 1),
+            Request::Del(_) if reply == "1" => self.record_update(inv, resp, -1),
+            Request::Size => {
+                if let Ok(value) = reply.parse::<i64>() {
+                    self.record_size(inv, resp, value);
+                }
+            }
+            Request::SizeRecent(ms) => {
+                if let Ok(value) = reply.parse::<i64>() {
+                    // The value may date back the full staleness bound:
+                    // widen the justification window backward by it.
+                    let slack = Duration::from_millis(ms).as_nanos() as u64;
+                    self.record_size(inv.saturating_sub(slack), resp, value);
+                }
+            }
+            _ => {}
+        }
+        reply
+    }
+
+    /// Count down toward the next sample point; the handler whose
+    /// decrement hits zero takes the anchor and opens the window.
+    fn maybe_open_window(&self, store: &dyn ConcurrentSet) {
+        if self.recording.load(SeqCst) {
+            return;
+        }
+        let elected = self
+            .countdown
+            .fetch_update(SeqCst, SeqCst, |c| c.checked_sub(1))
+            .is_ok_and(|prev| prev == 1);
+        if !elected {
+            return;
+        }
+        let inv = self.nanos();
+        let Some(view) = store.size_exact() else {
+            // Policy without a size: nothing to monitor; re-arm and keep
+            // serving (the gauge simply stays zero).
+            self.countdown.store(self.sample_every, SeqCst);
+            return;
+        };
+        let resp = self.nanos();
+        {
+            let mut w = self.lock();
+            w.anchor = Some(SizeEvent { inv, resp, value: view.value });
+            w.updates.clear();
+            w.sizes.clear();
+        }
+        // Recording flips on only after the anchor's response timestamp,
+        // so every recorded event strictly follows it.
+        self.recording.store(true, SeqCst);
+    }
+
+    fn record_update(&self, inv: u64, resp: u64, delta: i64) {
+        let mut w = self.lock();
+        if w.anchor.is_none() {
+            return; // window closed between the flag check and the lock
+        }
+        w.updates.push(UpdateEvent { inv, resp, delta });
+        if w.updates.len() >= WINDOW_UPDATES {
+            self.close_window(&mut w);
+        }
+    }
+
+    fn record_size(&self, inv: u64, resp: u64, value: i64) {
+        let mut w = self.lock();
+        if w.anchor.is_none() {
+            return;
+        }
+        w.sizes.push(SizeEvent { inv, resp, value });
+        if w.sizes.len() >= WINDOW_SIZES {
+            self.close_window(&mut w);
+        }
+    }
+
+    /// Check the filled window, count violations, dump repros, re-arm.
+    fn close_window(&self, w: &mut Window) {
+        let Some(anchor) = w.anchor.take() else { return };
+        let report = check_anchored(&anchor, self.slack, &w.updates, &w.sizes);
+        self.windows_checked.fetch_add(1, SeqCst);
+        if !report.is_ok() {
+            self.violations.fetch_add(report.violations.len() as u64, SeqCst);
+            self.dump(&anchor, &w.updates, &report);
+        }
+        w.updates.clear();
+        w.sizes.clear();
+        self.countdown.store(self.sample_every, SeqCst);
+        self.recording.store(false, SeqCst);
+    }
+
+    /// Write a minimized repro for each violation in the window. Failures
+    /// are swallowed: dumping is diagnostics, never worth a served error.
+    fn dump(&self, anchor: &SizeEvent, updates: &[UpdateEvent], report: &Report) {
+        let seq = self.dump_seq.fetch_add(1, SeqCst);
+        if seq >= MAX_DUMPS {
+            return;
+        }
+        let mut body = String::new();
+        body.push_str("# size-linearizability violation (sampled in-server monitor)\n");
+        body.push_str(&format!(
+            "# anchor: value={} window=[{}, {}]ns slack={}\n# updates in window: {}\n",
+            anchor.value, anchor.inv, anchor.resp, self.slack, updates.len(),
+        ));
+        for v in &report.violations {
+            body.push_str(&format!(
+                "violation: value={} window=[{}, {}] justified=[{}, {}]\n",
+                v.event.value, v.event.inv, v.event.resp, v.low, v.high,
+            ));
+            let core = minimize_anchored(anchor, self.slack, updates, &v.event);
+            body.push_str(&format!("  minimized repro ({} updates):\n", core.len()));
+            for u in &core {
+                body.push_str(&format!(
+                    "  update delta={:+} window=[{}, {}]\n",
+                    u.delta, u.inv, u.resp,
+                ));
+            }
+        }
+        let path = self.dump_dir.join(format!("monitor-violation-{seq}-{}.txt", self.nanos()));
+        let _ = std::fs::create_dir_all(&self.dump_dir);
+        if std::fs::write(&path, body).is_ok() {
+            eprintln!("server monitor: violation repro dumped to {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_util::make_set;
+    use crate::cli::PolicyKind;
+
+    fn store() -> Box<dyn ConcurrentSet> {
+        make_set("hashtable", PolicyKind::Linearizable, 1024).unwrap()
+    }
+
+    #[test]
+    fn honest_store_records_clean_windows() {
+        let store = store();
+        let m = ServerMonitor::new(1, 0, std::env::temp_dir());
+        let mut key = 0u64;
+        // Enough updates to fill and close at least one window.
+        for _ in 0..(2 * WINDOW_UPDATES + 8) {
+            key += 1;
+            let req = Request::Put(key);
+            let reply = m.observe(store.as_ref(), req, || {
+                crate::server::proto::execute(store.as_ref(), req)
+            });
+            assert_eq!(reply, "1");
+            let reply = m.observe(store.as_ref(), Request::Size, || {
+                crate::server::proto::execute(store.as_ref(), Request::Size)
+            });
+            assert_eq!(reply, key.to_string());
+        }
+        assert!(m.windows_checked() >= 1, "no window ever closed");
+        assert_eq!(m.violations(), 0);
+    }
+
+    #[test]
+    fn fabricated_sizes_are_flagged_and_dumped() {
+        let store = store();
+        let dir = std::env::temp_dir().join(format!("csize-monitor-{}", std::process::id()));
+        let m = ServerMonitor::new(1, 0, &dir);
+        // The store is empty (anchor 0, no updates recorded), so a size
+        // reply of 999 is unjustifiable no matter the interleaving.
+        for _ in 0..WINDOW_SIZES {
+            m.observe(store.as_ref(), Request::Size, || "999".to_string());
+        }
+        assert_eq!(m.windows_checked(), 1);
+        assert_eq!(m.violations(), WINDOW_SIZES as u64);
+        let dumped = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
+        assert!(dumped >= 1, "expected a repro file in {}", dir.display());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sampling_skips_between_windows() {
+        let store = store();
+        let m = ServerMonitor::new(1_000_000, 0, std::env::temp_dir());
+        // Far fewer ops than the sample period: no window ever opens, so
+        // fabricated replies are never even looked at.
+        for _ in 0..64 {
+            m.observe(store.as_ref(), Request::Size, || "12345".to_string());
+        }
+        assert_eq!(m.windows_checked(), 0);
+        assert_eq!(m.violations(), 0);
+    }
+}

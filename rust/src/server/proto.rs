@@ -41,6 +41,19 @@ pub const MAX_LINE: usize = 256;
 /// clients back off on).
 pub const OVERLOAD_REPLY: &str = "ERR OVERLOAD";
 
+/// Reply for a line longer than [`MAX_LINE`]: the offending line is
+/// discarded and parsing resyncs at the next newline — the connection
+/// survives (a fat-fingered client loses one command, not its session).
+pub const TOOLONG_REPLY: &str = "ERR TOOLONG";
+
+/// Reply when a request's handler missed the per-request deadline; the
+/// connection's slot is reclaimed and the eventual stale reply dropped.
+pub const TIMEOUT_REPLY: &str = "ERR TIMEOUT";
+
+/// Reply when a handler panicked executing the request (contained by the
+/// pool's `catch_unwind`; counted in the `panics` gauge).
+pub const PANIC_REPLY: &str = "ERR PANIC";
+
 const ERR_NO_SIZE: &str = "ERR size unsupported by this policy";
 const ERR_NO_ESTIMATE: &str = "ERR estimate unavailable (no sharded mirror)";
 
@@ -150,8 +163,9 @@ pub fn estimate_reply(store: &dyn ConcurrentSet) -> String {
 pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
     format!(
         "conns={} peak={} queue={} handlers={} accepted={} shed={} admitting={} \
+         timeouts={} panics={} reaped={} monitor_violations={} \
          rounds={} adoptions={} recent_hits={} recent_refreshes={} daemon_rounds={} \
-         fallbacks={} retry_budget={}",
+         daemon_stalls={} fallbacks={} retry_budget={}",
         server.live_conns,
         server.peak_conns,
         server.queue_depth,
@@ -159,11 +173,16 @@ pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
         server.accepted,
         server.shed,
         u8::from(server.admitting),
+        server.timeouts,
+        server.panics,
+        server.reaped,
+        server.monitor_violations,
         size.rounds,
         size.adoptions,
         size.recent_hits,
         size.recent_refreshes,
         size.daemon_rounds,
+        size.daemon_stalls,
         size.fallbacks,
         size.retry_budget,
     )
@@ -265,15 +284,36 @@ mod tests {
             accepted: 310,
             shed: 7,
             admitting: true,
+            timeouts: 2,
+            panics: 1,
+            reaped: 5,
+            monitor_violations: 0,
         };
         let line = stats_reply(&server, &ArbiterStats::default());
         let stats = parse_stats(&line).expect("round-trip parse");
-        for want in ["conns", "peak", "queue", "handlers", "shed", "admitting", "daemon_rounds"] {
+        for want in [
+            "conns",
+            "peak",
+            "queue",
+            "handlers",
+            "shed",
+            "admitting",
+            "timeouts",
+            "panics",
+            "reaped",
+            "monitor_violations",
+            "daemon_rounds",
+            "daemon_stalls",
+        ] {
             assert!(stats.contains_key(want), "missing {want} in {line}");
         }
         assert_eq!(stats["peak"], 300);
         assert_eq!(stats["admitting"], 1);
         assert_eq!(stats["shed"], 7);
+        assert_eq!(stats["timeouts"], 2);
+        assert_eq!(stats["panics"], 1);
+        assert_eq!(stats["reaped"], 5);
+        assert_eq!(stats["monitor_violations"], 0);
     }
 
     #[test]

@@ -28,22 +28,29 @@ use std::net::TcpListener;
 use std::sync::atomic::Ordering::SeqCst;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::set_api::ConcurrentSet;
 
-use super::conn::{Conn, Pending};
+use super::conn::{Conn, InFlight, Pending};
 use super::proto::{self, Request};
 use super::{IdleStrategy, Shared};
 
 /// One store request travelling reactor → handler pool.
 pub(crate) struct Job {
     pub token: u64,
+    /// Globally unique per dispatched request; echoed in the
+    /// [`Completion`] so a reply that outlived its deadline (the reactor
+    /// already answered `ERR TIMEOUT` and moved on) is recognized as
+    /// stale and dropped instead of answering the *next* request.
+    pub req_id: u64,
     pub req: Request,
 }
 
 /// One reply travelling handler pool → reactor.
 pub(crate) struct Completion {
     pub token: u64,
+    pub req_id: u64,
     pub reply: String,
 }
 
@@ -53,12 +60,21 @@ pub(crate) struct ReactorConfig {
     pub max_conns: usize,
     /// Pool size, reported through `STATS`.
     pub handlers: usize,
+    /// Per-request handler deadline: a pool request unanswered past this
+    /// gets `ERR TIMEOUT` and its connection slot back (`None` = wait
+    /// forever).
+    pub request_timeout: Option<Duration>,
+    /// Reap connections with no protocol progress for this long
+    /// (`None` = never). Counts *parsed lines*, not raw bytes, so
+    /// slowloris drip-feeding is reaped too.
+    pub conn_idle: Option<Duration>,
 }
 
 pub(crate) struct Reactor {
     listener: TcpListener,
     conns: HashMap<u64, Conn>,
     next_token: u64,
+    next_req_id: u64,
     jobs: Sender<Job>,
     completions: Receiver<Completion>,
     store: Arc<dyn ConcurrentSet>,
@@ -79,6 +95,7 @@ impl Reactor {
             listener,
             conns: HashMap::new(),
             next_token: 0,
+            next_req_id: 0,
             jobs,
             completions,
             store,
@@ -95,6 +112,7 @@ impl Reactor {
             let mut progress = self.accept();
             progress |= self.drain_completions();
             progress |= self.pump_conns();
+            progress |= self.heal();
             self.reap();
             if !progress {
                 match self.cfg.idle {
@@ -151,10 +169,15 @@ impl Reactor {
                     progress = true;
                     self.shared.queue.fetch_sub(1, SeqCst);
                     // The connection may have died while its request was
-                    // in the pool; the reply is then dropped.
+                    // in the pool, or the deadline sweep may have already
+                    // answered `ERR TIMEOUT` and reclaimed the slot (the
+                    // req_id then no longer matches); either way the late
+                    // reply is dropped, never misdelivered.
                     if let Some(conn) = self.conns.get_mut(&done.token) {
-                        conn.in_flight = false;
-                        conn.enqueue_reply(&done.reply);
+                        if conn.in_flight.is_some_and(|inf| inf.id == done.req_id) {
+                            conn.in_flight = None;
+                            conn.enqueue_reply(&done.reply);
+                        }
                     }
                 }
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
@@ -177,7 +200,7 @@ impl Reactor {
             // replies drain immediately. A closing (EOF'd) connection
             // still drains what it already sent — QUIT clears the queue
             // instead, so nothing after it is served.
-            while !conn.in_flight {
+            while conn.in_flight.is_none() {
                 let Some(front) = conn.pending.pop_front() else { break };
                 progress = true;
                 match front {
@@ -207,18 +230,54 @@ impl Reactor {
                                 }
                             }
                         }
-                        if self.jobs.send(Job { token, req }).is_err() {
+                        let req_id = self.next_req_id;
+                        self.next_req_id += 1;
+                        if self.jobs.send(Job { token, req_id, req }).is_err() {
                             // Pool gone: only happens during shutdown.
                             conn.dead = true;
                             break;
                         }
                         self.shared.queue.fetch_add(1, SeqCst);
-                        conn.in_flight = true;
+                        conn.in_flight = Some(InFlight { id: req_id, since: Instant::now() });
                     }
                 }
             }
 
             progress |= conn.pump_write();
+        }
+        progress
+    }
+
+    /// Self-healing sweep: enforce per-request deadlines and reap idle
+    /// connections. Runs every tick but is free when both knobs are off.
+    fn heal(&mut self) -> bool {
+        let (timeout, idle) = (self.cfg.request_timeout, self.cfg.conn_idle);
+        if timeout.is_none() && idle.is_none() {
+            return false;
+        }
+        let now = Instant::now();
+        let mut progress = false;
+        for conn in self.conns.values_mut() {
+            if let (Some(limit), Some(inf)) = (timeout, conn.in_flight) {
+                if now.duration_since(inf.since) >= limit {
+                    // Stop waiting on the pool: answer now and reclaim
+                    // the slot so the connection's next request can
+                    // dispatch. The handler keeps running (it cannot be
+                    // cancelled safely); its eventual completion is
+                    // dropped by the req_id check in drain_completions.
+                    conn.in_flight = None;
+                    conn.enqueue_reply(proto::TIMEOUT_REPLY);
+                    self.shared.timeouts.fetch_add(1, SeqCst);
+                    progress = true;
+                }
+            }
+            if let Some(limit) = idle {
+                if !conn.dead && !conn.closing && conn.idle_expired(now, limit) {
+                    conn.dead = true;
+                    self.shared.reaped.fetch_add(1, SeqCst);
+                    progress = true;
+                }
+            }
         }
         progress
     }

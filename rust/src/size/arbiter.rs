@@ -47,6 +47,7 @@ use std::sync::{Mutex, MutexGuard, TryLockError};
 use std::time::{Duration, Instant};
 
 use crate::ebr;
+use crate::faults::{self, FaultSite};
 
 use super::policy::SizePolicy;
 use super::spin_backoff;
@@ -104,6 +105,11 @@ pub struct ArbiterStats {
     /// Rounds driven by the structure's background `SizeRefresher`
     /// (0 when no daemon ran).
     pub daemon_rounds: u64,
+    /// `size_recent` calls that had to drive a direct arbiter round even
+    /// though a refresher daemon with `period <= max_staleness` was
+    /// configured — i.e. the daemon stalled (or had not published yet)
+    /// and the caller self-healed by collecting (0 when no daemon ran).
+    pub daemon_stalls: u64,
     /// Policy-level size fallbacks (`OptimisticSize`; 0 otherwise).
     pub fallbacks: u64,
     /// Policy-level current retry budget (`OptimisticSize`; 0 otherwise).
@@ -137,6 +143,7 @@ pub struct SizeArbiter {
     adoptions: AtomicU64,
     recent_hits: AtomicU64,
     recent_refreshes: AtomicU64,
+    daemon_stalls: AtomicU64,
 }
 
 impl Default for SizeArbiter {
@@ -157,6 +164,7 @@ impl SizeArbiter {
             adoptions: AtomicU64::new(0),
             recent_hits: AtomicU64::new(0),
             recent_refreshes: AtomicU64::new(0),
+            daemon_stalls: AtomicU64::new(0),
         }
     }
 
@@ -175,6 +183,7 @@ impl SizeArbiter {
             recent_hits: self.recent_hits.load(SeqCst),
             recent_refreshes: self.recent_refreshes.load(SeqCst),
             daemon_rounds: 0,
+            daemon_stalls: self.daemon_stalls.load(SeqCst),
             fallbacks: 0,
             retry_budget: 0,
         }
@@ -258,6 +267,7 @@ impl SizeArbiter {
                 // collect (whose linearization point dates the value), so
                 // `age` stays a conservative staleness bound — without
                 // baking the dwell into every published result's age.
+                faults::jitter(FaultSite::ArbiterRoundStart);
                 let window = self.combine_window.load(Relaxed);
                 if window > 0 {
                     std::thread::sleep(Duration::from_nanos(window));
@@ -271,6 +281,7 @@ impl SizeArbiter {
                 // point) starting after their ticket load.
                 let started = self.round_started.fetch_add(1, SeqCst) + 1;
                 let value = (collect.take().expect("combiner runs once"))();
+                faults::jitter(FaultSite::ArbiterPublish);
                 let fresh = Box::into_raw(Box::new(Published {
                     value,
                     round: started,
@@ -304,6 +315,17 @@ impl SizeArbiter {
     /// refreshes (a same-clock-tick publish would otherwise be
     /// indistinguishable from an exact read on coarse monotonic clocks).
     pub fn size_recent(&self, max_staleness: Duration, collect: impl FnOnce() -> i64) -> SizeView {
+        self.size_recent_inner(max_staleness, collect).0
+    }
+
+    /// [`Self::size_recent`] plus whether the call had to refresh (fall
+    /// into the `size_exact` path) — the signal behind refresher-stall
+    /// detection in [`Self::recent_for_daemon`].
+    fn size_recent_inner(
+        &self,
+        max_staleness: Duration,
+        collect: impl FnOnce() -> i64,
+    ) -> (SizeView, bool) {
         if !max_staleness.is_zero() {
             let _pin = ebr::pin();
             if let Some(p) = unsafe { self.published.load(SeqCst).as_ref() } {
@@ -311,17 +333,20 @@ impl SizeArbiter {
                 let age = Duration::from_nanos(now.saturating_sub(p.at_nanos));
                 if age <= max_staleness {
                     self.recent_hits.fetch_add(1, Relaxed);
-                    return SizeView {
-                        value: p.value,
-                        age,
-                        round: p.round,
-                        shared: true,
-                    };
+                    return (
+                        SizeView {
+                            value: p.value,
+                            age,
+                            round: p.round,
+                            shared: true,
+                        },
+                        false,
+                    );
                 }
             }
         }
         self.recent_refreshes.fetch_add(1, Relaxed);
-        self.size_exact(collect)
+        (self.size_exact(collect), true)
     }
 
     /// [`Self::size_exact`] wired to a policy: `None` for size-less
@@ -339,12 +364,30 @@ impl SizeArbiter {
         policy: &P,
         max_staleness: Duration,
     ) -> Option<SizeView> {
+        self.recent_for_daemon(policy, max_staleness, None)
+    }
+
+    /// [`Self::recent_for`] with refresher-stall detection: when a
+    /// refresher daemon with `period <= max_staleness` is configured, a
+    /// published result fresh enough for the caller should always exist —
+    /// having to drive a direct round means the daemon stalled, and the
+    /// `daemon_stalls` gauge records the self-healing fallback.
+    pub fn recent_for_daemon<P: SizePolicy>(
+        &self,
+        policy: &P,
+        max_staleness: Duration,
+        daemon_period: Option<Duration>,
+    ) -> Option<SizeView> {
         if !P::HAS_SIZE {
             return None;
         }
-        Some(self.size_recent(max_staleness, || {
+        let (view, refreshed) = self.size_recent_inner(max_staleness, || {
             policy.size().expect("HAS_SIZE policy returned no size")
-        }))
+        });
+        if refreshed && daemon_period.is_some_and(|p| p <= max_staleness) {
+            self.daemon_stalls.fetch_add(1, Relaxed);
+        }
+        Some(view)
     }
 }
 
@@ -461,6 +504,32 @@ mod tests {
     #[test]
     fn stats_start_zeroed() {
         assert_eq!(SizeArbiter::new().stats(), ArbiterStats::default());
+    }
+
+    #[test]
+    fn daemon_stalls_count_only_broken_freshness_promises() {
+        use crate::size::{LinearizableSize, SizeOpts};
+        let a = SizeArbiter::new();
+        let p = LinearizableSize::new(4, SizeOpts::default());
+        let bound = Duration::from_millis(50);
+        // Nothing published though a fast daemon is configured: stall.
+        a.recent_for_daemon(&p, bound, Some(Duration::from_millis(5)));
+        assert_eq!(a.stats().daemon_stalls, 1);
+        // Fresh published hit: no stall.
+        a.recent_for_daemon(&p, Duration::from_secs(60), Some(Duration::from_millis(5)));
+        assert_eq!(a.stats().daemon_stalls, 1);
+        // Refresh with no daemon configured: no promise broken.
+        std::thread::sleep(Duration::from_millis(3));
+        a.recent_for_daemon(&p, Duration::from_micros(1), None);
+        assert_eq!(a.stats().daemon_stalls, 1);
+        // Daemon slower than the caller's bound: no promise either.
+        std::thread::sleep(Duration::from_millis(3));
+        a.recent_for_daemon(&p, Duration::from_millis(1), Some(Duration::from_secs(1)));
+        assert_eq!(a.stats().daemon_stalls, 1);
+        // Stale publish while a fast daemon should have refreshed: stall.
+        std::thread::sleep(Duration::from_millis(3));
+        a.recent_for_daemon(&p, Duration::from_millis(1), Some(Duration::from_micros(100)));
+        assert_eq!(a.stats().daemon_stalls, 2);
     }
 
     #[test]

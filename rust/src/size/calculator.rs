@@ -12,6 +12,7 @@ use crate::pad::CachePadded;
 
 use super::{CountersSnapshot, OpKind, ShardedCounters, UpdateInfo};
 use crate::ebr;
+use crate::faults::{self, FaultSite};
 
 /// Optimization toggles (paper Section 7); all enabled by default, exposed
 /// for the `ablation_opts` bench — plus the sharded-mirror scale knob.
@@ -190,9 +191,14 @@ impl SizeCalculator {
         // Lines 78–79: reflect the operation (exactly-once via monotone CAS).
         // The CAS winner — initiator or helper, whoever lands it — also
         // bumps the sharded mirror, preserving exactly-once for the stripes.
+        // Fault sites bracket the CAS: widening the load→CAS window races
+        // helpers against the initiator; delaying after a win stretches
+        // the gap before the mirror sync and the forwarding check.
+        faults::jitter(FaultSite::PreCounterCas);
         if cell.load(SeqCst) == counter - 1
             && cell.compare_exchange(counter - 1, counter, SeqCst, SeqCst).is_ok()
         {
+            faults::jitter(FaultSite::PostCounterCas);
             if let Some(sharded) = &self.sharded {
                 sharded.record(tid, kind);
             }

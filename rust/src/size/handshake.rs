@@ -41,6 +41,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
 use std::sync::{Mutex, MutexGuard, TryLockError};
 
+use crate::faults::{self, FaultSite};
 use crate::pad::CachePadded;
 use crate::thread_id;
 
@@ -242,6 +243,9 @@ impl SizePolicy for HandshakeSize {
         }
         let my_parity = my_slot.load(SeqCst) % 2;
         self.size_flag.store(true, SeqCst);
+        // Stretching the flag-raise→drain window here maximizes the
+        // number of updaters that must take the acknowledge/park path.
+        faults::jitter(FaultSite::HandshakeDrain);
         // Drain: wait until every other thread is at a quiescent point.
         // Threads that entered before the flag finish their op; threads
         // entering after it park (see `enter`), so after this sweep

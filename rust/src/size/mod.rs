@@ -71,7 +71,14 @@ macro_rules! impl_size_surface {
             &self,
             max_staleness: std::time::Duration,
         ) -> Option<crate::size::SizeView> {
-            self.core.arbiter.recent_for(&self.core.policy, max_staleness)
+            // Stall-aware: when the structure's refresher daemon should
+            // have kept the published result fresh enough but did not,
+            // the direct-round fallback is counted in `daemon_stalls`.
+            self.core.arbiter.recent_for_daemon(
+                &self.core.policy,
+                max_staleness,
+                self.refresher.active_period(),
+            )
         }
 
         fn size_estimate(&self) -> Option<i64> {

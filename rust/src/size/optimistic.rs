@@ -43,6 +43,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed, Ordering::Seq
 
 use super::policy::{SizePolicy, SizeTuning};
 use super::{LinearizableSize, OpKind, SizeCalculator, SizeOpts};
+use crate::faults::{self, FaultSite};
 
 /// Default failed double-collect rounds before falling back to the
 /// wait-free path (also the auto-tuner's starting budget).
@@ -203,6 +204,14 @@ impl SizePolicy for OptimisticSize {
         // Calculators are never built wider than MAX_THREADS; if one ever
         // is, take the wait-free path rather than miscount.
         if n > crate::MAX_THREADS {
+            return Some(calc.compute());
+        }
+        // Forced-fallback injection: behave exactly as if the retry
+        // budget were exhausted (counted, tuned) so the wait-free path
+        // and its telemetry get exercised under fuzzing.
+        if faults::fires(FaultSite::OptimisticRetry) {
+            self.fallbacks.fetch_add(1, SeqCst);
+            self.note_fallback();
             return Some(calc.compute());
         }
         let mut snap = [0u64; 2 * crate::MAX_THREADS];

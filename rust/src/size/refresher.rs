@@ -29,6 +29,8 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::faults::{self, FaultSite};
+
 use super::policy::SizePolicy;
 use super::{ArbiterStats, SizeArbiter};
 
@@ -120,6 +122,9 @@ impl SizeRefresher {
                 return;
             }
             drop(stopped);
+            // A `Delay` here stalls the daemon, exercising the arbiter's
+            // stall-detection fallback (`daemon_stalls`).
+            faults::jitter(FaultSite::RefresherTick);
             // A caller-driven round within the period makes this wake a
             // no-op — the daemon only fills publication gaps.
             let stale = match core.arbiter.published_age() {
@@ -178,6 +183,11 @@ pub struct RefresherSlot {
     slot: Mutex<Option<SizeRefresher>>,
     /// Rounds accumulated by daemons that were since stopped/replaced.
     retired_rounds: AtomicU64,
+    /// The running daemon's period in nanos (0 = no daemon): a lock-free
+    /// mirror of the slot for the `size_recent` hot path, which consults
+    /// it on every call for stall detection and must not contend with a
+    /// daemon swap (whose join can take a full collect).
+    period_nanos: AtomicU64,
 }
 
 impl RefresherSlot {
@@ -198,14 +208,17 @@ impl RefresherSlot {
         // join: a shutdown can take a full collect (handshake drain), and
         // stats readers share this mutex — they must never block on it.
         let old = self.lock().take();
+        self.period_nanos.store(0, SeqCst);
         self.retire(old);
         match period {
             Some(p) => {
                 let fresh = SizeRefresher::spawn(core.clone(), p);
                 let running = fresh.is_some();
+                let nanos = fresh.as_ref().map_or(0, |d| d.period().as_nanos() as u64);
                 // Normally a no-op: `displaced` is only Some when another
                 // set() raced in between the take above and this store.
                 let displaced = std::mem::replace(&mut *self.lock(), fresh);
+                self.period_nanos.store(nanos, SeqCst);
                 self.retire(displaced);
                 running
             }
@@ -233,6 +246,15 @@ impl RefresherSlot {
     /// The running daemon's period, when one is active.
     pub fn period(&self) -> Option<Duration> {
         self.lock().as_ref().map(SizeRefresher::period)
+    }
+
+    /// Lock-free view of [`Self::period`] (the `size_recent` hot path's
+    /// stall-detection input; may trail a concurrent `set` briefly).
+    pub fn active_period(&self) -> Option<Duration> {
+        match self.period_nanos.load(SeqCst) {
+            0 => None,
+            nanos => Some(Duration::from_nanos(nanos)),
+        }
     }
 }
 
@@ -299,8 +321,10 @@ mod tests {
         let after_swap = slot.rounds();
         assert!(after_swap >= 1);
         assert_eq!(slot.period(), Some(Duration::from_millis(5)));
+        assert_eq!(slot.active_period(), Some(Duration::from_millis(5)));
         assert!(!slot.set(&core, None));
         assert_eq!(slot.period(), None);
+        assert_eq!(slot.active_period(), None);
         assert!(slot.rounds() >= after_swap);
     }
 

@@ -1,0 +1,146 @@
+//! Chaos-plane integration tests (run with `--features faults`; the
+//! whole file compiles away without it): seed-determinism of the
+//! injection plane, forced optimistic fallbacks end to end, and the
+//! pinned-seed chaos smoke over the server's self-healing surface —
+//! stalls time out, poisons are contained, idle connections are reaped,
+//! and the sampled in-server monitor stays violation-free on an honest
+//! linearizable store.
+#![cfg(feature = "faults")]
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use concurrent_size::bench_util::make_set_opts;
+use concurrent_size::cli::PolicyKind;
+use concurrent_size::faults::{self, FaultAction, FaultPlane, FaultSite};
+use concurrent_size::server::{BlockingClient, Server, ServerConfig};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::SizeOpts;
+
+/// Same seed, same thread, same plane => the same fire/skip sequence.
+/// (Decisions hash the seed, site, spec, thread and per-site hit count —
+/// nothing wall-clock.)
+#[test]
+fn fault_decisions_are_seed_deterministic() {
+    assert!(faults::COMPILED);
+    let plane = FaultPlane::new(0xD5).with(FaultSite::OptimisticRetry, 2, FaultAction::Fire);
+    let sequence = |plane: FaultPlane| -> Vec<bool> {
+        let _guard = faults::install(plane);
+        (0..64).map(|_| faults::fires(FaultSite::OptimisticRetry)).collect()
+    };
+    let first = sequence(plane.clone());
+    let second = sequence(plane);
+    assert_eq!(first, second, "same seed must replay the same schedule");
+    assert!(first.iter().any(|&b| b), "a one-in-2 site never fired in 64 hits");
+    assert!(first.iter().any(|&b| !b), "a one-in-2 site fired on every hit");
+}
+
+/// A firing `OptimisticRetry` forces the wait-free fallback path: every
+/// `size()` lands in the fallback and the `fallbacks` gauge counts it,
+/// while the returned value stays exact.
+#[test]
+fn forced_optimistic_fallbacks_raise_the_gauge() {
+    let _guard = faults::install(FaultPlane::new(0xFA11).with(
+        FaultSite::OptimisticRetry,
+        1,
+        FaultAction::Fire,
+    ));
+    let set = make_set_opts("hashtable", PolicyKind::Optimistic, 64, SizeOpts::default()).unwrap();
+    for k in 1..=30u64 {
+        set.insert(k);
+    }
+    for _ in 0..5 {
+        assert_eq!(set.size(), Some(30), "forced fallback must stay exact");
+    }
+    let stats = set.size_stats().expect("optimistic policy has stats");
+    assert!(stats.fallbacks >= 5, "only {} fallbacks after 5 forced sizes", stats.fallbacks);
+}
+
+/// The acceptance smoke: a pinned-seed chaos plane (jitter everywhere,
+/// short writes, random handler panics) plus a targeted stall and poison
+/// key, against a server with every self-healing knob on. Stalled
+/// requests time out and their slots recover, poisons answer `ERR PANIC`
+/// without killing the pool, idle connections are reaped, the sampled
+/// monitor reports zero violations, and the server still serves.
+#[test]
+fn chaos_smoke_server_heals_and_stays_linearizable() {
+    const STALL: u64 = 888_888_888_888;
+    const POISON: u64 = 777_777_777_777;
+    let _guard = faults::install(
+        FaultPlane::chaos(0xC1A05)
+            .with_stall_key(STALL, Duration::from_millis(300))
+            .with_poison_key(POISON),
+    );
+
+    let store: Arc<dyn ConcurrentSet> = Arc::from(
+        make_set_opts("hashtable", PolicyKind::Linearizable, 1 << 10, SizeOpts::default()).unwrap(),
+    );
+    let config = ServerConfig {
+        handlers: 3,
+        request_timeout: Some(Duration::from_millis(50)),
+        conn_idle: Some(Duration::from_millis(250)),
+        monitor_sample: 4,
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store, config).expect("bind");
+    let addr = server.local_addr();
+
+    // Stalls (300ms) far exceed the deadline (50ms): each PUT gets
+    // `ERR TIMEOUT` unless a random chaos panic beats the stall hook.
+    let mut driver = BlockingClient::connect(addr);
+    let mut timeouts_seen = 0;
+    for _ in 0..3 {
+        match driver.cmd(format!("PUT {STALL}")).as_str() {
+            "ERR TIMEOUT" => timeouts_seen += 1,
+            "ERR PANIC" => {}
+            other => panic!("stalled PUT answered {other:?}"),
+        }
+    }
+    assert!(timeouts_seen >= 1, "no stalled request ever timed out");
+
+    // Let the stalled handlers drain so the poison phase dispatches
+    // instantly instead of timing out behind them in the queue; the
+    // 250ms idle reaper collects `driver` meanwhile — healing too.
+    std::thread::sleep(Duration::from_millis(400));
+    drop(driver);
+
+    // Poisons panic in the handler; `catch_unwind` turns every one into
+    // a served `ERR PANIC` (so does a random chaos panic).
+    let mut active = BlockingClient::connect(addr);
+    for _ in 0..3 {
+        assert_eq!(active.cmd(format!("PUT {POISON}")), "ERR PANIC");
+    }
+
+    // Self-healing under load: an idle connection is reaped while the
+    // active one (chaos-tolerant) keeps making protocol progress.
+    let mut idle = TcpStream::connect(addr).expect("idle connect");
+    idle.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    for k in 1..=12u64 {
+        for cmd in [format!("PUT {k}"), format!("HAS {k}")] {
+            let reply = active.cmd(cmd);
+            assert!(
+                ["1", "0", "ERR PANIC", "ERR TIMEOUT"].contains(&reply.as_str()),
+                "unexpected reply {reply:?}"
+            );
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let mut buf = [0u8; 8];
+    assert_eq!(idle.read(&mut buf).expect("reaped socket"), 0, "idle conn not reaped");
+
+    // STATS is reactor-inline (immune to pool chaos): the gauges must
+    // show the healing that just happened and a clean monitor.
+    let stats = concurrent_size::server::parse_stats(&active.cmd("STATS")).expect("STATS parses");
+    assert!(stats["timeouts"] >= 1, "timeouts gauge never moved");
+    assert!(stats["panics"] >= 3, "panics gauge below the 3 poisons: {}", stats["panics"]);
+    assert!(stats["reaped"] >= 1, "reaped gauge never moved");
+    assert_eq!(stats["monitor_violations"], 0, "monitor flagged an honest linearizable store");
+
+    // The server still serves: SIZE eventually answers numerically.
+    let size = (0..20)
+        .find_map(|_| active.cmd("SIZE").parse::<i64>().ok())
+        .expect("SIZE never answered numerically under chaos");
+    assert!(size >= 0, "negative size {size}");
+}

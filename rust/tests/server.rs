@@ -221,11 +221,16 @@ fn stats_parses_while_refresher_daemon_runs() {
             "accepted",
             "shed",
             "admitting",
+            "timeouts",
+            "panics",
+            "reaped",
+            "monitor_violations",
             "rounds",
             "adoptions",
             "recent_hits",
             "recent_refreshes",
             "daemon_rounds",
+            "daemon_stalls",
             "fallbacks",
             "retry_budget",
         ] {
@@ -303,6 +308,174 @@ fn protocol_errors_answer_in_order_and_quit_closes() {
     // The server survives and serves fresh connections.
     let mut fresh = BlockingClient::connect(server.local_addr());
     assert_eq!(fresh.cmd("HAS 5"), "1");
+}
+
+/// An overlong line answers `ERR TOOLONG` in order and the connection
+/// survives: parsing resyncs at the next newline (it used to close the
+/// session, costing a fat-fingered client every pipelined command).
+#[test]
+fn overlong_line_answers_toolong_and_resyncs() {
+    let server = Server::bind("127.0.0.1:0", store(0), ServerConfig::default()).expect("bind");
+    let mut client = BlockingClient::connect(server.local_addr());
+    assert_eq!(client.cmd("PUT 3"), "1");
+    client.send(format!("PUT {}", "9".repeat(400)));
+    client.send("HAS 3");
+    assert_eq!(client.recv().expect("toolong reply"), "ERR TOOLONG");
+    assert_eq!(client.recv().expect("follow-up reply"), "1");
+    // Several overlong lines cost one in-order error each, nothing more.
+    for _ in 0..3 {
+        client.send("x".repeat(300));
+    }
+    client.send("SIZE");
+    for i in 0..3 {
+        assert_eq!(client.recv().expect("toolong burst reply"), "ERR TOOLONG", "line {i}");
+    }
+    assert_eq!(client.recv().expect("size reply"), "1");
+}
+
+/// Idle reaping under `--conn-idle-ms`: connections with no *protocol*
+/// progress are dropped — including a slowloris client dripping bytes
+/// that never complete a line — while an active one on the same server
+/// stays untouched.
+#[test]
+fn idle_and_slowloris_connections_are_reaped() {
+    let config =
+        ServerConfig { conn_idle: Some(Duration::from_millis(250)), ..Default::default() };
+    let server = Server::bind("127.0.0.1:0", store(0), config).expect("bind");
+    let addr = server.local_addr();
+    let mut active = BlockingClient::connect(addr);
+    let mut idle = BlockingClient::connect(addr);
+    assert_eq!(idle.cmd("PUT 1"), "1");
+    let mut slow = TcpStream::connect(addr).expect("slow connect");
+    slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..10 {
+        assert_eq!(active.cmd(format!("PUT {}", 100 + i)), "1");
+        // The drip: one byte of a line that never ends.
+        let _ = std::io::Write::write_all(&mut slow, b"x");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // ~500ms elapsed: `idle` (quiet since its one command) and `slow`
+    // (bytes but never a line) are gone; `active` survived throughout.
+    let stats = server.stats();
+    assert!(stats.reaped >= 2, "reaped {} < 2", stats.reaped);
+    assert_eq!(active.cmd("HAS 1"), "1");
+    let mut line = String::new();
+    let n = BufReader::new(&slow).read_line(&mut line).unwrap_or(0);
+    assert_eq!(n, 0, "slowloris socket must be closed");
+    assert_eq!(idle.recv(), None, "idle connection must be closed");
+}
+
+/// Satellite: admission under a stalled estimate pipeline. A wedged
+/// refresher delays readings, but the gate carries no state beyond its
+/// hysteresis bit — it must track the reference model on whatever stale
+/// reading it is fed, and the moment drained readings arrive it must
+/// readmit. `admitting=false` can never stick.
+#[test]
+fn admission_with_stale_estimates_never_wedges() {
+    proptest_lite::run("stale estimates cannot wedge admission", |rng| {
+        let high = 1 + rng.gen_range(100) as i64;
+        let low = rng.gen_range(high as u64) as i64;
+        let gate = Admission::new(Watermarks::new(high, low));
+        // True size trace: a random walk clamped at empty.
+        let steps = 200 + rng.gen_range(200) as usize;
+        let mut truth = Vec::with_capacity(steps);
+        let mut cur = 0i64;
+        for _ in 0..steps {
+            cur = (cur + rng.gen_range(7) as i64 - 3).max(0);
+            truth.push(cur);
+        }
+        let mut ref_shedding = false;
+        for i in 0..steps {
+            // Stale delivery: the gate sees the estimate from up to 31
+            // steps ago (a stalled refresher republishing old values),
+            // with the lag itself jittering over time.
+            let lag = rng.gen_range(1 + i.min(31) as u64) as usize;
+            let seen = truth[i - lag];
+            let admitted = gate.admit(Some(seen));
+            ref_shedding = if ref_shedding { seen > low } else { seen >= high };
+            prop_assert!(
+                admitted == !ref_shedding,
+                "diverged at step {i}: saw {seen} (high={high} low={low})"
+            );
+            prop_assert!(gate.shedding() == ref_shedding, "exposed state diverged at {i}");
+        }
+        // Recovery: the store drained and fresh readings resume.
+        let _ = gate.admit(Some(0));
+        prop_assert!(!gate.shedding(), "gate wedged shut after drain");
+        prop_assert!(gate.admit(Some(0)), "PUT still shed after drain");
+        Ok(())
+    });
+}
+
+/// Satellite (fault plane): a burst of poisoned PUTs — each one panicking
+/// its handler mid-request — must not reduce healthy-connection service:
+/// every panic costs its own client one `ERR PANIC`, the pool never
+/// drains, and concurrent healthy clients complete every round trip.
+#[cfg(feature = "faults")]
+#[test]
+fn poisoned_put_burst_does_not_starve_healthy_connections() {
+    use concurrent_size::faults::{self, FaultPlane};
+    const POISON: u64 = 777_777_777_777;
+    const BURSTS: u64 = 25;
+    let _guard = faults::install(FaultPlane::new(0xBAD).with_poison_key(POISON));
+    let config = ServerConfig { handlers: 3, ..Default::default() };
+    let server = Server::bind("127.0.0.1:0", store(2), config).expect("bind");
+    let addr = server.local_addr();
+
+    let poisoner = std::thread::spawn(move || {
+        let mut client = BlockingClient::connect(addr);
+        for _ in 0..BURSTS {
+            assert_eq!(client.cmd(format!("PUT {POISON}")), "ERR PANIC");
+        }
+    });
+    let mut healthy: Vec<BlockingClient> =
+        (0..4).map(|_| BlockingClient::connect(addr)).collect();
+    for round in 0..200u64 {
+        for (c, client) in healthy.iter_mut().enumerate() {
+            let key = 1000 * (c as u64 + 1) + round;
+            assert_eq!(client.cmd(format!("PUT {key}")), "1");
+            assert_eq!(client.cmd(format!("HAS {key}")), "1");
+        }
+    }
+    poisoner.join().expect("poisoner panicked");
+    let stats = server.stats();
+    assert!(stats.panics >= BURSTS, "panics gauge {} < {BURSTS}", stats.panics);
+    // The poisoned key never reached the store; every healthy key did.
+    let mut probe = BlockingClient::connect(addr);
+    assert_eq!(probe.cmd("SIZE"), "800");
+}
+
+/// Satellite (fault plane): a stalled PUT trips the per-request deadline
+/// — the client gets `ERR TIMEOUT`, the connection's slot is reclaimed
+/// (follow-ups answer immediately), and the handler's late reply is
+/// dropped rather than misdelivered to the next request.
+#[cfg(feature = "faults")]
+#[test]
+fn stalled_request_times_out_and_slot_recovers() {
+    use concurrent_size::faults::{self, FaultPlane};
+    const STALL: u64 = 888_888_888_888;
+    let _guard = faults::install(
+        FaultPlane::new(0x57A11).with_stall_key(STALL, Duration::from_millis(400)),
+    );
+    let config = ServerConfig {
+        handlers: 2,
+        request_timeout: Some(Duration::from_millis(40)),
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store(2), config).expect("bind");
+    let mut client = BlockingClient::connect(server.local_addr());
+    assert_eq!(client.cmd(format!("PUT {STALL}")), "ERR TIMEOUT");
+    // Slot reclaimed: the same connection keeps being served while the
+    // stalled handler is still asleep.
+    assert_eq!(client.cmd("PUT 5"), "1");
+    assert_eq!(client.cmd("HAS 5"), "1");
+    // The stalled handler finishes eventually; its stale reply must have
+    // been dropped (req_id mismatch), never delivered to a later command.
+    std::thread::sleep(Duration::from_millis(500));
+    assert_eq!(client.cmd("HAS 5"), "1");
+    let stats = server.stats();
+    assert_eq!(stats.timeouts, 1);
+    assert_eq!(client.cmd("SIZE"), "2", "the stalled PUT did commit in the end");
 }
 
 /// Dropping the handle stops the reactor and joins the pool, even with

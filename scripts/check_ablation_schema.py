@@ -46,6 +46,7 @@ RECORD_KEYS = {
     "arbiter_adoptions",
     "arbiter_recent_hits",
     "daemon_rounds",
+    "daemon_stalls",
     "fallbacks",
     "retry_budget",
 }
@@ -58,6 +59,7 @@ COUNTER_KEYS = (
     "arbiter_adoptions",
     "arbiter_recent_hits",
     "daemon_rounds",
+    "daemon_stalls",
     "fallbacks",
     "retry_budget",
 )
