@@ -18,8 +18,8 @@ SMOKE_FLAGS ?= --secs 0.1 --runs 1 --warmup 0 --initial 2000 \
 FUZZ_SEED ?= 793093
 FUZZ_FLAGS ?= --fault-seed $(FUZZ_SEED) --seeds 2 --ops 800 --structure hashtable
 
-.PHONY: build test pytest bench-smoke schema-check server-smoke artifacts \
-  fuzz-smoke fmt-check lint clean
+.PHONY: build test pytest bench-smoke schema-check regress-check \
+  server-smoke artifacts fuzz-smoke fmt fmt-check lint clean
 
 ## Release build of the library, the csize binary, and every example
 ## (kv_server is an example, so --examples is not optional).
@@ -34,7 +34,11 @@ test:
 pytest:
 	$(PYTHON) -m pytest python/tests -q
 
-## Format and lint gates, same invocations CI runs.
+## Format and lint gates, same invocations CI runs. `make fmt` rewrites
+## in place — run it wherever a toolchain exists before pushing.
+fmt:
+	$(CARGO) fmt
+
 fmt-check:
 	$(CARGO) fmt --check
 
@@ -49,6 +53,15 @@ bench-smoke:
 ## shards / refresh_us / daemon_rounds), no NaN, no negative throughput.
 schema-check:
 	$(PYTHON) scripts/check_ablation_schema.py BENCH_ablation.json
+
+## Throughput regression gate: fresh BENCH_ablation.json vs the previous
+## CI run's artifact. Fails on a >25% drop in any matched record;
+## soft-passes (warn, exit 0) when the baseline is missing — first run,
+## or the artifact download fell over.
+REGRESS_BASELINE ?= baseline/BENCH_ablation.json
+regress-check:
+	$(PYTHON) scripts/check_ablation_regress.py $(REGRESS_BASELINE) \
+	  BENCH_ablation.json
 
 ## Boot the reactor server and drive the full protocol — including an
 ## overload burst that must observe ERR OVERLOAD — failing loud on hangs.

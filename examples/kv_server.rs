@@ -18,8 +18,10 @@
 //! cargo run --release --example kv_server               # self-test mode
 //! cargo run --release --example kv_server -- --listen 127.0.0.1:7171 \
 //!     [--policy linearizable|handshake|optimistic|...] [--workers N] \
+//!     [--store-shards auto|N] [--key-dist uniform|zipf:0.99] \
 //!     [--refresh-ms 5] [--size-shards auto] [--reactor sleep|spin] \
-//!     [--admission-high N [--admission-low N]] [--max-conns N] \
+//!     [--admission-high N [--admission-low N]] \
+//!     [--shard-admission-high N [--shard-admission-low N]] [--max-conns N] \
 //!     [--request-timeout-ms MS] [--conn-idle-ms MS] [--monitor-sample N] \
 //!     [--fault-seed SEED]   # needs --features faults
 //! ```
@@ -32,9 +34,10 @@ use concurrent_size::cli::{Args, PolicyKind};
 use concurrent_size::harness;
 use concurrent_size::server::{BlockingClient, DEFAULT_RECENT_MS, parse_stats, Server, ServerConfig};
 use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::shardstore::make_shard_store;
 use concurrent_size::size::{detect_shards, SizeOpts};
 use concurrent_size::thread_id;
-use concurrent_size::workload::UPDATE_HEAVY;
+use concurrent_size::workload::{KeyDist, UPDATE_HEAVY};
 
 type Store = Arc<dyn ConcurrentSet>;
 
@@ -44,8 +47,10 @@ fn usage() {
 
 USAGE:
   kv_server [--listen ADDR] [--policy P] [--workers N] [--max-conns N]
+            [--store-shards auto|N] [--key-dist uniform|zipf:THETA]
             [--refresh-ms MS] [--size-shards auto|N] [--reactor sleep|spin]
             [--admission-high N [--admission-low N]]
+            [--shard-admission-high N [--shard-admission-low N]]
             [--request-timeout-ms MS] [--conn-idle-ms MS]
             [--monitor-sample N] [--fault-seed SEED]
 
@@ -67,10 +72,22 @@ FLAGS:
                       0 = disabled; default auto)
   --reactor M         reactor idle mode: sleep (default, ~0 idle CPU) | spin
                       (busy-poll, lowest latency)
+  --store-shards S    partition the key space over S independent store
+                      shards behind a cluster-wide size aggregator
+                      ('auto' = machine-detected; default 1 = monolithic)
+  --key-dist D        key distribution of the self-test swarm: uniform
+                      (default) or zipf:THETA with THETA in (0,1)
+                      (0.99 = YCSB's hot-keys skew)
   --admission-high N  shed PUTs with ERR OVERLOAD once the size estimate
                       reaches N (admission control off unless given)
   --admission-low N   readmit once the estimate drains to N (default: high/2;
                       the gap is the hysteresis band)
+  --shard-admission-high N
+                      second admission tier: shed a PUT with
+                      'ERR OVERLOAD shard=<i>' once its target shard's
+                      estimate reaches N — only the hot shard sheds
+  --shard-admission-low N
+                      per-shard readmission watermark (default: high/2)
   --request-timeout-ms MS
                       per-request handler deadline (default 30000, 0 = off):
                       past it the client gets ERR TIMEOUT, the connection's
@@ -91,7 +108,10 @@ FLAGS:
 
 PROTOCOL (one command per line):
   PUT k | DEL k | HAS k   -> 1 / 0; PUT answers ERR OVERLOAD while shedding
-  SIZE                    -> exact linearizable count (combining arbiter)
+                             (ERR OVERLOAD shard=<i> when a shard tier
+                             sheds); GET k is an alias for HAS k
+  SIZE                    -> exact linearizable count (combining arbiter;
+                             two-phase aggregated across store shards)
   SIZE~ [ms]              -> count at most ms (default {DEFAULT_RECENT_MS}) milliseconds stale
   SIZE?                   -> O(shards) bounded-lag estimate (never negative)
   STATS                   -> key=value server + size telemetry, one line
@@ -131,10 +151,26 @@ fn main() {
         }
         concurrent_size::faults::install(concurrent_size::faults::FaultPlane::chaos(seed))
     });
+    let dist_spelling = args.get("key-dist").unwrap_or("uniform");
+    let Some(key_dist) = KeyDist::parse(dist_spelling) else {
+        eprintln!(
+            "unknown --key-dist {dist_spelling:?} (use uniform|zipf:<theta>, theta in (0,1))"
+        );
+        std::process::exit(2);
+    };
     let opts = SizeOpts::default().with_shards(args.size_shards(detect_shards()));
-    let store: Store = Arc::from(
-        bench_util::make_set_opts("hashtable", kind, 1 << 16, opts).expect("hashtable factory"),
-    );
+    let store_shards = args.store_shards(1);
+    let store: Store = if store_shards > 1 {
+        println!("sharded store: {store_shards} shards behind one size aggregator");
+        Arc::from(
+            make_shard_store(kind, store_shards, 1 << 16, opts).expect("shard store factory"),
+        )
+    } else {
+        Arc::from(
+            bench_util::make_set_opts("hashtable", kind, 1 << 16, opts)
+                .expect("hashtable factory"),
+        )
+    };
     let serving = args.get("listen").is_some();
     // Self-test mode exercises the daemon path by default; a served store
     // only runs one when asked.
@@ -156,7 +192,7 @@ fn main() {
             );
             server.wait();
         }
-        None => self_test(store, config, refresh_ms),
+        None => self_test(store, config, refresh_ms, key_dist),
     }
 }
 
@@ -166,7 +202,7 @@ fn main() {
 /// STATS under the running refresher. Staleness bounds are derived from
 /// the configured `--refresh-ms` (not hard-coded) so slow CI machines
 /// shift timing without breaking the assertions.
-fn self_test(store: Store, config: ServerConfig, refresh_ms: f64) {
+fn self_test(store: Store, config: ServerConfig, refresh_ms: f64, key_dist: KeyDist) {
     let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind");
     let addr = server.local_addr();
     // A bound the daemon can beat comfortably: two periods (one period
@@ -208,10 +244,17 @@ fn self_test(store: Store, config: ServerConfig, refresh_ms: f64) {
                     client.cmd("SIZE~ bogus").starts_with("ERR"),
                     "malformed staleness must be rejected"
                 );
-                assert!(client.cmd("GARBAGE").starts_with("ERR"), "junk must get ERR");
+                assert!(
+                    client.cmd("GARBAGE").starts_with("ERR"),
+                    "junk must get ERR"
+                );
                 // Key 999 is in nobody's range: proves the connection
                 // survives bad commands without racing other clients.
-                assert_eq!(client.cmd("HAS 999"), "0", "conn must survive a bad command");
+                assert_eq!(
+                    client.cmd("HAS 999"),
+                    "0",
+                    "conn must survive a bad command"
+                );
             })
         })
         .collect();
@@ -237,16 +280,19 @@ fn self_test(store: Store, config: ServerConfig, refresh_ms: f64) {
     // Every burst reply arrived and nothing QUIT yet, so all burst
     // connections are provably open — and accepted — right now.
     let live = server.stats().live_conns;
-    assert!(live >= burst, "reactor holds {live} connections, wanted >= {burst}");
+    assert!(
+        live >= burst,
+        "reactor holds {live} connections, wanted >= {burst}"
+    );
     assert!(server.handler_threads() <= thread_id::capacity() / 2);
     drop(streams);
 
     // Swarm load over the server path (clients >> thread slots is fine:
     // swarm clients hold sockets, not slots).
-    let swarm = harness::client_swarm(addr, 8, 500, UPDATE_HEAVY, 4096, 0xBEEF)
+    let swarm = harness::client_swarm(addr, 8, 500, UPDATE_HEAVY, 4096, key_dist, 0xBEEF)
         .expect("swarm against self-test server");
     assert_eq!(swarm.ops, 8 * 500, "every swarm command must get a reply");
-    if config.admission.is_none() {
+    if config.admission.is_none() && config.shard_admission.is_none() {
         assert_eq!(swarm.overloads, 0, "no admission gate configured");
     }
     // Size probes answer ERR under a size-less policy or a disabled

@@ -53,7 +53,10 @@ fn main() {
     let observed = sizes.join().unwrap();
 
     println!("final size           : {:?}", set.size());
-    println!("concurrent size calls: {} (all linearizable)", observed.len());
+    println!(
+        "concurrent size calls: {} (all linearizable)",
+        observed.len()
+    );
     println!(
         "observed size range  : {:?}..={:?}",
         observed.iter().min().unwrap(),

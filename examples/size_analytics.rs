@@ -118,7 +118,10 @@ fn main() {
     println!("final size  (linearizable size()): {final_lin}");
     println!("epoch skew max |pallas - size()| : {}", report.max_skew());
     println!("history deltas recorded : {}", deltas.len());
-    println!("history stats [min,max,final,neg]: {:?}", p_stats.as_array());
+    println!(
+        "history stats [min,max,final,neg]: {:?}",
+        p_stats.as_array()
+    );
     println!("history legal (never negative)   : {}", p_stats.is_legal());
     println!("=======================================================");
 

@@ -25,22 +25,34 @@ fn main() {
     let s = args.get_usize("size-threads", 2);
 
     println!("=== Ablation: Section 7 optimizations (SizeSkipList, update-heavy) ===");
-    println!("(initial={} keys, {w} workload + {s} size threads)", scale.initial);
+    println!(
+        "(initial={} keys, {w} workload + {s} size threads)",
+        scale.initial
+    );
 
     let configs: Vec<(&str, SizeOpts)> = vec![
         ("all on (default)", SizeOpts::default()),
         ("all off", SizeOpts::NONE),
         (
             "no 7.1 clear-insert-info",
-            SizeOpts { clear_insert_info: false, ..SizeOpts::default() },
+            SizeOpts {
+                clear_insert_info: false,
+                ..SizeOpts::default()
+            },
         ),
         (
             "no 7.2 backoff",
-            SizeOpts { backoff: false, ..SizeOpts::default() },
+            SizeOpts {
+                backoff: false,
+                ..SizeOpts::default()
+            },
         ),
         (
             "no 7.3 early-size-check",
-            SizeOpts { early_size_check: false, ..SizeOpts::default() },
+            SizeOpts {
+                early_size_check: false,
+                ..SizeOpts::default()
+            },
         ),
     ];
 

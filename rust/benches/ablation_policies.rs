@@ -26,15 +26,26 @@
 //!   crossed with `SizeRefresher` periods under `refresh` size calls,
 //!   recording daemon rounds and the optimistic retry-budget auto-tuner's
 //!   end state alongside both throughputs.
+//! * **shard_scale** — the sharded **store** over the server path: a real
+//!   reactor server mounted on a [`ShardStore`] with per-shard admission
+//!   watermarks, driven by a client swarm sweeping store-shard counts
+//!   (1 vs auto-detected) × key distributions (uniform vs `zipf:0.99`).
+//!   Records swarm throughput plus the per-shard shed total from `STATS`
+//!   (the hot-shard tax under skew) — here the `shards` column means
+//!   *store* shards, not mirror stripes.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use concurrent_size::bench_util::{BenchScale, make_set_opts, MIXES, STRUCTURES};
 use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
-use concurrent_size::harness::{run, SizeCall};
+use concurrent_size::harness::{client_swarm, run, SizeCall};
 use concurrent_size::metrics::{fmt_rate, json_escape, json_f64, Table};
+use concurrent_size::server::{parse_stats, BlockingClient, Server, ServerConfig, Watermarks};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::shardstore::make_shard_store;
 use concurrent_size::size::{detect_shards, SizeOpts};
-use concurrent_size::workload::{self, Mix, UPDATE_HEAVY};
+use concurrent_size::workload::{self, KeyDist, Mix, UPDATE_HEAVY};
 
 /// One measured configuration, ready for the JSON report.
 struct Record {
@@ -43,7 +54,11 @@ struct Record {
     mix: Mix,
     size_threads: usize,
     size_call: &'static str,
+    /// Mirror stripes in the in-process scenarios; **store** shards in
+    /// `shard_scale`.
     shards: usize,
+    /// Key distribution surface form (`uniform` / `zipf:0.99`).
+    key_dist: String,
     refresh_us: u64,
     workload_ops_per_sec: f64,
     size_ops_per_sec: f64,
@@ -54,6 +69,8 @@ struct Record {
     daemon_stalls: u64,
     fallbacks: u64,
     retry_budget: u64,
+    /// `PUT`s shed by the per-shard admission tier (`shard_scale` only).
+    per_shard_sheds: u64,
 }
 
 impl Record {
@@ -62,11 +79,12 @@ impl Record {
             concat!(
                 "{{\"scenario\":\"{}\",\"policy\":\"{}\",\"mix\":\"{}\",",
                 "\"size_threads\":{},\"size_call\":\"{}\",",
-                "\"shards\":{},\"refresh_us\":{},",
+                "\"shards\":{},\"key_dist\":\"{}\",\"refresh_us\":{},",
                 "\"workload_ops_per_sec\":{},\"size_ops_per_sec\":{},",
                 "\"arbiter_rounds\":{},\"arbiter_adoptions\":{},",
                 "\"arbiter_recent_hits\":{},\"daemon_rounds\":{},",
-                "\"daemon_stalls\":{},\"fallbacks\":{},\"retry_budget\":{}}}"
+                "\"daemon_stalls\":{},\"fallbacks\":{},\"retry_budget\":{},",
+                "\"per_shard_sheds\":{}}}"
             ),
             json_escape(self.scenario),
             json_escape(self.policy.label()),
@@ -74,6 +92,7 @@ impl Record {
             self.size_threads,
             json_escape(self.size_call),
             self.shards,
+            json_escape(&self.key_dist),
             self.refresh_us,
             json_f64(self.workload_ops_per_sec),
             json_f64(self.size_ops_per_sec),
@@ -84,6 +103,7 @@ impl Record {
             self.daemon_stalls,
             self.fallbacks,
             self.retry_budget,
+            self.per_shard_sheds,
         )
     }
 }
@@ -178,6 +198,7 @@ fn main() {
                 size_threads: s,
                 size_call: SizeCall::Raw.label(),
                 shards: 0,
+                key_dist: KeyDist::Uniform.label(),
                 refresh_us: 0,
                 workload_ops_per_sec: workload_tput,
                 size_ops_per_sec: size_tput,
@@ -188,6 +209,7 @@ fn main() {
                 daemon_stalls: 0,
                 fallbacks: 0,
                 retry_budget: 0,
+                per_shard_sheds: 0,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -244,6 +266,7 @@ fn main() {
                 size_threads: heavy_size_threads,
                 size_call: call.label(),
                 shards: 0,
+                key_dist: KeyDist::Uniform.label(),
                 refresh_us: 0,
                 workload_ops_per_sec: workload_tput,
                 size_ops_per_sec: size_tput,
@@ -254,6 +277,7 @@ fn main() {
                 daemon_stalls: stats.daemon_stalls,
                 fallbacks: stats.fallbacks,
                 retry_budget: stats.retry_budget,
+                per_shard_sheds: 0,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -307,6 +331,7 @@ fn main() {
                     size_threads: 2,
                     size_call: SizeCallKind::Refresh.label(),
                     shards,
+                    key_dist: KeyDist::Uniform.label(),
                     refresh_us,
                     workload_ops_per_sec: workload_tput,
                     size_ops_per_sec: size_tput,
@@ -317,6 +342,7 @@ fn main() {
                     daemon_stalls: stats.daemon_stalls,
                     fallbacks: stats.fallbacks,
                     retry_budget: stats.retry_budget,
+                    per_shard_sheds: 0,
                 });
                 table.row(&[
                     kind.label().to_string(),
@@ -329,6 +355,98 @@ fn main() {
                     stats.retry_budget.to_string(),
                 ]);
             }
+        }
+    }
+    table.print();
+
+    // -- Scenario 4: shard_scale — sharded store over the server path ----
+    // A real server on a ShardStore with per-shard admission watermarks,
+    // swarmed over the socket path: store shards (1 = monolithic vs the
+    // machine's detected parallelism) crossed with key skew (uniform vs
+    // YCSB's zipf:0.99). The per-shard shed total out of STATS is the
+    // hot-shard tax: under skew, one shard's gate does most of the work.
+    let swarm_clients = args.get_usize("swarm-clients", 8);
+    let swarm_ops = args.get_u64("swarm-ops", 1_500);
+    let swarm_range = 4096u64;
+    let mut store_shard_axis = vec![1usize, detected];
+    store_shard_axis.dedup();
+    let key_dists = [KeyDist::Uniform, KeyDist::Zipf(0.99)];
+    println!(
+        "\n-- shard_scale: {swarm_clients}x{swarm_ops}-op swarm against a sharded-store \
+         server (store shards x key dist; per-shard admission) --"
+    );
+    let mut table = Table::new(&[
+        "store shards",
+        "key dist",
+        "swarm ops/s",
+        "shard sheds",
+        "global sheds",
+    ]);
+    for &store_shards in &store_shard_axis {
+        for key_dist in key_dists {
+            // Per-shard watermark scaled so both distributions can trip
+            // it: steady-state live keys under update-heavy are ~60% of
+            // the touched range, split across shards.
+            let shard_high = (1_200 / store_shards as i64).max(8);
+            let store: Arc<dyn ConcurrentSet> = Arc::from(
+                make_shard_store(
+                    PolicyKind::Linearizable,
+                    store_shards,
+                    swarm_range as usize,
+                    SizeOpts::default().with_shards(detected),
+                )
+                .expect("shard store factory"),
+            );
+            let config = ServerConfig {
+                shard_admission: Some(Watermarks::new(shard_high, shard_high / 2)),
+                ..Default::default()
+            };
+            let server =
+                Server::bind("127.0.0.1:0", store.clone(), config).expect("bind shard_scale");
+            let swarm = client_swarm(
+                server.local_addr(),
+                swarm_clients,
+                swarm_ops,
+                UPDATE_HEAVY,
+                swarm_range,
+                key_dist,
+                scale.seed,
+            )
+            .expect("shard_scale swarm");
+            let mut probe = BlockingClient::connect(server.local_addr());
+            let stats = parse_stats(&probe.cmd("STATS")).expect("shard_scale STATS");
+            let per_shard_sheds = stats["shard_shed"];
+            let global_sheds = stats["shed"];
+            let arbiter = store.size_stats().unwrap_or_default();
+            drop(probe);
+            drop(server);
+            records.push(Record {
+                scenario: "shard_scale",
+                policy: PolicyKind::Linearizable,
+                mix: UPDATE_HEAVY,
+                size_threads: 0,
+                size_call: SizeCall::Raw.label(),
+                shards: store_shards,
+                key_dist: key_dist.label(),
+                refresh_us: 0,
+                workload_ops_per_sec: swarm.throughput(),
+                size_ops_per_sec: 0.0,
+                arbiter_rounds: arbiter.rounds,
+                arbiter_adoptions: arbiter.adoptions,
+                arbiter_recent_hits: arbiter.recent_hits,
+                daemon_rounds: arbiter.daemon_rounds,
+                daemon_stalls: arbiter.daemon_stalls,
+                fallbacks: arbiter.fallbacks,
+                retry_budget: arbiter.retry_budget,
+                per_shard_sheds,
+            });
+            table.row(&[
+                store_shards.to_string(),
+                key_dist.label(),
+                fmt_rate(swarm.throughput()),
+                per_shard_sheds.to_string(),
+                global_sheds.to_string(),
+            ]);
         }
     }
     table.print();

@@ -141,7 +141,14 @@ mod tests {
         for c in 1..=20u64 {
             calc.update_metadata(UpdateInfo { tid: 1, counter: c }.pack(), OpKind::Insert);
             if c % 2 == 0 {
-                calc.update_metadata(UpdateInfo { tid: 1, counter: c / 2 }.pack(), OpKind::Delete);
+                calc.update_metadata(
+                    UpdateInfo {
+                        tid: 1,
+                        counter: c / 2,
+                    }
+                    .pack(),
+                    OpKind::Delete,
+                );
             }
             rec.record(&calc);
         }

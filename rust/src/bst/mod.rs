@@ -347,7 +347,9 @@ const GRAVE_INFO: u64 = 1;
 
 impl Graveyard {
     fn new() -> Self {
-        Self { head: AtomicU64::new(0) }
+        Self {
+            head: AtomicU64::new(0),
+        }
     }
 
     fn push(&self, tagged: u64) {
@@ -705,7 +707,10 @@ mod tests {
                     std::thread::spawn(move || t.delete(7) as usize)
                 })
                 .collect();
-            assert_eq!(dels.into_iter().map(|h| h.join().unwrap()).sum::<usize>(), 1);
+            assert_eq!(
+                dels.into_iter().map(|h| h.join().unwrap()).sum::<usize>(),
+                1
+            );
             assert_eq!(t.size(), Some(0));
         }
     }

@@ -218,12 +218,24 @@ impl Args {
     /// ([`crate::size::detect_shards`]), `0` → mirror disabled, `N` → `N`
     /// stripes. Pass `0` as `default` to keep the mirror off unless asked.
     pub fn size_shards(&self, default: usize) -> usize {
-        match self.get("size-shards") {
+        self.auto_shards("size-shards", default)
+    }
+
+    /// The `--store-shards` convention (same `auto|N` grammar as
+    /// `--size-shards`, but for [`crate::shardstore::ShardStore`] store
+    /// shards): absent → `default`, `auto` → machine-detected, `N` → `N`.
+    /// `1` means a monolithic store.
+    pub fn store_shards(&self, default: usize) -> usize {
+        self.auto_shards("store-shards", default)
+    }
+
+    fn auto_shards(&self, key: &str, default: usize) -> usize {
+        match self.get(key) {
             None => default,
             Some("auto") => crate::size::detect_shards(),
-            Some(v) => v.parse().unwrap_or_else(|_| {
-                panic!("--size-shards expects an integer or 'auto', got {v:?}")
-            }),
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer or 'auto', got {v:?}")),
         }
     }
 }
@@ -332,6 +344,20 @@ mod tests {
     #[should_panic(expected = "--size-shards expects an integer or 'auto'")]
     fn size_shards_rejects_garbage() {
         args("b --size-shards many").size_shards(0);
+    }
+
+    #[test]
+    fn store_shards_spellings() {
+        assert_eq!(args("b").store_shards(1), 1);
+        assert_eq!(args("b --store-shards 8").store_shards(1), 8);
+        let auto = args("b --store-shards auto").store_shards(1);
+        assert!((1..=crate::MAX_THREADS).contains(&auto));
+    }
+
+    #[test]
+    #[should_panic(expected = "--store-shards expects an integer or 'auto'")]
+    fn store_shards_rejects_garbage() {
+        args("b --store-shards several").store_shards(1);
     }
 
     #[test]

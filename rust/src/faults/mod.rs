@@ -174,6 +174,16 @@ impl FaultPlane {
         self.seed
     }
 
+    /// The distinct sites this plane arms, in [`FaultSite::ALL`] order
+    /// (the coverage contract `csize fuzz` holds a run to: every armed
+    /// site must fire at least once or the run fails).
+    pub fn armed_sites(&self) -> Vec<FaultSite> {
+        FaultSite::ALL
+            .into_iter()
+            .filter(|site| self.specs.iter().any(|spec| spec.site == *site))
+            .collect()
+    }
+
     /// The documented chaos profile used by `csize fuzz` and the
     /// fuzz-smoke CI job: jitter at every size-protocol edge, a stalled
     /// refresher, slow + panicking handlers, 1-byte socket writes, and
@@ -225,6 +235,9 @@ mod runtime {
     static INSTALL: Mutex<()> = Mutex::new(());
     static GENERATION: AtomicU64 = AtomicU64::new(0);
     static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    /// Process-lifetime fire tally per site (monotonic across planes;
+    /// consumers diff snapshots around the window they care about).
+    static FIRES: [AtomicU64; FaultSite::COUNT] = [const { AtomicU64::new(0) }; FaultSite::COUNT];
 
     thread_local! {
         /// (plane generation, fault-local thread id, per-site hit counts).
@@ -294,10 +307,22 @@ mod runtime {
                     .wrapping_add(n),
             );
             if h % spec.one_in == 0 {
+                FIRES[site as usize].fetch_add(1, Ordering::Relaxed);
                 return Some(spec.action);
             }
         }
         None
+    }
+
+    /// Injections fired so far, indexed by [`FaultSite`] (process-wide,
+    /// monotonic). The `csize fuzz` coverage table and the server's
+    /// `STATS faults=` gauge read this.
+    pub fn fire_counts() -> [u64; FaultSite::COUNT] {
+        let mut counts = [0u64; FaultSite::COUNT];
+        for (count, fired) in counts.iter_mut().zip(FIRES.iter()) {
+            *count = fired.load(Ordering::Relaxed);
+        }
+        counts
     }
 
     /// Perturb the schedule at `site`: yield, sleep, or panic per the
@@ -392,9 +417,16 @@ mod runtime {
     pub fn stalled_put(_key: u64) -> Option<Duration> {
         None
     }
+
+    /// Feature off: nothing can fire, so the tally is all zeros.
+    pub fn fire_counts() -> [u64; FaultSite::COUNT] {
+        [0; FaultSite::COUNT]
+    }
 }
 
-pub use runtime::{fires, install, jitter, poisoned_put, stalled_put, write_cap, FaultGuard};
+pub use runtime::{
+    fire_counts, fires, install, jitter, poisoned_put, stalled_put, write_cap, FaultGuard,
+};
 
 /// Whether the `faults` feature was compiled in (used by `csize fuzz`
 /// and `kv_server --fault-seed` to warn instead of silently no-opping).
@@ -442,6 +474,7 @@ mod tests {
     #[cfg(feature = "faults")]
     #[test]
     fn one_in_one_always_fires() {
+        let before = fire_counts()[FaultSite::OptimisticRetry as usize];
         let _guard = install(FaultPlane::new(3).with(
             FaultSite::OptimisticRetry,
             1,
@@ -451,5 +484,27 @@ mod tests {
             assert!(fires(FaultSite::OptimisticRetry));
         }
         assert!(!fires(FaultSite::RefresherTick));
+        let after = fire_counts()[FaultSite::OptimisticRetry as usize];
+        assert!(after >= before + 32, "fire tally must count every hit");
+    }
+
+    #[test]
+    fn armed_sites_deduplicates_in_index_order() {
+        let plane = FaultPlane::new(0)
+            .with(FaultSite::ConnWrite, 2, FaultAction::ShortWrite(1))
+            .with(FaultSite::PreCounterCas, 7, FaultAction::Yield)
+            .with(FaultSite::PreCounterCas, 97, FaultAction::Yield);
+        assert_eq!(
+            plane.armed_sites(),
+            vec![FaultSite::PreCounterCas, FaultSite::ConnWrite]
+        );
+        assert_eq!(FaultPlane::chaos(1).armed_sites(), FaultSite::ALL.to_vec());
+        assert!(FaultPlane::new(1).armed_sites().is_empty());
+    }
+
+    #[cfg(not(feature = "faults"))]
+    #[test]
+    fn fire_counts_are_zero_when_compiled_out() {
+        assert_eq!(fire_counts(), [0; FaultSite::COUNT]);
     }
 }

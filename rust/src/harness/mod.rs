@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 use crate::cli::SizeCallKind;
 use crate::metrics::Stats;
 use crate::set_api::ConcurrentSet;
-use crate::workload::{self, Mix, OpStream, OpType};
+use crate::workload::{self, KeyDist, Mix, OpStream, OpType};
 
 /// How the size threads call `size` (the arbiter ablation axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,6 +69,10 @@ pub struct RunConfig {
     pub duration: Duration,
     pub mix: Mix,
     pub key_range: u64,
+    /// Key-popularity distribution over `[1, key_range]` (uniform by
+    /// default; `zipf:<theta>` skews traffic onto a hot head — the
+    /// sharded-store hot-shard axis).
+    pub key_dist: KeyDist,
     pub seed: u64,
     /// Fig. 13 mode: run 100-op uniform-type batches and time each type.
     pub per_type_timing: bool,
@@ -88,6 +92,7 @@ impl RunConfig {
             duration: Duration::from_millis(500),
             mix,
             key_range,
+            key_dist: KeyDist::Uniform,
             seed: 0xBEEF,
             per_type_timing: false,
             size_call: SizeCall::Raw,
@@ -158,8 +163,12 @@ pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
             let set: &dyn ConcurrentSet = set;
             let cfg = cfg.clone();
             workers.push(scope.spawn(move || {
-                let mut stream =
-                    OpStream::new(cfg.seed ^ (t as u64) << 32, cfg.mix, cfg.key_range);
+                let mut stream = OpStream::with_dist(
+                    cfg.seed ^ (t as u64) << 32,
+                    cfg.mix,
+                    cfg.key_range,
+                    cfg.key_dist,
+                );
                 let mut ops = 0u64;
                 let mut type_ops = [0u64; 3];
                 let mut type_nanos = [0u64; 3];
@@ -237,7 +246,8 @@ pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
 pub struct SwarmResult {
     /// Replies received (one per command sent).
     pub ops: u64,
-    /// `ERR OVERLOAD` replies — `PUT`s shed by admission control.
+    /// `ERR OVERLOAD` replies — `PUT`s shed by either admission tier
+    /// (the per-shard tier's `ERR OVERLOAD shard=<i>` counts here too).
     pub overloads: u64,
     /// Other `ERR` replies (0 against a size-capable, mirrored store).
     pub errors: u64,
@@ -256,10 +266,12 @@ const SWARM_PROBE_EVERY: u64 = 61;
 
 /// The server-path load mode: `clients` TCP connections each drive
 /// `ops_per_client` commands from the workload mix (`PUT`/`DEL`/`HAS`
-/// per [`Mix`], with a periodic `SIZE~`/`SIZE?` probe mixed in) and read
-/// every reply. This benchmarks the whole reactor + handler-pool +
-/// admission path rather than the bare structure; the server tests and
-/// `make server-smoke` both drive it.
+/// per [`Mix`], keys drawn per `key_dist`, with a periodic
+/// `SIZE~`/`SIZE?` probe mixed in) and read every reply. This benchmarks
+/// the whole reactor + handler-pool + admission path rather than the
+/// bare structure; the server tests and `make server-smoke` both drive
+/// it, and a zipfian `key_dist` is how the sharded-store tests light up
+/// one hot shard.
 ///
 /// Client threads never touch the store in-process, so they consume **no**
 /// [`crate::thread_id`] slots — swarms far wider than the thread-slot
@@ -270,6 +282,7 @@ pub fn client_swarm(
     ops_per_client: u64,
     mix: Mix,
     key_range: u64,
+    key_dist: KeyDist,
     seed: u64,
 ) -> std::io::Result<SwarmResult> {
     let start = Instant::now();
@@ -282,7 +295,8 @@ pub fn client_swarm(
                     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
                     let mut out = stream.try_clone()?;
                     let mut reader = BufReader::new(stream);
-                    let mut ops_stream = OpStream::new(seed ^ ((c as u64) << 24), mix, key_range);
+                    let mut ops_stream =
+                        OpStream::with_dist(seed ^ ((c as u64) << 24), mix, key_range, key_dist);
                     let (mut ops, mut overloads, mut errors) = (0u64, 0u64, 0u64);
                     let mut line = String::new();
                     for i in 0..ops_per_client {
@@ -310,7 +324,7 @@ pub fn client_swarm(
                         }
                         ops += 1;
                         let reply = line.trim();
-                        if reply == "ERR OVERLOAD" {
+                        if reply.starts_with("ERR OVERLOAD") {
                             overloads += 1;
                         } else if reply.starts_with("ERR") {
                             errors += 1;

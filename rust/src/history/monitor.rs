@@ -274,10 +274,134 @@ pub fn check_anchored(
         let low = (definite - overlap_minus as i64 - slack).max(0);
         let high = definite + overlap_plus as i64 + slack;
         if s.value < low || s.value > high {
-            report.violations.push(Violation { event: s, low, high });
+            report.violations.push(Violation {
+                event: s,
+                low,
+                high,
+            });
         }
     }
     report
+}
+
+/// [`check`] lifted to a sharded store: `shard_updates[i]` holds the
+/// updates that ran on shard `i`, and every size observation is a
+/// *global* (aggregated) reading. A global size is justified iff it lies
+/// in the **sum of the per-shard justification intervals** over its
+/// window: each shard contributes `[max(definite_i − overlapping
+/// deletes_i, 0), definite_i + overlapping inserts_i]`, and the value
+/// must fall in `[Σ low_i, Σ high_i]`. Note this is *tighter* than
+/// pooling all updates into one history — the empty-set floor applies
+/// per shard (no shard can be negative), so a global reading that could
+/// only be explained by one shard going negative is flagged.
+pub fn check_aggregated(shard_updates: &[Vec<UpdateEvent>], sizes: &[SizeEvent]) -> Report {
+    debug_assert!(
+        shard_updates
+            .iter()
+            .flatten()
+            .all(|u| u.delta == 1 || u.delta == -1),
+        "monitor updates must be unit deltas"
+    );
+    let indexes: Vec<(SignIndex, SignIndex)> = shard_updates
+        .iter()
+        .map(|u| (SignIndex::build(u, 1), SignIndex::build(u, -1)))
+        .collect();
+    let mut report = Report {
+        updates: shard_updates.iter().map(Vec::len).sum(),
+        sizes_checked: sizes.len(),
+        final_net: indexes
+            .iter()
+            .map(|(p, m)| p.resp.len() as i64 - m.resp.len() as i64)
+            .sum(),
+        violations: Vec::new(),
+    };
+    for &s in sizes {
+        let (mut low, mut high) = (0i64, 0i64);
+        for (plus, minus) in &indexes {
+            let definite_plus = plus.done_before(s.inv);
+            let definite_minus = minus.done_before(s.inv);
+            let definite = definite_plus as i64 - definite_minus as i64;
+            let overlap_plus = plus.started_by(s.resp) - definite_plus;
+            let overlap_minus = minus.started_by(s.resp) - definite_minus;
+            low += (definite - overlap_minus as i64).max(0);
+            high += definite + overlap_plus as i64;
+        }
+        if s.value < low || s.value > high {
+            report.violations.push(Violation {
+                event: s,
+                low,
+                high,
+            });
+        }
+    }
+    report
+}
+
+/// [`Monitor`] for a sharded store: one shared clock, per-shard update
+/// streams, global size observations, verified by [`check_aggregated`].
+/// (Separate per-shard `Monitor`s would not compose — each carries its
+/// own `Instant` origin, making timestamps incomparable.)
+pub struct ShardedMonitor {
+    origin: Instant,
+    shards: Box<[Mutex<Vec<UpdateEvent>>]>,
+    sizes: Mutex<Vec<SizeEvent>>,
+}
+
+impl ShardedMonitor {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards > 0, "a sharded monitor needs at least one shard");
+        Self {
+            origin: Instant::now(),
+            shards: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            sizes: Mutex::new(Vec::new()),
+        }
+    }
+
+    #[inline]
+    fn now(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    /// Stamp the invocation of an operation about to run.
+    #[inline]
+    pub fn begin(&self) -> Timer {
+        Timer { inv: self.now() }
+    }
+
+    /// Record a completed successful update (`delta` ±1) on `shard`.
+    pub fn commit_update(&self, shard: usize, timer: Timer, delta: i64) {
+        let resp = self.now();
+        self.shards[shard].lock().unwrap().push(UpdateEvent {
+            inv: timer.inv,
+            resp,
+            delta,
+        });
+    }
+
+    /// Record a completed aggregated (global) size observation.
+    pub fn commit_size(&self, timer: Timer, value: i64) {
+        self.commit_size_with_slack(timer, value, Duration::ZERO);
+    }
+
+    /// [`Self::commit_size`] widened backward by `slack` (an aggregated
+    /// `global_recent` reading reports its composed `age`).
+    pub fn commit_size_with_slack(&self, timer: Timer, value: i64, slack: Duration) {
+        let resp = self.now();
+        let inv = timer.inv.saturating_sub(slack.as_nanos() as u64);
+        self.sizes.lock().unwrap().push(SizeEvent { inv, resp, value });
+    }
+
+    /// Check every recorded global size against the per-shard updates
+    /// (call after all recording threads joined).
+    pub fn verify(&self) -> Report {
+        let shards: Vec<Vec<UpdateEvent>> = self
+            .shards
+            .iter()
+            .map(|m| m.lock().unwrap().clone())
+            .collect();
+        let sizes = self.sizes.lock().unwrap();
+        check_aggregated(&shards, &sizes)
+    }
 }
 
 /// Greedy one-pass shrink: drop every update whose removal keeps the
@@ -446,6 +570,84 @@ mod tests {
         let small = sz(10, 11, 0);
         let core = minimize(&two, &small);
         assert_eq!(core.len(), 1, "one definite insert suffices to refute 0");
+    }
+
+    #[test]
+    fn aggregated_check_sums_per_shard_intervals() {
+        // Shard 0: one definite insert. Shard 1: one definite insert and
+        // one overlapping insert. Global window [10, 11]:
+        //   shard 0 contributes [1, 1], shard 1 contributes [1, 2].
+        let shards = vec![vec![up(0, 1, 1)], vec![up(2, 3, 1), up(5, 20, 1)]];
+        for fine in [2, 3] {
+            assert!(
+                check_aggregated(&shards, &[sz(10, 11, fine)]).is_ok(),
+                "{fine}"
+            );
+        }
+        for wrong in [1, 4] {
+            let r = check_aggregated(&shards, &[sz(10, 11, wrong)]);
+            assert_eq!(r.violations.len(), 1, "value {wrong}");
+            assert_eq!((r.violations[0].low, r.violations[0].high), (2, 3));
+        }
+        let r = check_aggregated(&shards, &[sz(10, 11, 2)]);
+        assert_eq!(r.updates, 3);
+        assert_eq!(r.final_net, 3);
+    }
+
+    #[test]
+    fn aggregated_floor_applies_per_shard() {
+        // Shard 0 has 2 definite inserts; shard 1 has an overlapping
+        // delete whose insert never happened on that shard. Pooled into
+        // one history the bound would be [2-1, 2] = [1, 2]; per shard,
+        // shard 1's interval is [max(0-1, 0), 0] = [0, 0] — the floor
+        // clamps per shard, so the global bound is [2, 2].
+        let shards = vec![vec![up(0, 1, 1), up(2, 3, 1)], vec![up(5, 20, -1)]];
+        assert!(check_aggregated(&shards, &[sz(10, 11, 2)]).is_ok());
+        let r = check_aggregated(&shards, &[sz(10, 11, 1)]);
+        assert_eq!(r.violations.len(), 1, "per-shard floor must reject 1");
+        assert_eq!((r.violations[0].low, r.violations[0].high), (2, 2));
+        // The pooled (single-history) check would have accepted it:
+        let pooled: Vec<UpdateEvent> = shards.iter().flatten().copied().collect();
+        assert!(
+            check(&pooled, &[sz(10, 11, 1)]).is_ok(),
+            "pooled bound is looser"
+        );
+    }
+
+    #[test]
+    fn aggregated_single_shard_collapses_to_check() {
+        let updates = vec![up(0, 1, 1), up(5, 20, 1), up(6, 21, -1)];
+        for v in [-1, 0, 1, 2, 3] {
+            assert_eq!(
+                check_aggregated(&[updates.clone()], &[sz(10, 11, v)]).is_ok(),
+                check(&updates, &[sz(10, 11, v)]).is_ok(),
+                "value {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_monitor_records_on_one_clock() {
+        let m = ShardedMonitor::new(2);
+        let t = m.begin();
+        m.commit_update(0, t, 1);
+        let t = m.begin();
+        m.commit_update(1, t, 1);
+        let t = m.begin();
+        m.commit_size(t, 2);
+        let t = m.begin();
+        m.commit_update(0, t, -1);
+        let t = m.begin();
+        m.commit_size(t, 1);
+        let report = m.verify();
+        assert!(report.is_ok(), "{:?}", report.violations);
+        assert_eq!(report.updates, 3);
+        assert_eq!(report.sizes_checked, 2);
+        assert_eq!(report.final_net, 1);
+        // An impossible reading is caught.
+        let t = m.begin();
+        m.commit_size(t, 5);
+        assert!(!m.verify().is_ok());
     }
 
     #[test]

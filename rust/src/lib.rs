@@ -92,6 +92,20 @@
 //!   a sampled in-server monitor (`--monitor-sample`) checks live
 //!   windows of traffic against a `size_exact` anchor, dumping minimized
 //!   repros of any unjustified size to `artifacts/`.
+//! * [`shardstore`] — the **sharded store subsystem**: the key space
+//!   partitioned over S independent hash-table shards (deterministic
+//!   [`shardstore::route`] hash routing; each shard owns its own
+//!   `SizeCore`, counter mirror and refresher) behind one
+//!   [`set_api::ConcurrentSet`] face, with a cluster-wide
+//!   [`shardstore::SizeAggregator`] — the arbiter's combining protocol
+//!   applied one level up. `global_exact()` is a two-phase fan-out
+//!   collect justified by overlapping per-shard intervals,
+//!   `global_recent(d)` composes published views under
+//!   `age = max(per-shard ages) <= d`, and the server's admission
+//!   control grows a second tier: per-shard watermarks shed only the
+//!   hot shard's `PUT`s (`ERR OVERLOAD shard=<i>`) under zipfian skew
+//!   (`--key-dist zipf:<theta>`), while `kv_server --store-shards`
+//!   mounts the whole thing.
 //! * [`faults`] — the deterministic **chaos plane** (cargo feature
 //!   `faults`; compiled to zero-cost no-ops otherwise): seeded injection
 //!   sites through the size protocol and the server fire delays, yields,
@@ -131,6 +145,7 @@ pub mod rng;
 pub mod runtime;
 pub mod server;
 pub mod set_api;
+pub mod shardstore;
 pub mod size;
 pub mod skiplist;
 pub mod snapshot;

@@ -15,8 +15,11 @@
 //!   size-providing policy under the chaos fault plane (`--fault-seed`,
 //!   `--seeds`, `--ops`, `--structure NAME|all`), check each recorded
 //!   history for size-linearizability, and dump minimized repros for any
-//!   violation to `--dump-dir` (default `artifacts/`). Build with
-//!   `--features faults` for actual fault injection.
+//!   violation to `--dump-dir` (default `artifacts/`). Ends with a
+//!   fault-site coverage table (fires per armed site, including a short
+//!   server drive for the server-only sites); any armed site that never
+//!   fired fails the run. Build with `--features faults` for actual
+//!   fault injection.
 //!
 //! Figure reproductions live in `cargo bench` targets (see DESIGN.md §4).
 
@@ -285,7 +288,11 @@ fn cmd_verify(args: &Args) {
     let lin2 = fig2_anomalies(&lin, rounds);
     println!("  linearizable : {lin2}");
 
-    assert_eq!(lin1 + lin2, 0, "the transformed structure must never misreport");
+    assert_eq!(
+        lin1 + lin2,
+        0,
+        "the transformed structure must never misreport"
+    );
     println!("verify OK: methodology exhibits no anomalies");
 }
 
@@ -391,11 +398,21 @@ fn dump_repro(
         let core = minimize(updates, &v.event);
         let _ = writeln!(body, "  minimized repro ({} updates):", core.len());
         for u in &core {
-            let _ = writeln!(body, "  update delta={:+} window=[{}, {}]", u.delta, u.inv, u.resp);
+            let _ = writeln!(
+                body,
+                "  update delta={:+} window=[{}, {}]",
+                u.delta,
+                u.inv,
+                u.resp
+            );
         }
     }
     if violations.len() > 3 {
-        let _ = writeln!(body, "# ... {} more violations elided", violations.len() - 3);
+        let _ = writeln!(
+            body,
+            "# ... {} more violations elided",
+            violations.len() - 3
+        );
     }
     let _ = std::fs::create_dir_all(dir);
     let path = format!("{dir}/fuzz-{tag}-{seed:#x}.txt");
@@ -456,6 +473,37 @@ fn fuzz_naive_teeth(seed: u64, dump_dir: &str) -> Option<String> {
     Some(dump_repro(dump_dir, "naive-fig2", seed, &updates, &report.violations))
 }
 
+/// Exercise the fault sites the structure sweep cannot reach — handler
+/// dispatch, connection writes, and the refresher daemon — by driving a
+/// real server (and a 1ms refresher) under the chaos plane, so the
+/// coverage gate can hold *every* armed site to "fired at least once".
+fn fuzz_cover_server_sites(seed: u64) {
+    use concurrent_size::server::{BlockingClient, Server, ServerConfig};
+    let _guard = faults::install(FaultPlane::chaos(seed));
+    let store: Arc<dyn ConcurrentSet> = Arc::from(
+        bench_util::make_set("hashtable", PolicyKind::Linearizable, 256).expect("hashtable"),
+    );
+    store.set_refresh_period(Some(Duration::from_millis(1)));
+    let config = ServerConfig {
+        handlers: 2,
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind fuzz server");
+    let mut client = BlockingClient::connect(server.local_addr());
+    for k in 1..=200u64 {
+        client.cmd(format!("PUT {k}"));
+        if k % 3 == 0 {
+            client.cmd(format!("DEL {k}"));
+        }
+        if k % 7 == 0 {
+            client.cmd("SIZE");
+        }
+    }
+    // Let the refresher tick through a few dozen armed wakes.
+    std::thread::sleep(Duration::from_millis(40));
+    store.set_refresh_period(None);
+}
+
 fn cmd_fuzz(args: &Args) {
     let seeds = args.get_usize("seeds", 2);
     let base_seed = args.get_u64("fault-seed", 0xC1A05);
@@ -480,6 +528,7 @@ fn cmd_fuzz(args: &Args) {
         );
     }
 
+    let fires_at_start = faults::fire_counts();
     let mut failures = 0usize;
     for round in 0..seeds {
         let seed = base_seed.wrapping_add(round as u64 * 0x9E37_79B9);
@@ -545,6 +594,34 @@ fn cmd_fuzz(args: &Args) {
             failures += 1;
         }
     }
+
+    // Coverage gate: every site the chaos profile arms must have fired
+    // at least once across the run, or the schedule silently stopped
+    // reaching part of the protocol. The server drive covers the three
+    // sites (handler dispatch, conn writes, refresher ticks) the direct
+    // structure sweep cannot hit.
+    if faults::COMPILED {
+        fuzz_cover_server_sites(base_seed);
+        let fired = faults::fire_counts();
+        let armed = FaultPlane::chaos(base_seed).armed_sites();
+        let mut uncovered = 0usize;
+        println!("fuzz: fault-site coverage (fires this run):");
+        for site in armed {
+            let fires = fired[site as usize] - fires_at_start[site as usize];
+            let mark = if fires == 0 { "  <-- NEVER FIRED" } else { "" };
+            println!("  {:<20} {fires}{mark}", site.label());
+            if fires == 0 {
+                uncovered += 1;
+            }
+        }
+        if uncovered > 0 {
+            eprintln!("fuzz: {uncovered} armed site(s) never fired");
+            failures += uncovered;
+        }
+    } else {
+        println!("fuzz: fault-site coverage n/a (faults not compiled in)");
+    }
+
     if failures > 0 {
         eprintln!("fuzz: {failures} failure(s)");
         std::process::exit(1);

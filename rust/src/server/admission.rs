@@ -38,9 +38,18 @@ impl Watermarks {
     /// `high` — both are configuration errors worth failing loudly on
     /// (CLI surfaces validate first and exit 2 instead).
     pub fn new(high: i64, low: i64) -> Self {
-        assert!(high >= 0, "admission high watermark must be >= 0, got {high}");
-        assert!(low <= high, "admission low watermark {low} above high {high}");
-        Self { high, low: low.max(0) }
+        assert!(
+            high >= 0,
+            "admission high watermark must be >= 0, got {high}"
+        );
+        assert!(
+            low <= high,
+            "admission low watermark {low} above high {high}"
+        );
+        Self {
+            high,
+            low: low.max(0),
+        }
     }
 }
 
@@ -149,7 +158,10 @@ mod tests {
         assert!(a.shedding());
         // Hysteresis: anywhere in (low, high) stays shedding.
         for est in [9, 7, 6] {
-            assert!(!a.admit(Some(est)), "est={est} inside the band must stay shed");
+            assert!(
+                !a.admit(Some(est)),
+                "est={est} inside the band must stay shed"
+            );
         }
         assert_eq!(a.shed_count(), 4);
     }

@@ -328,7 +328,11 @@ mod tests {
         // whose \n has not arrived; past that, reject.
         let mut lb = LineBuffer::default();
         lb.push(&[b'x'; MAX_LINE + 1]);
-        assert_eq!(lb.next_line(), None, "could still be a max-length CRLF line");
+        assert_eq!(
+            lb.next_line(),
+            None,
+            "could still be a max-length CRLF line"
+        );
         lb.push(b"x");
         assert_eq!(lb.next_line(), Some(Err(LineTooLong)));
         // Exactly one error per overlong line: the tail of the same line

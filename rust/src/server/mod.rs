@@ -94,8 +94,15 @@ pub struct ServerConfig {
     /// Live-connection ceiling; beyond it new clients get `ERR server
     /// full` and are dropped instead of exhausting fds.
     pub max_conns: usize,
-    /// Admission watermarks; `None` admits everything.
+    /// Global admission watermarks on the store-wide size estimate;
+    /// `None` admits everything.
     pub admission: Option<Watermarks>,
+    /// Per-shard admission watermarks (the second tier): one gate per
+    /// store shard, each fed that shard's `shard_estimate`, shedding
+    /// only the hot shard's `PUT`s with `ERR OVERLOAD shard=<i>`.
+    /// `None` (default) disables the tier; on a monolithic store it
+    /// degenerates to one gate over the whole estimate.
+    pub shard_admission: Option<Watermarks>,
     /// Reactor idle behavior.
     pub idle: IdleStrategy,
     /// Per-request handler deadline (`--request-timeout-ms`, 0 = off):
@@ -120,6 +127,7 @@ impl Default for ServerConfig {
             handlers: 16,
             max_conns: 4096,
             admission: None,
+            shard_admission: None,
             idle: IdleStrategy::Sleep(IDLE_NAP),
             request_timeout: Some(Duration::from_secs(30)),
             conn_idle: None,
@@ -131,33 +139,17 @@ impl Default for ServerConfig {
 impl ServerConfig {
     /// Build from CLI flags: `--workers N`, `--max-conns N`,
     /// `--admission-high N [--admission-low N]` (low defaults to half of
-    /// high; low alone is an error), `--reactor sleep|spin`,
+    /// high; low alone is an error),
+    /// `--shard-admission-high N [--shard-admission-low N]` (same
+    /// convention, applied per store shard), `--reactor sleep|spin`,
     /// `--request-timeout-ms N` (0 disables), `--conn-idle-ms N`
     /// (0 disables), `--monitor-sample N` (0 disables). `Err` carries the
     /// usage message.
     pub fn from_args(args: &Args) -> Result<Self, String> {
         let defaults = Self::default();
-        let high = args.get_opt_u64("admission-high");
-        let low = args.get_opt_u64("admission-low");
-        let admission = match (high, low) {
-            (None, None) => None,
-            (None, Some(_)) => {
-                return Err("--admission-low needs --admission-high".into());
-            }
-            (Some(high), low) => {
-                let high = i64::try_from(high).map_err(|_| "--admission-high too large")?;
-                let low = match low {
-                    Some(low) => i64::try_from(low).map_err(|_| "--admission-low too large")?,
-                    None => high / 2,
-                };
-                if low > high {
-                    return Err(format!(
-                        "--admission-low {low} must not exceed --admission-high {high}"
-                    ));
-                }
-                Some(Watermarks::new(high, low))
-            }
-        };
+        let admission = Self::watermarks_from(args, "admission-high", "admission-low")?;
+        let shard_admission =
+            Self::watermarks_from(args, "shard-admission-high", "shard-admission-low")?;
         let idle = match args.get("reactor") {
             None => defaults.idle,
             Some(s) => IdleStrategy::parse(s)
@@ -172,11 +164,43 @@ impl ServerConfig {
             handlers: args.get_usize("workers", defaults.handlers),
             max_conns: args.get_usize("max-conns", defaults.max_conns),
             admission,
+            shard_admission,
             idle,
             request_timeout: millis_knob("request-timeout-ms", defaults.request_timeout),
             conn_idle: millis_knob("conn-idle-ms", defaults.conn_idle),
             monitor_sample: args.get_opt_u64("monitor-sample").unwrap_or(defaults.monitor_sample),
         })
+    }
+
+    /// Parse one `--<high> N [--<low> N]` watermark pair: low defaults to
+    /// half of high, low alone is an error — the shared convention for
+    /// both admission tiers.
+    fn watermarks_from(
+        args: &Args,
+        high_flag: &str,
+        low_flag: &str,
+    ) -> Result<Option<Watermarks>, String> {
+        let high = args.get_opt_u64(high_flag);
+        let low = args.get_opt_u64(low_flag);
+        match (high, low) {
+            (None, None) => Ok(None),
+            (None, Some(_)) => Err(format!("--{low_flag} needs --{high_flag}")),
+            (Some(high), low) => {
+                let high = i64::try_from(high).map_err(|_| format!("--{high_flag} too large"))?;
+                let low = match low {
+                    Some(low) => {
+                        i64::try_from(low).map_err(|_| format!("--{low_flag} too large"))?
+                    }
+                    None => high / 2,
+                };
+                if low > high {
+                    return Err(format!(
+                        "--{low_flag} {low} must not exceed --{high_flag} {high}"
+                    ));
+                }
+                Ok(Some(Watermarks::new(high, low)))
+            }
+        }
     }
 }
 
@@ -192,10 +216,17 @@ pub struct ServerStats {
     pub handlers: usize,
     /// Connections accepted over the server's lifetime.
     pub accepted: u64,
-    /// `PUT`s shed by admission control.
+    /// `PUT`s shed by the global admission tier.
     pub shed: u64,
-    /// `false` while admission control is shedding.
+    /// `false` while the global admission tier is shedding.
     pub admitting: bool,
+    /// Store shards behind this server (1 for a monolithic store).
+    pub store_shards: usize,
+    /// `PUT`s shed by the per-shard admission tier, summed over shards.
+    pub shard_shed: u64,
+    /// Fault-plane injections fired so far, summed over all sites (0
+    /// unless the `faults` feature is compiled and a plane is armed).
+    pub fault_fires: u64,
     /// Requests answered `ERR TIMEOUT` by the deadline sweep.
     pub timeouts: u64,
     /// Handler panics contained (`ERR PANIC`) or survived by respawn.
@@ -217,11 +248,25 @@ pub(crate) struct Shared {
     pub panics: AtomicU64,
     pub reaped: AtomicU64,
     pub admission: Option<Admission>,
+    /// Per-shard admission gates (second tier); empty when disabled.
+    /// `shard_gates[i]` guards `PUT`s routed to store shard `i`.
+    pub shard_gates: Box<[Admission]>,
+    /// `store.store_shards()` cached at bind time for `STATS`.
+    pub store_shards: usize,
     pub monitor: Option<Arc<ServerMonitor>>,
 }
 
 impl Shared {
-    fn new(admission: Option<Watermarks>, monitor: Option<Arc<ServerMonitor>>) -> Self {
+    fn new(
+        admission: Option<Watermarks>,
+        shard_admission: Option<Watermarks>,
+        store_shards: usize,
+        monitor: Option<Arc<ServerMonitor>>,
+    ) -> Self {
+        let shard_gates = match shard_admission {
+            Some(marks) => (0..store_shards).map(|_| Admission::new(marks)).collect(),
+            None => Box::default(),
+        };
         Self {
             stop: AtomicBool::new(false),
             live: AtomicUsize::new(0),
@@ -232,6 +277,8 @@ impl Shared {
             panics: AtomicU64::new(0),
             reaped: AtomicU64::new(0),
             admission: admission.map(Admission::new),
+            shard_gates,
+            store_shards,
             monitor,
         }
     }
@@ -245,6 +292,9 @@ impl Shared {
             accepted: self.accepted.load(SeqCst),
             shed: self.admission.as_ref().map_or(0, Admission::shed_count),
             admitting: self.admission.as_ref().is_none_or(|a| !a.shedding()),
+            store_shards: self.store_shards,
+            shard_shed: self.shard_gates.iter().map(Admission::shed_count).sum(),
+            fault_fires: faults::fire_counts().iter().sum(),
             timeouts: self.timeouts.load(SeqCst),
             panics: self.panics.load(SeqCst),
             reaped: self.reaped.load(SeqCst),
@@ -279,7 +329,12 @@ impl Server {
         let monitor = (config.monitor_sample > 0).then(|| {
             Arc::new(ServerMonitor::new(config.monitor_sample, handlers as i64, ARTIFACT_DIR))
         });
-        let shared = Arc::new(Shared::new(config.admission, monitor));
+        let shared = Arc::new(Shared::new(
+            config.admission,
+            config.shard_admission,
+            store.store_shards(),
+            monitor,
+        ));
 
         let (job_tx, job_rx) = channel::<Job>();
         let (done_tx, done_rx) = channel::<Completion>();
@@ -468,7 +523,11 @@ fn handler_loop(ctx: &HandlerCtx) {
             Err(_) => return,
         };
         let reply = execute_contained(ctx, job.req);
-        let completion = Completion { token: job.token, req_id: job.req_id, reply };
+        let completion = Completion {
+            token: job.token,
+            req_id: job.req_id,
+            reply,
+        };
         if ctx.done.send(completion).is_err() {
             return;
         }
@@ -562,15 +621,37 @@ mod tests {
     }
 
     #[test]
+    fn config_parses_the_shard_admission_tier() {
+        let cfg = ServerConfig::from_args(&args(
+            "--admission-high 1000 --shard-admission-high 80 --shard-admission-low 20",
+        ))
+        .unwrap();
+        assert_eq!(cfg.admission, Some(Watermarks::new(1000, 500)));
+        assert_eq!(cfg.shard_admission, Some(Watermarks::new(80, 20)));
+        // Low defaults to half of high, independently of the global tier.
+        let cfg = ServerConfig::from_args(&args("--shard-admission-high 80")).unwrap();
+        assert_eq!(cfg.admission, None);
+        assert_eq!(cfg.shard_admission, Some(Watermarks::new(80, 40)));
+    }
+
+    #[test]
     fn config_rejects_bad_combinations() {
         assert!(ServerConfig::from_args(&args("--admission-low 5")).is_err());
         assert!(ServerConfig::from_args(&args("--admission-high 5 --admission-low 9")).is_err());
+        assert!(ServerConfig::from_args(&args("--shard-admission-low 5")).is_err());
+        assert!(ServerConfig::from_args(&args(
+            "--shard-admission-high 5 --shard-admission-low 9"
+        ))
+        .is_err());
         assert!(ServerConfig::from_args(&args("--reactor epoll")).is_err());
     }
 
     #[test]
     fn idle_strategy_spellings() {
-        assert_eq!(IdleStrategy::parse("sleep"), Some(IdleStrategy::Sleep(IDLE_NAP)));
+        assert_eq!(
+            IdleStrategy::parse("sleep"),
+            Some(IdleStrategy::Sleep(IDLE_NAP))
+        );
         assert_eq!(IdleStrategy::parse("spin"), Some(IdleStrategy::Spin));
         assert_eq!(IdleStrategy::parse("poll"), None);
     }
@@ -581,7 +662,10 @@ mod tests {
             crate::bench_util::make_set("hashtable", crate::cli::PolicyKind::Linearizable, 64)
                 .unwrap(),
         );
-        let config = ServerConfig { handlers: 10_000, ..Default::default() };
+        let config = ServerConfig {
+            handlers: 10_000,
+            ..Default::default()
+        };
         let server = Server::bind("127.0.0.1:0", store, config).unwrap();
         assert!(server.handler_threads() <= thread_id::capacity() / 2);
         assert!(server.local_addr().port() != 0);

@@ -162,7 +162,11 @@ impl ServerMonitor {
         let resp = self.nanos();
         {
             let mut w = self.lock();
-            w.anchor = Some(SizeEvent { inv, resp, value: view.value });
+            w.anchor = Some(SizeEvent {
+                inv,
+                resp,
+                value: view.value,
+            });
             w.updates.clear();
             w.sizes.clear();
         }
@@ -238,7 +242,10 @@ impl ServerMonitor {
         let path = self.dump_dir.join(format!("monitor-violation-{seq}-{}.txt", self.nanos()));
         let _ = std::fs::create_dir_all(&self.dump_dir);
         if std::fs::write(&path, body).is_ok() {
-            eprintln!("server monitor: violation repro dumped to {}", path.display());
+            eprintln!(
+                "server monitor: violation repro dumped to {}",
+                path.display()
+            );
         }
     }
 }

@@ -4,9 +4,10 @@
 //!
 //! | command      | reply                                                |
 //! |--------------|------------------------------------------------------|
-//! | `PUT k`      | `1`/`0`, or `ERR OVERLOAD` when admission sheds      |
+//! | `PUT k`      | `1`/`0`; `ERR OVERLOAD` when the global gate sheds,  |
+//! |              | `ERR OVERLOAD shard=<i>` when only `k`'s shard does  |
 //! | `DEL k`      | `1`/`0`                                              |
-//! | `HAS k`      | `1`/`0`                                              |
+//! | `HAS k`      | `1`/`0` (`GET k` is an alias — set semantics)        |
 //! | `SIZE`       | exact linearizable count (combining arbiter)         |
 //! | `SIZE~ [ms]` | count at most `ms` (default 50) milliseconds stale   |
 //! | `SIZE?`      | O(shards) bounded-lag estimate (never negative)      |
@@ -37,9 +38,17 @@ pub const DEFAULT_RECENT_MS: u64 = 50;
 /// instead of growing an unbounded buffer.
 pub const MAX_LINE: usize = 256;
 
-/// Reply when admission control sheds a `PUT` (the `429`-style signal
-/// clients back off on).
+/// Reply when the global admission gate sheds a `PUT` (the `429`-style
+/// signal clients back off on).
 pub const OVERLOAD_REPLY: &str = "ERR OVERLOAD";
+
+/// Reply when only the routed shard's gate sheds a `PUT`: the client can
+/// keep writing keys that live on other shards (and
+/// `harness::client_swarm` counts any `ERR OVERLOAD` prefix as a shed,
+/// not a protocol error).
+pub fn overload_shard_reply(shard: usize) -> String {
+    format!("{OVERLOAD_REPLY} shard={shard}")
+}
 
 /// Reply for a line longer than [`MAX_LINE`]: the offending line is
 /// discarded and parsing resyncs at the next newline — the connection
@@ -104,7 +113,9 @@ pub fn parse(line: &str) -> Result<Request, String> {
     match (parts.next(), parts.next()) {
         (Some("PUT"), k) => Ok(Request::Put(parse_key(k)?)),
         (Some("DEL"), k) => Ok(Request::Del(parse_key(k)?)),
-        (Some("HAS"), k) => Ok(Request::Has(parse_key(k)?)),
+        // GET is an alias for HAS: sets carry no values (yet — see the
+        // dictionaries item in ROADMAP.md), so "get k" answers presence.
+        (Some("HAS"), k) | (Some("GET"), k) => Ok(Request::Has(parse_key(k)?)),
         (Some("SIZE"), _) => Ok(Request::Size),
         (Some("SIZE~"), ms) => match ms.map_or(Ok(DEFAULT_RECENT_MS), str::parse) {
             Ok(ms) => Ok(Request::SizeRecent(ms)),
@@ -163,7 +174,8 @@ pub fn estimate_reply(store: &dyn ConcurrentSet) -> String {
 pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
     format!(
         "conns={} peak={} queue={} handlers={} accepted={} shed={} admitting={} \
-         timeouts={} panics={} reaped={} monitor_violations={} \
+         store_shards={} shard_shed={} timeouts={} panics={} reaped={} \
+         monitor_violations={} faults={} \
          rounds={} adoptions={} recent_hits={} recent_refreshes={} daemon_rounds={} \
          daemon_stalls={} fallbacks={} retry_budget={}",
         server.live_conns,
@@ -173,10 +185,13 @@ pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
         server.accepted,
         server.shed,
         u8::from(server.admitting),
+        server.store_shards,
+        server.shard_shed,
         server.timeouts,
         server.panics,
         server.reaped,
         server.monitor_violations,
+        server.fault_fires,
         size.rounds,
         size.adoptions,
         size.recent_hits,
@@ -217,6 +232,8 @@ mod tests {
         assert_eq!(parse("PUT 7"), Ok(Request::Put(7)));
         assert_eq!(parse("DEL 7"), Ok(Request::Del(7)));
         assert_eq!(parse("HAS 0"), Ok(Request::Has(0)));
+        assert_eq!(parse("GET 0"), Ok(Request::Has(0)), "GET aliases HAS");
+        assert_eq!(parse("GET x"), Err("ERR bad key".into()));
         assert_eq!(parse("SIZE"), Ok(Request::Size));
         assert_eq!(parse("SIZE~"), Ok(Request::SizeRecent(DEFAULT_RECENT_MS)));
         assert_eq!(parse("SIZE~ 5"), Ok(Request::SizeRecent(5)));
@@ -284,10 +301,13 @@ mod tests {
             accepted: 310,
             shed: 7,
             admitting: true,
+            store_shards: 4,
+            shard_shed: 11,
             timeouts: 2,
             panics: 1,
             reaped: 5,
             monitor_violations: 0,
+            fault_fires: 0,
         };
         let line = stats_reply(&server, &ArbiterStats::default());
         let stats = parse_stats(&line).expect("round-trip parse");
@@ -298,10 +318,13 @@ mod tests {
             "handlers",
             "shed",
             "admitting",
+            "store_shards",
+            "shard_shed",
             "timeouts",
             "panics",
             "reaped",
             "monitor_violations",
+            "faults",
             "daemon_rounds",
             "daemon_stalls",
         ] {
@@ -310,10 +333,19 @@ mod tests {
         assert_eq!(stats["peak"], 300);
         assert_eq!(stats["admitting"], 1);
         assert_eq!(stats["shed"], 7);
+        assert_eq!(stats["store_shards"], 4);
+        assert_eq!(stats["shard_shed"], 11);
         assert_eq!(stats["timeouts"], 2);
         assert_eq!(stats["panics"], 1);
         assert_eq!(stats["reaped"], 5);
         assert_eq!(stats["monitor_violations"], 0);
+    }
+
+    #[test]
+    fn shard_overload_reply_keeps_the_overload_prefix() {
+        let reply = overload_shard_reply(3);
+        assert_eq!(reply, "ERR OVERLOAD shard=3");
+        assert!(reply.starts_with(OVERLOAD_REPLY));
     }
 
     #[test]

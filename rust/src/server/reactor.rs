@@ -19,8 +19,10 @@
 //! exceptions are `SIZE?`/`STATS` (answered inline — they only read
 //! counters, and must stay live when every handler is wedged in a
 //! blocking `SIZE`) and `PUT`s shed by admission control (answered
-//! inline with [`proto::OVERLOAD_REPLY`] — shedding that queued behind
-//! the saturated pool would defeat its purpose).
+//! inline with [`proto::OVERLOAD_REPLY`], or the per-shard
+//! `ERR OVERLOAD shard=<i>` variant when the second tier trips —
+//! shedding that queued behind the saturated pool would defeat its
+//! purpose).
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Write};
@@ -223,10 +225,24 @@ impl Reactor {
                     }
                     Pending::Req(req) => {
                         if req.grows_store() {
+                            // Tier 1: global watermarks on the aggregate
+                            // estimate — the whole store is too full.
                             if let Some(gate) = &self.shared.admission {
                                 if !gate.admit(self.store.size_estimate()) {
                                     conn.enqueue_reply(proto::OVERLOAD_REPLY);
                                     continue;
+                                }
+                            }
+                            // Tier 2: per-shard watermarks — shed only the
+                            // hot shard's PUTs while its siblings admit.
+                            if !self.shared.shard_gates.is_empty() {
+                                if let Request::Put(key) = req {
+                                    let shard = self.store.shard_of(key);
+                                    let gate = &self.shared.shard_gates[shard];
+                                    if !gate.admit(self.store.shard_estimate(shard)) {
+                                        conn.enqueue_reply(&proto::overload_shard_reply(shard));
+                                        continue;
+                                    }
                                 }
                             }
                         }
@@ -238,7 +254,10 @@ impl Reactor {
                             break;
                         }
                         self.shared.queue.fetch_add(1, SeqCst);
-                        conn.in_flight = Some(InFlight { id: req_id, since: Instant::now() });
+                        conn.in_flight = Some(InFlight {
+                            id: req_id,
+                            since: Instant::now(),
+                        });
                     }
                 }
             }

@@ -86,6 +86,34 @@ pub trait ConcurrentSet: Send + Sync {
     fn size_stats(&self) -> Option<ArbiterStats> {
         None
     }
+
+    /// Number of independent store shards behind this set. Monolithic
+    /// structures are one shard; [`crate::shardstore::ShardStore`]
+    /// overrides with its partition count. The server's per-shard
+    /// admission tier sizes its watermark gates from this.
+    fn store_shards(&self) -> usize {
+        1
+    }
+
+    /// Which shard `key` routes to, in `[0, store_shards())`. Total and
+    /// deterministic: the same key always answers the same shard for the
+    /// lifetime of the structure. Monolithic structures route everything
+    /// to shard 0.
+    fn shard_of(&self, key: u64) -> usize {
+        let _ = key;
+        0
+    }
+
+    /// [`Self::size_estimate`] restricted to one shard (same clamp
+    /// contract). For a monolithic structure shard 0 is the whole set;
+    /// out-of-range shards answer `None`.
+    fn shard_estimate(&self, shard: usize) -> Option<i64> {
+        if shard == 0 {
+            self.size_estimate()
+        } else {
+            None
+        }
+    }
 }
 
 /// Largest insertable key (`u64::MAX` is the tail sentinel).

@@ -1,0 +1,66 @@
+//! Monomorphizing factory for [`ShardStore`] — the sharded counterpart
+//! of [`crate::bench_util::make_set_opts`], so every CLI surface
+//! (`kv_server --store-shards`, the `shard_scale` ablation scenario,
+//! tests) builds the same store the same way.
+
+use crate::cli::PolicyKind;
+use crate::set_api::ConcurrentSet;
+use crate::size::{
+    HandshakeSize, LinearizableSize, LockSize, NaiveSize, NoSize, OptimisticSize, SizeOpts,
+};
+use crate::MAX_THREADS;
+
+use super::ShardStore;
+
+/// Build a `shards`-way [`ShardStore`] of hash tables instantiated with
+/// `policy`, sized for `expected` total elements. `None` if `shards` is
+/// zero (callers surface `--store-shards auto|N` and `auto` resolves via
+/// [`crate::size::detect_shards`] before reaching here).
+pub fn make_shard_store(
+    policy: PolicyKind,
+    shards: usize,
+    expected: usize,
+    opts: SizeOpts,
+) -> Option<Box<dyn ConcurrentSet>> {
+    if shards == 0 {
+        return None;
+    }
+    let t = MAX_THREADS;
+    Some(match policy {
+        PolicyKind::Baseline => Box::new(ShardStore::<NoSize>::new(t, shards, expected, opts)),
+        PolicyKind::Linearizable => {
+            Box::new(ShardStore::<LinearizableSize>::new(t, shards, expected, opts))
+        }
+        PolicyKind::Naive => Box::new(ShardStore::<NaiveSize>::new(t, shards, expected, opts)),
+        PolicyKind::Lock => Box::new(ShardStore::<LockSize>::new(t, shards, expected, opts)),
+        PolicyKind::Handshake => {
+            Box::new(ShardStore::<HandshakeSize>::new(t, shards, expected, opts))
+        }
+        PolicyKind::Optimistic => {
+            Box::new(ShardStore::<OptimisticSize>::new(t, shards, expected, opts))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_covers_every_policy() {
+        for policy in PolicyKind::ALL {
+            let store = make_shard_store(policy, 3, 256, SizeOpts::default().with_shards(2))
+                .unwrap_or_else(|| panic!("no shard store for {policy:?}"));
+            assert_eq!(store.store_shards(), 3);
+            assert!(store.insert(11), "{policy:?} insert");
+            assert!(store.contains(11));
+            assert!(store.shard_of(11) < 3);
+            if policy.provides_size() {
+                assert_eq!(store.size(), Some(1), "{policy:?} aggregated size");
+            } else {
+                assert_eq!(store.size(), None, "{policy:?} must stay sizeless");
+            }
+        }
+        assert!(make_shard_store(PolicyKind::Linearizable, 0, 64, SizeOpts::default()).is_none());
+    }
+}

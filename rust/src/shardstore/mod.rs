@@ -1,0 +1,279 @@
+//! Sharded store subsystem: S independent hash-table shards behind one
+//! [`ConcurrentSet`] face, with a cluster-wide size aggregator.
+//!
+//! The paper makes `size()` wait-free and O(threads) *per structure*;
+//! this module is the scale step above it. The key space is partitioned
+//! by [`route`] over `S` shards, each a full [`HashTableSet`] with its
+//! own `Arc<SizeCore>` (policy + arbiter), sharded counter mirror and
+//! [`SizeRefresher`] slot — so updates on different shards share no size
+//! metadata at all, and per-shard contention is the only contention.
+//! Reads of the global size go through the [`SizeAggregator`] ("arbiter
+//! of arbiters"): `global_exact()` is a two-phase fan-out collect whose
+//! sum is justified by overlapping per-shard linearization intervals,
+//! `global_recent(d)` composes the EBR-published per-shard views under
+//! `age = max(per-shard ages) <= d`, and `global_stats()` merges the
+//! per-shard [`crate::size::ArbiterStats`].
+//!
+//! The server mounts a [`ShardStore`] like any other structure (the
+//! [`ConcurrentSet`] defaults `store_shards`/`shard_of`/`shard_estimate`
+//! are overridden here), which is what the reactor's **two-tier
+//! admission** keys off: global watermarks on the aggregate estimate,
+//! plus per-shard watermarks that shed only the hot shard's `PUT`s
+//! (`ERR OVERLOAD shard=<i>`), so zipfian skew degrades one shard
+//! instead of the whole server.
+//!
+//! [`SizeRefresher`]: crate::size::SizeRefresher
+
+mod aggregator;
+mod factory;
+mod route;
+
+pub use aggregator::SizeAggregator;
+pub use factory::make_shard_store;
+pub use route::route;
+
+use std::time::Duration;
+
+use crate::hashtable::HashTableSet;
+use crate::set_api::ConcurrentSet;
+use crate::size::{ArbiterStats, SizeOpts, SizePolicy, SizeView};
+
+/// `S` independent [`HashTableSet`] shards under hash routing.
+pub struct ShardStore<P: SizePolicy> {
+    shards: Box<[HashTableSet<P>]>,
+}
+
+impl<P: SizePolicy> ShardStore<P> {
+    /// Build `shards` partitions sized for `expected` total elements
+    /// (each shard's table gets `expected / shards`, floored at 16).
+    /// `opts` (notably the `--size-shards` counter-mirror stripe count)
+    /// applies to every shard's own size subsystem.
+    ///
+    /// # Panics
+    /// If `shards == 0`.
+    pub fn new(max_threads: usize, shards: usize, expected: usize, opts: SizeOpts) -> Self {
+        assert!(shards > 0, "ShardStore needs at least one shard");
+        let per_shard = (expected / shards).max(16);
+        Self {
+            shards: (0..shards)
+                .map(|_| HashTableSet::with_opts(max_threads, per_shard, opts))
+                .collect(),
+        }
+    }
+
+    /// Number of shards (also [`ConcurrentSet::store_shards`]).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Direct access to shard `i` (tests, benches).
+    pub fn shard(&self, i: usize) -> &HashTableSet<P> {
+        &self.shards[i]
+    }
+
+    /// Where `key` lives: [`route`] over this store's shard count.
+    #[inline]
+    pub fn route(&self, key: u64) -> usize {
+        route(key, self.shards.len())
+    }
+
+    /// The cluster-wide size aggregator over this store's shards.
+    pub fn aggregator(&self) -> SizeAggregator<'_, P> {
+        SizeAggregator::new(&self.shards)
+    }
+
+    /// Sum of per-shard quiescent bucket walks (test oracle; only
+    /// meaningful with no concurrent updates).
+    pub fn quiescent_count(&self) -> usize {
+        self.shards.iter().map(|s| s.quiescent_count()).sum()
+    }
+}
+
+impl<P: SizePolicy> ConcurrentSet for ShardStore<P> {
+    fn insert(&self, k: u64) -> bool {
+        self.shards[self.route(k)].insert(k)
+    }
+
+    fn delete(&self, k: u64) -> bool {
+        self.shards[self.route(k)].delete(k)
+    }
+
+    fn contains(&self, k: u64) -> bool {
+        self.shards[self.route(k)].contains(k)
+    }
+
+    /// The aggregated exact size (two-phase collect). Unlike a monolithic
+    /// structure's `size()`, this is interval-justified rather than
+    /// linearizable — see the [`aggregator`] module docs.
+    fn size(&self) -> Option<i64> {
+        self.aggregator().global_exact().map(|v| v.value)
+    }
+
+    fn size_exact(&self) -> Option<SizeView> {
+        self.aggregator().global_exact()
+    }
+
+    fn size_recent(&self, max_staleness: Duration) -> Option<SizeView> {
+        self.aggregator().global_recent(max_staleness)
+    }
+
+    /// Sum of the per-shard O(stripes) estimates; `None` if any shard's
+    /// mirror is disabled. Each addend honors the never-negative clamp,
+    /// so the sum does too.
+    fn size_estimate(&self) -> Option<i64> {
+        let mut total = 0i64;
+        for shard in self.shards.iter() {
+            total += shard.size_estimate()?;
+        }
+        Some(total)
+    }
+
+    /// Fans the period out to every shard's refresher (one daemon per
+    /// shard); `true` iff every shard accepted.
+    fn set_refresh_period(&self, period: Option<Duration>) -> bool {
+        let mut all = true;
+        for shard in self.shards.iter() {
+            all &= shard.set_refresh_period(period);
+        }
+        all
+    }
+
+    fn size_stats(&self) -> Option<ArbiterStats> {
+        Some(self.aggregator().global_stats())
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "ShardStore[{}x{}]",
+            self.shards.len(),
+            self.shards[0].name()
+        )
+    }
+
+    fn store_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: u64) -> usize {
+        self.route(key)
+    }
+
+    fn shard_estimate(&self, shard: usize) -> Option<i64> {
+        self.shards.get(shard)?.size_estimate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::size::{LinearizableSize, NoSize};
+    use crate::MAX_THREADS;
+
+    fn store(shards: usize) -> ShardStore<LinearizableSize> {
+        ShardStore::new(
+            MAX_THREADS,
+            shards,
+            1 << 10,
+            SizeOpts::default().with_shards(2),
+        )
+    }
+
+    #[test]
+    fn routes_partition_the_key_space() {
+        let s = store(4);
+        for k in 1..=400u64 {
+            assert!(s.insert(k), "fresh key {k}");
+            assert!(s.contains(k));
+            // The key landed on exactly the routed shard.
+            let home = s.shard_of(k);
+            for i in 0..s.shards() {
+                assert_eq!(s.shard(i).contains(k), i == home, "key {k} shard {i}");
+            }
+        }
+        assert_eq!(s.size(), Some(400));
+        for k in 1..=400u64 {
+            assert!(s.delete(k));
+        }
+        assert_eq!(s.size(), Some(0));
+    }
+
+    #[test]
+    fn global_exact_agrees_with_quiesced_per_shard_sum() {
+        let s = store(5);
+        for k in 1..=321u64 {
+            s.insert(k);
+        }
+        let per_shard: i64 = (0..s.shards())
+            .map(|i| s.shard(i).size().expect("shard size"))
+            .sum();
+        let global = s.aggregator().global_exact().expect("global size");
+        assert_eq!(global.value, per_shard);
+        assert_eq!(global.value, 321);
+        assert_eq!(s.quiescent_count(), 321);
+    }
+
+    #[test]
+    fn global_recent_composes_the_staleness_bound() {
+        let s = store(3);
+        for k in 1..=50u64 {
+            s.insert(k);
+        }
+        let bound = Duration::from_millis(50);
+        let view = s.size_recent(bound).expect("recent view");
+        assert_eq!(view.value, 50);
+        assert!(view.age <= bound, "age {:?} over bound {bound:?}", view.age);
+    }
+
+    #[test]
+    fn estimates_and_stats_aggregate() {
+        let s = store(4);
+        for k in 1..=128u64 {
+            s.insert(k);
+        }
+        // Mirror is on (2 stripes) in every shard: quiescent sum is exact.
+        assert_eq!(s.size_estimate(), Some(128));
+        let per_shard: i64 = (0..s.shards()).filter_map(|i| s.shard_estimate(i)).sum();
+        assert_eq!(per_shard, 128);
+        assert_eq!(s.shard_estimate(99), None, "out-of-range shard");
+        let stats = s.size_stats().expect("aggregated stats");
+        assert!(stats.rounds > 0, "exact collects must have driven rounds");
+    }
+
+    #[test]
+    fn sizeless_policy_answers_none_but_still_counts_shards() {
+        let s: ShardStore<NoSize> = ShardStore::new(MAX_THREADS, 3, 64, SizeOpts::default());
+        assert!(s.insert(7));
+        assert_eq!(s.size(), None);
+        assert_eq!(s.size_exact(), None);
+        assert_eq!(s.size_recent(Duration::from_millis(5)), None);
+        assert_eq!(s.store_shards(), 3);
+        assert!(s.size_stats().is_some(), "stats stay present for telemetry");
+    }
+
+    #[test]
+    fn refresher_fans_out_to_every_shard() {
+        let s = store(2);
+        for k in 1..=10u64 {
+            s.insert(k);
+        }
+        assert!(s.set_refresh_period(Some(Duration::from_millis(1))));
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let stats = s.size_stats().unwrap();
+            // Every shard runs its own daemon; together they must drive
+            // at least one round each (merged counter >= shard count).
+            if stats.daemon_rounds >= 2 {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "daemons drove no rounds"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(
+            !s.set_refresh_period(None),
+            "stopped daemons report not-running"
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! Deterministic key → shard routing.
+//!
+//! The router is a pure function of `(key, shard_count)`: no per-store
+//! state, no randomization, so the reactor, the admission tier, tests and
+//! external clients all agree on where a key lives for the lifetime of a
+//! store. Keys are pre-mixed with the Fibonacci multiplier (the same
+//! spreader the hash table uses for buckets) so dense key ranges — the
+//! workload generator hands out `1..=r` — do not stripe across shards in
+//! lockstep with the table's own bucket choice.
+
+/// Which of `shards` partitions `key` routes to. Total (every `u64`
+/// answers) and stable (same inputs, same answer, on every call site).
+///
+/// # Panics
+/// Debug-asserts `shards > 0`; release builds with `shards == 0` would
+/// divide by zero, so the store constructor rejects that earlier.
+#[inline]
+pub fn route(key: u64, shards: usize) -> usize {
+    debug_assert!(shards > 0, "route: no shards to route to");
+    // Fibonacci spread, then a high-bits fold: the multiplier alone maps
+    // consecutive keys to consecutive strides, which `% shards` would
+    // turn back into a round-robin — fine for balance, but correlated
+    // with the per-shard table's own spreader. The xor-shift decorrelates.
+    let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let h = h ^ (h >> 29);
+    (h % shards as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_is_total_and_in_range() {
+        for shards in [1usize, 2, 3, 4, 7, 8, 64] {
+            for key in (0..1000u64).chain([u64::MAX - 1, u64::MAX / 2]) {
+                assert!(route(key, shards) < shards);
+            }
+        }
+    }
+
+    #[test]
+    fn route_is_stable() {
+        for key in 0..512u64 {
+            assert_eq!(route(key, 6), route(key, 6));
+        }
+    }
+
+    #[test]
+    fn route_spreads_a_dense_range() {
+        // The workload draws keys from a dense `1..=r`; every shard must
+        // see a healthy fraction of them (no empty or dominant shard).
+        let shards = 8;
+        let mut counts = vec![0usize; shards];
+        let total = 8000u64;
+        for key in 1..=total {
+            counts[route(key, shards)] += 1;
+        }
+        let expect = total as usize / shards;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                c > expect / 2 && c < expect * 2,
+                "shard {i} got {c}/{total} keys (expected ~{expect})"
+            );
+        }
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        for key in [0u64, 1, 42, u64::MAX] {
+            assert_eq!(route(key, 1), 0);
+        }
+    }
+}

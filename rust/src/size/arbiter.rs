@@ -116,6 +116,25 @@ pub struct ArbiterStats {
     pub retry_budget: u64,
 }
 
+impl ArbiterStats {
+    /// Fold another arbiter's telemetry into this one — the
+    /// [`crate::shardstore::SizeAggregator`] composes per-shard stats
+    /// into one cluster-wide line this way. Counters add; `retry_budget`
+    /// is a gauge, so the merge keeps the maximum.
+    pub fn merge(&self, other: &ArbiterStats) -> ArbiterStats {
+        ArbiterStats {
+            rounds: self.rounds + other.rounds,
+            adoptions: self.adoptions + other.adoptions,
+            recent_hits: self.recent_hits + other.recent_hits,
+            recent_refreshes: self.recent_refreshes + other.recent_refreshes,
+            daemon_rounds: self.daemon_rounds + other.daemon_rounds,
+            daemon_stalls: self.daemon_stalls + other.daemon_stalls,
+            fallbacks: self.fallbacks + other.fallbacks,
+            retry_budget: self.retry_budget.max(other.retry_budget),
+        }
+    }
+}
+
 /// The published result of one combine round.
 struct Published {
     value: i64,
@@ -528,7 +547,11 @@ mod tests {
         assert_eq!(a.stats().daemon_stalls, 1);
         // Stale publish while a fast daemon should have refreshed: stall.
         std::thread::sleep(Duration::from_millis(3));
-        a.recent_for_daemon(&p, Duration::from_millis(1), Some(Duration::from_micros(100)));
+        a.recent_for_daemon(
+            &p,
+            Duration::from_millis(1),
+            Some(Duration::from_micros(100)),
+        );
         assert_eq!(a.stats().daemon_stalls, 2);
     }
 

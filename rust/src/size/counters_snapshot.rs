@@ -77,8 +77,16 @@ impl CountersSnapshot {
         for cells in self.snapshot.iter() {
             let ins = cells[OpKind::Insert as usize].load(SeqCst);
             let del = cells[OpKind::Delete as usize].load(SeqCst);
-            debug_assert_ne!(ins, INVALID_CELL, "compute_size before collection completed");
-            debug_assert_ne!(del, INVALID_CELL, "compute_size before collection completed");
+            debug_assert_ne!(
+                ins,
+                INVALID_CELL,
+                "compute_size before collection completed"
+            );
+            debug_assert_ne!(
+                del,
+                INVALID_CELL,
+                "compute_size before collection completed"
+            );
             computed += ins as i64 - del as i64;
         }
         if early_check {

@@ -452,7 +452,11 @@ mod tests {
         let a = crate::size::UpdateInfo { tid: 1, counter: 1 }.pack();
         let b = crate::size::UpdateInfo { tid: 2, counter: 1 }.pack();
         assert_eq!(LinearizableSize::try_claim_delete(&slot, a), a);
-        assert_eq!(LinearizableSize::try_claim_delete(&slot, b), a, "loser adopts winner");
+        assert_eq!(
+            LinearizableSize::try_claim_delete(&slot, b),
+            a,
+            "loser adopts winner"
+        );
         assert_eq!(LinearizableSize::read_delete_info(&slot), a);
     }
 

@@ -4,8 +4,10 @@
 //! * **update-heavy** — 30% insert / 20% delete / 50% contains;
 //! * **read-heavy**   —  3% insert /  2% delete / 95% contains.
 //!
-//! Keys are drawn uniformly from `[1, r]` with `r = n·(i+d)/i`, the choice
-//! that keeps the structure's size stable around its initial fill `n`.
+//! Keys are drawn from `[1, r]` with `r = n·(i+d)/i`, the choice that
+//! keeps the structure's size stable around its initial fill `n` —
+//! uniformly by default, or zipfian ([`KeyDist::Zipf`], YCSB's skewed
+//! "hot keys" access pattern) for the sharded-store hot-shard scenarios.
 
 use crate::rng::Xoshiro256;
 use crate::set_api::ConcurrentSet;
@@ -60,23 +62,115 @@ pub fn key_range(initial_size: u64, mix: Mix) -> u64 {
     (initial_size * (i + d) / i).max(1)
 }
 
+/// How keys are drawn from `[1, key_range]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeyDist {
+    /// Every key equally likely (the paper's methodology).
+    Uniform,
+    /// Zipf-skewed ranks with exponent `theta` in `(0, 1)` (YCSB's
+    /// `ZipfianGenerator`; `0.99` is its default "hot keys" skew). Rank 0
+    /// is the hottest key; rank maps to key `rank + 1`.
+    Zipf(f64),
+}
+
+impl KeyDist {
+    /// Parse the CLI surface form: `uniform` or `zipf:<theta>` with
+    /// `theta` in `(0, 1)` exclusive (the YCSB approximation's domain).
+    pub fn parse(s: &str) -> Option<KeyDist> {
+        if s == "uniform" {
+            return Some(KeyDist::Uniform);
+        }
+        let theta = s.strip_prefix("zipf:")?.parse::<f64>().ok()?;
+        (theta > 0.0 && theta < 1.0).then_some(KeyDist::Zipf(theta))
+    }
+
+    /// The surface form back (`uniform` / `zipf:0.99`) for bench records.
+    pub fn label(&self) -> String {
+        match self {
+            KeyDist::Uniform => "uniform".to_string(),
+            KeyDist::Zipf(theta) => format!("zipf:{theta}"),
+        }
+    }
+}
+
+/// Zipfian rank sampler over `[0, n)` — the YCSB `ZipfianGenerator`
+/// approximation (Gray et al., "Quickly generating billion-record
+/// synthetic databases"): one O(n) harmonic precomputation, then O(1)
+/// deterministic draws from the caller's RNG.
+#[derive(Clone, Debug)]
+pub struct ZipfSampler {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+}
+
+impl ZipfSampler {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0, "zipf over an empty range");
+        assert!(
+            theta > 0.0 && theta < 1.0,
+            "zipf theta must be in (0, 1), got {theta}"
+        );
+        let zeta = |count: u64| (1..=count).map(|i| 1.0 / (i as f64).powf(theta)).sum::<f64>();
+        let zetan = zeta(n);
+        let zeta2 = zeta(2.min(n));
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Self {
+            n,
+            theta,
+            alpha: 1.0 / (1.0 - theta),
+            zetan,
+            eta,
+        }
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the most probable.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        let u = rng.gen_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1.min(self.n - 1);
+        }
+        let rank = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        rank.min(self.n - 1)
+    }
+}
+
 /// Per-thread deterministic stream of operations.
 pub struct OpStream {
     rng: Xoshiro256,
     mix: Mix,
     key_range: u64,
+    zipf: Option<ZipfSampler>,
 }
 
 impl OpStream {
+    /// Uniform keys (the paper's default).
     pub fn new(seed: u64, mix: Mix, key_range: u64) -> Self {
+        Self::with_dist(seed, mix, key_range, KeyDist::Uniform)
+    }
+
+    /// Explicit key distribution (`--key-dist uniform|zipf:<theta>`).
+    pub fn with_dist(seed: u64, mix: Mix, key_range: u64, dist: KeyDist) -> Self {
+        let zipf = match dist {
+            KeyDist::Uniform => None,
+            KeyDist::Zipf(theta) => Some(ZipfSampler::new(key_range, theta)),
+        };
         Self {
             rng: Xoshiro256::new(seed),
             mix,
             key_range,
+            zipf,
         }
     }
 
-    /// Next `(op, key)`; key uniform in `[1, key_range]`.
+    /// Next `(op, key)`; key in `[1, key_range]` per the distribution.
     #[inline]
     pub fn next(&mut self) -> (OpType, u64) {
         let p = self.rng.gen_range(100) as u32;
@@ -87,13 +181,16 @@ impl OpStream {
         } else {
             OpType::Contains
         };
-        (op, self.rng.gen_range_incl(1, self.key_range))
+        (op, self.next_key())
     }
 
     /// Next key only (for fixed-type phases, Fig. 13 mode).
     #[inline]
     pub fn next_key(&mut self) -> u64 {
-        self.rng.gen_range_incl(1, self.key_range)
+        match &self.zipf {
+            None => self.rng.gen_range_incl(1, self.key_range),
+            Some(zipf) => zipf.sample(&mut self.rng) + 1,
+        }
     }
 }
 
@@ -169,6 +266,49 @@ mod tests {
     fn streams_are_deterministic() {
         let mut a = OpStream::new(5, READ_HEAVY, 100);
         let mut b = OpStream::new(5, READ_HEAVY, 100);
+        for _ in 0..1000 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn key_dist_parses_the_cli_surface() {
+        assert_eq!(KeyDist::parse("uniform"), Some(KeyDist::Uniform));
+        assert_eq!(KeyDist::parse("zipf:0.99"), Some(KeyDist::Zipf(0.99)));
+        assert_eq!(
+            KeyDist::parse("zipf:0.5").map(|d| d.label()),
+            Some("zipf:0.5".into())
+        );
+        for bad in ["zipf", "zipf:", "zipf:0", "zipf:1", "zipf:1.5", "zipf:x", "pareto"] {
+            assert_eq!(KeyDist::parse(bad), None, "{bad} must be rejected");
+        }
+        assert_eq!(KeyDist::Uniform.label(), "uniform");
+    }
+
+    #[test]
+    fn zipf_stream_stays_in_range_and_skews_to_the_head() {
+        let mut s = OpStream::with_dist(9, UPDATE_HEAVY, 1000, KeyDist::Zipf(0.99));
+        let mut head = 0u32;
+        const DRAWS: u32 = 20_000;
+        for _ in 0..DRAWS {
+            let (_, k) = s.next();
+            assert!((1..=1000).contains(&k), "zipf key {k} out of range");
+            if k <= 10 {
+                head += 1;
+            }
+        }
+        // Under uniform, keys 1..=10 get ~1% of draws; zipf(0.99) puts the
+        // majority of probability mass on the head ranks.
+        assert!(
+            head > DRAWS / 4,
+            "zipf head got only {head}/{DRAWS} draws — not skewed"
+        );
+    }
+
+    #[test]
+    fn zipf_streams_are_deterministic() {
+        let mut a = OpStream::with_dist(5, READ_HEAVY, 500, KeyDist::Zipf(0.7));
+        let mut b = OpStream::with_dist(5, READ_HEAVY, 500, KeyDist::Zipf(0.7));
         for _ in 0..1000 {
             assert_eq!(a.next(), b.next());
         }

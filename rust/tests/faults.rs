@@ -33,8 +33,14 @@ fn fault_decisions_are_seed_deterministic() {
     let first = sequence(plane.clone());
     let second = sequence(plane);
     assert_eq!(first, second, "same seed must replay the same schedule");
-    assert!(first.iter().any(|&b| b), "a one-in-2 site never fired in 64 hits");
-    assert!(first.iter().any(|&b| !b), "a one-in-2 site fired on every hit");
+    assert!(
+        first.iter().any(|&b| b),
+        "a one-in-2 site never fired in 64 hits"
+    );
+    assert!(
+        first.iter().any(|&b| !b),
+        "a one-in-2 site fired on every hit"
+    );
 }
 
 /// A firing `OptimisticRetry` forces the wait-free fallback path: every
@@ -55,7 +61,11 @@ fn forced_optimistic_fallbacks_raise_the_gauge() {
         assert_eq!(set.size(), Some(30), "forced fallback must stay exact");
     }
     let stats = set.size_stats().expect("optimistic policy has stats");
-    assert!(stats.fallbacks >= 5, "only {} fallbacks after 5 forced sizes", stats.fallbacks);
+    assert!(
+        stats.fallbacks >= 5,
+        "only {} fallbacks after 5 forced sizes",
+        stats.fallbacks
+    );
 }
 
 /// The acceptance smoke: a pinned-seed chaos plane (jitter everywhere,
@@ -75,7 +85,13 @@ fn chaos_smoke_server_heals_and_stays_linearizable() {
     );
 
     let store: Arc<dyn ConcurrentSet> = Arc::from(
-        make_set_opts("hashtable", PolicyKind::Linearizable, 1 << 10, SizeOpts::default()).unwrap(),
+        make_set_opts(
+            "hashtable",
+            PolicyKind::Linearizable,
+            1 << 10,
+            SizeOpts::default(),
+        )
+        .unwrap(),
     );
     let config = ServerConfig {
         handlers: 3,
@@ -128,15 +144,27 @@ fn chaos_smoke_server_heals_and_stays_linearizable() {
         std::thread::sleep(Duration::from_millis(50));
     }
     let mut buf = [0u8; 8];
-    assert_eq!(idle.read(&mut buf).expect("reaped socket"), 0, "idle conn not reaped");
+    assert_eq!(
+        idle.read(&mut buf).expect("reaped socket"),
+        0,
+        "idle conn not reaped"
+    );
 
     // STATS is reactor-inline (immune to pool chaos): the gauges must
     // show the healing that just happened and a clean monitor.
     let stats = concurrent_size::server::parse_stats(&active.cmd("STATS")).expect("STATS parses");
     assert!(stats["timeouts"] >= 1, "timeouts gauge never moved");
-    assert!(stats["panics"] >= 3, "panics gauge below the 3 poisons: {}", stats["panics"]);
+    assert!(
+        stats["panics"] >= 3,
+        "panics gauge below the 3 poisons: {}",
+        stats["panics"]
+    );
     assert!(stats["reaped"] >= 1, "reaped gauge never moved");
-    assert_eq!(stats["monitor_violations"], 0, "monitor flagged an honest linearizable store");
+    assert_eq!(
+        stats["monitor_violations"],
+        0,
+        "monitor flagged an honest linearizable store"
+    );
 
     // The server still serves: SIZE eventually answers numerically.
     let size = (0..20)

@@ -50,7 +50,12 @@ fn all_structures_match_sequential_model() {
             match rng.gen_range(3) {
                 0 => assert_eq!(set.insert(k), model.insert(k), "{} insert {k}", set.name()),
                 1 => assert_eq!(set.delete(k), model.remove(&k), "{} delete {k}", set.name()),
-                _ => assert_eq!(set.contains(k), model.contains(&k), "{} contains {k}", set.name()),
+                _ => assert_eq!(
+                    set.contains(k),
+                    model.contains(&k),
+                    "{} contains {k}",
+                    set.name()
+                ),
             }
             if model.len() % 97 == 0 {
                 assert_eq!(set.size(), Some(model.len() as i64), "{} size", set.name());

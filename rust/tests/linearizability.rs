@@ -112,7 +112,11 @@ fn drive(structure: &str, policy: PolicyKind, seed: u64) -> Report {
 fn monitor_passes_all_policies_on_all_structures() {
     for (i, structure) in STRUCTURES.iter().enumerate() {
         for policy in PolicyKind::ALL {
-            let report = drive(structure, policy, 0x5EED ^ ((i as u64) << 8) ^ policy as u64);
+            let report = drive(
+                structure,
+                policy,
+                0x5EED ^ ((i as u64) << 8) ^ policy as u64,
+            );
             assert!(report.updates > 0, "{structure}/{policy:?}: no updates");
             match policy {
                 PolicyKind::Naive => {

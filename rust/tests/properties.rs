@@ -82,7 +82,10 @@ fn prop_create_update_info_monotone() {
 fn prop_structures_match_model_with_random_ops() {
     proptest_lite::run_with(
         "structures vs model",
-        proptest_lite::Config { cases: 16, seed: 0x512E },
+        proptest_lite::Config {
+            cases: 16,
+            seed: 0x512E,
+        },
         |rng| {
             let sets: Vec<Box<dyn ConcurrentSet>> = vec![
                 Box::new(HashTableSet::<LinearizableSize>::new(64, 512)),

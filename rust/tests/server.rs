@@ -20,7 +20,7 @@ use concurrent_size::server::{
 use concurrent_size::set_api::ConcurrentSet;
 use concurrent_size::size::SizeOpts;
 use concurrent_size::thread_id;
-use concurrent_size::workload::UPDATE_HEAVY;
+use concurrent_size::workload::{KeyDist, UPDATE_HEAVY};
 
 /// A linearizable hashtable store with a `shards`-stripe mirror (the
 /// estimate admission control consults).
@@ -41,7 +41,10 @@ fn parse_stats(line: &str) -> HashMap<String, u64> {
 /// within the thread-slot budget.
 #[test]
 fn reactor_serves_256_concurrent_connections_with_bounded_pool() {
-    let config = ServerConfig { handlers: 4, ..Default::default() };
+    let config = ServerConfig {
+        handlers: 4,
+        ..Default::default()
+    };
     let server = Server::bind("127.0.0.1:0", store(2), config).expect("bind");
     assert_eq!(server.handler_threads(), 4);
     assert!(server.handler_threads() <= thread_id::capacity());
@@ -61,7 +64,11 @@ fn reactor_serves_256_concurrent_connections_with_bounded_pool() {
     // Nothing has QUIT: the server is holding every connection live on
     // exactly 4 handler threads + 1 reactor.
     let stats = server.stats();
-    assert!(stats.live_conns >= CONNS, "live {} < {CONNS}", stats.live_conns);
+    assert!(
+        stats.live_conns >= CONNS,
+        "live {} < {CONNS}",
+        stats.live_conns
+    );
     assert!(stats.peak_conns >= CONNS);
     assert_eq!(stats.handlers, 4);
 
@@ -74,7 +81,11 @@ fn reactor_serves_256_concurrent_connections_with_bounded_pool() {
     clients[1].send("HAS 1000");
     clients[1].send("DEL 1000");
     for step in ["PUT", "HAS", "DEL"] {
-        assert_eq!(clients[1].recv().expect("pipelined reply"), "1", "{step} out of order");
+        assert_eq!(
+            clients[1].recv().expect("pipelined reply"),
+            "1",
+            "{step} out of order"
+        );
     }
 }
 
@@ -127,14 +138,22 @@ fn overload_burst_sheds_puts_while_size_estimate_keeps_answering() {
         assert_eq!(client.cmd(format!("DEL {k}")), "1");
     }
     assert_eq!(client.cmd("SIZE?"), "35");
-    assert_eq!(client.cmd("PUT 900"), OVERLOAD_REPLY, "band must stay shedding");
+    assert_eq!(
+        client.cmd("PUT 900"),
+        OVERLOAD_REPLY,
+        "band must stay shedding"
+    );
 
     // Drain to the low watermark: readmitted.
     for k in 15..30u64 {
         assert_eq!(client.cmd(format!("DEL {k}")), "1");
     }
     assert_eq!(client.cmd("SIZE?"), "20");
-    assert_eq!(client.cmd("PUT 900"), "1", "at the low watermark PUTs readmit");
+    assert_eq!(
+        client.cmd("PUT 900"),
+        "1",
+        "at the low watermark PUTs readmit"
+    );
     let stats = parse_stats(&probe.cmd("STATS"));
     assert_eq!(stats["admitting"], 1);
 
@@ -221,6 +240,9 @@ fn stats_parses_while_refresher_daemon_runs() {
             "accepted",
             "shed",
             "admitting",
+            "store_shards",
+            "shard_shed",
+            "faults",
             "timeouts",
             "panics",
             "reaped",
@@ -254,7 +276,16 @@ fn stats_parses_while_refresher_daemon_runs() {
 #[test]
 fn client_swarm_drives_the_server_path() {
     let server = Server::bind("127.0.0.1:0", store(2), ServerConfig::default()).expect("bind");
-    let swarm = client_swarm(server.local_addr(), 8, 400, UPDATE_HEAVY, 2048, 7).expect("swarm");
+    let swarm = client_swarm(
+        server.local_addr(),
+        8,
+        400,
+        UPDATE_HEAVY,
+        2048,
+        KeyDist::Uniform,
+        7,
+    )
+    .expect("swarm");
     assert_eq!(swarm.ops, 8 * 400);
     assert_eq!(swarm.overloads, 0, "no admission gate configured");
     assert_eq!(swarm.errors, 0);
@@ -280,7 +311,11 @@ fn pipelined_flood_is_served_in_order_under_backpressure() {
     // every later one "0" — exact in-order bookkeeping over the flood.
     for i in 0..FLOOD {
         let want = if i < 16 { "1" } else { "0" };
-        assert_eq!(client.recv().expect("flood reply"), want, "reply {i} out of order");
+        assert_eq!(
+            client.recv().expect("flood reply"),
+            want,
+            "reply {i} out of order"
+        );
     }
     assert_eq!(client.cmd("SIZE"), "16");
 }
@@ -304,7 +339,11 @@ fn protocol_errors_answer_in_order_and_quit_closes() {
     // Mirror disabled (0 shards): the estimate declines gracefully.
     assert!(client.cmd("SIZE?").starts_with("ERR"));
     client.send("QUIT");
-    assert_eq!(client.recv(), None, "QUIT must close the connection without a reply");
+    assert_eq!(
+        client.recv(),
+        None,
+        "QUIT must close the connection without a reply"
+    );
     // The server survives and serves fresh connections.
     let mut fresh = BlockingClient::connect(server.local_addr());
     assert_eq!(fresh.cmd("HAS 5"), "1");
@@ -328,7 +367,11 @@ fn overlong_line_answers_toolong_and_resyncs() {
     }
     client.send("SIZE");
     for i in 0..3 {
-        assert_eq!(client.recv().expect("toolong burst reply"), "ERR TOOLONG", "line {i}");
+        assert_eq!(
+            client.recv().expect("toolong burst reply"),
+            "ERR TOOLONG",
+            "line {i}"
+        );
     }
     assert_eq!(client.recv().expect("size reply"), "1");
 }
@@ -340,7 +383,10 @@ fn overlong_line_answers_toolong_and_resyncs() {
 #[test]
 fn idle_and_slowloris_connections_are_reaped() {
     let config =
-        ServerConfig { conn_idle: Some(Duration::from_millis(250)), ..Default::default() };
+        ServerConfig {
+            conn_idle: Some(Duration::from_millis(250)),
+            ..Default::default()
+        };
     let server = Server::bind("127.0.0.1:0", store(0), config).expect("bind");
     let addr = server.local_addr();
     let mut active = BlockingClient::connect(addr);
@@ -397,7 +443,10 @@ fn admission_with_stale_estimates_never_wedges() {
                 admitted == !ref_shedding,
                 "diverged at step {i}: saw {seen} (high={high} low={low})"
             );
-            prop_assert!(gate.shedding() == ref_shedding, "exposed state diverged at {i}");
+            prop_assert!(
+                gate.shedding() == ref_shedding,
+                "exposed state diverged at {i}"
+            );
         }
         // Recovery: the store drained and fresh readings resume.
         let _ = gate.admit(Some(0));
@@ -418,7 +467,10 @@ fn poisoned_put_burst_does_not_starve_healthy_connections() {
     const POISON: u64 = 777_777_777_777;
     const BURSTS: u64 = 25;
     let _guard = faults::install(FaultPlane::new(0xBAD).with_poison_key(POISON));
-    let config = ServerConfig { handlers: 3, ..Default::default() };
+    let config = ServerConfig {
+        handlers: 3,
+        ..Default::default()
+    };
     let server = Server::bind("127.0.0.1:0", store(2), config).expect("bind");
     let addr = server.local_addr();
 
@@ -439,7 +491,11 @@ fn poisoned_put_burst_does_not_starve_healthy_connections() {
     }
     poisoner.join().expect("poisoner panicked");
     let stats = server.stats();
-    assert!(stats.panics >= BURSTS, "panics gauge {} < {BURSTS}", stats.panics);
+    assert!(
+        stats.panics >= BURSTS,
+        "panics gauge {} < {BURSTS}",
+        stats.panics
+    );
     // The poisoned key never reached the store; every healthy key did.
     let mut probe = BlockingClient::connect(addr);
     assert_eq!(probe.cmd("SIZE"), "800");
@@ -475,7 +531,11 @@ fn stalled_request_times_out_and_slot_recovers() {
     assert_eq!(client.cmd("HAS 5"), "1");
     let stats = server.stats();
     assert_eq!(stats.timeouts, 1);
-    assert_eq!(client.cmd("SIZE"), "2", "the stalled PUT did commit in the end");
+    assert_eq!(
+        client.cmd("SIZE"),
+        "2",
+        "the stalled PUT did commit in the end"
+    );
 }
 
 /// Dropping the handle stops the reactor and joins the pool, even with

@@ -1,0 +1,287 @@
+//! Integration tests for the sharded store subsystem
+//! (`rust/src/shardstore/`): two-tier admission end to end (the hot
+//! shard sheds with `ERR OVERLOAD shard=<i>` while its siblings admit),
+//! routing and staleness-composition properties, and the aggregated
+//! linearizability monitor over seeded multi-shard interleavings.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use concurrent_size::cli::PolicyKind;
+use concurrent_size::harness::client_swarm;
+use concurrent_size::history::monitor::ShardedMonitor;
+use concurrent_size::prop_assert;
+use concurrent_size::proptest_lite;
+use concurrent_size::server::{BlockingClient, Server, ServerConfig, Watermarks};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::shardstore::{make_shard_store, route, ShardStore};
+use concurrent_size::size::{LinearizableSize, SizeOpts};
+use concurrent_size::workload::{KeyDist, UPDATE_HEAVY};
+use concurrent_size::MAX_THREADS;
+
+const SHARDS: usize = 4;
+
+/// A 4-shard linearizable store behind the `ConcurrentSet` face, as the
+/// server mounts it.
+fn shard_store() -> Arc<dyn ConcurrentSet> {
+    let opts = SizeOpts::default().with_shards(2);
+    Arc::from(make_shard_store(PolicyKind::Linearizable, SHARDS, 1 << 12, opts).unwrap())
+}
+
+/// The first `n` keys that [`route`] sends to `shard` (deterministic:
+/// routing is a pure function, so tests and the reactor always agree).
+fn keys_for_shard(shard: usize, n: usize) -> Vec<u64> {
+    (1u64..).filter(|&k| route(k, SHARDS) == shard).take(n).collect()
+}
+
+/// Tier-2 admission end to end: fill exactly one routed shard past its
+/// watermark — it sheds with `ERR OVERLOAD shard=<i>` while a sibling
+/// shard keeps admitting and the *global* size surfaces stay accurate —
+/// then drain through the hysteresis band and readmit at the low mark.
+#[test]
+fn hot_shard_sheds_while_siblings_admit_and_global_size_stays_accurate() {
+    let config = ServerConfig {
+        handlers: 2,
+        shard_admission: Some(Watermarks::new(20, 10)),
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", shard_store(), config).expect("bind");
+    let mut client = BlockingClient::connect(server.local_addr());
+
+    // Drive 40 PUTs that all route to shard `hot`: the first 20 admit
+    // (the gate reads the shard estimate before each insert), everything
+    // past the high watermark sheds with the shard-tagged reply.
+    let hot = 2usize;
+    let hot_keys = keys_for_shard(hot, 40);
+    let shard_reply = format!("ERR OVERLOAD shard={hot}");
+    for (i, &k) in hot_keys.iter().enumerate() {
+        let want = if i < 20 { "1" } else { shard_reply.as_str() };
+        assert_eq!(client.cmd(format!("PUT {k}")), want, "hot PUT #{i}");
+    }
+
+    // Siblings are untouched by the hot shard's gate.
+    let sibling_key = keys_for_shard((hot + 1) % SHARDS, 1)[0];
+    assert_eq!(
+        client.cmd(format!("PUT {sibling_key}")),
+        "1",
+        "sibling must admit"
+    );
+
+    // Global SIZE (aggregated exact) and SIZE? (summed mirrors) both see
+    // exactly the admitted census — sheds never reached any shard.
+    assert_eq!(client.cmd("SIZE"), "21");
+    assert_eq!(client.cmd("SIZE?"), "21");
+    let stats = concurrent_size::server::parse_stats(&client.cmd("STATS")).expect("STATS");
+    assert_eq!(stats["store_shards"], SHARDS as u64);
+    assert_eq!(stats["shard_shed"], 20);
+    assert_eq!(
+        stats["shed"],
+        0,
+        "the global tier is off; only the shard tier shed"
+    );
+
+    // Hysteresis: drain the hot shard into the band (estimate 15) — DELs
+    // always admit, PUTs on the hot shard stay shed.
+    for &k in &hot_keys[..5] {
+        assert_eq!(client.cmd(format!("DEL {k}")), "1");
+    }
+    assert_eq!(
+        client.cmd(format!("PUT {}", hot_keys[39])),
+        shard_reply,
+        "band stays shedding"
+    );
+
+    // Drain to the low watermark: the hot shard readmits.
+    for &k in &hot_keys[5..10] {
+        assert_eq!(client.cmd(format!("DEL {k}")), "1");
+    }
+    assert_eq!(
+        client.cmd(format!("PUT {}", hot_keys[39])),
+        "1",
+        "readmit at the low mark"
+    );
+    assert_eq!(client.cmd("SIZE"), "12");
+}
+
+/// A zipfian swarm against per-shard watermarks: the skewed shard trips
+/// its gate (sheds observed by clients and counted in STATS as
+/// `shard_shed`, never as global `shed`), while enough sibling capacity
+/// admits that the final census exceeds any single shard's high mark —
+/// and the aggregated size surfaces agree at quiescence.
+#[test]
+fn zipf_swarm_overloads_the_hot_shard_but_not_the_store() {
+    let store = shard_store();
+    let config = ServerConfig {
+        handlers: 2,
+        shard_admission: Some(Watermarks::new(24, 12)),
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind");
+    let swarm = client_swarm(
+        server.local_addr(),
+        8,
+        600,
+        UPDATE_HEAVY,
+        4096,
+        KeyDist::Zipf(0.99),
+        0x51AB5,
+    )
+    .expect("zipf swarm");
+    assert_eq!(swarm.ops, 8 * 600);
+    assert_eq!(swarm.errors, 0, "sheds are not protocol errors");
+    assert!(
+        swarm.overloads > 0,
+        "zipf skew never tripped a shard watermark"
+    );
+
+    let mut probe = BlockingClient::connect(server.local_addr());
+    let stats = concurrent_size::server::parse_stats(&probe.cmd("STATS")).expect("STATS");
+    assert_eq!(
+        stats["shard_shed"],
+        swarm.overloads,
+        "every shed was shard-tier"
+    );
+    assert_eq!(stats["shed"], 0, "the global gate never fired");
+
+    // Quiescent accuracy across both global read paths, and cross-checked
+    // against the store's own quiescent census.
+    let exact: i64 = probe.cmd("SIZE").parse().expect("numeric SIZE");
+    let estimate: i64 = probe.cmd("SIZE?").parse().expect("numeric SIZE?");
+    assert_eq!(
+        exact,
+        estimate,
+        "aggregated exact vs summed mirrors at quiescence"
+    );
+    assert_eq!(Some(exact), store.size_estimate());
+    assert!(
+        exact > 24,
+        "census {exact} within one shard's watermark — siblings never admitted"
+    );
+}
+
+/// Routing properties: total (every key answers, in range) and stable
+/// (pure function of `(key, shards)` — no per-call or per-site state).
+#[test]
+fn route_is_total_and_stable_under_random_probing() {
+    proptest_lite::run("route is total and stable", |rng| {
+        let shards = 1 + rng.gen_range(64) as usize;
+        for _ in 0..200 {
+            let key = rng.next_u64();
+            let first = route(key, shards);
+            prop_assert!(
+                first < shards,
+                "route({key}, {shards}) = {first} out of range"
+            );
+            prop_assert!(
+                route(key, shards) == first,
+                "route({key}, {shards}) unstable"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The composed staleness contract: whatever the shard count, occupancy
+/// and bound, `global_recent(d)` reports `age = max(per-shard ages) <= d`
+/// and (at quiescence) the exact census.
+#[test]
+fn global_recent_age_never_exceeds_the_requested_bound() {
+    proptest_lite::run("global_recent composes the staleness bound", |rng| {
+        let shards = 1 + rng.gen_range(6) as usize;
+        let store: ShardStore<LinearizableSize> = ShardStore::new(
+            MAX_THREADS,
+            shards,
+            1 << 8,
+            SizeOpts::default().with_shards(2),
+        );
+        let mut live = 0i64;
+        for _ in 0..rng.gen_range(150) {
+            live += i64::from(store.insert(rng.gen_range(512)));
+        }
+        let bound = Duration::from_micros(1 + rng.gen_range(50_000));
+        let view = store.size_recent(bound);
+        let view = match view {
+            Some(view) => view,
+            None => return Err("recent view missing on a sized policy".into()),
+        };
+        prop_assert!(
+            view.age <= bound,
+            "composed age {:?} over the bound {bound:?} ({shards} shards)",
+            view.age
+        );
+        prop_assert!(
+            view.value == live,
+            "recent value {} != live {live}",
+            view.value
+        );
+        Ok(())
+    });
+}
+
+/// The aggregated monitor across a seeded interleaving sweep: concurrent
+/// per-shard updaters plus a global size reader (alternating exact and
+/// bounded-staleness reads) must produce zero unjustified aggregated
+/// sizes — on every seed.
+#[test]
+fn aggregated_monitor_justifies_every_global_size_across_seeds() {
+    for seed in 0..12u64 {
+        let store: Arc<ShardStore<LinearizableSize>> = Arc::new(ShardStore::new(
+            MAX_THREADS,
+            3,
+            1 << 8,
+            SizeOpts::default().with_shards(2),
+        ));
+        let monitor = Arc::new(ShardedMonitor::new(3));
+        let mut workers = Vec::new();
+        for t in 0..2u64 {
+            let store = store.clone();
+            let monitor = monitor.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut rng = concurrent_size::rng::Xoshiro256::new(seed ^ (t << 32));
+                for _ in 0..300 {
+                    let key = 1 + rng.gen_range(96);
+                    let timer = monitor.begin();
+                    if rng.gen_bool(0.6) {
+                        if store.insert(key) {
+                            monitor.commit_update(route(key, 3), timer, 1);
+                        }
+                    } else if store.delete(key) {
+                        monitor.commit_update(route(key, 3), timer, -1);
+                    }
+                }
+            }));
+        }
+        {
+            let store = store.clone();
+            let monitor = monitor.clone();
+            workers.push(std::thread::spawn(move || {
+                let bound = Duration::from_millis(2);
+                for i in 0..150 {
+                    let timer = monitor.begin();
+                    if i % 2 == 0 {
+                        let view = store.aggregator().global_exact().expect("exact view");
+                        monitor.commit_size(timer, view.value);
+                    } else {
+                        let view = store.aggregator().global_recent(bound).expect("recent view");
+                        // A recent reading may predate its invocation by
+                        // up to its composed age: widen the window.
+                        monitor.commit_size_with_slack(timer, view.value, view.age);
+                    }
+                }
+            }));
+        }
+        for worker in workers {
+            worker.join().expect("monitor worker panicked");
+        }
+        let report = monitor.verify();
+        assert!(
+            report.is_ok(),
+            "seed {seed}: unjustified aggregated sizes: {:?}",
+            report.violations
+        );
+        assert!(
+            report.sizes_checked >= 150,
+            "seed {seed}: reader under-recorded"
+        );
+    }
+}

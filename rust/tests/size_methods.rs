@@ -60,7 +60,11 @@ fn sequential_model_all_structures() {
                 );
             }
         }
-        assert_eq!(set.size(), Some(model.len() as i64), "{structure}/{policy:?}");
+        assert_eq!(
+            set.size(),
+            Some(model.len() as i64),
+            "{structure}/{policy:?}"
+        );
     }
 }
 
@@ -216,7 +220,10 @@ fn no_fig1_fig2_anomalies_on_new_policies() {
 fn prop_running_sizes_legal_on_all_structures() {
     proptest_lite::run_with(
         "new-policy histories legal",
-        proptest_lite::Config { cases: 6, seed: 0x6A5D },
+        proptest_lite::Config {
+            cases: 6,
+            seed: 0x6A5D,
+        },
         |rng| {
             for (structure, policy) in combos() {
                 let set = make_set(structure, policy, 128).unwrap();

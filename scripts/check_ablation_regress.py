@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Throughput regression gate for BENCH_ablation.json (CI: `make regress-check`).
+
+Usage: check_ablation_regress.py BASELINE FRESH
+
+Compares a freshly generated ablation report against the previous CI
+run's artifact. Records are matched on their sweep identity — every
+axis the bench varies — and a matched record regresses when its fresh
+`workload_ops_per_sec` drops more than 25% below the baseline.
+
+Soft-fail semantics, by design:
+
+* missing baseline file  -> warn + exit 0 (first run, or artifact
+  download failed — CI marks that step continue-on-error);
+* unreadable/garbage baseline -> warn + exit 0 (never let a stale
+  artifact brick the pipeline — the schema gate guards the fresh file);
+* baseline records with zero/absent throughput, or fresh records with
+  no baseline counterpart (new sweep axes) -> skipped, reported.
+
+Only a genuine >25% drop on a matched, previously-positive record
+exits 1. Stdlib only.
+"""
+
+import json
+import sys
+
+# Identity axes: everything the sweeps are keyed on, nothing measured.
+MATCH_KEYS = (
+    "scenario",
+    "policy",
+    "mix",
+    "size_call",
+    "size_threads",
+    "shards",
+    "key_dist",
+    "refresh_us",
+)
+MAX_DROP = 0.25
+
+
+def warn(msg):
+    print(f"regress-check: WARNING: {msg}", file=sys.stderr)
+
+
+def load_records(path, *, required):
+    """Return the record list, or None for a soft skip on the baseline."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            report = json.load(f)
+        records = report["results"]
+        if not isinstance(records, list):
+            raise TypeError("results is not a list")
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        if required:
+            print(f"regress-check: FAIL: cannot read {path}: {e}", file=sys.stderr)
+            sys.exit(1)
+        warn(f"cannot read baseline {path} ({e}); skipping regression gate")
+        return None
+    return records
+
+
+def identity(rec):
+    # Older baselines predate some axes; .get keeps them matchable.
+    return tuple(rec.get(key) for key in MATCH_KEYS)
+
+
+def main(baseline_path, fresh_path):
+    fresh = load_records(fresh_path, required=True)
+    baseline = load_records(baseline_path, required=False)
+    if baseline is None:
+        print("regress-check: SKIP — no baseline to compare against")
+        return 0
+
+    base_by_id = {}
+    for rec in baseline:
+        base_by_id.setdefault(identity(rec), rec)
+
+    compared = skipped = 0
+    regressions = []
+    for rec in fresh:
+        base = base_by_id.get(identity(rec))
+        before = base.get("workload_ops_per_sec", 0) if base else 0
+        after = rec.get("workload_ops_per_sec", 0)
+        if (
+            base is None
+            or not isinstance(before, (int, float))
+            or not isinstance(after, (int, float))
+            or before <= 0
+        ):
+            skipped += 1
+            continue
+        compared += 1
+        drop = 1.0 - after / before
+        if drop > MAX_DROP:
+            key = ", ".join(f"{k}={v}" for k, v in zip(MATCH_KEYS, identity(rec)))
+            regressions.append(
+                f"  {key}: {before:.0f} -> {after:.0f} ops/s ({drop:.0%} drop)"
+            )
+
+    if regressions:
+        print(
+            f"regress-check: FAIL — {len(regressions)} record(s) dropped more "
+            f"than {MAX_DROP:.0%} vs baseline:",
+            file=sys.stderr,
+        )
+        for line in regressions:
+            print(line, file=sys.stderr)
+        return 1
+
+    print(
+        f"regress-check: OK — {compared} records within {MAX_DROP:.0%} of "
+        f"baseline ({skipped} skipped: unmatched or zero baseline)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(
+            "usage: check_ablation_regress.py BASELINE FRESH",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

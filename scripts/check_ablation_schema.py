@@ -39,6 +39,7 @@ RECORD_KEYS = {
     "size_threads",
     "size_call",
     "shards",
+    "key_dist",
     "refresh_us",
     "workload_ops_per_sec",
     "size_ops_per_sec",
@@ -49,6 +50,7 @@ RECORD_KEYS = {
     "daemon_stalls",
     "fallbacks",
     "retry_budget",
+    "per_shard_sheds",
 }
 THROUGHPUT_KEYS = ("workload_ops_per_sec", "size_ops_per_sec")
 COUNTER_KEYS = (
@@ -62,9 +64,24 @@ COUNTER_KEYS = (
     "daemon_stalls",
     "fallbacks",
     "retry_budget",
+    "per_shard_sheds",
 )
-SCENARIOS = {"periodic-size", "size-heavy", "scale"}
+SCENARIOS = {"periodic-size", "size-heavy", "scale", "shard_scale"}
 POLICIES = {"baseline", "linearizable", "naive", "lock", "handshake", "optimistic"}
+
+
+def valid_key_dist(value):
+    """`uniform`, or `zipf:<theta>` with a finite float theta in (0, 1) —
+    the exact grammar of the Rust `KeyDist::parse`."""
+    if value == "uniform":
+        return True
+    if not isinstance(value, str) or not value.startswith("zipf:"):
+        return False
+    try:
+        theta = float(value[len("zipf:"):])
+    except ValueError:
+        return False
+    return math.isfinite(theta) and 0.0 < theta < 1.0
 
 
 def fail(msg):
@@ -103,6 +120,8 @@ def main(path):
             fail(f"{where} unknown scenario {rec['scenario']!r}")
         if rec["policy"] not in POLICIES:
             fail(f"{where} unknown policy {rec['policy']!r}")
+        if not valid_key_dist(rec["key_dist"]):
+            fail(f"{where} bad key_dist {rec['key_dist']!r}")
         for key in THROUGHPUT_KEYS:
             v = rec[key]
             if not isinstance(v, (int, float)) or isinstance(v, bool):
