@@ -4,9 +4,11 @@
 //! system" scenario the paper's introduction motivates).
 //!
 //! All the machinery lives in the library (`rust/src/server/`): the
-//! nonblocking reactor multiplexing every connection on one thread, the
-//! bounded handler pool executing store ops, the watermark admission gate
-//! shedding `PUT`s with `ERR OVERLOAD`, and the `STATS` telemetry line.
+//! acceptor handing sockets to `--reactors` nonblocking reactor shards
+//! (each multiplexing its own connection table on one thread, batching
+//! pipelined commands per dispatch), the bounded handler pool executing
+//! store ops, the watermark admission gate shedding `PUT`s with
+//! `ERR OVERLOAD`, and the `STATS` telemetry line.
 //! This file only parses flags, builds the store, and — without
 //! `--listen` — runs a self-test that drives the server over real
 //! sockets: protocol checks, a client swarm, a concurrent-connection
@@ -18,6 +20,7 @@
 //! cargo run --release --example kv_server               # self-test mode
 //! cargo run --release --example kv_server -- --listen 127.0.0.1:7171 \
 //!     [--policy linearizable|handshake|optimistic|...] [--workers N] \
+//!     [--reactors auto|N] [--pipeline-depth N] \
 //!     [--store-shards auto|N] [--key-dist uniform|zipf:0.99] \
 //!     [--refresh-ms 5] [--size-shards auto] [--reactor sleep|spin] \
 //!     [--admission-high N [--admission-low N]] \
@@ -47,6 +50,7 @@ fn usage() {
 
 USAGE:
   kv_server [--listen ADDR] [--policy P] [--workers N] [--max-conns N]
+            [--reactors auto|N] [--pipeline-depth N]
             [--store-shards auto|N] [--key-dist uniform|zipf:THETA]
             [--refresh-ms MS] [--size-shards auto|N] [--reactor sleep|spin]
             [--admission-high N [--admission-low N]]
@@ -60,8 +64,16 @@ FLAGS:
   --policy P          size policy: baseline|linearizable|naive|lock|handshake|
                       optimistic (default linearizable)
   --workers N         handler pool size (default 16, clamped to half the
-                      thread-slot capacity; the reactor itself is 1 thread no
+                      thread-slot capacity; reactor threads stay fixed no
                       matter how many connections are live)
+  --reactors R        reactor shards: an acceptor thread hands each socket
+                      to the least-loaded shard, and every shard runs its
+                      own connection table and sweep loop ('auto' =
+                      machine-detected; default 1 = the single-reactor
+                      server, bit-identical to before)
+  --pipeline-depth N  commands batched into one handler dispatch per
+                      connection when clients pipeline (default 32, min 1;
+                      replies come back coalesced into one write)
   --max-conns N       live-connection ceiling (default 4096); excess clients
                       get 'ERR server full'
   --refresh-ms MS     background SizeRefresher period in milliseconds: keeps
@@ -71,7 +83,9 @@ FLAGS:
                       and admission control ('auto' = machine-detected,
                       0 = disabled; default auto)
   --reactor M         reactor idle mode: sleep (default, ~0 idle CPU) | spin
-                      (busy-poll, lowest latency)
+                      (busy-poll, lowest latency); builds with
+                      --features net-epoll prefer an epoll readiness
+                      backend and fall back to polled mode when absent
   --store-shards S    partition the key space over S independent store
                       shards behind a cluster-wide size aggregator
                       ('auto' = machine-detected; default 1 = monolithic)
@@ -185,9 +199,10 @@ fn main() {
         Some(addr) => {
             let server = Server::bind(addr, store, config).expect("bind");
             println!(
-                "kv_server listening on {} ({} handler threads; \
+                "kv_server listening on {} ({} reactor shards, {} handler threads; \
                  PUT/DEL/HAS/SIZE/SIZE~/SIZE?/STATS/QUIT)",
                 server.local_addr(),
+                server.reactor_count(),
                 server.handler_threads(),
             );
             server.wait();
@@ -288,17 +303,36 @@ fn self_test(store: Store, config: ServerConfig, refresh_ms: f64, key_dist: KeyD
     drop(streams);
 
     // Swarm load over the server path (clients >> thread slots is fine:
-    // swarm clients hold sockets, not slots).
-    let swarm = harness::client_swarm(addr, 8, 500, UPDATE_HEAVY, 4096, key_dist, 0xBEEF)
-        .expect("swarm against self-test server");
-    assert_eq!(swarm.ops, 8 * 500, "every swarm command must get a reply");
-    if config.admission.is_none() && config.shard_admission.is_none() {
-        assert_eq!(swarm.overloads, 0, "no admission gate configured");
-    }
-    // Size probes answer ERR under a size-less policy or a disabled
-    // mirror; only a fully capable store must be error-free.
-    if store.size().is_some() && store.size_estimate().is_some() {
-        assert_eq!(swarm.errors, 0, "swarm must not see protocol errors");
+    // swarm clients hold sockets, not slots), first lock-step, then
+    // pipelined — 16 commands per write exercises batch dispatch and
+    // reply coalescing end to end.
+    let base = harness::SwarmConfig {
+        key_dist,
+        ..harness::SwarmConfig::new(8, 500, UPDATE_HEAVY, 4096, 0xBEEF)
+    };
+    let (mut swarm_ops, mut swarm_rate) = (0u64, 0.0f64);
+    for (label, swarm_config) in [("lock-step", base), ("pipelined", base.pipelined(16))] {
+        let swarm =
+            harness::client_swarm(addr, swarm_config).expect("swarm against self-test server");
+        swarm_ops += swarm.ops;
+        swarm_rate = swarm.throughput();
+        assert_eq!(
+            swarm.ops,
+            8 * 500,
+            "every {label} swarm command must get a reply"
+        );
+        if config.admission.is_none() && config.shard_admission.is_none() {
+            assert_eq!(swarm.overloads, 0, "no admission gate configured");
+        }
+        // Size probes answer ERR under a size-less policy or a disabled
+        // mirror; only a fully capable store must be error-free.
+        if store.size().is_some() && store.size_estimate().is_some() {
+            assert_eq!(
+                swarm.errors,
+                0,
+                "{label} swarm must not see protocol errors"
+            );
+        }
     }
 
     // STATS must parse as key=value integers while the refresher daemon
@@ -345,11 +379,11 @@ fn self_test(store: Store, config: ServerConfig, refresh_ms: f64, key_dist: KeyD
     }
     println!(
         "kv_server self-test OK: {burst} concurrently-open connections on \
-         {} handler threads, swarm {} ops ({:.0} ops/s), final SIZE = {:?}, \
+         {} reactor shards / {} handler threads, swarm {swarm_ops} ops \
+         (pipelined phase {swarm_rate:.0} ops/s), final SIZE = {:?}, \
          SIZE? = {:?}, stats = {:?}",
+        server.reactor_count(),
         server.handler_threads(),
-        swarm.ops,
-        swarm.throughput(),
         store.size(),
         store.size_estimate(),
         server.stats(),

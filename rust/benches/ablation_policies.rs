@@ -33,13 +33,20 @@
 //!   Records swarm throughput plus the per-shard shed total from `STATS`
 //!   (the hot-shard tax under skew) — here the `shards` column means
 //!   *store* shards, not mirror stripes.
+//! * **reactor_scale** — the multi-reactor server over the socket path:
+//!   a plain linearizable store mounted on `--reactors` shards, swarmed
+//!   with and without client pipelining (reactors 1→4 crossed with
+//!   commands-per-write 1 vs 16). The `reactors`/`pipeline_depth`
+//!   columns only mean something here (every other scenario records 0);
+//!   the pipelined column shows what batch dispatch + reply coalescing
+//!   buy once the acceptor spreads connections over shards.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use concurrent_size::bench_util::{BenchScale, make_set_opts, MIXES, STRUCTURES};
 use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
-use concurrent_size::harness::{client_swarm, run, SizeCall};
+use concurrent_size::harness::{client_swarm, run, SizeCall, SwarmConfig};
 use concurrent_size::metrics::{fmt_rate, json_escape, json_f64, Table};
 use concurrent_size::server::{parse_stats, BlockingClient, Server, ServerConfig, Watermarks};
 use concurrent_size::set_api::ConcurrentSet;
@@ -71,6 +78,11 @@ struct Record {
     retry_budget: u64,
     /// `PUT`s shed by the per-shard admission tier (`shard_scale` only).
     per_shard_sheds: u64,
+    /// Reactor shards serving the run (`reactor_scale` only; 0 for the
+    /// in-process scenarios, 1 for `shard_scale`'s default server).
+    reactors: usize,
+    /// Client commands per write (`reactor_scale` only; 1 = lock-step).
+    pipeline_depth: usize,
 }
 
 impl Record {
@@ -84,7 +96,7 @@ impl Record {
                 "\"arbiter_rounds\":{},\"arbiter_adoptions\":{},",
                 "\"arbiter_recent_hits\":{},\"daemon_rounds\":{},",
                 "\"daemon_stalls\":{},\"fallbacks\":{},\"retry_budget\":{},",
-                "\"per_shard_sheds\":{}}}"
+                "\"per_shard_sheds\":{},\"reactors\":{},\"pipeline_depth\":{}}}"
             ),
             json_escape(self.scenario),
             json_escape(self.policy.label()),
@@ -104,6 +116,8 @@ impl Record {
             self.fallbacks,
             self.retry_budget,
             self.per_shard_sheds,
+            self.reactors,
+            self.pipeline_depth,
         )
     }
 }
@@ -210,6 +224,8 @@ fn main() {
                 fallbacks: 0,
                 retry_budget: 0,
                 per_shard_sheds: 0,
+                reactors: 0,
+                pipeline_depth: 0,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -278,6 +294,8 @@ fn main() {
                 fallbacks: stats.fallbacks,
                 retry_budget: stats.retry_budget,
                 per_shard_sheds: 0,
+                reactors: 0,
+                pipeline_depth: 0,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -343,6 +361,8 @@ fn main() {
                     fallbacks: stats.fallbacks,
                     retry_budget: stats.retry_budget,
                     per_shard_sheds: 0,
+                    reactors: 0,
+                    pipeline_depth: 0,
                 });
                 table.row(&[
                     kind.label().to_string(),
@@ -405,12 +425,16 @@ fn main() {
                 Server::bind("127.0.0.1:0", store.clone(), config).expect("bind shard_scale");
             let swarm = client_swarm(
                 server.local_addr(),
-                swarm_clients,
-                swarm_ops,
-                UPDATE_HEAVY,
-                swarm_range,
-                key_dist,
-                scale.seed,
+                SwarmConfig {
+                    key_dist,
+                    ..SwarmConfig::new(
+                        swarm_clients,
+                        swarm_ops,
+                        UPDATE_HEAVY,
+                        swarm_range,
+                        scale.seed,
+                    )
+                },
             )
             .expect("shard_scale swarm");
             let mut probe = BlockingClient::connect(server.local_addr());
@@ -439,6 +463,8 @@ fn main() {
                 fallbacks: arbiter.fallbacks,
                 retry_budget: arbiter.retry_budget,
                 per_shard_sheds,
+                reactors: 1,
+                pipeline_depth: 1,
             });
             table.row(&[
                 store_shards.to_string(),
@@ -446,6 +472,82 @@ fn main() {
                 fmt_rate(swarm.throughput()),
                 per_shard_sheds.to_string(),
                 global_sheds.to_string(),
+            ]);
+        }
+    }
+    table.print();
+
+    // -- Scenario 5: reactor_scale — reactor shards × client pipelining --
+    // The multi-reactor ablation: the same uniform update-heavy swarm
+    // against 1, 2, and 4 reactor shards, lock-step vs 16 commands per
+    // write. The lock-step column isolates the accept/sweep sharding;
+    // the pipelined column adds batch dispatch + coalesced replies on
+    // top (one Job per burst instead of one per command).
+    let reactor_axis = [1usize, 2, 4];
+    let pipeline_axis = [1usize, 16];
+    println!(
+        "\n-- reactor_scale: {swarm_clients}x{swarm_ops}-op swarm \
+         (reactor shards x commands per write) --"
+    );
+    let mut table = Table::new(&["reactors", "pipeline", "swarm ops/s", "queue drained?"]);
+    for &reactors in &reactor_axis {
+        for &pipeline in &pipeline_axis {
+            let store: Arc<dyn ConcurrentSet> = Arc::from(
+                make_set_opts(
+                    "hashtable",
+                    PolicyKind::Linearizable,
+                    swarm_range as usize,
+                    SizeOpts::default().with_shards(detected),
+                )
+                .expect("hashtable factory"),
+            );
+            let config = ServerConfig {
+                reactors,
+                ..Default::default()
+            };
+            let server =
+                Server::bind("127.0.0.1:0", store, config).expect("bind reactor_scale");
+            let swarm = client_swarm(
+                server.local_addr(),
+                SwarmConfig::new(
+                    swarm_clients,
+                    swarm_ops,
+                    UPDATE_HEAVY,
+                    swarm_range,
+                    scale.seed,
+                )
+                .pipelined(pipeline),
+            )
+            .expect("reactor_scale swarm");
+            let stats = server.stats();
+            drop(server);
+            records.push(Record {
+                scenario: "reactor_scale",
+                policy: PolicyKind::Linearizable,
+                mix: UPDATE_HEAVY,
+                size_threads: 0,
+                size_call: SizeCall::Raw.label(),
+                shards: 0,
+                key_dist: KeyDist::Uniform.label(),
+                refresh_us: 0,
+                workload_ops_per_sec: swarm.throughput(),
+                size_ops_per_sec: 0.0,
+                arbiter_rounds: 0,
+                arbiter_adoptions: 0,
+                arbiter_recent_hits: 0,
+                daemon_rounds: 0,
+                daemon_stalls: 0,
+                fallbacks: 0,
+                retry_budget: 0,
+                per_shard_sheds: 0,
+                reactors,
+                pipeline_depth: pipeline,
+            });
+            table.row(&[
+                reactors.to_string(),
+                pipeline.to_string(),
+                fmt_rate(swarm.throughput()),
+                (if stats.queue_depth == 0 { "yes" } else { "NO" }).to_string(),
             ]);
         }
     }

@@ -229,6 +229,14 @@ impl Args {
         self.auto_shards("store-shards", default)
     }
 
+    /// The `--reactors` convention (same `auto|N` grammar as the shard
+    /// knobs, but for server reactor shards): absent → `default`,
+    /// `auto` → machine-detected, `N` → `N` reactor threads. The server
+    /// clamps the result to >= 1.
+    pub fn reactors(&self, default: usize) -> usize {
+        self.auto_shards("reactors", default)
+    }
+
     fn auto_shards(&self, key: &str, default: usize) -> usize {
         match self.get(key) {
             None => default,

@@ -60,11 +60,20 @@ pub enum FaultSite {
     /// `OptimisticSize::size` entry (a `Fire` hit forces the wait-free
     /// fallback as if the double-collect retry budget were exhausted).
     OptimisticRetry = 8,
+    /// The acceptor's socket handoff to a reactor shard (a `Delay`
+    /// stretches the accept→adopt window where a connection is counted
+    /// in the shard's handoff gauge but not yet in its table; a `Panic`
+    /// — contained per handoff — drops that one socket).
+    AcceptHandoff = 9,
+    /// `Conn::pump_write` flushing a coalesced reply batch (a
+    /// `ShortWrite(n)` truncates the batched write, exercising the
+    /// partial-write cursor across reply boundaries).
+    ReplyCoalesce = 10,
 }
 
 impl FaultSite {
     /// Number of sites (array dimension for per-thread hit counters).
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 11;
 
     /// All sites, in index order.
     pub const ALL: [FaultSite; FaultSite::COUNT] = [
@@ -77,6 +86,8 @@ impl FaultSite {
         FaultSite::ConnWrite,
         FaultSite::HandshakeDrain,
         FaultSite::OptimisticRetry,
+        FaultSite::AcceptHandoff,
+        FaultSite::ReplyCoalesce,
     ];
 
     /// Stable label (README site list, panic messages, fuzz reports).
@@ -91,6 +102,8 @@ impl FaultSite {
             FaultSite::ConnWrite => "conn-write",
             FaultSite::HandshakeDrain => "handshake-drain",
             FaultSite::OptimisticRetry => "optimistic-retry",
+            FaultSite::AcceptHandoff => "accept-handoff",
+            FaultSite::ReplyCoalesce => "reply-coalesce",
         }
     }
 }
@@ -218,6 +231,12 @@ impl FaultPlane {
             .with(FaultSite::ConnWrite, 2, FaultAction::ShortWrite(1))
             .with(FaultSite::HandshakeDrain, 4, FaultAction::Yield)
             .with(FaultSite::OptimisticRetry, 6, FaultAction::Fire)
+            .with(
+                FaultSite::AcceptHandoff,
+                3,
+                FaultAction::Delay(Duration::from_micros(500)),
+            )
+            .with(FaultSite::ReplyCoalesce, 3, FaultAction::ShortWrite(2))
     }
 }
 
@@ -345,15 +364,23 @@ mod runtime {
         matches!(decide(site), Some(FaultAction::Fire))
     }
 
-    /// Cap for the next write syscall: a firing `ShortWrite(n)` at
-    /// `ConnWrite` truncates `len` to `n` (at least 1 byte so writers
-    /// still make progress).
+    /// Cap for the next write syscall at `site`: a firing `ShortWrite(n)`
+    /// truncates `len` to `n` (at least 1 byte so writers still make
+    /// progress). `ConnWrite` models a short single-reply write;
+    /// `ReplyCoalesce` a short *batched* write that splits a coalesced
+    /// reply flush across reply boundaries.
     #[inline]
-    pub fn write_cap(len: usize) -> usize {
-        match decide(FaultSite::ConnWrite) {
+    pub fn write_cap_at(site: FaultSite, len: usize) -> usize {
+        match decide(site) {
             Some(FaultAction::ShortWrite(n)) if len > 0 => n.clamp(1, len),
             _ => len,
         }
+    }
+
+    /// [`write_cap_at`] at the historical `ConnWrite` site.
+    #[inline]
+    pub fn write_cap(len: usize) -> usize {
+        write_cap_at(FaultSite::ConnWrite, len)
     }
 
     /// Is `key` the plane's targeted poison key (handler panic)?
@@ -404,6 +431,11 @@ mod runtime {
     }
 
     #[inline(always)]
+    pub fn write_cap_at(_site: FaultSite, len: usize) -> usize {
+        len
+    }
+
+    #[inline(always)]
     pub fn write_cap(len: usize) -> usize {
         len
     }
@@ -425,7 +457,8 @@ mod runtime {
 }
 
 pub use runtime::{
-    fire_counts, fires, install, jitter, poisoned_put, stalled_put, write_cap, FaultGuard,
+    fire_counts, fires, install, jitter, poisoned_put, stalled_put, write_cap, write_cap_at,
+    FaultGuard,
 };
 
 /// Whether the `faults` feature was compiled in (used by `csize fuzz`
@@ -486,6 +519,25 @@ mod tests {
         assert!(!fires(FaultSite::RefresherTick));
         let after = fire_counts()[FaultSite::OptimisticRetry as usize];
         assert!(after >= before + 32, "fire tally must count every hit");
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn short_write_caps_are_per_site() {
+        let plane =
+            FaultPlane::new(5).with(FaultSite::ReplyCoalesce, 1, FaultAction::ShortWrite(2));
+        let _guard = install(plane);
+        assert_eq!(write_cap_at(FaultSite::ReplyCoalesce, 10), 2);
+        assert_eq!(
+            write_cap_at(FaultSite::ConnWrite, 10),
+            10,
+            "an unarmed site must never cap"
+        );
+        assert_eq!(
+            write_cap_at(FaultSite::ReplyCoalesce, 1),
+            1,
+            "the cap never exceeds the remaining length"
+        );
     }
 
     #[test]

@@ -264,71 +264,132 @@ impl SwarmResult {
 /// the workload mix (every Nth command cycles `SIZE~`/`SIZE?`).
 const SWARM_PROBE_EVERY: u64 = 61;
 
-/// The server-path load mode: `clients` TCP connections each drive
-/// `ops_per_client` commands from the workload mix (`PUT`/`DEL`/`HAS`
-/// per [`Mix`], keys drawn per `key_dist`, with a periodic
-/// `SIZE~`/`SIZE?` probe mixed in) and read every reply. This benchmarks
-/// the whole reactor + handler-pool + admission path rather than the
-/// bare structure; the server tests and `make server-smoke` both drive
-/// it, and a zipfian `key_dist` is how the sharded-store tests light up
-/// one hot shard.
+/// Everything [`client_swarm`] needs to drive a server, in one bundle
+/// (the knob list outgrew a positional signature when pipelining
+/// arrived).
+#[derive(Clone, Copy, Debug)]
+pub struct SwarmConfig {
+    /// Concurrent TCP connections.
+    pub clients: usize,
+    /// Commands each connection issues (replies are always read).
+    pub ops_per_client: u64,
+    /// Workload mix (`PUT`/`DEL`/`HAS` ratios).
+    pub mix: Mix,
+    /// Keys are drawn from `[0, key_range)`.
+    pub key_range: u64,
+    /// Key distribution (uniform, or zipfian to light up a hot shard).
+    pub key_dist: KeyDist,
+    pub seed: u64,
+    /// Commands issued per write: 1 (the floor) is the lock-step
+    /// command/reply client; `K > 1` is the pipelined client — `K`
+    /// command lines coalesced into one write, then `K` replies read
+    /// back in order, exercising the server's batch dispatch and reply
+    /// coalescing.
+    pub pipeline: usize,
+}
+
+impl SwarmConfig {
+    /// A lock-step (non-pipelined) uniform-key swarm; override fields
+    /// for anything fancier.
+    pub fn new(clients: usize, ops_per_client: u64, mix: Mix, key_range: u64, seed: u64) -> Self {
+        Self {
+            clients,
+            ops_per_client,
+            mix,
+            key_range,
+            key_dist: KeyDist::Uniform,
+            seed,
+            pipeline: 1,
+        }
+    }
+
+    /// Same swarm, issuing `pipeline` commands per write.
+    pub fn pipelined(mut self, pipeline: usize) -> Self {
+        self.pipeline = pipeline;
+        self
+    }
+}
+
+/// The server-path load mode: `cfg.clients` TCP connections each drive
+/// `cfg.ops_per_client` commands from the workload mix (`PUT`/`DEL`/`HAS`
+/// per [`Mix`], keys drawn per `cfg.key_dist`, with a periodic
+/// `SIZE~`/`SIZE?` probe mixed in) and read every reply. With
+/// `cfg.pipeline > 1` each client sends that many commands in one write
+/// before reading the replies back in order — the client half of the
+/// server's command pipelining. This benchmarks the whole
+/// acceptor + reactor-shard + handler-pool + admission path rather than
+/// the bare structure; the server tests and `make server-smoke` both
+/// drive it, and a zipfian `key_dist` is how the sharded-store tests
+/// light up one hot shard.
 ///
 /// Client threads never touch the store in-process, so they consume **no**
 /// [`crate::thread_id`] slots — swarms far wider than the thread-slot
-/// capacity are exactly the point (the reactor multiplexes them).
-pub fn client_swarm(
-    addr: SocketAddr,
-    clients: usize,
-    ops_per_client: u64,
-    mix: Mix,
-    key_range: u64,
-    key_dist: KeyDist,
-    seed: u64,
-) -> std::io::Result<SwarmResult> {
+/// capacity are exactly the point (the reactor shards multiplex them).
+pub fn client_swarm(addr: SocketAddr, cfg: SwarmConfig) -> std::io::Result<SwarmResult> {
     let start = Instant::now();
     let mut result = SwarmResult::default();
     let outcomes: Vec<std::io::Result<(u64, u64, u64)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..clients)
+        let handles: Vec<_> = (0..cfg.clients)
             .map(|c| {
                 scope.spawn(move || -> std::io::Result<(u64, u64, u64)> {
                     let stream = TcpStream::connect(addr)?;
                     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
                     let mut out = stream.try_clone()?;
                     let mut reader = BufReader::new(stream);
-                    let mut ops_stream =
-                        OpStream::with_dist(seed ^ ((c as u64) << 24), mix, key_range, key_dist);
+                    let mut ops_stream = OpStream::with_dist(
+                        cfg.seed ^ ((c as u64) << 24),
+                        cfg.mix,
+                        cfg.key_range,
+                        cfg.key_dist,
+                    );
                     let (mut ops, mut overloads, mut errors) = (0u64, 0u64, 0u64);
+                    let pipeline = cfg.pipeline.max(1) as u64;
                     let mut line = String::new();
-                    for i in 0..ops_per_client {
-                        let cmd = if i % SWARM_PROBE_EVERY == SWARM_PROBE_EVERY - 1 {
-                            if (i / SWARM_PROBE_EVERY) % 2 == 0 {
-                                "SIZE~ 50".to_string()
+                    let mut wire = String::new();
+                    let mut issued = 0u64;
+                    while issued < cfg.ops_per_client {
+                        let burst = pipeline.min(cfg.ops_per_client - issued);
+                        wire.clear();
+                        for j in 0..burst {
+                            let i = issued + j;
+                            let cmd = if i % SWARM_PROBE_EVERY == SWARM_PROBE_EVERY - 1 {
+                                if (i / SWARM_PROBE_EVERY) % 2 == 0 {
+                                    "SIZE~ 50".to_string()
+                                } else {
+                                    "SIZE?".to_string()
+                                }
                             } else {
-                                "SIZE?".to_string()
-                            }
-                        } else {
-                            let (op, key) = ops_stream.next();
-                            match op {
-                                OpType::Insert => format!("PUT {key}"),
-                                OpType::Delete => format!("DEL {key}"),
-                                OpType::Contains => format!("HAS {key}"),
-                            }
-                        };
-                        writeln!(out, "{cmd}")?;
-                        line.clear();
-                        if reader.read_line(&mut line)? == 0 {
-                            return Err(std::io::Error::new(
-                                std::io::ErrorKind::UnexpectedEof,
-                                "server closed mid-swarm",
-                            ));
+                                let (op, key) = ops_stream.next();
+                                match op {
+                                    OpType::Insert => format!("PUT {key}"),
+                                    OpType::Delete => format!("DEL {key}"),
+                                    OpType::Contains => format!("HAS {key}"),
+                                }
+                            };
+                            wire.push_str(&cmd);
+                            wire.push('\n');
                         }
-                        ops += 1;
-                        let reply = line.trim();
-                        if reply.starts_with("ERR OVERLOAD") {
-                            overloads += 1;
-                        } else if reply.starts_with("ERR") {
-                            errors += 1;
+                        // One write per burst: the pipelined client's
+                        // whole point (with pipeline=1 this degenerates
+                        // to the historical lock-step writeln).
+                        out.write_all(wire.as_bytes())?;
+                        for _ in 0..burst {
+                            line.clear();
+                            if reader.read_line(&mut line)? == 0 {
+                                return Err(std::io::Error::new(
+                                    std::io::ErrorKind::UnexpectedEof,
+                                    "server closed mid-swarm",
+                                ));
+                            }
+                            ops += 1;
+                            let reply = line.trim();
+                            if reply.starts_with("ERR OVERLOAD") {
+                                overloads += 1;
+                            } else if reply.starts_with("ERR") {
+                                errors += 1;
+                            }
                         }
+                        issued += burst;
                     }
                     writeln!(out, "QUIT")?;
                     Ok((ops, overloads, errors))

@@ -474,9 +474,10 @@ fn fuzz_naive_teeth(seed: u64, dump_dir: &str) -> Option<String> {
 }
 
 /// Exercise the fault sites the structure sweep cannot reach — handler
-/// dispatch, connection writes, and the refresher daemon — by driving a
-/// real server (and a 1ms refresher) under the chaos plane, so the
-/// coverage gate can hold *every* armed site to "fired at least once".
+/// dispatch, connection writes, accept handoffs, reply coalescing, and
+/// the refresher daemon — by driving a real two-reactor server (and a
+/// 1ms refresher) under the chaos plane, so the coverage gate can hold
+/// *every* armed site to "fired at least once".
 fn fuzz_cover_server_sites(seed: u64) {
     use concurrent_size::server::{BlockingClient, Server, ServerConfig};
     let _guard = faults::install(FaultPlane::chaos(seed));
@@ -486,9 +487,26 @@ fn fuzz_cover_server_sites(seed: u64) {
     store.set_refresh_period(Some(Duration::from_millis(1)));
     let config = ServerConfig {
         handlers: 2,
+        reactors: 2,
         ..Default::default()
     };
     let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind fuzz server");
+    // A dozen accepts give the 1-in-3 accept-handoff site plenty of
+    // chances while the acceptor spreads sockets over both shards, and
+    // each client pipelines a burst so replies coalesce into shared
+    // writes (the reply-coalesce short-write site caps those flushes).
+    let mut burst: Vec<BlockingClient> = (0..12)
+        .map(|_| BlockingClient::connect(server.local_addr()))
+        .collect();
+    for (i, client) in burst.iter_mut().enumerate() {
+        for k in 0..8u64 {
+            client.send(format!("PUT {}", 1000 + i as u64 * 100 + k));
+        }
+        for _ in 0..8 {
+            client.recv().expect("fuzz burst reply");
+        }
+    }
+    drop(burst);
     let mut client = BlockingClient::connect(server.local_addr());
     for k in 1..=200u64 {
         client.cmd(format!("PUT {k}"));
@@ -597,9 +615,10 @@ fn cmd_fuzz(args: &Args) {
 
     // Coverage gate: every site the chaos profile arms must have fired
     // at least once across the run, or the schedule silently stopped
-    // reaching part of the protocol. The server drive covers the three
-    // sites (handler dispatch, conn writes, refresher ticks) the direct
-    // structure sweep cannot hit.
+    // reaching part of the protocol. The server drive covers the five
+    // sites (handler dispatch, conn writes, accept handoffs, reply
+    // coalescing, refresher ticks) the direct structure sweep cannot
+    // hit.
     if faults::COMPILED {
         fuzz_cover_server_sites(base_seed);
         let fired = faults::fire_counts();

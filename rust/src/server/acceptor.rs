@@ -1,0 +1,148 @@
+//! The accept front-end: one thread turning the listener's backlog into
+//! per-reactor connection handoffs.
+//!
+//! The acceptor owns the nonblocking listener and nothing else. Each
+//! accepted socket is assigned to a reactor shard — round-robin for
+//! fairness, overridden by a least-loaded pick when the rotation would
+//! land on a shard strictly busier than the emptiest one (so a shard
+//! stuck with long-lived connections does not keep collecting new ones) —
+//! and sent over that shard's handoff channel. The shard adopts it on its
+//! next tick.
+//!
+//! Accounting: a socket in flight between accept and adoption is counted
+//! in its shard's `handoff` gauge (the acceptor increments, the shard
+//! decrements on adoption), so the `max_conns` ceiling and the load
+//! tiebreak both see connections the instant they exist, and the
+//! cluster-wide `peak` high-water ([`Shared::peak_total`]) is exact: the
+//! acceptor is the single serialization point where every connection
+//! enters, so it alone can observe the true simultaneous maximum.
+//!
+//! Fault plane: [`FaultSite::AcceptHandoff`] fires per handoff, between
+//! the gauge increment and the channel send — a `Delay` stretches the
+//! accept→adopt window, and a `Panic` (targeted tests) is contained per
+//! socket: that one client is dropped, the acceptor survives.
+
+use std::io::{ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering::SeqCst;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::faults::{self, FaultSite};
+
+use super::{IdleStrategy, Shared};
+
+/// The acceptor's share of the [`super::ServerConfig`] knobs.
+pub(crate) struct AcceptorConfig {
+    pub idle: IdleStrategy,
+    /// Cluster-wide live-connection ceiling (live + pending handoffs);
+    /// beyond it new clients get `ERR server full` and are dropped.
+    pub max_conns: usize,
+}
+
+pub(crate) struct Acceptor {
+    listener: TcpListener,
+    /// One handoff lane per reactor shard, index-aligned with
+    /// `shared.gauges`.
+    handoffs: Box<[Sender<TcpStream>]>,
+    shared: Arc<Shared>,
+    cfg: AcceptorConfig,
+    /// Round-robin cursor over the shards.
+    rr: usize,
+}
+
+impl Acceptor {
+    pub fn new(
+        listener: TcpListener,
+        handoffs: Vec<Sender<TcpStream>>,
+        shared: Arc<Shared>,
+        cfg: AcceptorConfig,
+    ) -> Self {
+        assert!(!handoffs.is_empty(), "acceptor needs at least one shard");
+        Self {
+            listener,
+            handoffs: handoffs.into(),
+            shared,
+            cfg,
+            rr: 0,
+        }
+    }
+
+    /// The accept loop. Returns when [`Shared::stop`] is raised; dropping
+    /// the acceptor then closes the listener and the handoff senders.
+    pub fn run(mut self) {
+        while !self.shared.stop.load(SeqCst) {
+            if !self.accept_ready() {
+                match self.cfg.idle {
+                    IdleStrategy::Sleep(nap) => std::thread::sleep(nap),
+                    IdleStrategy::Spin => std::thread::yield_now(),
+                }
+            }
+        }
+    }
+
+    /// Accept and hand off every connection the listener has ready.
+    fn accept_ready(&mut self) -> bool {
+        let mut progress = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    progress = true;
+                    self.shared.accepted.fetch_add(1, SeqCst);
+                    let total = self.shared.total_conns();
+                    if total >= self.cfg.max_conns {
+                        // Decline politely; the fresh socket buffer takes
+                        // this short write without blocking.
+                        let mut stream = stream;
+                        let _ = stream.write_all(b"ERR server full\n");
+                        continue;
+                    }
+                    // Every connection enters here, so this fetch_max
+                    // records the exact cluster-wide high-water — summing
+                    // per-shard peaks would overcount (shards peak at
+                    // different times) and maxing them would undercount.
+                    self.shared.peak_total.fetch_max(total + 1, SeqCst);
+                    let shard = self.pick_shard();
+                    self.shared.gauges[shard].handoff.fetch_add(1, SeqCst);
+                    let jittered =
+                        std::panic::catch_unwind(|| faults::jitter(FaultSite::AcceptHandoff));
+                    let handed = jittered.is_ok() && self.handoffs[shard].send(stream).is_ok();
+                    if !handed {
+                        // Injected handoff panic, or the shard is gone
+                        // (shutdown): drop this one socket, keep serving.
+                        self.shared.gauges[shard].handoff.fetch_sub(1, SeqCst);
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient failures (ECONNABORTED, EMFILE, ...) must
+                    // not take the server down; the idle backoff keeps a
+                    // persistent error from hot-looping.
+                    eprintln!("server: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Round-robin with a least-loaded override: take the next shard in
+    /// rotation, unless some shard currently holds strictly fewer
+    /// connections (live + pending handoffs) than the rotation's pick —
+    /// then take the emptiest instead.
+    fn pick_shard(&mut self) -> usize {
+        let load = |i: usize| {
+            let g = &self.shared.gauges[i];
+            g.live.load(SeqCst) + g.handoff.load(SeqCst)
+        };
+        let pick = self.rr;
+        self.rr = (self.rr + 1) % self.handoffs.len();
+        let least = (0..self.handoffs.len()).min_by_key(|&i| load(i)).unwrap_or(pick);
+        if load(pick) > load(least) {
+            least
+        } else {
+            pick
+        }
+    }
+}

@@ -14,10 +14,17 @@
 //! * a write buffer with a partial-write cursor, flushed as the socket
 //!   accepts bytes.
 //!
-//! At most one request per connection is in flight in the handler pool
-//! (`in_flight`); the next pending entry dispatches only when its reply
-//! comes back. That pipelines the *reactor* across thousands of
-//! connections while keeping per-connection replies strictly ordered.
+//! At most one *batch* per connection is in flight in the handler pool
+//! (`in_flight`): the reactor drains every complete line out of a read
+//! into `pending`, then dispatches up to the configured pipeline depth of
+//! consecutive pool requests as one job, executed sequentially by a
+//! single handler. Per-connection replies stay strictly ordered — program
+//! order within a batch, batch order across batches, with error replies
+//! and inline answers interleaved at their arrival positions — while each
+//! reactor shard pipelines across thousands of connections. The batch's
+//! replies come back together and are coalesced into the write buffer in
+//! one append ([`Conn::enqueue_replies`]), so a pipelining client gets
+//! one write syscall per tick, not one per command.
 
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
@@ -25,7 +32,7 @@ use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use super::proto::{self, MAX_LINE, Request};
-use crate::faults;
+use crate::faults::{self, FaultSite};
 
 /// Ordered per-connection work: a parsed request, or an error reply that
 /// must go out in sequence with the requests around it.
@@ -121,14 +128,18 @@ impl LineBuffer {
     }
 }
 
-/// The one request a connection currently has in the handler pool:
-/// identified so a reply that arrives after its deadline fired can be
-/// recognized as stale and dropped, and timestamped so the reactor's
-/// deadline sweep knows when to give up on it.
+/// The one batch a connection currently has in the handler pool:
+/// identified so replies that arrive after the deadline fired can be
+/// recognized as stale and dropped, timestamped so the reactor's deadline
+/// sweep knows when to give up on it, and sized so that sweep can answer
+/// `ERR TIMEOUT` once per batched command (and the queue gauge can move
+/// by the batch length).
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct InFlight {
     pub id: u64,
     pub since: Instant,
+    /// Commands in the batch (>= 1).
+    pub len: usize,
 }
 
 /// One client connection, owned by the reactor.
@@ -236,6 +247,16 @@ impl Conn {
         self.outbuf.push(b'\n');
     }
 
+    /// Queue a completed batch's replies in one coalesced append, so the
+    /// whole batch flushes as a single write when the socket takes it.
+    pub fn enqueue_replies(&mut self, replies: &[String]) {
+        self.last_activity = Instant::now();
+        for reply in replies {
+            self.outbuf.extend_from_slice(reply.as_bytes());
+            self.outbuf.push(b'\n');
+        }
+    }
+
     /// Write as much of the out-buffer as the socket accepts. Returns
     /// whether any bytes moved.
     pub fn pump_write(&mut self) -> bool {
@@ -245,8 +266,12 @@ impl Conn {
         let mut progress = false;
         while self.written < self.outbuf.len() {
             // Fault plane: cap each write syscall (short/partial writes),
-            // exercising the partial-write cursor below.
-            let cap = faults::write_cap(self.outbuf.len() - self.written);
+            // exercising the partial-write cursor below — `ConnWrite`
+            // shortens any write, `ReplyCoalesce` specifically splits a
+            // coalesced reply batch across reply boundaries.
+            let remaining = self.outbuf.len() - self.written;
+            let cap = faults::write_cap(remaining)
+                .min(faults::write_cap_at(FaultSite::ReplyCoalesce, remaining));
             match self.stream.write(&self.outbuf[self.written..self.written + cap]) {
                 Ok(0) => {
                     self.dead = true;

@@ -6,14 +6,16 @@
 //! systems — monitoring and admission control — and this module wires the
 //! crate's whole size stack into exactly those paths:
 //!
-//! * the **reactor** ([`reactor`]) — one thread multiplexing every
-//!   connection over nonblocking sockets with per-connection read/write
-//!   buffers and partial-line state machines ([`conn`]), replacing the
-//!   old bounded worker pool where each live connection consumed a
-//!   [`crate::thread_id`] slot (the 65th connection used to panic; the
-//!   pool that replaced it queued excess clients behind `workers`
-//!   connections). The reactor holds thousands of connections open while
-//!   a small **handler pool** — never more than
+//! * the **reactor shards** ([`reactor`]) — `--reactors N` threads, each
+//!   multiplexing its own connection table over nonblocking sockets with
+//!   per-connection read/write buffers and partial-line state machines
+//!   ([`conn`]), fed by one **acceptor** thread ([`acceptor`]) that
+//!   distributes sockets round-robin with a least-loaded tiebreak. Each
+//!   shard pipelines: every complete command in a read buffer is parsed,
+//!   and consecutive pool requests dispatch as one batch a single
+//!   handler runs in order, with the batch's replies coalesced into one
+//!   write. The shards hold thousands of connections open while a small
+//!   shared **handler pool** — never more than
 //!   [`crate::thread_id::capacity`]`/2` threads — executes the store
 //!   operations;
 //! * **admission control** ([`admission`]) — every incoming `PUT`
@@ -43,15 +45,18 @@ use crate::faults::{self, FaultSite};
 use crate::set_api::ConcurrentSet;
 use crate::thread_id;
 
+mod acceptor;
 mod admission;
 mod conn;
 mod monitor;
 pub mod proto;
 mod reactor;
+mod readiness;
 
 pub use admission::{Admission, Watermarks};
 pub use proto::{DEFAULT_RECENT_MS, OVERLOAD_REPLY, parse_stats, Request};
 
+use acceptor::{Acceptor, AcceptorConfig};
 use monitor::ServerMonitor;
 use reactor::{Completion, Job, Reactor, ReactorConfig};
 
@@ -94,6 +99,15 @@ pub struct ServerConfig {
     /// Live-connection ceiling; beyond it new clients get `ERR server
     /// full` and are dropped instead of exhausting fds.
     pub max_conns: usize,
+    /// Reactor shards (`--reactors auto|N`, default 1): the acceptor
+    /// distributes sockets across this many per-shard connection tables,
+    /// each swept by its own thread. 1 reproduces the single-reactor
+    /// behavior exactly.
+    pub reactors: usize,
+    /// Most commands batched into one handler-pool job per connection
+    /// dispatch (`--pipeline-depth N`, default 32, min 1): how much of a
+    /// pipelining client's read buffer one pool round trip serves.
+    pub pipeline_depth: usize,
     /// Global admission watermarks on the store-wide size estimate;
     /// `None` admits everything.
     pub admission: Option<Watermarks>,
@@ -126,6 +140,8 @@ impl Default for ServerConfig {
         Self {
             handlers: 16,
             max_conns: 4096,
+            reactors: 1,
+            pipeline_depth: 32,
             admission: None,
             shard_admission: None,
             idle: IdleStrategy::Sleep(IDLE_NAP),
@@ -138,6 +154,8 @@ impl Default for ServerConfig {
 
 impl ServerConfig {
     /// Build from CLI flags: `--workers N`, `--max-conns N`,
+    /// `--reactors auto|N` (the `auto|N` shard grammar; clamped to >= 1),
+    /// `--pipeline-depth N` (clamped to >= 1),
     /// `--admission-high N [--admission-low N]` (low defaults to half of
     /// high; low alone is an error),
     /// `--shard-admission-high N [--shard-admission-low N]` (same
@@ -163,6 +181,10 @@ impl ServerConfig {
         Ok(Self {
             handlers: args.get_usize("workers", defaults.handlers),
             max_conns: args.get_usize("max-conns", defaults.max_conns),
+            reactors: args.reactors(defaults.reactors).max(1),
+            pipeline_depth: args
+                .get_usize("pipeline-depth", defaults.pipeline_depth)
+                .max(1),
             admission,
             shard_admission,
             idle,
@@ -211,9 +233,12 @@ pub struct ServerStats {
     pub live_conns: usize,
     /// High-water mark of simultaneously live connections.
     pub peak_conns: usize,
-    /// Requests dispatched to the handler pool and not yet completed.
+    /// Commands dispatched to the handler pool and not yet completed,
+    /// summed over reactor shards.
     pub queue_depth: usize,
     pub handlers: usize,
+    /// Reactor shards serving connections.
+    pub reactors: usize,
     /// Connections accepted over the server's lifetime.
     pub accepted: u64,
     /// `PUT`s shed by the global admission tier.
@@ -237,16 +262,42 @@ pub struct ServerStats {
     pub monitor_violations: u64,
 }
 
-/// State shared between the reactor thread and the [`Server`] handle.
+/// One reactor shard's telemetry slice. Each shard writes only its own
+/// slice (the acceptor also writes `handoff`), so the hot paths never
+/// contend on a shared gauge; [`Shared::snapshot`] merges the slices
+/// with the [`crate::size::ArbiterStats::merge`] convention — counters
+/// add, gauges keep the maximum.
+#[derive(Default)]
+pub(crate) struct ReactorGauges {
+    /// Connections in this shard's table.
+    pub live: AtomicUsize,
+    /// High-water mark of this shard's table.
+    pub peak: AtomicUsize,
+    /// Commands this shard dispatched to the pool, not yet completed.
+    pub queue: AtomicUsize,
+    /// Sockets the acceptor handed to this shard, not yet adopted.
+    pub handoff: AtomicUsize,
+    /// Commands answered `ERR TIMEOUT` by this shard's deadline sweep.
+    pub timeouts: AtomicU64,
+    /// Idle/slowloris connections reaped by this shard.
+    pub reaped: AtomicU64,
+}
+
+/// State shared between the acceptor, the reactor shards, the handler
+/// pool, and the [`Server`] handle.
 pub(crate) struct Shared {
     pub stop: AtomicBool,
-    pub live: AtomicUsize,
-    pub peak: AtomicUsize,
-    pub queue: AtomicUsize,
+    /// One telemetry slice per reactor shard, index-aligned with the
+    /// handoff channels.
+    pub gauges: Box<[ReactorGauges]>,
+    /// Cluster-wide high-water of simultaneously live connections,
+    /// maintained by the acceptor (the single point every connection
+    /// enters through). The per-shard `peak` gauges cannot reconstruct
+    /// this — shards peak at different times, so their max under-reports
+    /// and their sum over-reports; see `Acceptor::accept_ready`.
+    pub peak_total: AtomicUsize,
     pub accepted: AtomicU64,
-    pub timeouts: AtomicU64,
     pub panics: AtomicU64,
-    pub reaped: AtomicU64,
     pub admission: Option<Admission>,
     /// Per-shard admission gates (second tier); empty when disabled.
     /// `shard_gates[i]` guards `PUT`s routed to store shard `i`.
@@ -258,6 +309,7 @@ pub(crate) struct Shared {
 
 impl Shared {
     fn new(
+        reactors: usize,
         admission: Option<Watermarks>,
         shard_admission: Option<Watermarks>,
         store_shards: usize,
@@ -269,13 +321,10 @@ impl Shared {
         };
         Self {
             stop: AtomicBool::new(false),
-            live: AtomicUsize::new(0),
-            peak: AtomicUsize::new(0),
-            queue: AtomicUsize::new(0),
+            gauges: (0..reactors.max(1)).map(|_| ReactorGauges::default()).collect(),
+            peak_total: AtomicUsize::new(0),
             accepted: AtomicU64::new(0),
-            timeouts: AtomicU64::new(0),
             panics: AtomicU64::new(0),
-            reaped: AtomicU64::new(0),
             admission: admission.map(Admission::new),
             shard_gates,
             store_shards,
@@ -283,34 +332,63 @@ impl Shared {
         }
     }
 
+    /// Connections currently owned by the server: adopted into a shard's
+    /// table, or in flight between accept and adoption. The acceptor's
+    /// `max_conns` ceiling and the merged `conns=` gauge both read this.
+    pub(crate) fn total_conns(&self) -> usize {
+        self.gauges
+            .iter()
+            .map(|g| g.live.load(SeqCst) + g.handoff.load(SeqCst))
+            .sum()
+    }
+
+    /// Merge the per-reactor slices into one [`ServerStats`], following
+    /// the [`crate::size::ArbiterStats::merge`] convention: counters
+    /// (`accepted`, `timeouts`, `reaped`, ...) add; gauges keep the
+    /// maximum. `live` and `queue` are gauges over *disjoint* connection
+    /// sets, so their sum is the true cluster value; `peak` merges by max
+    /// against the acceptor's cluster-wide high-water, because summing
+    /// per-shard peaks taken at different instants would fabricate a
+    /// moment that never existed.
     pub(crate) fn snapshot(&self, handlers: usize) -> ServerStats {
+        let mut queue = 0;
+        let mut peak = self.peak_total.load(SeqCst);
+        let (mut timeouts, mut reaped) = (0u64, 0u64);
+        for g in self.gauges.iter() {
+            queue += g.queue.load(SeqCst);
+            peak = peak.max(g.peak.load(SeqCst));
+            timeouts += g.timeouts.load(SeqCst);
+            reaped += g.reaped.load(SeqCst);
+        }
         ServerStats {
-            live_conns: self.live.load(SeqCst),
-            peak_conns: self.peak.load(SeqCst),
-            queue_depth: self.queue.load(SeqCst),
+            live_conns: self.total_conns(),
+            peak_conns: peak,
+            queue_depth: queue,
             handlers,
+            reactors: self.gauges.len(),
             accepted: self.accepted.load(SeqCst),
             shed: self.admission.as_ref().map_or(0, Admission::shed_count),
             admitting: self.admission.as_ref().is_none_or(|a| !a.shedding()),
             store_shards: self.store_shards,
             shard_shed: self.shard_gates.iter().map(Admission::shed_count).sum(),
             fault_fires: faults::fire_counts().iter().sum(),
-            timeouts: self.timeouts.load(SeqCst),
+            timeouts,
             panics: self.panics.load(SeqCst),
-            reaped: self.reaped.load(SeqCst),
+            reaped,
             monitor_violations: self.monitor.as_ref().map_or(0, |m| m.violations()),
         }
     }
 }
 
-/// A running server: the reactor thread plus its handler pool. Dropping
-/// the handle stops the reactor and joins every thread (shutdown is
-/// synchronous, like the size refresher's).
+/// A running server: the acceptor thread, its reactor shards, and the
+/// shared handler pool. Dropping the handle stops them all and joins
+/// every thread (shutdown is synchronous, like the size refresher's).
 pub struct Server {
     shared: Arc<Shared>,
     addr: SocketAddr,
     handlers: usize,
-    reactor: Option<JoinHandle<()>>,
+    acceptor: Option<JoinHandle<()>>,
+    reactors: Vec<JoinHandle<()>>,
     pool: Vec<JoinHandle<()>>,
 }
 
@@ -326,58 +404,90 @@ impl Server {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let handlers = config.handlers.clamp(1, thread_id::capacity() / 2);
+        let reactors = config.reactors.max(1);
         let monitor = (config.monitor_sample > 0).then(|| {
             Arc::new(ServerMonitor::new(config.monitor_sample, handlers as i64, ARTIFACT_DIR))
         });
         let shared = Arc::new(Shared::new(
+            reactors,
             config.admission,
             config.shard_admission,
             store.store_shards(),
             monitor,
         ));
 
+        // One shared job lane in (any handler serves any shard), one
+        // completion lane back *per shard* (replies return to the shard
+        // that owns the connection).
         let (job_tx, job_rx) = channel::<Job>();
-        let (done_tx, done_rx) = channel::<Completion>();
         let job_rx = Arc::new(Mutex::new(job_rx));
+        let (done_txs, done_rxs): (Vec<Sender<Completion>>, Vec<Receiver<Completion>>) =
+            (0..reactors).map(|_| channel::<Completion>()).unzip();
         let pool: Vec<JoinHandle<()>> = (0..handlers)
             .map(|i| {
                 let ctx = HandlerCtx {
                     index: i,
                     store: store.clone(),
                     jobs: job_rx.clone(),
-                    done: done_tx.clone(),
+                    done: done_txs.clone().into(),
                     shared: shared.clone(),
                 };
                 spawn_handler(ctx).expect("spawn kv handler")
             })
             .collect();
-        // The reactor's receiver must see disconnect once the pool exits.
-        drop(done_tx);
+        // The shards' receivers must see disconnect once the pool exits.
+        drop(done_txs);
 
-        let reactor = Reactor::new(
+        let mut handoff_txs = Vec::with_capacity(reactors);
+        let mut reactor_handles = Vec::with_capacity(reactors);
+        for (index, done_rx) in done_rxs.into_iter().enumerate() {
+            let (handoff_tx, handoff_rx) = channel::<TcpStream>();
+            handoff_txs.push(handoff_tx);
+            let shard = Reactor::new(
+                handoff_rx,
+                store.clone(),
+                shared.clone(),
+                job_tx.clone(),
+                done_rx,
+                ReactorConfig {
+                    index,
+                    idle: config.idle,
+                    handlers,
+                    pipeline_depth: config.pipeline_depth.max(1),
+                    request_timeout: config.request_timeout,
+                    conn_idle: config.conn_idle,
+                },
+            );
+            let handle = std::thread::Builder::new()
+                .name(format!("kv-reactor-{index}"))
+                .spawn(move || shard.run())
+                .expect("spawn kv reactor shard");
+            reactor_handles.push(handle);
+        }
+        // The pool's job receiver must see disconnect once every shard
+        // (each holding a sender clone) exits.
+        drop(job_tx);
+
+        let acceptor = Acceptor::new(
             listener,
-            store,
+            handoff_txs,
             shared.clone(),
-            job_tx,
-            done_rx,
-            ReactorConfig {
+            AcceptorConfig {
                 idle: config.idle,
                 max_conns: config.max_conns,
-                handlers,
-                request_timeout: config.request_timeout,
-                conn_idle: config.conn_idle,
             },
         );
-        let reactor = std::thread::Builder::new()
-            .name("kv-reactor".into())
-            .spawn(move || reactor.run())
-            .expect("spawn kv reactor");
+        let acceptor = std::thread::Builder::new()
+            .name("kv-acceptor".into())
+            .spawn(move || acceptor.run())
+            .expect("spawn kv acceptor");
 
         Ok(Self {
             shared,
             addr,
             handlers,
-            reactor: Some(reactor),
+            acceptor: Some(acceptor),
+            reactors: reactor_handles,
             pool,
         })
     }
@@ -394,17 +504,28 @@ impl Server {
         self.handlers
     }
 
+    /// Number of reactor shards serving connections.
+    pub fn reactor_count(&self) -> usize {
+        self.shared.gauges.len()
+    }
+
+    /// Per-shard live-connection counts (acceptor-distribution
+    /// observability; index-aligned with the shards).
+    pub fn reactor_loads(&self) -> Vec<usize> {
+        self.shared.gauges.iter().map(|g| g.live.load(SeqCst)).collect()
+    }
+
     /// Current server telemetry (same numbers the `STATS` endpoint serves).
     pub fn stats(&self) -> ServerStats {
         self.shared.snapshot(self.handlers)
     }
 
-    /// Block the calling thread on the reactor (serve-forever mode; the
-    /// reactor only exits when another handle to the process raises stop
-    /// or the process dies). Threads are joined on drop afterwards.
+    /// Block the calling thread on the acceptor (serve-forever mode; it
+    /// only exits when another handle to the process raises stop or the
+    /// process dies). Threads are joined on drop afterwards.
     pub fn wait(mut self) {
-        if let Some(reactor) = self.reactor.take() {
-            let _ = reactor.join();
+        if let Some(acceptor) = self.acceptor.take() {
+            let _ = acceptor.join();
         }
     }
 }
@@ -412,9 +533,14 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shared.stop.store(true, SeqCst);
-        if let Some(reactor) = self.reactor.take() {
-            // The reactor drops its job sender on exit, draining the pool.
-            let _ = reactor.join();
+        if let Some(acceptor) = self.acceptor.take() {
+            // Joining the acceptor drops the handoff senders.
+            let _ = acceptor.join();
+        }
+        for handle in self.reactors.drain(..) {
+            // Each shard drops its job-sender clone on exit; the last
+            // one to go drains the handler pool.
+            let _ = handle.join();
         }
         for handle in self.pool.drain(..) {
             let _ = handle.join();
@@ -474,7 +600,10 @@ struct HandlerCtx {
     index: usize,
     store: Arc<dyn ConcurrentSet>,
     jobs: Arc<Mutex<Receiver<Job>>>,
-    done: Sender<Completion>,
+    /// One completion sender per reactor shard; `Job::reactor` picks the
+    /// lane so a batch's replies return to the shard that owns its
+    /// connection.
+    done: Box<[Sender<Completion>]>,
     shared: Arc<Shared>,
 }
 
@@ -511,24 +640,27 @@ fn spawn_handler(ctx: HandlerCtx) -> io::Result<JoinHandle<()>> {
     })
 }
 
-/// One handler thread: dequeue, execute against the store (contained —
-/// see [`execute_contained`]), send the reply back to the reactor. Exits
-/// when the reactor (job sender) goes away.
+/// One handler thread: dequeue a batch, execute it in program order
+/// against the store (each command contained — see [`execute_contained`],
+/// so one poisoned command costs one `ERR PANIC` inside the batch, not
+/// the batch), send the replies back to the owning shard. Exits when the
+/// job senders (the reactor shards) go away.
 fn handler_loop(ctx: &HandlerCtx) {
     loop {
         // Hold the lock only to dequeue (the guard dies with the `let`),
-        // not while executing the store operation.
+        // not while executing the store operations.
         let job = match ctx.jobs.lock().unwrap_or_else(|p| p.into_inner()).recv() {
             Ok(job) => job,
             Err(_) => return,
         };
-        let reply = execute_contained(ctx, job.req);
+        let replies: Vec<String> =
+            job.reqs.iter().map(|&req| execute_contained(ctx, req)).collect();
         let completion = Completion {
             token: job.token,
             req_id: job.req_id,
-            reply,
+            replies,
         };
-        if ctx.done.send(completion).is_err() {
+        if ctx.done[job.reactor].send(completion).is_err() {
             return;
         }
     }
@@ -579,6 +711,8 @@ mod tests {
         let cfg = ServerConfig::from_args(&args("")).unwrap();
         assert_eq!(cfg.handlers, 16);
         assert_eq!(cfg.max_conns, 4096);
+        assert_eq!(cfg.reactors, 1, "default must stay single-reactor");
+        assert_eq!(cfg.pipeline_depth, 32);
         assert!(cfg.admission.is_none());
         assert_eq!(cfg.idle, IdleStrategy::Sleep(IDLE_NAP));
         assert_eq!(cfg.request_timeout, Some(Duration::from_secs(30)));
@@ -612,6 +746,21 @@ mod tests {
         assert_eq!(cfg.max_conns, 128);
         assert_eq!(cfg.admission, Some(Watermarks { high: 100, low: 40 }));
         assert_eq!(cfg.idle, IdleStrategy::Spin);
+    }
+
+    #[test]
+    fn config_parses_reactors_and_pipeline_depth() {
+        let cfg = ServerConfig::from_args(&args("--reactors 4 --pipeline-depth 8")).unwrap();
+        assert_eq!(cfg.reactors, 4);
+        assert_eq!(cfg.pipeline_depth, 8);
+        // `auto` maps to the machine-detected shard count (>= 1), the
+        // same grammar as --size-shards/--store-shards.
+        let cfg = ServerConfig::from_args(&args("--reactors auto")).unwrap();
+        assert!(cfg.reactors >= 1);
+        // Zero is clamped, not an error: both knobs have a working floor.
+        let cfg = ServerConfig::from_args(&args("--reactors 0 --pipeline-depth 0")).unwrap();
+        assert_eq!(cfg.reactors, 1);
+        assert_eq!(cfg.pipeline_depth, 1);
     }
 
     #[test]

@@ -173,7 +173,7 @@ pub fn estimate_reply(store: &dyn ConcurrentSet) -> String {
 /// whitespace and `=`.
 pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
     format!(
-        "conns={} peak={} queue={} handlers={} accepted={} shed={} admitting={} \
+        "conns={} peak={} queue={} handlers={} reactors={} accepted={} shed={} admitting={} \
          store_shards={} shard_shed={} timeouts={} panics={} reaped={} \
          monitor_violations={} faults={} \
          rounds={} adoptions={} recent_hits={} recent_refreshes={} daemon_rounds={} \
@@ -182,6 +182,7 @@ pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
         server.peak_conns,
         server.queue_depth,
         server.handlers,
+        server.reactors,
         server.accepted,
         server.shed,
         u8::from(server.admitting),
@@ -298,6 +299,7 @@ mod tests {
             peak_conns: 300,
             queue_depth: 2,
             handlers: 4,
+            reactors: 2,
             accepted: 310,
             shed: 7,
             admitting: true,
@@ -316,6 +318,7 @@ mod tests {
             "peak",
             "queue",
             "handlers",
+            "reactors",
             "shed",
             "admitting",
             "store_shards",
@@ -331,6 +334,7 @@ mod tests {
             assert!(stats.contains_key(want), "missing {want} in {line}");
         }
         assert_eq!(stats["peak"], 300);
+        assert_eq!(stats["reactors"], 2);
         assert_eq!(stats["admitting"], 1);
         assert_eq!(stats["shed"], 7);
         assert_eq!(stats["store_shards"], 4);

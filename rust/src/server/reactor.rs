@@ -1,32 +1,44 @@
-//! The hand-rolled readiness reactor: one thread multiplexing every
-//! connection over nonblocking sockets.
+//! The hand-rolled readiness reactor, sharded: N threads, each
+//! multiplexing its own slice of the connections over nonblocking
+//! sockets.
 //!
 //! The crate is offline and dependency-free, so there is no `mio`/`tokio`
-//! (and no `libc` for raw `epoll`). Readiness is therefore *polled*: all
-//! sockets run in nonblocking mode and each reactor tick sweeps
-//! accept → completions → per-connection read/dispatch/write, treating
+//! (and no `libc` for raw `epoll` — see [`super::readiness`] for the
+//! backend seam). Readiness is therefore *polled*: all sockets run in
+//! nonblocking mode and each shard tick sweeps
+//! adopt → completions → per-connection read/dispatch/write, treating
 //! `WouldBlock` as "not ready". A tick that makes no progress anywhere
-//! applies the configured [`IdleStrategy`] (a short nap by default, a
+//! waits on the shard's [`Readiness`] backend (a short nap by default, a
 //! spin for latency-critical deployments) so an idle server costs ~0 CPU
-//! while a loaded one never sleeps. This scales to thousands of
-//! connections because per-tick work is a few syscalls per socket —
-//! against the old model's hard wall where each *connection* consumed a
-//! thread slot out of [`crate::thread_id::capacity`].
+//! while a loaded one never sleeps.
 //!
-//! Store operations do not run on the reactor thread: parsed requests hop
-//! to the bounded handler pool (see [`super::Server`]) through an mpsc
-//! pair, one in flight per connection to keep replies ordered. The two
+//! One [`Reactor`] is one **shard**: it owns a private connection table
+//! fed by the acceptor thread ([`super::acceptor`]) over a handoff
+//! channel, so shards share no connection state and the per-connection
+//! sweep runs lock-free. What *is* shared — the handler pool's job
+//! channel, the two-tier admission gates, the sampled monitor, the
+//! merged `STATS` gauges — lives in [`Shared`] behind atomics.
+//!
+//! Store operations do not run on the reactor threads: parsed requests
+//! hop to the bounded handler pool (see [`super::Server`]) through an
+//! mpsc pair, one **batch** in flight per connection. A batch is up to
+//! `pipeline_depth` consecutive pool requests drained from one
+//! connection's read buffer, executed in order by a single handler, so a
+//! pipelining client costs one pool round trip per batch instead of one
+//! per command while per-connection replies keep program order. The two
 //! exceptions are `SIZE?`/`STATS` (answered inline — they only read
 //! counters, and must stay live when every handler is wedged in a
 //! blocking `SIZE`) and `PUT`s shed by admission control (answered
 //! inline with [`proto::OVERLOAD_REPLY`], or the per-shard
 //! `ERR OVERLOAD shard=<i>` variant when the second tier trips —
 //! shedding that queued behind the saturated pool would defeat its
-//! purpose).
+//! purpose). Admission is evaluated per command at batch-build time: the
+//! estimate each `PUT` is judged on is the one current at dispatch, and a
+//! shed mid-batch closes the batch so the overload reply keeps its place
+//! in the reply order.
 
 use std::collections::HashMap;
-use std::io::{ErrorKind, Write};
-use std::net::TcpListener;
+use std::net::TcpStream;
 use std::sync::atomic::Ordering::SeqCst;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -36,35 +48,46 @@ use crate::set_api::ConcurrentSet;
 
 use super::conn::{Conn, InFlight, Pending};
 use super::proto::{self, Request};
+use super::readiness::Readiness;
 use super::{IdleStrategy, Shared};
 
-/// One store request travelling reactor → handler pool.
+/// One batch of store requests travelling reactor shard → handler pool.
 pub(crate) struct Job {
+    /// Index of the shard that dispatched the batch; the handler sends
+    /// the [`Completion`] back on this shard's channel.
+    pub reactor: usize,
     pub token: u64,
-    /// Globally unique per dispatched request; echoed in the
-    /// [`Completion`] so a reply that outlived its deadline (the reactor
-    /// already answered `ERR TIMEOUT` and moved on) is recognized as
-    /// stale and dropped instead of answering the *next* request.
+    /// Unique per dispatched batch (within its shard); echoed in the
+    /// [`Completion`] so replies that outlived their deadline (the shard
+    /// already answered `ERR TIMEOUT` per command and moved on) are
+    /// recognized as stale and dropped instead of answering the *next*
+    /// batch.
     pub req_id: u64,
-    pub req: Request,
+    /// The batched commands, in connection program order (>= 1).
+    pub reqs: Vec<Request>,
 }
 
-/// One reply travelling handler pool → reactor.
+/// One batch of replies travelling handler pool → reactor shard, in the
+/// same order as [`Job::reqs`].
 pub(crate) struct Completion {
     pub token: u64,
     pub req_id: u64,
-    pub reply: String,
+    pub replies: Vec<String>,
 }
 
-/// The reactor's share of the [`super::ServerConfig`] knobs.
+/// One shard's share of the [`super::ServerConfig`] knobs.
 pub(crate) struct ReactorConfig {
+    /// This shard's index into `Shared::gauges` (and the handoff lane it
+    /// adopts from).
+    pub index: usize,
     pub idle: IdleStrategy,
-    pub max_conns: usize,
     /// Pool size, reported through `STATS`.
     pub handlers: usize,
-    /// Per-request handler deadline: a pool request unanswered past this
-    /// gets `ERR TIMEOUT` and its connection slot back (`None` = wait
-    /// forever).
+    /// Most commands batched into one pool job per connection dispatch.
+    pub pipeline_depth: usize,
+    /// Per-request handler deadline: a pool batch unanswered past this
+    /// gets `ERR TIMEOUT` per command and its connection slot back
+    /// (`None` = wait forever).
     pub request_timeout: Option<Duration>,
     /// Reap connections with no protocol progress for this long
     /// (`None` = never). Counts *parsed lines*, not raw bytes, so
@@ -73,7 +96,8 @@ pub(crate) struct ReactorConfig {
 }
 
 pub(crate) struct Reactor {
-    listener: TcpListener,
+    /// Sockets the acceptor assigned to this shard, awaiting adoption.
+    handoffs: Receiver<TcpStream>,
     conns: HashMap<u64, Conn>,
     next_token: u64,
     next_req_id: u64,
@@ -81,12 +105,42 @@ pub(crate) struct Reactor {
     completions: Receiver<Completion>,
     store: Arc<dyn ConcurrentSet>,
     shared: Arc<Shared>,
+    readiness: Readiness,
     cfg: ReactorConfig,
+}
+
+/// Two-tier admission for one pool-bound request: `Some(reply)` sheds it
+/// inline, `None` admits. A free function (not a `Reactor` method) so the
+/// dispatch loop can call it while `self.conns` is mutably borrowed.
+fn admission_reply(shared: &Shared, store: &dyn ConcurrentSet, req: Request) -> Option<String> {
+    if !req.grows_store() {
+        return None;
+    }
+    // Tier 1: global watermarks on the aggregate estimate — the whole
+    // store is too full. The gate is shared by every reactor shard, so
+    // hysteresis state is cluster-wide no matter which shard a
+    // connection landed on.
+    if let Some(gate) = &shared.admission {
+        if !gate.admit(store.size_estimate()) {
+            return Some(proto::OVERLOAD_REPLY.into());
+        }
+    }
+    // Tier 2: per-store-shard watermarks — shed only the hot shard's
+    // PUTs while its siblings admit.
+    if !shared.shard_gates.is_empty() {
+        if let Request::Put(key) = req {
+            let shard = store.shard_of(key);
+            if !shared.shard_gates[shard].admit(store.shard_estimate(shard)) {
+                return Some(proto::overload_shard_reply(shard));
+            }
+        }
+    }
+    None
 }
 
 impl Reactor {
     pub fn new(
-        listener: TcpListener,
+        handoffs: Receiver<TcpStream>,
         store: Arc<dyn ConcurrentSet>,
         shared: Arc<Shared>,
         jobs: Sender<Job>,
@@ -94,7 +148,7 @@ impl Reactor {
         cfg: ReactorConfig,
     ) -> Self {
         Self {
-            listener,
+            handoffs,
             conns: HashMap::new(),
             next_token: 0,
             next_req_id: 0,
@@ -102,83 +156,69 @@ impl Reactor {
             completions,
             store,
             shared,
+            readiness: Readiness::new(),
             cfg,
         }
     }
 
-    /// The event loop. Returns when [`Shared::stop`] is raised; dropping
-    /// the reactor then closes the listener and every connection, and
-    /// dropping its job sender drains the handler pool.
+    /// The shard event loop. Returns when [`Shared::stop`] is raised;
+    /// dropping the shard then closes its connections, and dropping the
+    /// last shard's job sender drains the handler pool.
     pub fn run(mut self) {
         while !self.shared.stop.load(SeqCst) {
-            let mut progress = self.accept();
+            let mut progress = self.adopt();
             progress |= self.drain_completions();
             progress |= self.pump_conns();
             progress |= self.heal();
             self.reap();
             if !progress {
-                match self.cfg.idle {
-                    IdleStrategy::Sleep(nap) => std::thread::sleep(nap),
-                    IdleStrategy::Spin => std::thread::yield_now(),
-                }
+                self.readiness.wait(self.cfg.idle);
             }
         }
     }
 
-    /// Accept every connection the listener has ready.
-    fn accept(&mut self) -> bool {
+    /// Adopt every socket the acceptor has handed to this shard: move it
+    /// from the handoff gauge into the connection table.
+    fn adopt(&mut self) -> bool {
         let mut progress = false;
         loop {
-            match self.listener.accept() {
-                Ok((stream, _peer)) => {
+            match self.handoffs.try_recv() {
+                Ok(stream) => {
                     progress = true;
-                    self.shared.accepted.fetch_add(1, SeqCst);
-                    if self.conns.len() >= self.cfg.max_conns {
-                        // Decline politely; the fresh socket buffer takes
-                        // this short write without blocking.
-                        let mut stream = stream;
-                        let _ = stream.write_all(b"ERR server full\n");
-                        continue;
-                    }
+                    let gauges = &self.shared.gauges[self.cfg.index];
+                    gauges.handoff.fetch_sub(1, SeqCst);
                     let Ok(conn) = Conn::new(stream) else { continue };
                     let token = self.next_token;
                     self.next_token += 1;
                     self.conns.insert(token, conn);
                     let live = self.conns.len();
-                    self.shared.live.store(live, SeqCst);
-                    self.shared.peak.fetch_max(live, SeqCst);
+                    gauges.live.store(live, SeqCst);
+                    gauges.peak.fetch_max(live, SeqCst);
                 }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-                Err(e) => {
-                    // Transient failures (ECONNABORTED, EMFILE, ...) must
-                    // not take the server down; the idle backoff keeps a
-                    // persistent error from hot-looping.
-                    eprintln!("server: accept failed: {e}");
-                    break;
-                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
         progress
     }
 
-    /// Route finished pool work back to its connection's write buffer.
+    /// Route finished pool batches back to their connections' write
+    /// buffers, one coalesced append per batch.
     fn drain_completions(&mut self) -> bool {
         let mut progress = false;
         loop {
             match self.completions.try_recv() {
                 Ok(done) => {
                     progress = true;
-                    self.shared.queue.fetch_sub(1, SeqCst);
-                    // The connection may have died while its request was
-                    // in the pool, or the deadline sweep may have already
+                    self.shared.gauges[self.cfg.index].queue.fetch_sub(done.replies.len(), SeqCst);
+                    // The connection may have died while its batch was in
+                    // the pool, or the deadline sweep may have already
                     // answered `ERR TIMEOUT` and reclaimed the slot (the
                     // req_id then no longer matches); either way the late
-                    // reply is dropped, never misdelivered.
+                    // replies are dropped, never misdelivered.
                     if let Some(conn) = self.conns.get_mut(&done.token) {
                         if conn.in_flight.is_some_and(|inf| inf.id == done.req_id) {
                             conn.in_flight = None;
-                            conn.enqueue_reply(&done.reply);
+                            conn.enqueue_replies(&done.replies);
                         }
                     }
                 }
@@ -194,14 +234,17 @@ impl Reactor {
     /// disjoint field borrow, so this borrows cleanly.
     fn pump_conns(&mut self) -> bool {
         let mut progress = false;
+        let depth = self.cfg.pipeline_depth.max(1);
+        let store = self.store.as_ref();
         for (&token, conn) in self.conns.iter_mut() {
             progress |= conn.pump_read();
 
-            // Dispatch in arrival order, one pool request in flight per
+            // Dispatch in arrival order, one pool batch in flight per
             // connection (replies stay ordered); inline work and error
-            // replies drain immediately. A closing (EOF'd) connection
-            // still drains what it already sent — QUIT clears the queue
-            // instead, so nothing after it is served.
+            // replies drain immediately between batches. A closing
+            // (EOF'd) connection still drains what it already sent —
+            // QUIT clears the queue instead, so nothing after it is
+            // served.
             while conn.in_flight.is_none() {
                 let Some(front) = conn.pending.pop_front() else { break };
                 progress = true;
@@ -213,50 +256,65 @@ impl Reactor {
                         conn.closing = true;
                     }
                     Pending::Req(Request::SizeEstimate) => {
-                        let reply = proto::estimate_reply(self.store.as_ref());
+                        let reply = proto::estimate_reply(store);
                         conn.enqueue_reply(&reply);
                     }
                     Pending::Req(Request::Stats) => {
                         // NB: only field borrows here — `conn` mutably
                         // borrows `self.conns`, so no `&self` calls.
                         let server = self.shared.snapshot(self.cfg.handlers);
-                        let size = self.store.size_stats().unwrap_or_default();
+                        let size = store.size_stats().unwrap_or_default();
                         conn.enqueue_reply(&proto::stats_reply(&server, &size));
                     }
                     Pending::Req(req) => {
-                        if req.grows_store() {
-                            // Tier 1: global watermarks on the aggregate
-                            // estimate — the whole store is too full.
-                            if let Some(gate) = &self.shared.admission {
-                                if !gate.admit(self.store.size_estimate()) {
-                                    conn.enqueue_reply(proto::OVERLOAD_REPLY);
-                                    continue;
-                                }
-                            }
-                            // Tier 2: per-shard watermarks — shed only the
-                            // hot shard's PUTs while its siblings admit.
-                            if !self.shared.shard_gates.is_empty() {
-                                if let Request::Put(key) = req {
-                                    let shard = self.store.shard_of(key);
-                                    let gate = &self.shared.shard_gates[shard];
-                                    if !gate.admit(self.store.shard_estimate(shard)) {
-                                        conn.enqueue_reply(&proto::overload_shard_reply(shard));
-                                        continue;
+                        if let Some(reply) = admission_reply(&self.shared, store, req) {
+                            conn.enqueue_reply(&reply);
+                            continue;
+                        }
+                        // Pipelining: extend the batch with every
+                        // immediately-following pool request (admission-
+                        // checked at dispatch, like the first), up to the
+                        // depth; one handler runs it in program order.
+                        let mut reqs = vec![req];
+                        while reqs.len() < depth {
+                            match conn.pending.front() {
+                                Some(Pending::Req(next)) if !next.inline() => {
+                                    let next = *next;
+                                    conn.pending.pop_front();
+                                    match admission_reply(&self.shared, store, next) {
+                                        // Shed mid-batch: the overload
+                                        // reply must *follow* the batch's
+                                        // replies, so park it back at the
+                                        // queue front and close the batch.
+                                        Some(reply) => {
+                                            conn.pending.push_front(Pending::Reply(reply));
+                                            break;
+                                        }
+                                        None => reqs.push(next),
                                     }
                                 }
+                                _ => break,
                             }
                         }
                         let req_id = self.next_req_id;
                         self.next_req_id += 1;
-                        if self.jobs.send(Job { token, req_id, req }).is_err() {
+                        let len = reqs.len();
+                        let job = Job {
+                            reactor: self.cfg.index,
+                            token,
+                            req_id,
+                            reqs,
+                        };
+                        if self.jobs.send(job).is_err() {
                             // Pool gone: only happens during shutdown.
                             conn.dead = true;
                             break;
                         }
-                        self.shared.queue.fetch_add(1, SeqCst);
+                        self.shared.gauges[self.cfg.index].queue.fetch_add(len, SeqCst);
                         conn.in_flight = Some(InFlight {
                             id: req_id,
                             since: Instant::now(),
+                            len,
                         });
                     }
                 }
@@ -275,25 +333,29 @@ impl Reactor {
             return false;
         }
         let now = Instant::now();
+        let gauges = &self.shared.gauges[self.cfg.index];
         let mut progress = false;
         for conn in self.conns.values_mut() {
             if let (Some(limit), Some(inf)) = (timeout, conn.in_flight) {
                 if now.duration_since(inf.since) >= limit {
-                    // Stop waiting on the pool: answer now and reclaim
-                    // the slot so the connection's next request can
-                    // dispatch. The handler keeps running (it cannot be
-                    // cancelled safely); its eventual completion is
-                    // dropped by the req_id check in drain_completions.
+                    // Stop waiting on the pool: answer every command in
+                    // the batch now and reclaim the slot so the
+                    // connection's next batch can dispatch. The handler
+                    // keeps running (it cannot be cancelled safely); its
+                    // eventual completion is dropped by the req_id check
+                    // in drain_completions.
                     conn.in_flight = None;
-                    conn.enqueue_reply(proto::TIMEOUT_REPLY);
-                    self.shared.timeouts.fetch_add(1, SeqCst);
+                    for _ in 0..inf.len {
+                        conn.enqueue_reply(proto::TIMEOUT_REPLY);
+                    }
+                    gauges.timeouts.fetch_add(inf.len as u64, SeqCst);
                     progress = true;
                 }
             }
             if let Some(limit) = idle {
                 if !conn.dead && !conn.closing && conn.idle_expired(now, limit) {
                     conn.dead = true;
-                    self.shared.reaped.fetch_add(1, SeqCst);
+                    gauges.reaped.fetch_add(1, SeqCst);
                     progress = true;
                 }
             }
@@ -306,7 +368,7 @@ impl Reactor {
         let before = self.conns.len();
         self.conns.retain(|_, conn| !conn.should_close());
         if self.conns.len() != before {
-            self.shared.live.store(self.conns.len(), SeqCst);
+            self.shared.gauges[self.cfg.index].live.store(self.conns.len(), SeqCst);
         }
     }
 }

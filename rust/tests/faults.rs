@@ -68,12 +68,14 @@ fn forced_optimistic_fallbacks_raise_the_gauge() {
     );
 }
 
-/// The acceptance smoke: a pinned-seed chaos plane (jitter everywhere,
-/// short writes, random handler panics) plus a targeted stall and poison
-/// key, against a server with every self-healing knob on. Stalled
-/// requests time out and their slots recover, poisons answer `ERR PANIC`
-/// without killing the pool, idle connections are reaped, the sampled
-/// monitor reports zero violations, and the server still serves.
+/// The acceptance smoke: a pinned-seed chaos plane (jitter everywhere —
+/// accept handoffs included — short writes on conn and coalesced-reply
+/// flushes, random handler panics) plus a targeted stall and poison
+/// key, against a **two-reactor** server with every self-healing knob
+/// on. Stalled requests time out and their slots recover, poisons
+/// answer `ERR PANIC` without killing the pool, idle connections are
+/// reaped, the sampled monitor reports zero violations, and the server
+/// still serves.
 #[test]
 fn chaos_smoke_server_heals_and_stays_linearizable() {
     const STALL: u64 = 888_888_888_888;
@@ -95,6 +97,7 @@ fn chaos_smoke_server_heals_and_stays_linearizable() {
     );
     let config = ServerConfig {
         handlers: 3,
+        reactors: 2,
         request_timeout: Some(Duration::from_millis(50)),
         conn_idle: Some(Duration::from_millis(250)),
         monitor_sample: 4,
@@ -171,4 +174,54 @@ fn chaos_smoke_server_heals_and_stays_linearizable() {
         .find_map(|_| active.cmd("SIZE").parse::<i64>().ok())
         .expect("SIZE never answered numerically under chaos");
     assert!(size >= 0, "negative size {size}");
+}
+
+/// The two multi-reactor fault sites, targeted. A panicking accept
+/// handoff drops exactly the socket being handed off (the acceptor's
+/// per-handoff `catch_unwind` keeps it accepting), and an always-firing
+/// reply-coalesce short write fragments every flush without corrupting
+/// pipelined reply order.
+#[test]
+fn handoff_panic_drops_one_socket_and_short_writes_keep_order() {
+    let store: Arc<dyn ConcurrentSet> = Arc::from(
+        make_set_opts(
+            "hashtable",
+            PolicyKind::Linearizable,
+            64,
+            SizeOpts::default(),
+        )
+        .unwrap(),
+    );
+    let config = ServerConfig {
+        reactors: 2,
+        ..Default::default()
+    };
+    {
+        let plane = FaultPlane::new(0xACC3).with(FaultSite::AcceptHandoff, 1, FaultAction::Panic);
+        let _guard = faults::install(plane);
+        let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind");
+        let mut dropped = TcpStream::connect(server.local_addr()).expect("connect");
+        dropped.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 8];
+        assert_eq!(
+            dropped.read(&mut buf).expect("dropped socket"),
+            0,
+            "a panicking handoff must drop the socket (EOF), not wedge it"
+        );
+    }
+    let plane =
+        FaultPlane::new(0xC0A7).with(FaultSite::ReplyCoalesce, 1, FaultAction::ShortWrite(1));
+    let _guard = faults::install(plane);
+    let server = Server::bind("127.0.0.1:0", store, config).expect("bind");
+    let mut client = BlockingClient::connect(server.local_addr());
+    for k in 0..32u64 {
+        client.send(format!("PUT {k}"));
+    }
+    for i in 0..32 {
+        assert_eq!(
+            client.recv().expect("pipelined reply"),
+            "1",
+            "reply {i} corrupted under 1-byte reply flushes"
+        );
+    }
 }

@@ -1,7 +1,8 @@
 //! Integration tests for the server subsystem (`rust/src/server/`): the
-//! nonblocking reactor's concurrency claims, size-driven admission
-//! control end to end, the clamped-estimate contract, and STATS under a
-//! running `SizeRefresher` daemon.
+//! nonblocking reactor's concurrency claims (single- and multi-shard),
+//! command pipelining under arbitrary TCP segmentation, size-driven
+//! admission control end to end, the clamped-estimate contract, and
+//! STATS under a running `SizeRefresher` daemon.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader};
@@ -11,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use concurrent_size::bench_util::make_set_opts;
 use concurrent_size::cli::PolicyKind;
-use concurrent_size::harness::client_swarm;
+use concurrent_size::harness::{client_swarm, SwarmConfig};
 use concurrent_size::prop_assert;
 use concurrent_size::proptest_lite;
 use concurrent_size::server::{
@@ -20,7 +21,7 @@ use concurrent_size::server::{
 use concurrent_size::set_api::ConcurrentSet;
 use concurrent_size::size::SizeOpts;
 use concurrent_size::thread_id;
-use concurrent_size::workload::{KeyDist, UPDATE_HEAVY};
+use concurrent_size::workload::UPDATE_HEAVY;
 
 /// A linearizable hashtable store with a `shards`-stripe mirror (the
 /// estimate admission control consults).
@@ -87,6 +88,223 @@ fn reactor_serves_256_concurrent_connections_with_bounded_pool() {
             "{step} out of order"
         );
     }
+}
+
+/// Tentpole acceptance: 4 reactor shards serve 300 concurrent
+/// connections, each holding a pipelined command burst — every reply in
+/// per-connection order — while the acceptor's least-loaded handoff
+/// spreads the connection tables and the merged STATS gauges stay
+/// truthful (counters add, gauges max: the `ArbiterStats::merge`
+/// convention).
+#[test]
+fn four_reactors_serve_300_pipelined_connections_in_order() {
+    let config = ServerConfig {
+        handlers: 4,
+        reactors: 4,
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store(2), config).expect("bind");
+    assert_eq!(server.reactor_count(), 4);
+    let addr = server.local_addr();
+
+    const CONNS: usize = 300;
+    let mut clients: Vec<BlockingClient> =
+        (0..CONNS).map(|_| BlockingClient::connect(addr)).collect();
+    // Pipeline three commands on every connection before reading any
+    // reply: all 300 connections hold in-flight batches at once, spread
+    // over 4 disjoint shard tables feeding one handler pool.
+    for (i, client) in clients.iter_mut().enumerate() {
+        client.send(format!("PUT {i}"));
+        client.send(format!("HAS {i}"));
+        client.send(format!("DEL {i}"));
+    }
+    for (i, client) in clients.iter_mut().enumerate() {
+        for step in ["PUT", "HAS", "DEL"] {
+            assert_eq!(
+                client.recv().expect("pipelined reply"),
+                "1",
+                "conn {i}: {step} reply out of order"
+            );
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.reactors, 4);
+    assert!(
+        stats.live_conns >= CONNS,
+        "live {} < {CONNS}",
+        stats.live_conns
+    );
+    assert!(stats.peak_conns >= CONNS, "merged peak lost the high water");
+    let loads = server.reactor_loads();
+    assert_eq!(loads.len(), 4);
+    assert_eq!(
+        loads.iter().sum::<usize>(),
+        stats.live_conns,
+        "per-shard tables disagree with the merged live gauge: {loads:?}"
+    );
+    assert!(
+        loads.iter().filter(|&&load| load > 0).count() >= 2,
+        "acceptor parked every connection on one shard: {loads:?}"
+    );
+    // Every DEL landed: both size paths see an empty store, and the
+    // dispatch queue drained symmetrically.
+    assert_eq!(clients[0].cmd("SIZE"), "0");
+    assert_eq!(clients[0].cmd("SIZE?"), "0");
+    let wire_stats = parse_stats(&clients[0].cmd("STATS"));
+    assert_eq!(wire_stats["reactors"], 4);
+    assert_eq!(wire_stats["queue"], 0, "queue must drain at quiescence");
+}
+
+/// The admission state is genuinely shared across reactor shards:
+/// alternating a PUT burst between connections on different shards
+/// still admits exactly the high watermark's worth before shedding —
+/// one gate, not one per shard — and STATS aggregates the shed count.
+#[test]
+fn admission_watermarks_are_shared_across_reactor_shards() {
+    let config = ServerConfig {
+        handlers: 2,
+        reactors: 2,
+        admission: Some(Watermarks::new(50, 20)),
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store(2), config).expect("bind");
+    let addr = server.local_addr();
+    let mut first = BlockingClient::connect(addr);
+    let mut second = BlockingClient::connect(addr);
+    let (mut admitted, mut shed) = (0, 0);
+    for k in 0..200u64 {
+        let client = if k % 2 == 0 { &mut first } else { &mut second };
+        match client.cmd(format!("PUT {k}")).as_str() {
+            "1" => admitted += 1,
+            OVERLOAD_REPLY => shed += 1,
+            other => panic!("unexpected PUT reply {other:?}"),
+        }
+    }
+    assert_eq!(admitted, 50, "one shared gate, not one per shard");
+    assert_eq!(shed, 150);
+    let stats = parse_stats(&first.cmd("STATS"));
+    assert_eq!(stats["shed"], 150);
+    assert_eq!(stats["reactors"], 2);
+}
+
+/// Pipelining torture over a raw socket: many commands in one TCP
+/// segment, one command dribbled across several segments (split
+/// mid-token and mid-key), and an overlong line interleaved mid-burst —
+/// one reply per command, in order, with `ERR TOOLONG` resync between.
+#[test]
+fn pipelined_segments_reassemble_and_resync_in_order() {
+    use std::io::Write;
+    let config = ServerConfig {
+        reactors: 2,
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store(0), config).expect("bind");
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut out = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+    let mut expect = |want: &[&str]| {
+        for (i, reply) in want.iter().enumerate() {
+            let mut line = String::new();
+            assert!(
+                reader.read_line(&mut line).expect("reply") > 0,
+                "EOF at reply {i}"
+            );
+            assert_eq!(line.trim_end(), *reply, "reply {i} out of order");
+        }
+    };
+    // (a) Five commands in one segment: one batch dispatch serves them
+    // all and the replies come back coalesced, still one per line.
+    out.write_all(b"PUT 1\nPUT 2\nHAS 1\nDEL 2\nHAS 2\n").unwrap();
+    expect(&["1", "1", "1", "1", "0"]);
+    // (b) Two commands over four segments: the line buffer reassembles
+    // across reads, whatever the cut points.
+    for chunk in [&b"PU"[..], b"T 4", b"2\nHAS", b" 42\n"] {
+        out.write_all(chunk).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    expect(&["1", "1"]);
+    // (c) An overlong line mid-burst costs exactly one in-order
+    // `ERR TOOLONG`; parsing resyncs at its newline and the burst
+    // continues. Keys 1, 42, 7 are live at the end.
+    let mut burst = Vec::new();
+    burst.extend_from_slice(b"PUT 7\n");
+    burst.extend_from_slice("x".repeat(300).as_bytes());
+    burst.extend_from_slice(b"\nHAS 7\nSIZE\n");
+    out.write_all(&burst).unwrap();
+    expect(&["1", "ERR TOOLONG", "1", "3"]);
+}
+
+/// Property: replies always match command order against a model set, no
+/// matter how the command stream is segmented — random cut points over
+/// the whole wire image, against a 2-reactor server with a small batch
+/// depth so bursts straddle batch boundaries too.
+#[test]
+fn reply_order_matches_command_order_under_random_segmentation() {
+    use std::collections::HashSet;
+    use std::io::Write;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let config = ServerConfig {
+        reactors: 2,
+        pipeline_depth: 4,
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0", store(0), config).expect("bind");
+    let addr = server.local_addr();
+    let case = AtomicU64::new(0);
+    proptest_lite::run("segmentation preserves reply order", |rng| {
+        // Disjoint key block per case: the store outlives the cases.
+        let base = case.fetch_add(1, Ordering::Relaxed) * 100;
+        let mut model: HashSet<u64> = HashSet::new();
+        let mut wire = Vec::new();
+        let mut expected = Vec::new();
+        for _ in 0..40 {
+            let key = base + rng.gen_range(8);
+            match rng.gen_range(3) {
+                0 => {
+                    wire.extend_from_slice(format!("PUT {key}\n").as_bytes());
+                    expected.push(u64::from(model.insert(key)).to_string());
+                }
+                1 => {
+                    wire.extend_from_slice(format!("DEL {key}\n").as_bytes());
+                    expected.push(u64::from(model.remove(&key)).to_string());
+                }
+                _ => {
+                    wire.extend_from_slice(format!("HAS {key}\n").as_bytes());
+                    expected.push(u64::from(model.contains(&key)).to_string());
+                }
+            }
+        }
+        let stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+        stream.set_nodelay(true).map_err(|e| e.to_string())?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .map_err(|e| e.to_string())?;
+        let mut out = stream.try_clone().map_err(|e| e.to_string())?;
+        let mut reader = BufReader::new(stream);
+        let mut sent = 0usize;
+        while sent < wire.len() {
+            let seg = 1 + rng.gen_range((wire.len() - sent) as u64) as usize;
+            out.write_all(&wire[sent..sent + seg])
+                .map_err(|e| e.to_string())?;
+            sent += seg;
+            if rng.gen_range(4) == 0 {
+                std::thread::yield_now();
+            }
+        }
+        for (i, want) in expected.iter().enumerate() {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
+            prop_assert!(n > 0, "EOF at reply {i}");
+            prop_assert!(
+                line.trim_end() == want,
+                "reply {i}: got {:?}, want {want:?}",
+                line.trim_end()
+            );
+        }
+        Ok(())
+    });
 }
 
 /// Admission end to end: an overload burst gets `ERR OVERLOAD` while
@@ -237,6 +455,7 @@ fn stats_parses_while_refresher_daemon_runs() {
             "peak",
             "queue",
             "handlers",
+            "reactors",
             "accepted",
             "shed",
             "admitting",
@@ -278,12 +497,7 @@ fn client_swarm_drives_the_server_path() {
     let server = Server::bind("127.0.0.1:0", store(2), ServerConfig::default()).expect("bind");
     let swarm = client_swarm(
         server.local_addr(),
-        8,
-        400,
-        UPDATE_HEAVY,
-        2048,
-        KeyDist::Uniform,
-        7,
+        SwarmConfig::new(8, 400, UPDATE_HEAVY, 2048, 7),
     )
     .expect("swarm");
     assert_eq!(swarm.ops, 8 * 400);

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use concurrent_size::cli::PolicyKind;
-use concurrent_size::harness::client_swarm;
+use concurrent_size::harness::{client_swarm, SwarmConfig};
 use concurrent_size::history::monitor::ShardedMonitor;
 use concurrent_size::prop_assert;
 use concurrent_size::proptest_lite;
@@ -119,12 +119,10 @@ fn zipf_swarm_overloads_the_hot_shard_but_not_the_store() {
     let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind");
     let swarm = client_swarm(
         server.local_addr(),
-        8,
-        600,
-        UPDATE_HEAVY,
-        4096,
-        KeyDist::Zipf(0.99),
-        0x51AB5,
+        SwarmConfig {
+            key_dist: KeyDist::Zipf(0.99),
+            ..SwarmConfig::new(8, 600, UPDATE_HEAVY, 4096, 0x51AB5)
+        },
     )
     .expect("zipf swarm");
     assert_eq!(swarm.ops, 8 * 600);

@@ -6,7 +6,10 @@ Usage: check_ablation_regress.py BASELINE FRESH
 Compares a freshly generated ablation report against the previous CI
 run's artifact. Records are matched on their sweep identity — every
 axis the bench varies — and a matched record regresses when its fresh
-`workload_ops_per_sec` drops more than 25% below the baseline.
+`workload_ops_per_sec` drops more than the scenario's threshold below
+the baseline (25% unless SCENARIO_MAX_DROP says otherwise: noisy
+socket-path scenarios can be granted more slack per scenario instead of
+loosening the gate globally).
 
 Soft-fail semantics, by design:
 
@@ -34,8 +37,21 @@ MATCH_KEYS = (
     "shards",
     "key_dist",
     "refresh_us",
+    "reactors",
+    "pipeline_depth",
 )
 MAX_DROP = 0.25
+# Per-scenario overrides of MAX_DROP. Every scenario currently sits at
+# the default; the explicit reactor_scale entry pins the contract for
+# the newest (socket-path, hence noisiest) sweep so future tuning is a
+# one-line diff instead of a global loosening.
+SCENARIO_MAX_DROP = {
+    "reactor_scale": 0.25,
+}
+
+
+def max_drop_for(rec):
+    return SCENARIO_MAX_DROP.get(rec.get("scenario"), MAX_DROP)
 
 
 def warn(msg):
@@ -91,16 +107,18 @@ def main(baseline_path, fresh_path):
             continue
         compared += 1
         drop = 1.0 - after / before
-        if drop > MAX_DROP:
+        allowed = max_drop_for(rec)
+        if drop > allowed:
             key = ", ".join(f"{k}={v}" for k, v in zip(MATCH_KEYS, identity(rec)))
             regressions.append(
-                f"  {key}: {before:.0f} -> {after:.0f} ops/s ({drop:.0%} drop)"
+                f"  {key}: {before:.0f} -> {after:.0f} ops/s "
+                f"({drop:.0%} drop, allowed {allowed:.0%})"
             )
 
     if regressions:
         print(
             f"regress-check: FAIL — {len(regressions)} record(s) dropped more "
-            f"than {MAX_DROP:.0%} vs baseline:",
+            f"than their scenario's threshold vs baseline:",
             file=sys.stderr,
         )
         for line in regressions:
@@ -108,8 +126,9 @@ def main(baseline_path, fresh_path):
         return 1
 
     print(
-        f"regress-check: OK — {compared} records within {MAX_DROP:.0%} of "
-        f"baseline ({skipped} skipped: unmatched or zero baseline)"
+        f"regress-check: OK — {compared} records within their scenario "
+        f"thresholds (default {MAX_DROP:.0%}; {skipped} skipped: unmatched "
+        f"or zero baseline)"
     )
     return 0
 

@@ -8,9 +8,10 @@ This gate pins the contract:
 * top-level keys: bench / structure / config / results;
 * config carries every scale knob the sweeps are keyed on;
 * every record carries the full field set — including the scale-layer
-  `shards` / `refresh_us` / `daemon_rounds` fields added in PR 4 — with
-  finite, non-negative numerics (NaN/Infinity literals are rejected at
-  parse time);
+  `shards` / `refresh_us` / `daemon_rounds` fields added in PR 4 and the
+  multi-reactor `reactors` / `pipeline_depth` fields — with finite,
+  non-negative numerics (NaN/Infinity literals are rejected at parse
+  time), and `reactor_scale` records carry both reactor axes >= 1;
 * at least one record actually measured something (positive workload
   throughput), so an all-zero report can't slip through.
 
@@ -51,6 +52,8 @@ RECORD_KEYS = {
     "fallbacks",
     "retry_budget",
     "per_shard_sheds",
+    "reactors",
+    "pipeline_depth",
 }
 THROUGHPUT_KEYS = ("workload_ops_per_sec", "size_ops_per_sec")
 COUNTER_KEYS = (
@@ -65,8 +68,10 @@ COUNTER_KEYS = (
     "fallbacks",
     "retry_budget",
     "per_shard_sheds",
+    "reactors",
+    "pipeline_depth",
 )
-SCENARIOS = {"periodic-size", "size-heavy", "scale", "shard_scale"}
+SCENARIOS = {"periodic-size", "size-heavy", "scale", "shard_scale", "reactor_scale"}
 POLICIES = {"baseline", "linearizable", "naive", "lock", "handshake", "optimistic"}
 
 
@@ -134,6 +139,13 @@ def main(path):
             v = rec[key]
             if not isinstance(v, int) or isinstance(v, bool) or v < 0:
                 fail(f"{where}.{key} must be a non-negative integer, got {v!r}")
+        if rec["scenario"] == "reactor_scale":
+            # The multi-reactor sweep's own axes: a record claiming the
+            # scenario with no reactors (or a zero pipeline) is the
+            # recorder misfiling another scenario's row.
+            for key in ("reactors", "pipeline_depth"):
+                if rec[key] < 1:
+                    fail(f"{where}.{key} must be >= 1 in reactor_scale, got {rec[key]!r}")
 
     if not any(rec["workload_ops_per_sec"] > 0 for rec in records):
         fail("no record measured positive workload throughput (dead recorder?)")

@@ -15,10 +15,10 @@ echo "== --help must exit 0 without binding a socket =="
 echo "== self-test mode (reactor burst, swarm, refresher-derived staleness) =="
 "$BIN" --refresh-ms 5
 
-echo "== served mode: protocol + admission control over TCP =="
+echo "== served mode: protocol + admission + pipelining over TCP (2 reactors) =="
 LOG=$(mktemp)
 "$BIN" --listen 127.0.0.1:0 --size-shards 2 --refresh-ms 5 --workers 4 \
-  --admission-high 64 --admission-low 32 >"$LOG" 2>&1 &
+  --reactors 2 --admission-high 64 --admission-low 32 >"$LOG" 2>&1 &
 SERVER_PID=$!
 trap 'kill "$SERVER_PID" 2>/dev/null || true; rm -f "$LOG"' EXIT
 

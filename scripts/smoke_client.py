@@ -2,11 +2,13 @@
 """Protocol smoke client for `make server-smoke` (CI's server gate).
 
 Drives a live kv_server over TCP: PUT/DEL/HAS, all three SIZE flavors,
-STATS, malformed input — and an overload burst that MUST observe
+STATS, malformed input — an overload burst that MUST observe
 `ERR OVERLOAD` (the server under test runs with --admission-high 64
 --admission-low 32) while `SIZE?` keeps answering, followed by a drain
-that must readmit. Stdlib only; exits non-zero with a pointed message on
-the first broken expectation.
+that must readmit — and a pipelined burst (many commands in one TCP
+segment against the 2-reactor server, replies read back in strict
+order). Stdlib only; exits non-zero with a pointed message on the first
+broken expectation.
 """
 
 import socket
@@ -94,6 +96,23 @@ def main(addr):
     stats = parse_stats(probe.cmd("STATS"))
     expect(stats["admitting"], 1, "STATS admitting after drain")
     assert stats["daemon_rounds"] > 0, "refresher daemon drove no rounds"
+
+    # Pipelined burst: 96 commands in one TCP segment on a fresh
+    # connection; the 2-reactor server batches them into handler jobs
+    # and coalesces the replies, which must come back in strict order
+    # (PUT/HAS/DEL over fresh keys all answer "1").
+    k = 32
+    pipe = Client(addr)
+    wire = "".join(
+        f"{verb} {20000 + i}\n" for verb in ("PUT", "HAS", "DEL") for i in range(k)
+    )
+    pipe.sock.sendall(wire.encode("ascii"))
+    for phase in ("PUT", "HAS", "DEL"):
+        for i in range(k):
+            reply = pipe.reader.readline().strip()
+            expect(reply, "1", f"pipelined {phase} #{i} (reply order)")
+    stats = parse_stats(probe.cmd("STATS"))
+    expect(stats["reactors"], 2, "STATS reactor-shard count")
 
     expect(c.cmd("SIZE"), "1", "exact SIZE after drain")
     # QUIT has no reply; the server closes the connection.
