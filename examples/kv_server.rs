@@ -11,7 +11,9 @@
 //! `ERR OVERLOAD`, and the `STATS` telemetry line.
 //! This file only parses flags, builds the store, and — without
 //! `--listen` — runs a self-test that drives the server over real
-//! sockets: protocol checks, a client swarm, a concurrent-connection
+//! sockets: protocol checks (including the dictionary GET/PUT-value and
+//! SCAN/COUNT range endpoints), a client swarm with a scan-mixed
+//! pipelined phase, a concurrent-connection
 //! burst far past the old thread-slot panic threshold, and STATS/daemon
 //! assertions derived from the *configured* `--refresh-ms` (a slow CI
 //! machine changes the timing, not the contract).
@@ -114,6 +116,10 @@ FLAGS:
                       size_exact anchor and check every SIZE in it
                       (default 0 = off; violations show in STATS and dump
                       minimized repros under artifacts/)
+  --scan-frac F       fraction of self-test swarm ops issued as SCAN/COUNT
+                      range reads (default 0.1; 0 skips the scan phase's
+                      range traffic)
+  --scan-span W       width of each self-test swarm scan range (default 64)
   --fault-seed SEED   install the seeded chaos fault plane (delays, yields,
                       short writes, handler panics, forced optimistic
                       fallbacks) for the server's lifetime; requires a
@@ -121,9 +127,17 @@ FLAGS:
   --help              this text (exits 0 without binding a socket)
 
 PROTOCOL (one command per line):
-  PUT k | DEL k | HAS k   -> 1 / 0; PUT answers ERR OVERLOAD while shedding
-                             (ERR OVERLOAD shard=<i> when a shard tier
-                             sheds); GET k is an alias for HAS k
+  PUT k [v]               -> 1 fresh insert / 0 value overwrite (v defaults
+                             to 0); answers ERR OVERLOAD while shedding
+                             (ERR OVERLOAD shard=<i> when a shard tier sheds)
+  DEL k | HAS k           -> 1 / 0
+  GET k                   -> the stored value, or NIL when k is absent
+  SCAN lo hi              -> one 'k v' line per live key in [lo, hi] in key
+                             order, then 'END n'; a validated double-collect
+                             snapshot under linearizable/optimistic policies,
+                             per-key justified otherwise; never shed
+  COUNT lo hi             -> number of live keys in [lo, hi] (same snapshot
+                             contract as SCAN); never shed
   SIZE                    -> exact linearizable count (combining arbiter;
                              two-phase aggregated across store shards)
   SIZE~ [ms]              -> count at most ms (default {DEFAULT_RECENT_MS}) milliseconds stale
@@ -195,19 +209,21 @@ fn main() {
             println!("size refresher running every {period:?}");
         }
     }
+    let scan_frac = args.get_f64("scan-frac", 0.1);
+    let scan_span = args.get_u64("scan-span", 64);
     match args.get("listen") {
         Some(addr) => {
             let server = Server::bind(addr, store, config).expect("bind");
             println!(
                 "kv_server listening on {} ({} reactor shards, {} handler threads; \
-                 PUT/DEL/HAS/SIZE/SIZE~/SIZE?/STATS/QUIT)",
+                 PUT/DEL/HAS/GET/SCAN/COUNT/SIZE/SIZE~/SIZE?/STATS/QUIT)",
                 server.local_addr(),
                 server.reactor_count(),
                 server.handler_threads(),
             );
             server.wait();
         }
-        None => self_test(store, config, refresh_ms, key_dist),
+        None => self_test(store, config, refresh_ms, key_dist, scan_frac, scan_span),
     }
 }
 
@@ -217,7 +233,14 @@ fn main() {
 /// STATS under the running refresher. Staleness bounds are derived from
 /// the configured `--refresh-ms` (not hard-coded) so slow CI machines
 /// shift timing without breaking the assertions.
-fn self_test(store: Store, config: ServerConfig, refresh_ms: f64, key_dist: KeyDist) {
+fn self_test(
+    store: Store,
+    config: ServerConfig,
+    refresh_ms: f64,
+    key_dist: KeyDist,
+    scan_frac: f64,
+    scan_span: u64,
+) {
     let server = Server::bind("127.0.0.1:0", store.clone(), config).expect("bind");
     let addr = server.local_addr();
     // A bound the daemon can beat comfortably: two periods (one period
@@ -239,6 +262,30 @@ fn self_test(store: Store, config: ServerConfig, refresh_ms: f64, key_dist: KeyD
                 for k in (c * 1000)..(c * 1000 + 50) {
                     assert_eq!(client.cmd(&format!("DEL {k}")), "1");
                 }
+                // Dictionary endpoints: values round-trip, a second PUT
+                // is an overwrite (reply 0), and absence answers NIL.
+                let vk = c * 1000 + 300;
+                assert_eq!(client.cmd(&format!("PUT {vk} 77")), "1");
+                assert_eq!(client.cmd(&format!("GET {vk}")), "77");
+                assert_eq!(client.cmd(&format!("PUT {vk} 78")), "0", "overwrite");
+                assert_eq!(client.cmd(&format!("GET {vk}")), "78");
+                assert_eq!(client.cmd(&format!("GET {}", c * 1000 + 999)), "NIL");
+                // Range endpoints over this client's private key block:
+                // the 200 surviving PUTs, in key order, all value 0.
+                let (lo, hi) = (c * 1000 + 50, c * 1000 + 249);
+                let pairs = client.scan(lo, hi).expect("SCAN reply");
+                assert_eq!(pairs.len(), 200, "scan [{lo}, {hi}]");
+                assert!(
+                    pairs.windows(2).all(|w| w[0].0 < w[1].0),
+                    "scan is key-ordered"
+                );
+                assert!(pairs.iter().all(|&(k, v)| (lo..=hi).contains(&k) && v == 0));
+                assert_eq!(client.cmd(&format!("COUNT {lo} {hi}")), "200");
+                assert_eq!(client.cmd(&format!("SCAN {hi} {lo}")), "END 0");
+                assert!(
+                    client.cmd("SCAN 1").starts_with("ERR"),
+                    "SCAN without a range must be rejected"
+                );
                 // A size-less policy (--policy baseline) answers ERR here.
                 let reply = client.cmd("SIZE");
                 if !reply.starts_with("ERR") {
@@ -311,7 +358,16 @@ fn self_test(store: Store, config: ServerConfig, refresh_ms: f64, key_dist: KeyD
         ..harness::SwarmConfig::new(8, 500, UPDATE_HEAVY, 4096, 0xBEEF)
     };
     let (mut swarm_ops, mut swarm_rate) = (0u64, 0.0f64);
-    for (label, swarm_config) in [("lock-step", base), ("pipelined", base.pipelined(16))] {
+    for (label, swarm_config) in [
+        ("lock-step", base),
+        ("pipelined", base.pipelined(16)),
+        // Multi-line SCAN replies interleaved with single-line ones
+        // through the same pipelined batches and coalesced writes.
+        (
+            "pipelined+scans",
+            base.pipelined(16).with_scans(scan_frac, scan_span),
+        ),
+    ] {
         let swarm =
             harness::client_swarm(addr, swarm_config).expect("swarm against self-test server");
         swarm_ops += swarm.ops;

@@ -1,6 +1,6 @@
 //! Ablation B: the size-methods design space on one structure.
 //!
-//! Three scenarios, all recorded to a machine-readable report
+//! Six scenarios, all recorded to a machine-readable report
 //! (`BENCH_ablation.json` by default, `--json PATH` to override) so the
 //! perf trajectory is tracked PR over PR:
 //!
@@ -40,6 +40,14 @@
 //!   columns only mean something here (every other scenario records 0);
 //!   the pipelined column shows what batch dispatch + reply coalescing
 //!   buy once the acceptor spreads connections over shards.
+//! * **scan_scale** — the range-scan tax over the server path: a
+//!   pipelined swarm mixing `SCAN`/`COUNT` range reads into the
+//!   update-heavy stream (`scan_frac` {0.05, 0.25} × `scan_span`
+//!   {16, 256}), against a two-reactor linearizable server. Scans ride
+//!   the validated double-collect, so the interesting column is how
+//!   throughput degrades as scans get more frequent and wider — the
+//!   `scan_frac`/`scan_span` columns only mean something here (every
+//!   other scenario records 0).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -83,6 +91,10 @@ struct Record {
     reactors: usize,
     /// Client commands per write (`reactor_scale` only; 1 = lock-step).
     pipeline_depth: usize,
+    /// Fraction of swarm ops issued as SCAN/COUNT (`scan_scale` only).
+    scan_frac: f64,
+    /// Key width of each swarm scan range (`scan_scale` only).
+    scan_span: u64,
 }
 
 impl Record {
@@ -96,7 +108,8 @@ impl Record {
                 "\"arbiter_rounds\":{},\"arbiter_adoptions\":{},",
                 "\"arbiter_recent_hits\":{},\"daemon_rounds\":{},",
                 "\"daemon_stalls\":{},\"fallbacks\":{},\"retry_budget\":{},",
-                "\"per_shard_sheds\":{},\"reactors\":{},\"pipeline_depth\":{}}}"
+                "\"per_shard_sheds\":{},\"reactors\":{},\"pipeline_depth\":{},",
+                "\"scan_frac\":{},\"scan_span\":{}}}"
             ),
             json_escape(self.scenario),
             json_escape(self.policy.label()),
@@ -118,6 +131,8 @@ impl Record {
             self.per_shard_sheds,
             self.reactors,
             self.pipeline_depth,
+            json_f64(self.scan_frac),
+            self.scan_span,
         )
     }
 }
@@ -226,6 +241,8 @@ fn main() {
                 per_shard_sheds: 0,
                 reactors: 0,
                 pipeline_depth: 0,
+                scan_frac: 0.0,
+                scan_span: 0,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -296,6 +313,8 @@ fn main() {
                 per_shard_sheds: 0,
                 reactors: 0,
                 pipeline_depth: 0,
+                scan_frac: 0.0,
+                scan_span: 0,
             });
             table.row(&[
                 kind.label().to_string(),
@@ -363,6 +382,8 @@ fn main() {
                     per_shard_sheds: 0,
                     reactors: 0,
                     pipeline_depth: 0,
+                    scan_frac: 0.0,
+                    scan_span: 0,
                 });
                 table.row(&[
                     kind.label().to_string(),
@@ -465,6 +486,8 @@ fn main() {
                 per_shard_sheds,
                 reactors: 1,
                 pipeline_depth: 1,
+                scan_frac: 0.0,
+                scan_span: 0,
             });
             table.row(&[
                 store_shards.to_string(),
@@ -542,12 +565,91 @@ fn main() {
                 per_shard_sheds: 0,
                 reactors,
                 pipeline_depth: pipeline,
+                scan_frac: 0.0,
+                scan_span: 0,
             });
             table.row(&[
                 reactors.to_string(),
                 pipeline.to_string(),
                 fmt_rate(swarm.throughput()),
                 (if stats.queue_depth == 0 { "yes" } else { "NO" }).to_string(),
+            ]);
+        }
+    }
+    table.print();
+
+    // -- Scenario 6: scan_scale — range-scan frequency × span -------------
+    // SCAN/COUNT range reads mixed into a pipelined update-heavy swarm
+    // against a two-reactor linearizable server: frequency (fraction of
+    // ops that are range reads) crossed with span (keys per range). The
+    // validated double-collect makes wide, frequent scans the expensive
+    // corner; this grid prices it.
+    let scan_frac_axis = [0.05f64, 0.25];
+    let scan_span_axis = [16u64, 256];
+    println!(
+        "\n-- scan_scale: {swarm_clients}x{swarm_ops}-op pipelined swarm \
+         (scan fraction x scan span, 2 reactors) --"
+    );
+    let mut table = Table::new(&["scan frac", "scan span", "swarm ops/s", "errors"]);
+    for &scan_frac in &scan_frac_axis {
+        for &scan_span in &scan_span_axis {
+            let store: Arc<dyn ConcurrentSet> = Arc::from(
+                make_set_opts(
+                    "hashtable",
+                    PolicyKind::Linearizable,
+                    swarm_range as usize,
+                    SizeOpts::default().with_shards(detected),
+                )
+                .expect("hashtable factory"),
+            );
+            let config = ServerConfig {
+                reactors: 2,
+                ..Default::default()
+            };
+            let server = Server::bind("127.0.0.1:0", store, config).expect("bind scan_scale");
+            let swarm = client_swarm(
+                server.local_addr(),
+                SwarmConfig::new(
+                    swarm_clients,
+                    swarm_ops,
+                    UPDATE_HEAVY,
+                    swarm_range,
+                    scale.seed,
+                )
+                .pipelined(16)
+                .with_scans(scan_frac, scan_span),
+            )
+            .expect("scan_scale swarm");
+            drop(server);
+            records.push(Record {
+                scenario: "scan_scale",
+                policy: PolicyKind::Linearizable,
+                mix: UPDATE_HEAVY,
+                size_threads: 0,
+                size_call: SizeCall::Raw.label(),
+                shards: 0,
+                key_dist: KeyDist::Uniform.label(),
+                refresh_us: 0,
+                workload_ops_per_sec: swarm.throughput(),
+                size_ops_per_sec: 0.0,
+                arbiter_rounds: 0,
+                arbiter_adoptions: 0,
+                arbiter_recent_hits: 0,
+                daemon_rounds: 0,
+                daemon_stalls: 0,
+                fallbacks: 0,
+                retry_budget: 0,
+                per_shard_sheds: 0,
+                reactors: 2,
+                pipeline_depth: 16,
+                scan_frac,
+                scan_span,
+            });
+            table.row(&[
+                format!("{scan_frac:.2}"),
+                scan_span.to_string(),
+                fmt_rate(swarm.throughput()),
+                swarm.errors.to_string(),
             ]);
         }
     }

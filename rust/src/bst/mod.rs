@@ -53,6 +53,10 @@ fn info_ptr<P: SizePolicy>(word: u64) -> *mut Info<P> {
 struct BstNode<P: SizePolicy> {
     key: u64,
     leaf: bool,
+    /// Dictionary payload; leaves only (an upsert over an existing key
+    /// overwrites it in place — per-key atomic, not part of the
+    /// membership protocol).
+    value: AtomicU64,
     left: AtomicU64,
     right: AtomicU64,
     /// `info-pointer | state`; internal nodes only.
@@ -62,10 +66,11 @@ struct BstNode<P: SizePolicy> {
 }
 
 impl<P: SizePolicy> BstNode<P> {
-    fn leaf(key: u64) -> *mut Self {
+    fn leaf(key: u64, value: u64) -> *mut Self {
         Box::into_raw(Box::new(BstNode {
             key,
             leaf: true,
+            value: AtomicU64::new(value),
             left: AtomicU64::new(0),
             right: AtomicU64::new(0),
             update: AtomicU64::new(0),
@@ -77,6 +82,7 @@ impl<P: SizePolicy> BstNode<P> {
         Box::into_raw(Box::new(BstNode {
             key,
             leaf: false,
+            value: AtomicU64::new(0),
             left: AtomicU64::new(left),
             right: AtomicU64::new(right),
             update: AtomicU64::new(0),
@@ -140,8 +146,8 @@ impl<P: SizePolicy> BstSet<P> {
     }
 
     pub fn with_policy(policy: P) -> Self {
-        let l1 = BstNode::<P>::leaf(INF1);
-        let l2 = BstNode::<P>::leaf(INF2);
+        let l1 = BstNode::<P>::leaf(INF1, 0);
+        let l2 = BstNode::<P>::leaf(INF2, 0);
         Self {
             root: BstNode::<P>::internal(INF2, l1 as u64, l2 as u64),
             core: Arc::new(SizeCore::new(policy)),
@@ -327,6 +333,61 @@ impl<P: SizePolicy> BstSet<P> {
         let _g = ebr::pin();
         walk::<P>(self.root)
     }
+
+    /// In-order range collect: push every live `(key, value)` with
+    /// `lo <= key <= hi` onto `out`, sorted, pruning subtrees outside the
+    /// range. A leaf's logical deletion is decided against its parent's
+    /// update word (read *before* following the child pointer, as
+    /// `search` does); observed marked deletes are committed and pending
+    /// inserts helped, so any tracked update the traversal could half-see
+    /// bumps a counter and invalidates the surrounding double-collect.
+    /// Caller must hold an EBR pin.
+    fn collect_range(&self, lo: u64, hi: u64, out: &mut Vec<(u64, u64)>) {
+        fn visit<P: SizePolicy>(
+            set: &BstSet<P>,
+            child: *mut BstNode<P>,
+            pupdate: u64,
+            lo: u64,
+            hi: u64,
+            out: &mut Vec<(u64, u64)>,
+        ) {
+            let c = unsafe { &*child };
+            if !c.leaf {
+                walk(set, child, lo, hi, out);
+                return;
+            }
+            if c.key < lo || c.key > hi || c.key >= INF1 {
+                return;
+            }
+            if let Some(dpacked) = BstSet::<P>::marked_delete_of(pupdate, child) {
+                if P::TRACKED {
+                    set.core.policy.commit_delete(dpacked);
+                }
+                return;
+            }
+            set.core.policy.help_insert(&c.insert_info);
+            out.push((c.key, c.value.load(SeqCst)));
+        }
+        fn walk<P: SizePolicy>(
+            set: &BstSet<P>,
+            node: *mut BstNode<P>,
+            lo: u64,
+            hi: u64,
+            out: &mut Vec<(u64, u64)>,
+        ) {
+            let n = unsafe { &*node };
+            let pupdate = n.update.load(SeqCst);
+            if lo < n.key {
+                let left = n.left.load(SeqCst) as *mut BstNode<P>;
+                visit(set, left, pupdate, lo, hi, out);
+            }
+            if hi >= n.key {
+                let right = n.right.load(SeqCst) as *mut BstNode<P>;
+                visit(set, right, pupdate, lo, hi, out);
+            }
+        }
+        walk(self, self.root, lo, hi, out);
+    }
 }
 
 /// Structure-lifetime deferred reclamation (see the skip list's
@@ -375,8 +436,11 @@ impl Graveyard {
     }
 }
 
-impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
-    fn insert(&self, k: u64) -> bool {
+impl<P: SizePolicy> BstSet<P> {
+    /// Upsert engine shared by `insert` (`v = 0`, no overwrite) and `put`
+    /// (overwrite): the original Ellen et al. insert with a value payload
+    /// published with the new leaf.
+    fn put_with(&self, k: u64, v: u64, overwrite: bool) -> bool {
         debug_assert!(k <= BST_MAX_KEY);
         let _guard = ebr::pin();
         let _op = self.core.policy.enter();
@@ -400,6 +464,9 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
                     continue;
                 }
                 self.core.policy.help_insert(&l.insert_info); // Fig. 3 ll.17-18
+                if overwrite {
+                    l.value.store(v, SeqCst);
+                }
                 unsafe { free_unpublished(new_leaf, new_internal) };
                 return false;
             }
@@ -408,7 +475,7 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
                 continue;
             }
             if new_leaf.is_null() {
-                new_leaf = BstNode::<P>::leaf(k);
+                new_leaf = BstNode::<P>::leaf(k, v);
                 P::stash_insert_info(unsafe { &(*new_leaf).insert_info }, packed);
                 new_internal = BstNode::<P>::internal(0, 0, 0);
             }
@@ -453,6 +520,49 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
                 }
             }
         }
+    }
+}
+
+impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
+    fn insert(&self, k: u64) -> bool {
+        self.put_with(k, 0, false)
+    }
+
+    fn put(&self, k: u64, v: u64) -> bool {
+        self.put_with(k, v, true)
+    }
+
+    fn get(&self, k: u64) -> Option<u64> {
+        let _guard = ebr::pin();
+        let _op = self.core.policy.enter_read();
+
+        let s = self.search(k);
+        let l = unsafe { &*s.leaf };
+        if l.key != k {
+            return None;
+        }
+        if let Some(dpacked) = Self::marked_delete_of(s.pupdate, s.leaf) {
+            // Logically deleted under the adapted linearization: help its
+            // metadata before reporting absence (Fig. 3 ll.12-13).
+            if P::TRACKED {
+                self.core.policy.commit_delete(dpacked);
+            }
+            return None;
+        }
+        self.core.policy.help_insert(&l.insert_info); // Fig. 3 ll.9-10
+        Some(l.value.load(SeqCst))
+    }
+
+    fn scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        let _guard = ebr::pin();
+        let _op = self.core.policy.enter_read();
+        let (pairs, _validated) =
+            crate::size::validated_collect(self.core.policy.calculator(), || {
+                let mut out = Vec::new();
+                self.collect_range(lo, hi, &mut out);
+                out
+            });
+        Some(pairs)
     }
 
     fn delete(&self, k: u64) -> bool {
@@ -523,24 +633,8 @@ impl<P: SizePolicy> ConcurrentSet for BstSet<P> {
     }
 
     fn contains(&self, k: u64) -> bool {
-        let _guard = ebr::pin();
-        let _op = self.core.policy.enter_read();
-
-        let s = self.search(k);
-        let l = unsafe { &*s.leaf };
-        if l.key != k {
-            return false;
-        }
-        if let Some(dpacked) = Self::marked_delete_of(s.pupdate, s.leaf) {
-            // Logically deleted under the adapted linearization: help its
-            // metadata before reporting absence (Fig. 3 ll.12-13).
-            if P::TRACKED {
-                self.core.policy.commit_delete(dpacked);
-            }
-            return false;
-        }
-        self.core.policy.help_insert(&l.insert_info); // Fig. 3 ll.9-10
-        true
+        // The helping lookup lives in `get` (Fig. 3 ll.6-13).
+        self.get(k).is_some()
     }
 
     crate::size::impl_size_surface!();
@@ -658,6 +752,30 @@ mod tests {
         }
         assert_eq!(t.size(), Some(model.len() as i64));
         assert_eq!(t.quiescent_count(), model.len());
+    }
+
+    #[test]
+    fn dictionary_scan_matches_model() {
+        let t = bst();
+        let mut rng = crate::rng::Xoshiro256::new(41);
+        let mut model = std::collections::BTreeMap::new();
+        for _ in 0..2000 {
+            let k = rng.gen_range(400);
+            match rng.gen_range(3) {
+                0 => {
+                    let v = rng.next_u64() >> 1;
+                    assert_eq!(t.put(k, v), model.insert(k, v).is_none(), "put {k}");
+                }
+                1 => assert_eq!(t.delete(k), model.remove(&k).is_some(), "delete {k}"),
+                _ => assert_eq!(t.get(k), model.get(&k).copied(), "get {k}"),
+            }
+        }
+        let want: Vec<_> = model.range(50..=350).map(|(&k, &v)| (k, v)).collect();
+        assert_eq!(t.scan(50, 350), Some(want));
+        assert_eq!(
+            t.count_range(0, BST_MAX_KEY),
+            Some(model.len() as i64)
+        );
     }
 
     #[test]

@@ -69,11 +69,15 @@ pub enum FaultSite {
     /// `ShortWrite(n)` truncates the batched write, exercising the
     /// partial-write cursor across reply boundaries).
     ReplyCoalesce = 10,
+    /// `size::validated_collect`, between the first counter sample and
+    /// the range traversal (widens the double-collect window so racing
+    /// updates land mid-scan and force validation retries).
+    ScanCollect = 11,
 }
 
 impl FaultSite {
     /// Number of sites (array dimension for per-thread hit counters).
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 12;
 
     /// All sites, in index order.
     pub const ALL: [FaultSite; FaultSite::COUNT] = [
@@ -88,6 +92,7 @@ impl FaultSite {
         FaultSite::OptimisticRetry,
         FaultSite::AcceptHandoff,
         FaultSite::ReplyCoalesce,
+        FaultSite::ScanCollect,
     ];
 
     /// Stable label (README site list, panic messages, fuzz reports).
@@ -104,6 +109,7 @@ impl FaultSite {
             FaultSite::OptimisticRetry => "optimistic-retry",
             FaultSite::AcceptHandoff => "accept-handoff",
             FaultSite::ReplyCoalesce => "reply-coalesce",
+            FaultSite::ScanCollect => "scan-collect",
         }
     }
 }
@@ -237,6 +243,12 @@ impl FaultPlane {
                 FaultAction::Delay(Duration::from_micros(500)),
             )
             .with(FaultSite::ReplyCoalesce, 3, FaultAction::ShortWrite(2))
+            .with(FaultSite::ScanCollect, 2, FaultAction::Yield)
+            .with(
+                FaultSite::ScanCollect,
+                19,
+                FaultAction::Delay(Duration::from_micros(200)),
+            )
     }
 }
 

@@ -286,6 +286,12 @@ pub struct SwarmConfig {
     /// back in order, exercising the server's batch dispatch and reply
     /// coalescing.
     pub pipeline: usize,
+    /// Fraction of workload commands replaced by range ops (alternating
+    /// `SCAN`/`COUNT`); 0 disables the scan mix entirely.
+    pub scan_frac: f64,
+    /// Width of each scanned range: `[lo, lo + scan_span]` with `lo`
+    /// uniform over the key range.
+    pub scan_span: u64,
 }
 
 impl SwarmConfig {
@@ -300,6 +306,8 @@ impl SwarmConfig {
             key_dist: KeyDist::Uniform,
             seed,
             pipeline: 1,
+            scan_frac: 0.0,
+            scan_span: 0,
         }
     }
 
@@ -308,12 +316,22 @@ impl SwarmConfig {
         self.pipeline = pipeline;
         self
     }
+
+    /// Same swarm, with `frac` of the workload commands replaced by
+    /// `SCAN`/`COUNT` over spans of `span` keys.
+    pub fn with_scans(mut self, frac: f64, span: u64) -> Self {
+        self.scan_frac = frac;
+        self.scan_span = span;
+        self
+    }
 }
 
 /// The server-path load mode: `cfg.clients` TCP connections each drive
 /// `cfg.ops_per_client` commands from the workload mix (`PUT`/`DEL`/`HAS`
 /// per [`Mix`], keys drawn per `cfg.key_dist`, with a periodic
-/// `SIZE~`/`SIZE?` probe mixed in) and read every reply. With
+/// `SIZE~`/`SIZE?` probe mixed in, and — when `cfg.scan_frac > 0` —
+/// alternating `SCAN`/`COUNT` range ops whose multi-line replies are
+/// drained to their `END` terminators) and read every reply. With
 /// `cfg.pipeline > 1` each client sends that many commands in one write
 /// before reading the replies back in order — the client half of the
 /// server's command pipelining. This benchmarks the whole
@@ -342,30 +360,49 @@ pub fn client_swarm(addr: SocketAddr, cfg: SwarmConfig) -> std::io::Result<Swarm
                         cfg.key_range,
                         cfg.key_dist,
                     );
+                    let mut scan_rng =
+                        crate::rng::Xoshiro256::new(cfg.seed ^ 0x5CA4 ^ (c as u64));
+                    let mut scans_issued = 0u64;
                     let (mut ops, mut overloads, mut errors) = (0u64, 0u64, 0u64);
                     let pipeline = cfg.pipeline.max(1) as u64;
                     let mut line = String::new();
                     let mut wire = String::new();
+                    // Per burst slot: does this command answer with a
+                    // multi-line (`SCAN`) reply?
+                    let mut multiline = Vec::with_capacity(pipeline as usize);
                     let mut issued = 0u64;
                     while issued < cfg.ops_per_client {
                         let burst = pipeline.min(cfg.ops_per_client - issued);
                         wire.clear();
+                        multiline.clear();
                         for j in 0..burst {
                             let i = issued + j;
+                            let mut multi = false;
                             let cmd = if i % SWARM_PROBE_EVERY == SWARM_PROBE_EVERY - 1 {
                                 if (i / SWARM_PROBE_EVERY) % 2 == 0 {
                                     "SIZE~ 50".to_string()
                                 } else {
                                     "SIZE?".to_string()
                                 }
+                            } else if cfg.scan_frac > 0.0 && scan_rng.gen_bool(cfg.scan_frac) {
+                                let lo = scan_rng.gen_range(cfg.key_range.max(1));
+                                let hi = lo.saturating_add(cfg.scan_span);
+                                scans_issued += 1;
+                                if scans_issued % 2 == 0 {
+                                    format!("COUNT {lo} {hi}")
+                                } else {
+                                    multi = true;
+                                    format!("SCAN {lo} {hi}")
+                                }
                             } else {
                                 let (op, key) = ops_stream.next();
                                 match op {
-                                    OpType::Insert => format!("PUT {key}"),
+                                    OpType::Insert => format!("PUT {key} {key}"),
                                     OpType::Delete => format!("DEL {key}"),
                                     OpType::Contains => format!("HAS {key}"),
                                 }
                             };
+                            multiline.push(multi);
                             wire.push_str(&cmd);
                             wire.push('\n');
                         }
@@ -373,7 +410,7 @@ pub fn client_swarm(addr: SocketAddr, cfg: SwarmConfig) -> std::io::Result<Swarm
                         // whole point (with pipeline=1 this degenerates
                         // to the historical lock-step writeln).
                         out.write_all(wire.as_bytes())?;
-                        for _ in 0..burst {
+                        for &multi in &multiline {
                             line.clear();
                             if reader.read_line(&mut line)? == 0 {
                                 return Err(std::io::Error::new(
@@ -387,6 +424,19 @@ pub fn client_swarm(addr: SocketAddr, cfg: SwarmConfig) -> std::io::Result<Swarm
                                 overloads += 1;
                             } else if reply.starts_with("ERR") {
                                 errors += 1;
+                            } else if multi {
+                                // A healthy SCAN reply spans entry lines
+                                // up to its `END n` terminator; the whole
+                                // body counts as the one op above.
+                                while !line.trim().starts_with("END ") {
+                                    line.clear();
+                                    if reader.read_line(&mut line)? == 0 {
+                                        return Err(std::io::Error::new(
+                                            std::io::ErrorKind::UnexpectedEof,
+                                            "server closed mid-scan",
+                                        ));
+                                    }
+                                }
                             }
                         }
                         issued += burst;

@@ -88,6 +88,31 @@ impl<P: SizePolicy> ConcurrentSet for HashTableSet<P> {
     fn contains(&self, k: u64) -> bool {
         list::contains_at(&self.core.policy, self.bucket(k), k)
     }
+    fn put(&self, k: u64, v: u64) -> bool {
+        list::put_at(&self.core.policy, self.bucket(k), k, v, true)
+    }
+    fn get(&self, k: u64) -> Option<u64> {
+        list::get_at(&self.core.policy, self.bucket(k), k)
+    }
+
+    // A range scan has no locality in a hashed table: the collect sweeps
+    // every bucket and sorts, with the whole sweep inside one
+    // double-collect window so the merged view is still a membership
+    // snapshot.
+    fn scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        let _guard = crate::ebr::pin();
+        let _op = self.core.policy.enter_read();
+        let (mut pairs, _validated) =
+            crate::size::validated_collect(self.core.policy.calculator(), || {
+                let mut out = Vec::new();
+                for bucket in self.buckets.iter() {
+                    list::collect_range_at(&self.core.policy, bucket, lo, hi, &mut out);
+                }
+                out
+            });
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+        Some(pairs)
+    }
 
     crate::size::impl_size_surface!();
 
@@ -150,6 +175,23 @@ mod tests {
             assert!(t.delete(k));
         }
         assert_eq!(t.size(), Some(0));
+    }
+
+    #[test]
+    fn scan_sweeps_buckets_in_key_order() {
+        let t = table();
+        for k in (0..100u64).rev() {
+            assert!(t.put(k, k * 10));
+        }
+        let pairs = t.scan(25, 34).unwrap();
+        let want: Vec<_> = (25..=34).map(|k| (k, k * 10)).collect();
+        assert_eq!(pairs, want);
+        assert_eq!(t.count_range(0, 99), Some(100));
+        assert!(!t.put(30, 7), "upsert over an existing key reports 0");
+        assert_eq!(t.get(30), Some(7));
+        assert_eq!(t.scan(30, 30), Some(vec![(30, 7)]));
+        assert!(t.delete(30));
+        assert_eq!(t.count_range(25, 34), Some(9));
     }
 
     #[test]

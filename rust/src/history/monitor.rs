@@ -33,7 +33,31 @@
 //! ([`Monitor::commit_size_with_slack`]): the value was exact at some
 //! point at most `age` before the read, so justification is against the
 //! widened window.
+//!
+//! # Range scans
+//!
+//! [`check_scan`] extends the same interval discipline from *counts* to
+//! *key sets*. Updates are recorded per key ([`KeyedUpdateEvent`]); a
+//! scan return ([`ScanEvent`]) is justified iff some point `t` in its
+//! window has exactly the reported keys present. The checkable necessary
+//! condition, per key `k` in `[lo, hi]`:
+//!
+//! * no update of `k` overlaps the scan window → `k`'s membership is
+//!   *pinned* over the whole window (the net of updates responding before
+//!   the invocation), so the scan must report `k` iff that net is 1;
+//! * some update of `k` overlaps → `k` is free: either answer is
+//!   justifiable;
+//! * a reported key outside `[lo, hi]`, or one the history never
+//!   inserted, is never justified.
+//!
+//! A [`CountEvent`] is bounded by the same per-key analysis summed:
+//! `value ∈ [#must-be-present, #may-be-present]` (the floor is 0 by
+//! construction — membership bounds cannot go negative). Like the size
+//! check this never flags a legal history; and because it is purely
+//! interval-based it also accepts the *per-key-justified* fallback scans
+//! of untracked policies, so a violation always means a real torn scan.
 
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -52,6 +76,71 @@ pub struct SizeEvent {
     pub inv: u64,
     pub resp: u64,
     pub value: i64,
+}
+
+/// One successful update *with its key* — the raw material for
+/// [`check_scan`]'s per-key membership analysis.
+#[derive(Clone, Copy, Debug)]
+pub struct KeyedUpdateEvent {
+    pub key: u64,
+    pub inv: u64,
+    pub resp: u64,
+    pub delta: i64,
+}
+
+/// One range-scan observation: the window, the queried range, and the
+/// key set the scan reported (values are per-key atomic reads outside
+/// the membership contract, so the checker ignores them).
+#[derive(Clone, Debug)]
+pub struct ScanEvent {
+    pub inv: u64,
+    pub resp: u64,
+    pub lo: u64,
+    pub hi: u64,
+    pub keys: Vec<u64>,
+}
+
+/// One range-count observation.
+#[derive(Clone, Copy, Debug)]
+pub struct CountEvent {
+    pub inv: u64,
+    pub resp: u64,
+    pub lo: u64,
+    pub hi: u64,
+    pub value: i64,
+}
+
+/// A scan or count observation no linearization justifies.
+#[derive(Clone, Copy, Debug)]
+pub struct ScanViolation {
+    /// The offending observation's window.
+    pub inv: u64,
+    pub resp: u64,
+    /// The offending key for a membership violation; `None` for a count
+    /// out of bounds.
+    pub key: Option<u64>,
+    /// Whether the scan reported the key (membership violations only).
+    pub reported: bool,
+    /// The observed value against the justified `[low, high]`: per-key
+    /// membership (0/1) for scans, the returned count for counts.
+    pub value: i64,
+    pub low: i64,
+    pub high: i64,
+}
+
+/// Outcome of [`Monitor::verify_scans`] / [`check_scan`].
+#[derive(Debug, Default)]
+pub struct ScanReport {
+    pub updates: usize,
+    pub scans_checked: usize,
+    pub counts_checked: usize,
+    pub violations: Vec<ScanViolation>,
+}
+
+impl ScanReport {
+    pub fn is_ok(&self) -> bool {
+        self.violations.is_empty()
+    }
 }
 
 /// A size return no linearization of the recorded history justifies.
@@ -91,6 +180,9 @@ pub struct Monitor {
     origin: Instant,
     updates: Mutex<Vec<UpdateEvent>>,
     sizes: Mutex<Vec<SizeEvent>>,
+    keyed: Mutex<Vec<KeyedUpdateEvent>>,
+    scans: Mutex<Vec<ScanEvent>>,
+    counts: Mutex<Vec<CountEvent>>,
 }
 
 impl Default for Monitor {
@@ -105,6 +197,9 @@ impl Monitor {
             origin: Instant::now(),
             updates: Mutex::new(Vec::new()),
             sizes: Mutex::new(Vec::new()),
+            keyed: Mutex::new(Vec::new()),
+            scans: Mutex::new(Vec::new()),
+            counts: Mutex::new(Vec::new()),
         }
     }
 
@@ -155,6 +250,69 @@ impl Monitor {
     /// dumping and [`minimize`].
     pub fn events(&self) -> (Vec<UpdateEvent>, Vec<SizeEvent>) {
         (self.updates.lock().unwrap().clone(), self.sizes.lock().unwrap().clone())
+    }
+
+    /// Record a completed successful update with its key. The event
+    /// feeds *both* streams — the unkeyed one (so [`Self::verify`] still
+    /// checks sizes against it) and the keyed one for
+    /// [`Self::verify_scans`].
+    pub fn commit_keyed_update(&self, timer: Timer, key: u64, delta: i64) {
+        let resp = self.now();
+        self.updates.lock().unwrap().push(UpdateEvent {
+            inv: timer.inv,
+            resp,
+            delta,
+        });
+        self.keyed.lock().unwrap().push(KeyedUpdateEvent {
+            key,
+            inv: timer.inv,
+            resp,
+            delta,
+        });
+    }
+
+    /// Record a completed range scan's reported key set.
+    pub fn commit_scan(&self, timer: Timer, lo: u64, hi: u64, keys: Vec<u64>) {
+        let resp = self.now();
+        self.scans.lock().unwrap().push(ScanEvent {
+            inv: timer.inv,
+            resp,
+            lo,
+            hi,
+            keys,
+        });
+    }
+
+    /// Record a completed range count.
+    pub fn commit_count(&self, timer: Timer, lo: u64, hi: u64, value: i64) {
+        let resp = self.now();
+        self.counts.lock().unwrap().push(CountEvent {
+            inv: timer.inv,
+            resp,
+            lo,
+            hi,
+            value,
+        });
+    }
+
+    /// Check every recorded scan and count against the keyed updates
+    /// (call after all recording threads joined). Sound only if *every*
+    /// successful update went through [`Self::commit_keyed_update`] — a
+    /// key updated outside the keyed stream looks never-inserted.
+    pub fn verify_scans(&self) -> ScanReport {
+        let keyed = self.keyed.lock().unwrap();
+        let scans = self.scans.lock().unwrap();
+        let counts = self.counts.lock().unwrap();
+        check_scan(&keyed, &scans, &counts)
+    }
+
+    /// Snapshot the scan-side history (repro dumping, [`minimize_scan`]).
+    pub fn scan_events(&self) -> (Vec<KeyedUpdateEvent>, Vec<ScanEvent>, Vec<CountEvent>) {
+        (
+            self.keyed.lock().unwrap().clone(),
+            self.scans.lock().unwrap().clone(),
+            self.counts.lock().unwrap().clone(),
+        )
     }
 }
 
@@ -337,6 +495,177 @@ pub fn check_aggregated(shard_updates: &[Vec<UpdateEvent>], sizes: &[SizeEvent])
     report
 }
 
+/// Per-key membership bounds over a call window: `(must, may)` — the key
+/// must be reported / may be reported by a scan with that window. With no
+/// overlapping update the membership is pinned at the definite net; any
+/// overlap frees the key (either answer justifiable at some point `t`).
+fn key_bounds(history: &[KeyedUpdateEvent], baseline: i64, inv: u64, resp: u64) -> (bool, bool) {
+    let mut net = baseline;
+    let mut overlap = false;
+    for u in history {
+        if u.resp < inv {
+            net += u.delta;
+        } else if u.inv <= resp {
+            overlap = true;
+        }
+    }
+    let present = net > 0;
+    (present && !overlap, present || overlap)
+}
+
+/// The pure scan/count checking core behind [`Monitor::verify_scans`]
+/// (module docs, "Range scans"). Assumes the history is complete: every
+/// successful update of every scanned key was recorded.
+pub fn check_scan(
+    updates: &[KeyedUpdateEvent],
+    scans: &[ScanEvent],
+    counts: &[CountEvent],
+) -> ScanReport {
+    let mut by_key: HashMap<u64, Vec<KeyedUpdateEvent>> = HashMap::new();
+    for &u in updates {
+        by_key.entry(u.key).or_default().push(u);
+    }
+    check_scan_indexed(&by_key, |_| 0, None, updates.len(), scans, counts)
+}
+
+/// [`check_scan`] generalized to a window that starts mid-history:
+/// `anchor` is a full scan taken when recording began (its key set is the
+/// membership baseline over `[anchor.lo, anchor.hi]`), and every recorded
+/// update strictly follows it. Scans and counts that overlap the anchor,
+/// or whose range is not contained in the anchor's, are skipped rather
+/// than checked — their baseline is unknown.
+pub fn check_scan_anchored(
+    anchor: &ScanEvent,
+    updates: &[KeyedUpdateEvent],
+    scans: &[ScanEvent],
+    counts: &[CountEvent],
+) -> ScanReport {
+    let mut by_key: HashMap<u64, Vec<KeyedUpdateEvent>> = HashMap::new();
+    for &u in updates {
+        by_key.entry(u.key).or_default().push(u);
+    }
+    // Baseline keys with no later updates still need per-key entries, or
+    // the sweep below would never visit them.
+    for &k in &anchor.keys {
+        by_key.entry(k).or_default();
+    }
+    let base: HashSet<u64> = anchor.keys.iter().copied().collect();
+    check_scan_indexed(
+        &by_key,
+        |k| i64::from(base.contains(&k)),
+        Some(anchor),
+        updates.len(),
+        scans,
+        counts,
+    )
+}
+
+/// [`check_scan`] lifted to a sharded store: `shard_updates[i]` holds the
+/// keyed updates that ran on shard `i`, and every scan/count is a global
+/// (aggregated) observation. Keys *partition* across shards, so each
+/// key's full history lives in exactly one shard stream and the pooled
+/// per-key bounds equal the per-shard ones — unlike sizes (where the
+/// per-shard floor tightens the summed bound), flattening loses nothing.
+pub fn check_scan_aggregated(
+    shard_updates: &[Vec<KeyedUpdateEvent>],
+    scans: &[ScanEvent],
+    counts: &[CountEvent],
+) -> ScanReport {
+    let pooled: Vec<KeyedUpdateEvent> = shard_updates.iter().flatten().copied().collect();
+    check_scan(&pooled, scans, counts)
+}
+
+/// Shared sweep behind the `check_scan*` entry points: `baseline` gives a
+/// key's membership before the first recorded update, `anchor` (when
+/// present) restricts which observations are comparable.
+fn check_scan_indexed(
+    by_key: &HashMap<u64, Vec<KeyedUpdateEvent>>,
+    baseline: impl Fn(u64) -> i64,
+    anchor: Option<&ScanEvent>,
+    updates: usize,
+    scans: &[ScanEvent],
+    counts: &[CountEvent],
+) -> ScanReport {
+    let mut report = ScanReport {
+        updates,
+        scans_checked: 0,
+        counts_checked: 0,
+        violations: Vec::new(),
+    };
+    let comparable = |inv: u64, lo: u64, hi: u64| match anchor {
+        None => true,
+        Some(a) => inv >= a.resp && lo >= a.lo && hi <= a.hi,
+    };
+    for s in scans {
+        if !comparable(s.inv, s.lo, s.hi) {
+            continue;
+        }
+        report.scans_checked += 1;
+        let reported: HashSet<u64> = s.keys.iter().copied().collect();
+        for &k in &s.keys {
+            let in_range = s.lo <= k && k <= s.hi;
+            let may = by_key
+                .get(&k)
+                .is_some_and(|h| key_bounds(h, baseline(k), s.inv, s.resp).1);
+            if !in_range || !may {
+                report.violations.push(ScanViolation {
+                    inv: s.inv,
+                    resp: s.resp,
+                    key: Some(k),
+                    reported: true,
+                    value: 1,
+                    low: 0,
+                    high: 0,
+                });
+            }
+        }
+        for (&k, h) in by_key {
+            if k < s.lo || k > s.hi || reported.contains(&k) {
+                continue;
+            }
+            let (must, _) = key_bounds(h, baseline(k), s.inv, s.resp);
+            if must {
+                report.violations.push(ScanViolation {
+                    inv: s.inv,
+                    resp: s.resp,
+                    key: Some(k),
+                    reported: false,
+                    value: 0,
+                    low: 1,
+                    high: 1,
+                });
+            }
+        }
+    }
+    for c in counts {
+        if !comparable(c.inv, c.lo, c.hi) {
+            continue;
+        }
+        report.counts_checked += 1;
+        let (mut low, mut high) = (0i64, 0i64);
+        for (&k, h) in by_key {
+            if k < c.lo || k > c.hi {
+                continue;
+            }
+            let (must, may) = key_bounds(h, baseline(k), c.inv, c.resp);
+            low += i64::from(must);
+            high += i64::from(may);
+        }
+        if c.value < low || c.value > high {
+            report.violations.push(ScanViolation {
+                inv: c.inv,
+                resp: c.resp,
+                key: None,
+                reported: false,
+                value: c.value,
+                low,
+                high,
+            });
+        }
+    }
+    report
+}
+
 /// [`Monitor`] for a sharded store: one shared clock, per-shard update
 /// streams, global size observations, verified by [`check_aggregated`].
 /// (Separate per-shard `Monitor`s would not compose — each carries its
@@ -345,6 +674,9 @@ pub struct ShardedMonitor {
     origin: Instant,
     shards: Box<[Mutex<Vec<UpdateEvent>>]>,
     sizes: Mutex<Vec<SizeEvent>>,
+    keyed: Box<[Mutex<Vec<KeyedUpdateEvent>>]>,
+    scans: Mutex<Vec<ScanEvent>>,
+    counts: Mutex<Vec<CountEvent>>,
 }
 
 impl ShardedMonitor {
@@ -354,6 +686,9 @@ impl ShardedMonitor {
             origin: Instant::now(),
             shards: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
             sizes: Mutex::new(Vec::new()),
+            keyed: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            scans: Mutex::new(Vec::new()),
+            counts: Mutex::new(Vec::new()),
         }
     }
 
@@ -402,14 +737,68 @@ impl ShardedMonitor {
         let sizes = self.sizes.lock().unwrap();
         check_aggregated(&shards, &sizes)
     }
+
+    /// Record a completed successful keyed update on `shard` (feeds both
+    /// that shard's unkeyed stream for [`Self::verify`] and its keyed
+    /// stream for [`Self::verify_scans`]).
+    pub fn commit_keyed_update(&self, shard: usize, timer: Timer, key: u64, delta: i64) {
+        let resp = self.now();
+        self.shards[shard].lock().unwrap().push(UpdateEvent {
+            inv: timer.inv,
+            resp,
+            delta,
+        });
+        self.keyed[shard].lock().unwrap().push(KeyedUpdateEvent {
+            key,
+            inv: timer.inv,
+            resp,
+            delta,
+        });
+    }
+
+    /// Record a completed aggregated (global) range scan's key set.
+    pub fn commit_scan(&self, timer: Timer, lo: u64, hi: u64, keys: Vec<u64>) {
+        let resp = self.now();
+        self.scans.lock().unwrap().push(ScanEvent {
+            inv: timer.inv,
+            resp,
+            lo,
+            hi,
+            keys,
+        });
+    }
+
+    /// Record a completed aggregated range count.
+    pub fn commit_count(&self, timer: Timer, lo: u64, hi: u64, value: i64) {
+        let resp = self.now();
+        self.counts.lock().unwrap().push(CountEvent {
+            inv: timer.inv,
+            resp,
+            lo,
+            hi,
+            value,
+        });
+    }
+
+    /// Check every recorded global scan/count against the per-shard keyed
+    /// updates via [`check_scan_aggregated`].
+    pub fn verify_scans(&self) -> ScanReport {
+        let shards: Vec<Vec<KeyedUpdateEvent>> = self
+            .keyed
+            .iter()
+            .map(|m| m.lock().unwrap().clone())
+            .collect();
+        let scans = self.scans.lock().unwrap();
+        let counts = self.counts.lock().unwrap();
+        check_scan_aggregated(&shards, &scans, &counts)
+    }
 }
 
-/// Greedy one-pass shrink: drop every update whose removal keeps the
-/// violation alive. Shared by [`minimize`] / [`minimize_anchored`].
-fn shrink(
-    updates: &[UpdateEvent],
-    still_fails: impl Fn(&[UpdateEvent]) -> bool,
-) -> Vec<UpdateEvent> {
+/// Greedy one-pass shrink: drop every event whose removal keeps the
+/// violation alive. Shared by [`minimize`] / [`minimize_anchored`] /
+/// [`minimize_scan`] (generic over the event type — keyed and unkeyed
+/// histories shrink the same way).
+fn shrink<T: Clone>(updates: &[T], still_fails: impl Fn(&[T]) -> bool) -> Vec<T> {
     let mut kept = updates.to_vec();
     let mut i = 0;
     while i < kept.len() {
@@ -430,6 +819,17 @@ fn shrink(
 pub fn minimize(updates: &[UpdateEvent], size: &SizeEvent) -> Vec<UpdateEvent> {
     debug_assert!(!check(updates, std::slice::from_ref(size)).is_ok());
     shrink(updates, |kept| !check(kept, std::slice::from_ref(size)).is_ok())
+}
+
+/// [`minimize`] for a violating scan observation: the returned keyed
+/// subset still fails [`check_scan`] against `scan` alone. (Dropping a
+/// key's whole history can itself fail the check — a reported key with no
+/// recorded insert is a violation — so the core is a repro, not a proof
+/// skeleton; the dump prints it alongside the scan either way.)
+pub fn minimize_scan(updates: &[KeyedUpdateEvent], scan: &ScanEvent) -> Vec<KeyedUpdateEvent> {
+    shrink(updates, |kept| {
+        !check_scan(kept, std::slice::from_ref(scan), &[]).is_ok()
+    })
 }
 
 /// [`minimize`] for anchored windows (see [`check_anchored`]).
@@ -648,6 +1048,198 @@ mod tests {
         let t = m.begin();
         m.commit_size(t, 5);
         assert!(!m.verify().is_ok());
+    }
+
+    fn kup(key: u64, inv: u64, resp: u64, delta: i64) -> KeyedUpdateEvent {
+        KeyedUpdateEvent { key, inv, resp, delta }
+    }
+
+    fn scan(inv: u64, resp: u64, lo: u64, hi: u64, keys: &[u64]) -> ScanEvent {
+        ScanEvent { inv, resp, lo, hi, keys: keys.to_vec() }
+    }
+
+    fn cnt(inv: u64, resp: u64, lo: u64, hi: u64, value: i64) -> CountEvent {
+        CountEvent { inv, resp, lo, hi, value }
+    }
+
+    #[test]
+    fn scan_must_report_pinned_members_and_nothing_else() {
+        // Key 5 definitely in (insert done), key 7 definitely out
+        // (insert+delete both done), key 9 never touched.
+        let ups = [kup(5, 0, 1, 1), kup(7, 2, 3, 1), kup(7, 4, 5, -1)];
+        assert!(check_scan(&ups, &[scan(10, 11, 0, 20, &[5])], &[]).is_ok());
+        // Dropping the pinned key is a torn scan.
+        let r = check_scan(&ups, &[scan(10, 11, 0, 20, &[])], &[]);
+        assert_eq!(r.violations.len(), 1);
+        let v = r.violations[0];
+        assert_eq!((v.key, v.reported, v.low, v.high), (Some(5), false, 1, 1));
+        // Reporting a definitely-deleted key, a never-inserted key, or an
+        // out-of-range key is each a violation.
+        for bad in [7u64, 9] {
+            let r = check_scan(&ups, &[scan(10, 11, 0, 20, &[5, bad])], &[]);
+            assert_eq!(r.violations.len(), 1, "key {bad}");
+            assert_eq!(r.violations[0].key, Some(bad));
+            assert!(r.violations[0].reported);
+        }
+        let r = check_scan(&ups, &[scan(10, 11, 6, 20, &[5])], &[]);
+        assert_eq!(r.violations.len(), 1, "key 5 is outside [6, 20]");
+    }
+
+    #[test]
+    fn overlapping_updates_free_a_keys_membership() {
+        // Key 5's delete overlaps the scan window: both answers fine.
+        let ups = [kup(5, 0, 1, 1), kup(5, 8, 20, -1)];
+        assert!(check_scan(&ups, &[scan(10, 11, 0, 9, &[5])], &[]).is_ok());
+        assert!(check_scan(&ups, &[scan(10, 11, 0, 9, &[])], &[]).is_ok());
+        // An overlapping *insert* of a fresh key likewise frees it.
+        let ups = [kup(6, 8, 20, 1)];
+        assert!(check_scan(&ups, &[scan(10, 11, 0, 9, &[6])], &[]).is_ok());
+        assert!(check_scan(&ups, &[scan(10, 11, 0, 9, &[])], &[]).is_ok());
+    }
+
+    #[test]
+    fn count_bounds_sum_per_key_membership() {
+        // Pinned present: 1, 2. Freed by overlap: 3. Pinned absent: 4.
+        let ups = [
+            kup(1, 0, 1, 1),
+            kup(2, 0, 1, 1),
+            kup(3, 8, 20, 1),
+            kup(4, 2, 3, 1),
+            kup(4, 4, 5, -1),
+        ];
+        for fine in [2, 3] {
+            assert!(check_scan(&ups, &[], &[cnt(10, 11, 0, 9, fine)]).is_ok(), "{fine}");
+        }
+        for wrong in [-1, 1, 4] {
+            let r = check_scan(&ups, &[], &[cnt(10, 11, 0, 9, wrong)]);
+            assert_eq!(r.violations.len(), 1, "count {wrong}");
+            assert_eq!((r.violations[0].low, r.violations[0].high), (2, 3));
+        }
+        // Range restriction: only key 1 in [0, 1].
+        assert!(check_scan(&ups, &[], &[cnt(10, 11, 0, 1, 1)]).is_ok());
+        assert!(!check_scan(&ups, &[], &[cnt(10, 11, 0, 1, 0)]).is_ok());
+    }
+
+    #[test]
+    fn anchored_scan_seeds_baseline_and_skips_incomparable() {
+        // Anchor over [0, 100] reported {3, 4}; afterwards 4 is deleted
+        // and 8 inserted.
+        let anchor = scan(0, 5, 0, 100, &[3, 4]);
+        let ups = [kup(4, 6, 7, -1), kup(8, 8, 9, 1)];
+        let r = check_scan_anchored(&anchor, &ups, &[scan(20, 21, 0, 100, &[3, 8])], &[]);
+        assert!(r.is_ok(), "{:?}", r.violations);
+        assert_eq!(r.scans_checked, 1);
+        // Dropping baseline key 3 (never updated after the anchor) is
+        // exactly the violation the baseline seeding must catch.
+        let r = check_scan_anchored(&anchor, &ups, &[scan(20, 21, 0, 100, &[8])], &[]);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].key, Some(3));
+        // A scan overlapping the anchor, or ranging outside it, is
+        // skipped, not checked.
+        let r = check_scan_anchored(
+            &anchor,
+            &ups,
+            &[scan(2, 3, 0, 100, &[]), scan(20, 21, 0, 200, &[])],
+            &[cnt(20, 21, 0, 200, 7)],
+        );
+        assert_eq!((r.scans_checked, r.counts_checked), (0, 0));
+        assert!(r.is_ok());
+        // Counts inside the anchor range check against the seeded bound.
+        let r = check_scan_anchored(&anchor, &ups, &[], &[cnt(20, 21, 0, 100, 2)]);
+        assert!(r.is_ok(), "{:?}", r.violations);
+        assert!(!check_scan_anchored(&anchor, &ups, &[], &[cnt(20, 21, 0, 100, 4)]).is_ok());
+    }
+
+    #[test]
+    fn aggregated_scan_check_equals_pooled() {
+        // Keys partition across shards, so the sharded check must agree
+        // with the pooled single-history one on every observation.
+        let shards = vec![
+            vec![kup(2, 0, 1, 1), kup(2, 8, 20, -1)],
+            vec![kup(3, 0, 1, 1), kup(5, 2, 3, 1), kup(5, 4, 5, -1)],
+        ];
+        let pooled: Vec<KeyedUpdateEvent> = shards.iter().flatten().copied().collect();
+        let observations = [
+            scan(10, 11, 0, 9, &[2, 3]),
+            scan(10, 11, 0, 9, &[3]),
+            scan(10, 11, 0, 9, &[5]),
+            scan(10, 11, 0, 9, &[]),
+        ];
+        for s in &observations {
+            assert_eq!(
+                check_scan_aggregated(&shards, std::slice::from_ref(s), &[]).is_ok(),
+                check_scan(&pooled, std::slice::from_ref(s), &[]).is_ok(),
+                "scan {:?}",
+                s.keys
+            );
+        }
+        let r = check_scan_aggregated(&shards, &[], &[cnt(10, 11, 0, 9, 2)]);
+        assert!(r.is_ok(), "{:?}", r.violations);
+        assert_eq!(r.updates, 5);
+    }
+
+    #[test]
+    fn minimize_scan_shrinks_to_a_failing_core() {
+        // Many irrelevant keys plus one pinned-present key the scan
+        // dropped: the core should keep (at most) the insert of key 50.
+        let mut ups: Vec<KeyedUpdateEvent> =
+            (0..20).map(|i| kup(100 + i, 2 * i, 2 * i + 1, 1)).collect();
+        ups.push(kup(50, 0, 1, 1));
+        let torn = scan(100, 101, 0, 99, &[]);
+        assert!(!check_scan(&ups, std::slice::from_ref(&torn), &[]).is_ok());
+        let core = minimize_scan(&ups, &torn);
+        assert_eq!(core.len(), 1);
+        assert_eq!(core[0].key, 50);
+        assert!(!check_scan(&core, std::slice::from_ref(&torn), &[]).is_ok());
+    }
+
+    #[test]
+    fn monitor_scan_recording_end_to_end() {
+        let m = Monitor::new();
+        let t = m.begin();
+        m.commit_keyed_update(t, 7, 1);
+        let t = m.begin();
+        m.commit_keyed_update(t, 8, 1);
+        let t = m.begin();
+        m.commit_scan(t, 0, 100, vec![7, 8]);
+        let t = m.begin();
+        m.commit_keyed_update(t, 7, -1);
+        let t = m.begin();
+        m.commit_count(t, 0, 100, 1);
+        let r = m.verify_scans();
+        assert!(r.is_ok(), "{:?}", r.violations);
+        assert_eq!((r.scans_checked, r.counts_checked, r.updates), (1, 1, 3));
+        // Keyed updates feed the unkeyed stream too: verify() still works.
+        let t = m.begin();
+        m.commit_size(t, 1);
+        assert!(m.verify().is_ok());
+        // A fabricated scan is caught.
+        let t = m.begin();
+        m.commit_scan(t, 0, 100, vec![7]);
+        assert!(!m.verify_scans().is_ok(), "key 7 is deleted by now");
+    }
+
+    #[test]
+    fn sharded_monitor_scan_recording_end_to_end() {
+        let m = ShardedMonitor::new(2);
+        let t = m.begin();
+        m.commit_keyed_update(0, t, 4, 1);
+        let t = m.begin();
+        m.commit_keyed_update(1, t, 5, 1);
+        let t = m.begin();
+        m.commit_scan(t, 0, 10, vec![4, 5]);
+        let t = m.begin();
+        m.commit_count(t, 0, 10, 2);
+        let r = m.verify_scans();
+        assert!(r.is_ok(), "{:?}", r.violations);
+        // Keyed updates land in the unkeyed per-shard streams too.
+        let t = m.begin();
+        m.commit_size(t, 2);
+        assert!(m.verify().is_ok());
+        // A global scan missing a pinned key is caught.
+        let t = m.begin();
+        m.commit_scan(t, 0, 10, vec![4]);
+        assert!(!m.verify_scans().is_ok());
     }
 
     #[test]

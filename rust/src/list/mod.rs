@@ -43,6 +43,9 @@ fn addr<P: SizePolicy>(word: u64) -> *mut Node<P> {
 /// baseline node layout matches the untransformed algorithm.
 pub(crate) struct Node<P: SizePolicy> {
     pub(crate) key: u64,
+    /// Dictionary payload; an upsert over an existing key overwrites it
+    /// in place (per-key atomic, not part of the membership protocol).
+    pub(crate) value: AtomicU64,
     /// Successor pointer; low bit = Harris mark (physical-deletion lock).
     pub(crate) next: AtomicU64,
     /// Published insert `UpdateInfo` (paper: `insertInfo` field).
@@ -53,9 +56,10 @@ pub(crate) struct Node<P: SizePolicy> {
 }
 
 impl<P: SizePolicy> Node<P> {
-    fn alloc(key: u64, next: u64) -> *mut Self {
+    fn alloc(key: u64, value: u64, next: u64) -> *mut Self {
         Box::into_raw(Box::new(Node {
             key,
+            value: AtomicU64::new(value),
             next: AtomicU64::new(next),
             insert_info: P::InfoSlot::default(),
             delete_info: P::InfoSlot::default(),
@@ -151,6 +155,22 @@ unsafe fn search<P: SizePolicy>(
 
 /// Insert into the list rooted at `head` (Fig. 3 lines 15–26).
 pub(crate) fn insert_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> bool {
+    put_at(policy, head, k, 0, false)
+}
+
+/// Dictionary upsert into the list rooted at `head`: [`insert_at`] with a
+/// value payload. A fresh insert publishes `v` with the node and returns
+/// `true`; when `k` is already present, `overwrite` decides whether the
+/// existing node's value is replaced (the store is the overwrite's
+/// linearization point) — either way membership is unchanged and the
+/// return is `false`, preserving the set-semantics reply.
+pub(crate) fn put_at<P: SizePolicy>(
+    policy: &P,
+    head: &AtomicU64,
+    k: u64,
+    v: u64,
+    overwrite: bool,
+) -> bool {
     debug_assert!(k <= MAX_KEY);
     let _guard = ebr::pin();
     let _op = policy.enter();
@@ -167,6 +187,9 @@ pub(crate) fn insert_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> 
                 // Present in an unmarked node: help its insert, fail
                 // (lines 16–18).
                 policy.help_insert(&curr_ref.insert_info);
+                if overwrite {
+                    curr_ref.value.store(v, SeqCst);
+                }
                 if !new_node.is_null() {
                     drop(unsafe { Box::from_raw(new_node) }); // never published
                 }
@@ -174,7 +197,7 @@ pub(crate) fn insert_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> 
             }
         }
         if new_node.is_null() {
-            new_node = Node::<P>::alloc(k, curr as u64);
+            new_node = Node::<P>::alloc(k, v, curr as u64);
             P::stash_insert_info(unsafe { &(*new_node).insert_info }, packed); // line 23
         } else {
             unsafe { &(*new_node).next }.store(curr as u64, SeqCst);
@@ -298,6 +321,73 @@ pub(crate) fn contains_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -
     true
 }
 
+/// Dictionary read: [`contains_at`] returning the stored value.
+pub(crate) fn get_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> Option<u64> {
+    let _guard = ebr::pin();
+    let _op = policy.enter_read();
+
+    let mut curr = addr::<P>(head.load(SeqCst));
+    while !curr.is_null() {
+        let curr_ref = unsafe { &*curr };
+        if curr_ref.key >= k {
+            break;
+        }
+        curr = addr::<P>(curr_ref.next.load(SeqCst));
+    }
+    if curr.is_null() {
+        return None;
+    }
+    let curr_ref = unsafe { &*curr };
+    if curr_ref.key != k {
+        return None;
+    }
+    let (deleted, dinfo) = deletion_state(curr_ref);
+    if deleted {
+        if P::TRACKED {
+            policy.commit_delete(dinfo);
+        }
+        return None;
+    }
+    policy.help_insert(&curr_ref.insert_info);
+    Some(curr_ref.value.load(SeqCst))
+}
+
+/// Range collect: push every live `(key, value)` with `lo <= key <= hi`
+/// onto `out`, in key order. The traversal *helps*: a pending insert it
+/// reports is committed first, and an observed logical delete is
+/// committed before the node is skipped — so any tracked update the
+/// traversal could have half-seen bumps a counter, and the double-collect
+/// in [`crate::size::validated_collect`] detects it and retries. Caller
+/// must hold an EBR pin and a policy read guard.
+pub(crate) fn collect_range_at<P: SizePolicy>(
+    policy: &P,
+    head: &AtomicU64,
+    lo: u64,
+    hi: u64,
+    out: &mut Vec<(u64, u64)>,
+) {
+    let mut curr = addr::<P>(head.load(SeqCst));
+    while !curr.is_null() {
+        let curr_ref = unsafe { &*curr };
+        if curr_ref.key > hi {
+            return;
+        }
+        let next = addr::<P>(curr_ref.next.load(SeqCst));
+        if curr_ref.key >= lo {
+            let (deleted, dinfo) = deletion_state(curr_ref);
+            if deleted {
+                if P::TRACKED {
+                    policy.commit_delete(dinfo);
+                }
+            } else {
+                policy.help_insert(&curr_ref.insert_info);
+                out.push((curr_ref.key, curr_ref.value.load(SeqCst)));
+            }
+        }
+        curr = next;
+    }
+}
+
 /// Non-linearizable full count: walks the list ignoring in-flight state.
 /// For tests at quiescence only.
 pub(crate) fn quiescent_count_at<P: SizePolicy>(head: &AtomicU64) -> usize {
@@ -384,6 +474,24 @@ impl<P: SizePolicy> ConcurrentSet for LinkedListSet<P> {
     fn contains(&self, k: u64) -> bool {
         contains_at(&self.core.policy, &self.head, k)
     }
+    fn put(&self, k: u64, v: u64) -> bool {
+        put_at(&self.core.policy, &self.head, k, v, true)
+    }
+    fn get(&self, k: u64) -> Option<u64> {
+        get_at(&self.core.policy, &self.head, k)
+    }
+
+    fn scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        let _guard = ebr::pin();
+        let _op = self.core.policy.enter_read();
+        let (pairs, _validated) =
+            crate::size::validated_collect(self.core.policy.calculator(), || {
+                let mut out = Vec::new();
+                collect_range_at(&self.core.policy, &self.head, lo, hi, &mut out);
+                out
+            });
+        Some(pairs)
+    }
 
     crate::size::impl_size_surface!();
 
@@ -436,6 +544,29 @@ mod tests {
         }
         assert_eq!(l.size(), Some(50));
         assert_eq!(l.quiescent_count(), 50);
+    }
+
+    #[test]
+    fn dictionary_put_get_scan_sequentially() {
+        let l = lin_list();
+        assert_eq!(l.get(5), None);
+        assert!(l.put(5, 50));
+        assert_eq!(l.get(5), Some(50));
+        assert!(!l.put(5, 51), "upsert over an existing key reports 0");
+        assert_eq!(l.get(5), Some(51));
+        assert!(l.insert(7));
+        assert_eq!(l.get(7), Some(0), "set insert stores the default value");
+        assert!(!l.insert(7));
+        assert_eq!(l.get(7), Some(0), "plain insert must not overwrite");
+        assert!(l.put(3, 30));
+        assert_eq!(l.scan(0, 10), Some(vec![(3, 30), (5, 51), (7, 0)]));
+        assert_eq!(l.scan(4, 7), Some(vec![(5, 51), (7, 0)]));
+        assert_eq!(l.scan(6, 6), Some(vec![]));
+        assert_eq!(l.count_range(0, 10), Some(3));
+        assert_eq!(l.count_range(4, 5), Some(1));
+        assert!(l.delete(5));
+        assert_eq!(l.get(5), None);
+        assert_eq!(l.scan(0, 10), Some(vec![(3, 30), (7, 0)]));
     }
 
     #[test]

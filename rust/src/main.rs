@@ -14,12 +14,17 @@
 //! * `fuzz`     — seeded fault-schedule fuzzing: drive every
 //!   size-providing policy under the chaos fault plane (`--fault-seed`,
 //!   `--seeds`, `--ops`, `--structure NAME|all`), check each recorded
-//!   history for size-linearizability, and dump minimized repros for any
-//!   violation to `--dump-dir` (default `artifacts/`). Ends with a
-//!   fault-site coverage table (fires per armed site, including a short
-//!   server drive for the server-only sites); any armed site that never
-//!   fired fails the run. Build with `--features faults` for actual
-//!   fault injection.
+//!   history for size-linearizability **and scan/count justification**
+//!   (every policy must pass the scan check — the interval bound accepts
+//!   even the un-validated fallback scans, so a violation always means a
+//!   torn scan), and dump minimized repros for any violation to
+//!   `--dump-dir` (default `artifacts/`). Two teeth tests prove the
+//!   checkers can fail: the naive policy's forced Figure 2 anomaly, and
+//!   a deliberately corrupted scan record. Ends with a fault-site
+//!   coverage table (fires per armed site, including a short server
+//!   drive for the server-only sites); any armed site that never fired
+//!   fails the run. Build with `--features faults` for actual fault
+//!   injection.
 //!
 //! Figure reproductions live in `cargo bench` targets (see DESIGN.md §4).
 
@@ -31,7 +36,10 @@ use concurrent_size::bench_util;
 use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
 use concurrent_size::faults::{self, FaultPlane};
 use concurrent_size::harness::{run, RunConfig, SizeCall};
-use concurrent_size::history::monitor::{minimize, Monitor, UpdateEvent, Violation};
+use concurrent_size::history::monitor::{
+    minimize, minimize_scan, KeyedUpdateEvent, Monitor, ScanEvent, ScanViolation, UpdateEvent,
+    Violation,
+};
 use concurrent_size::list::LinkedListSet;
 use concurrent_size::metrics::fmt_rate;
 use concurrent_size::rng::Xoshiro256;
@@ -323,13 +331,13 @@ fn fuzz_drive(
                         0 => {
                             let timer = monitor.begin();
                             if set.insert(k) {
-                                monitor.commit_update(timer, 1);
+                                monitor.commit_keyed_update(timer, k, 1);
                             }
                         }
                         1 => {
                             let timer = monitor.begin();
                             if set.delete(k) {
-                                monitor.commit_update(timer, -1);
+                                monitor.commit_keyed_update(timer, k, -1);
                             }
                         }
                         _ => {
@@ -345,7 +353,7 @@ fn fuzz_drive(
             scope.spawn(move || {
                 let mut rng = Xoshiro256::new(seed ^ ((t + 77) * 0xC0FF));
                 for _ in 0..ops / 4 {
-                    match rng.gen_range(3) {
+                    match rng.gen_range(5) {
                         0 => {
                             let timer = monitor.begin();
                             let v = set.size().expect("policy provides size");
@@ -356,13 +364,32 @@ fn fuzz_drive(
                             let v = set.size_exact().expect("policy provides size");
                             monitor.commit_size(timer, v.value);
                         }
-                        _ => {
+                        2 => {
                             // Stale reads are justified within a window
                             // widened by their reported age.
                             let timer = monitor.begin();
                             let bound = Duration::from_micros(rng.gen_range_incl(1, 800));
                             let v = set.size_recent(bound).expect("policy provides size");
                             monitor.commit_size_with_slack(timer, v.value, v.age);
+                        }
+                        3 => {
+                            let lo = rng.gen_range_incl(1, KEY_SPACE);
+                            let hi = (lo + rng.gen_range(16)).min(KEY_SPACE);
+                            let timer = monitor.begin();
+                            let pairs = set.scan(lo, hi).expect("structures provide scans");
+                            monitor.commit_scan(
+                                timer,
+                                lo,
+                                hi,
+                                pairs.into_iter().map(|(k, _)| k).collect(),
+                            );
+                        }
+                        _ => {
+                            let lo = rng.gen_range_incl(1, KEY_SPACE);
+                            let hi = (lo + rng.gen_range(16)).min(KEY_SPACE);
+                            let timer = monitor.begin();
+                            let n = set.count_range(lo, hi).expect("structures provide counts");
+                            monitor.commit_count(timer, lo, hi, n);
                         }
                     }
                     if rng.gen_bool(0.25) {
@@ -422,6 +449,73 @@ fn dump_repro(
     path
 }
 
+/// Write a repro file for scan/count violations: the offending window
+/// and bounds, plus a minimized keyed-update core for scan membership
+/// violations (first 3), and return the file path.
+fn dump_scan_repro(
+    dir: &str,
+    tag: &str,
+    seed: u64,
+    updates: &[KeyedUpdateEvent],
+    scans: &[ScanEvent],
+    violations: &[ScanViolation],
+) -> String {
+    use std::fmt::Write as _;
+    let mut body = String::new();
+    let _ = writeln!(body, "# csize fuzz scan repro: {tag} (fault seed {seed:#x})");
+    let _ = writeln!(body, "# keyed updates recorded: {}", updates.len());
+    for v in violations.iter().take(3) {
+        match v.key {
+            Some(key) => {
+                let _ = writeln!(
+                    body,
+                    "scan violation: key={key} reported={} window=[{}, {}] \
+                     membership in [{}, {}]",
+                    v.reported, v.inv, v.resp, v.low, v.high
+                );
+            }
+            None => {
+                let _ = writeln!(
+                    body,
+                    "count violation: value={} window=[{}, {}] justified=[{}, {}]",
+                    v.value, v.inv, v.resp, v.low, v.high
+                );
+            }
+        }
+        if let Some(scan) = scans.iter().find(|s| s.inv == v.inv && s.resp == v.resp) {
+            let core = minimize_scan(updates, scan);
+            let _ = writeln!(
+                body,
+                "  scan [{}, {}] reported {:?}; minimized repro ({} updates):",
+                scan.lo,
+                scan.hi,
+                scan.keys,
+                core.len()
+            );
+            for u in &core {
+                let _ = writeln!(
+                    body,
+                    "  update key={} delta={:+} window=[{}, {}]",
+                    u.key, u.delta, u.inv, u.resp
+                );
+            }
+        }
+    }
+    if violations.len() > 3 {
+        let _ = writeln!(
+            body,
+            "# ... {} more violations elided",
+            violations.len() - 3
+        );
+    }
+    let _ = std::fs::create_dir_all(dir);
+    let path = format!("{dir}/fuzz-scan-{tag}-{seed:#x}.txt");
+    if let Err(e) = std::fs::write(&path, &body) {
+        eprintln!("fuzz: could not write repro {path}: {e}");
+    }
+    path
+}
+
 /// Reproduce the paper's Figure 2 anomaly on a widened-window
 /// [`NaiveSize`] under the chaos plane; return the repro path once the
 /// monitor flags the negative size (`None` = never reproduced).
@@ -473,6 +567,47 @@ fn fuzz_naive_teeth(seed: u64, dump_dir: &str) -> Option<String> {
     Some(dump_repro(dump_dir, "naive-fig2", seed, &updates, &report.violations))
 }
 
+/// Prove the scan checker has teeth: build a quiescent keyed history,
+/// take a real validated scan, then corrupt the record the way a torn
+/// scan would look (drop a definitely-present key) and require
+/// `verify_scans` to flag it. Returns the repro path (`None` = the
+/// corrupted scan sailed through, which fails the run).
+fn fuzz_scan_teeth(seed: u64, dump_dir: &str) -> Option<String> {
+    let set = bench_util::make_set("hashtable", PolicyKind::Linearizable, 128)
+        .expect("hashtable exists");
+    let monitor = Monitor::new();
+    for k in 1..=32u64 {
+        let timer = monitor.begin();
+        assert!(set.insert(k), "fresh key {k}");
+        monitor.commit_keyed_update(timer, k, 1);
+    }
+    let timer = monitor.begin();
+    let mut keys: Vec<u64> = set
+        .scan(1, 32)
+        .expect("hashtable provides scans")
+        .into_iter()
+        .map(|(k, _)| k)
+        .collect();
+    assert_eq!(keys.len(), 32, "quiescent scan sees every key");
+    // The corruption: a key whose insert finished before the scan began
+    // is pinned present, so omitting it is unjustifiable.
+    keys.remove(0);
+    monitor.commit_scan(timer, 1, 32, keys);
+    let report = monitor.verify_scans();
+    if report.is_ok() {
+        return None;
+    }
+    let (updates, scans, _) = monitor.scan_events();
+    Some(dump_scan_repro(
+        dump_dir,
+        "scan-teeth",
+        seed,
+        &updates,
+        &scans,
+        &report.violations,
+    ))
+}
+
 /// Exercise the fault sites the structure sweep cannot reach — handler
 /// dispatch, connection writes, accept handoffs, reply coalescing, and
 /// the refresher daemon — by driving a real two-reactor server (and a
@@ -509,12 +644,17 @@ fn fuzz_cover_server_sites(seed: u64) {
     drop(burst);
     let mut client = BlockingClient::connect(server.local_addr());
     for k in 1..=200u64 {
-        client.cmd(format!("PUT {k}"));
+        client.cmd(format!("PUT {k} {k}"));
         if k % 3 == 0 {
             client.cmd(format!("DEL {k}"));
         }
         if k % 7 == 0 {
             client.cmd("SIZE");
+        }
+        if k % 11 == 0 {
+            // Multi-line replies through the same coalesced write path.
+            client.scan(1, k).expect("fuzz scan reply");
+            client.cmd(format!("COUNT 1 {k}"));
         }
     }
     // Let the refresher tick through a few dozen armed wakes.
@@ -562,6 +702,7 @@ fn cmd_fuzz(args: &Args) {
                     fuzz_drive(structure, policy, seed, ops)
                 };
                 let report = monitor.verify();
+                let scan_report = monitor.verify_scans();
                 if let Some(size) = quiescent {
                     if size != report.final_net {
                         eprintln!(
@@ -572,10 +713,37 @@ fn cmd_fuzz(args: &Args) {
                         failures += 1;
                     }
                 }
+                // Scan/count justification must hold for EVERY policy:
+                // the per-key interval bound accepts even the
+                // un-validated fallback scans of untracked policies, so
+                // any violation here means a torn scan, not an expected
+                // weak-policy anomaly.
+                if !scan_report.is_ok() {
+                    let (keyed, scans, _) = monitor.scan_events();
+                    let tag = format!("{structure}-{label}");
+                    let path = dump_scan_repro(
+                        &dump_dir,
+                        &tag,
+                        seed,
+                        &keyed,
+                        &scans,
+                        &scan_report.violations,
+                    );
+                    eprintln!(
+                        "fuzz {structure}/{label} seed={seed:#x}: {} UNJUSTIFIED scan/count \
+                         returns (repro: {path})",
+                        scan_report.violations.len()
+                    );
+                    failures += 1;
+                }
                 if report.is_ok() {
                     println!(
-                        "fuzz {structure}/{label} seed={seed:#x}: clean ({} updates, {} sizes)",
-                        report.updates, report.sizes_checked
+                        "fuzz {structure}/{label} seed={seed:#x}: clean ({} updates, {} sizes, \
+                         {} scans, {} counts)",
+                        report.updates,
+                        report.sizes_checked,
+                        scan_report.scans_checked,
+                        scan_report.counts_checked
                     );
                     continue;
                 }
@@ -613,6 +781,19 @@ fn cmd_fuzz(args: &Args) {
         }
     }
 
+    // Same for the scan checker: corrupt a recorded scan the way a torn
+    // collect would and require verify_scans to reject it.
+    println!("fuzz: corrupting a recorded scan (scan-checker teeth)...");
+    match fuzz_scan_teeth(base_seed, &dump_dir) {
+        Some(path) => {
+            println!("fuzz scan-teeth: torn scan caught and dumped (repro: {path})");
+        }
+        None => {
+            eprintln!("fuzz scan-teeth: FAILED to flag the corrupted scan");
+            failures += 1;
+        }
+    }
+
     // Coverage gate: every site the chaos profile arms must have fired
     // at least once across the run, or the schedule silently stopped
     // reaching part of the protocol. The server drive covers the five
@@ -645,7 +826,10 @@ fn cmd_fuzz(args: &Args) {
         eprintln!("fuzz: {failures} failure(s)");
         std::process::exit(1);
     }
-    println!("fuzz OK: every linearizable policy justified every size return");
+    println!(
+        "fuzz OK: every linearizable policy justified every size return and \
+         every policy justified every scan/count"
+    );
 }
 
 fn main() {

@@ -23,8 +23,10 @@
 //!   probe of [`crate::size::ShardedCounters`]) against high/low
 //!   watermarks with hysteresis, shedding with `ERR OVERLOAD` while the
 //!   store drains;
-//! * the **protocol** ([`proto`]) — `PUT`/`DEL`/`HAS`/`SIZE`/`SIZE~`/
-//!   `SIZE?`/`STATS`/`QUIT`, where `STATS` exposes the server gauges
+//! * the **protocol** ([`proto`]) — `PUT k [v]`/`DEL`/`HAS`/`GET`/
+//!   `SCAN lo hi`/`COUNT lo hi`/`SIZE`/`SIZE~`/`SIZE?`/`STATS`/`QUIT`,
+//!   where `SCAN` serves the store's double-collect-validated range scan
+//!   as one multi-line reply and `STATS` exposes the server gauges
 //!   (live/peak connections, reactor queue depth, shed count, admission
 //!   state) merged with [`crate::size::ArbiterStats`].
 //!
@@ -592,6 +594,31 @@ impl BlockingClient {
         self.send(cmd);
         self.recv().expect("server closed mid-command")
     }
+
+    /// Read one complete `SCAN` reply: lines up to and including the
+    /// `END n` terminator, parsed into pairs. `Err` carries the server's
+    /// error reply (e.g. `ERR scan unsupported ...`) when the first line
+    /// is not a scan body.
+    pub fn recv_scan(&mut self) -> Result<Vec<(u64, u64)>, String> {
+        let mut lines = Vec::new();
+        loop {
+            let line = self.recv().expect("server closed mid-scan");
+            if lines.is_empty() && line.starts_with("ERR") {
+                return Err(line);
+            }
+            let done = line.starts_with("END ");
+            lines.push(line);
+            if done {
+                return proto::parse_scan_lines(&lines);
+            }
+        }
+    }
+
+    /// One `SCAN lo hi` round trip.
+    pub fn scan(&mut self, lo: u64, hi: u64) -> Result<Vec<(u64, u64)>, String> {
+        self.send(format!("SCAN {lo} {hi}"));
+        self.recv_scan()
+    }
 }
 
 /// Everything one pool thread needs, bundled so a panic-respawn can hand
@@ -674,7 +701,7 @@ fn handler_loop(ctx: &HandlerCtx) {
 fn execute_contained(ctx: &HandlerCtx, req: Request) -> String {
     let run = || {
         faults::jitter(FaultSite::HandlerDispatch);
-        if let Request::Put(key) = req {
+        if let Request::Put(key, _) = req {
             if let Some(delay) = faults::stalled_put(key) {
                 std::thread::sleep(delay);
             }

@@ -119,7 +119,7 @@ impl ServerMonitor {
         let reply = exec();
         let resp = self.nanos();
         match req {
-            Request::Put(_) if reply == "1" => self.record_update(inv, resp, 1),
+            Request::Put(..) if reply == "1" => self.record_update(inv, resp, 1),
             Request::Del(_) if reply == "1" => self.record_update(inv, resp, -1),
             Request::Size => {
                 if let Ok(value) = reply.parse::<i64>() {
@@ -268,7 +268,7 @@ mod tests {
         // Enough updates to fill and close at least one window.
         for _ in 0..(2 * WINDOW_UPDATES + 8) {
             key += 1;
-            let req = Request::Put(key);
+            let req = Request::Put(key, 0);
             let reply = m.observe(store.as_ref(), req, || {
                 crate::server::proto::execute(store.as_ref(), req)
             });

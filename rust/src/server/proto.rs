@@ -2,17 +2,29 @@
 //!
 //! One command per `\n`-terminated line (a trailing `\r` is tolerated):
 //!
-//! | command      | reply                                                |
-//! |--------------|------------------------------------------------------|
-//! | `PUT k`      | `1`/`0`; `ERR OVERLOAD` when the global gate sheds,  |
-//! |              | `ERR OVERLOAD shard=<i>` when only `k`'s shard does  |
-//! | `DEL k`      | `1`/`0`                                              |
-//! | `HAS k`      | `1`/`0` (`GET k` is an alias — set semantics)        |
-//! | `SIZE`       | exact linearizable count (combining arbiter)         |
-//! | `SIZE~ [ms]` | count at most `ms` (default 50) milliseconds stale   |
-//! | `SIZE?`      | O(shards) bounded-lag estimate (never negative)      |
-//! | `STATS`      | one line of `key=value` server + size telemetry      |
-//! | `QUIT`       | no reply; the server closes the connection           |
+//! | command        | reply                                                |
+//! |----------------|------------------------------------------------------|
+//! | `PUT k [v]`    | `1` fresh / `0` overwrite (`v` defaults to 0);       |
+//! |                | `ERR OVERLOAD` when the global gate sheds,           |
+//! |                | `ERR OVERLOAD shard=<i>` when only `k`'s shard does  |
+//! | `DEL k`        | `1`/`0`                                              |
+//! | `HAS k`        | `1`/`0` (membership only)                            |
+//! | `GET k`        | the stored value, or `NIL` when absent               |
+//! | `SCAN lo hi`   | one `k v` line per live key in `[lo, hi]`, ascending,|
+//! |                | then a terminator line `END n` (`n` = entry count)   |
+//! | `COUNT lo hi`  | number of live keys in `[lo, hi]`                    |
+//! | `SIZE`         | exact linearizable count (combining arbiter)         |
+//! | `SIZE~ [ms]`   | count at most `ms` (default 50) milliseconds stale   |
+//! | `SIZE?`        | O(shards) bounded-lag estimate (never negative)      |
+//! | `STATS`        | one line of `key=value` server + size telemetry      |
+//! | `QUIT`         | no reply; the server closes the connection           |
+//!
+//! `SCAN`'s key set is justified at a single linearization point (the
+//! double-collect validation in [`crate::size::validated_collect`]); each
+//! value is the key's atomically-read current value. An inverted range
+//! (`lo > hi`) is an empty scan — `END 0` — not an error. The whole scan
+//! reply is rendered as ONE string (internal newlines plus the `END`
+//! terminator) so it occupies exactly one slot in pipelined reply order.
 //!
 //! Parsing is separated from I/O so the reactor's partial-line state
 //! machine ([`super::conn`]) hands complete lines here, and so the
@@ -66,12 +78,26 @@ pub const PANIC_REPLY: &str = "ERR PANIC";
 const ERR_NO_SIZE: &str = "ERR size unsupported by this policy";
 const ERR_NO_ESTIMATE: &str = "ERR estimate unavailable (no sharded mirror)";
 
+/// Reply when the store does not implement range scans (competitor
+/// baselines keep the [`ConcurrentSet::scan`] default of `None`).
+pub const ERR_NO_SCAN: &str = "ERR scan unsupported by this store";
+
+/// `GET` reply for an absent key.
+pub const NIL_REPLY: &str = "NIL";
+
 /// One parsed client command.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Request {
-    Put(u64),
+    /// Upsert `k -> v`; replies `1` on fresh insert, `0` on overwrite.
+    Put(u64, u64),
     Del(u64),
     Has(u64),
+    /// Value lookup: the stored value, or [`NIL_REPLY`].
+    Get(u64),
+    /// Linearizable range scan over `[lo, hi]` (multi-line reply).
+    Scan(u64, u64),
+    /// Range cardinality over `[lo, hi]` (single-line reply).
+    Count(u64, u64),
     /// Exact linearizable size through the combining arbiter.
     Size,
     /// Bounded-staleness size; the payload is the bound in milliseconds.
@@ -94,8 +120,10 @@ impl Request {
     }
 
     /// Whether admission control applies (only `PUT` grows the store).
+    /// `SCAN`/`COUNT` deliberately stay admissible: a read-only sweep must
+    /// keep answering while the write path is shedding.
     pub fn grows_store(self) -> bool {
-        matches!(self, Request::Put(_))
+        matches!(self, Request::Put(..))
     }
 }
 
@@ -105,17 +133,45 @@ fn parse_key(k: Option<&str>) -> Result<u64, String> {
         .map_err(|_| "ERR bad key".to_string())
 }
 
+fn parse_range(lo: Option<&str>, hi: Option<&str>) -> Result<(u64, u64), String> {
+    let lo = lo
+        .ok_or_else(|| "ERR missing range".to_string())?
+        .parse()
+        .map_err(|_| "ERR bad range".to_string())?;
+    let hi = hi
+        .ok_or_else(|| "ERR missing range".to_string())?
+        .parse()
+        .map_err(|_| "ERR bad range".to_string())?;
+    Ok((lo, hi))
+}
+
 /// Parse one complete line. `Err` carries the exact reply to send back —
 /// a malformed command is answered, in order, without killing the
 /// connection.
 pub fn parse(line: &str) -> Result<Request, String> {
     let mut parts = line.split_whitespace();
     match (parts.next(), parts.next()) {
-        (Some("PUT"), k) => Ok(Request::Put(parse_key(k)?)),
+        (Some("PUT"), k) => {
+            let key = parse_key(k)?;
+            let value = match parts.next() {
+                None => 0,
+                Some(v) => v.parse().map_err(|_| "ERR bad value".to_string())?,
+            };
+            Ok(Request::Put(key, value))
+        }
         (Some("DEL"), k) => Ok(Request::Del(parse_key(k)?)),
-        // GET is an alias for HAS: sets carry no values (yet — see the
-        // dictionaries item in ROADMAP.md), so "get k" answers presence.
-        (Some("HAS"), k) | (Some("GET"), k) => Ok(Request::Has(parse_key(k)?)),
+        (Some("HAS"), k) => Ok(Request::Has(parse_key(k)?)),
+        // GET was a HAS alias while the stores were sets; with dictionary
+        // semantics it answers the stored value (or NIL).
+        (Some("GET"), k) => Ok(Request::Get(parse_key(k)?)),
+        (Some("SCAN"), lo) => {
+            let (lo, hi) = parse_range(lo, parts.next())?;
+            Ok(Request::Scan(lo, hi))
+        }
+        (Some("COUNT"), lo) => {
+            let (lo, hi) = parse_range(lo, parts.next())?;
+            Ok(Request::Count(lo, hi))
+        }
         (Some("SIZE"), _) => Ok(Request::Size),
         (Some("SIZE~"), ms) => match ms.map_or(Ok(DEFAULT_RECENT_MS), str::parse) {
             Ok(ms) => Ok(Request::SizeRecent(ms)),
@@ -137,9 +193,21 @@ pub fn parse(line: &str) -> Result<Request, String> {
 /// [`inline`]: Request::inline
 pub fn execute(store: &dyn ConcurrentSet, req: Request) -> String {
     match req {
-        Request::Put(k) => i64::from(store.insert(k)).to_string(),
+        Request::Put(k, v) => i64::from(store.put(k, v)).to_string(),
         Request::Del(k) => i64::from(store.delete(k)).to_string(),
         Request::Has(k) => i64::from(store.contains(k)).to_string(),
+        Request::Get(k) => match store.get(k) {
+            Some(v) => v.to_string(),
+            None => NIL_REPLY.into(),
+        },
+        Request::Scan(lo, hi) => match store.scan(lo, hi) {
+            Some(pairs) => scan_reply(&pairs),
+            None => ERR_NO_SCAN.into(),
+        },
+        Request::Count(lo, hi) => match store.count_range(lo, hi) {
+            Some(n) => n.to_string(),
+            None => ERR_NO_SCAN.into(),
+        },
         Request::Size => match store.size_exact() {
             Some(v) => v.value.to_string(),
             None => ERR_NO_SIZE.into(),
@@ -153,6 +221,52 @@ pub fn execute(store: &dyn ConcurrentSet, req: Request) -> String {
             "ERR internal: inline request routed to pool".into()
         }
     }
+}
+
+/// Render a scan result as one reply string: one `k v` line per entry in
+/// key order, then `END n`. The internal newlines ride inside a single
+/// `String` so the reactor's reply queue treats the whole scan as one
+/// reply — pipelined commands around it stay in order.
+pub fn scan_reply(pairs: &[(u64, u64)]) -> String {
+    let mut out = String::with_capacity(pairs.len() * 12 + 16);
+    for &(k, v) in pairs {
+        out.push_str(&k.to_string());
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    out.push_str("END ");
+    out.push_str(&pairs.len().to_string());
+    out
+}
+
+/// Parse the body of a [`scan_reply`] back into pairs — the client-side
+/// inverse, shared by `BlockingClient`, the harness, and the tests so the
+/// wire format can't drift. `lines` are the reply lines *including* the
+/// `END n` terminator; `Err` names what went wrong.
+pub fn parse_scan_lines(lines: &[String]) -> Result<Vec<(u64, u64)>, String> {
+    let (last, entries) = lines
+        .split_last()
+        .ok_or_else(|| "empty scan reply".to_string())?;
+    let n: usize = last
+        .strip_prefix("END ")
+        .ok_or_else(|| format!("missing END terminator, got {last:?}"))?
+        .parse()
+        .map_err(|_| format!("bad END count in {last:?}"))?;
+    if n != entries.len() {
+        return Err(format!("END {n} but {} entries", entries.len()));
+    }
+    entries
+        .iter()
+        .map(|line| {
+            let (k, v) = line
+                .split_once(' ')
+                .ok_or_else(|| format!("bad scan entry {line:?}"))?;
+            let k = k.parse().map_err(|_| format!("bad key in {line:?}"))?;
+            let v = v.parse().map_err(|_| format!("bad value in {line:?}"))?;
+            Ok((k, v))
+        })
+        .collect()
 }
 
 /// The `SIZE?` reply: the sharded mirror's bounded-lag estimate, clamped
@@ -230,24 +344,33 @@ mod tests {
 
     #[test]
     fn parses_every_command() {
-        assert_eq!(parse("PUT 7"), Ok(Request::Put(7)));
+        assert_eq!(parse("PUT 7"), Ok(Request::Put(7, 0)));
+        assert_eq!(parse("PUT 7 42"), Ok(Request::Put(7, 42)));
         assert_eq!(parse("DEL 7"), Ok(Request::Del(7)));
         assert_eq!(parse("HAS 0"), Ok(Request::Has(0)));
-        assert_eq!(parse("GET 0"), Ok(Request::Has(0)), "GET aliases HAS");
+        assert_eq!(parse("GET 0"), Ok(Request::Get(0)), "GET is a real lookup now");
         assert_eq!(parse("GET x"), Err("ERR bad key".into()));
+        assert_eq!(parse("SCAN 3 9"), Ok(Request::Scan(3, 9)));
+        assert_eq!(parse("SCAN 9 3"), Ok(Request::Scan(9, 3)), "inverted range parses");
+        assert_eq!(parse("COUNT 0 100"), Ok(Request::Count(0, 100)));
         assert_eq!(parse("SIZE"), Ok(Request::Size));
         assert_eq!(parse("SIZE~"), Ok(Request::SizeRecent(DEFAULT_RECENT_MS)));
         assert_eq!(parse("SIZE~ 5"), Ok(Request::SizeRecent(5)));
         assert_eq!(parse("SIZE?"), Ok(Request::SizeEstimate));
         assert_eq!(parse("STATS"), Ok(Request::Stats));
         assert_eq!(parse("QUIT"), Ok(Request::Quit));
-        assert_eq!(parse("  PUT   9  "), Ok(Request::Put(9)));
+        assert_eq!(parse("  PUT   9  "), Ok(Request::Put(9, 0)));
     }
 
     #[test]
     fn rejects_malformed_lines_with_err_replies() {
         assert_eq!(parse("PUT"), Err("ERR missing key".into()));
         assert_eq!(parse("PUT x"), Err("ERR bad key".into()));
+        assert_eq!(parse("PUT 1 x"), Err("ERR bad value".into()));
+        assert_eq!(parse("SCAN"), Err("ERR missing range".into()));
+        assert_eq!(parse("SCAN 1"), Err("ERR missing range".into()));
+        assert_eq!(parse("SCAN 1 x"), Err("ERR bad range".into()));
+        assert_eq!(parse("COUNT y 2"), Err("ERR bad range".into()));
         assert_eq!(parse("SIZE~ bogus"), Err("ERR bad staleness".into()));
         assert_eq!(parse("NOPE 1"), Err("ERR unknown command".into()));
         assert_eq!(parse(""), Err("ERR empty command".into()));
@@ -260,28 +383,58 @@ mod tests {
             assert!(req.inline(), "{req:?}");
         }
         for req in [
-            Request::Put(1),
+            Request::Put(1, 0),
             Request::Del(1),
             Request::Has(1),
+            Request::Get(1),
+            Request::Scan(0, 9),
+            Request::Count(0, 9),
             Request::Size,
             Request::SizeRecent(1),
         ] {
             assert!(!req.inline(), "{req:?}");
         }
-        assert!(Request::Put(1).grows_store());
+        assert!(Request::Put(1, 0).grows_store());
         assert!(!Request::Del(1).grows_store());
+        assert!(
+            !Request::Scan(0, 9).grows_store() && !Request::Count(0, 9).grows_store(),
+            "scans must keep answering through overload shedding"
+        );
     }
 
     #[test]
     fn execute_runs_store_ops() {
         let store = make_set("hashtable", PolicyKind::Linearizable, 64).unwrap();
-        assert_eq!(execute(store.as_ref(), Request::Put(3)), "1");
-        assert_eq!(execute(store.as_ref(), Request::Put(3)), "0");
+        assert_eq!(execute(store.as_ref(), Request::Put(3, 30)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Put(3, 31)), "0");
         assert_eq!(execute(store.as_ref(), Request::Has(3)), "1");
-        assert_eq!(execute(store.as_ref(), Request::Size), "1");
-        assert_eq!(execute(store.as_ref(), Request::SizeRecent(50)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Get(3)), "31");
+        assert_eq!(execute(store.as_ref(), Request::Get(4)), NIL_REPLY);
+        assert_eq!(execute(store.as_ref(), Request::Put(5, 50)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Scan(0, 9)), "3 31\n5 50\nEND 2");
+        assert_eq!(execute(store.as_ref(), Request::Scan(9, 0)), "END 0");
+        assert_eq!(execute(store.as_ref(), Request::Count(0, 9)), "2");
+        assert_eq!(execute(store.as_ref(), Request::Size), "2");
+        assert_eq!(execute(store.as_ref(), Request::SizeRecent(50)), "2");
         assert_eq!(execute(store.as_ref(), Request::Del(3)), "1");
-        assert_eq!(execute(store.as_ref(), Request::Size), "0");
+        assert_eq!(execute(store.as_ref(), Request::Count(0, 9)), "1");
+        assert_eq!(execute(store.as_ref(), Request::Size), "1");
+    }
+
+    #[test]
+    fn scan_reply_round_trips_through_the_client_parser() {
+        let pairs = vec![(1, 10), (2, 0), (900, u64::MAX)];
+        let reply = scan_reply(&pairs);
+        let lines: Vec<String> = reply.lines().map(str::to_string).collect();
+        assert_eq!(parse_scan_lines(&lines), Ok(pairs));
+        assert_eq!(scan_reply(&[]), "END 0");
+        assert_eq!(parse_scan_lines(&["END 0".to_string()]), Ok(vec![]));
+        assert!(parse_scan_lines(&[]).is_err());
+        assert!(parse_scan_lines(&["1 2".to_string()]).is_err(), "no terminator");
+        assert!(
+            parse_scan_lines(&["1 2".to_string(), "END 5".to_string()]).is_err(),
+            "count mismatch"
+        );
     }
 
     #[test]

@@ -128,7 +128,7 @@ fn admission_reply(shared: &Shared, store: &dyn ConcurrentSet, req: Request) -> 
     // Tier 2: per-store-shard watermarks — shed only the hot shard's
     // PUTs while its siblings admit.
     if !shared.shard_gates.is_empty() {
-        if let Request::Put(key) = req {
+        if let Request::Put(key, _) = req {
             let shard = store.shard_of(key);
             if !shared.shard_gates[shard].admit(store.shard_estimate(shard)) {
                 return Some(proto::overload_shard_reply(shard));

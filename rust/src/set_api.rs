@@ -2,10 +2,14 @@
 //! contains, plus the added `size`).
 //!
 //! All keys are `u64` with `u64::MAX` reserved as the tail sentinel.
-//! Dictionaries are the same transformation with a value payload; the
-//! skip-list implementation doubles as a map via [`crate::skiplist`]'s
-//! value variant — the paper makes the identical simplification ("we refer
-//! only to sets for brevity, but all our claims apply to dictionaries").
+//! Dictionaries are the same transformation with a value payload — the
+//! paper makes the identical simplification ("we refer only to sets for
+//! brevity, but all our claims apply to dictionaries") — and the four
+//! transformable structures now carry one: [`ConcurrentSet::put`] /
+//! [`ConcurrentSet::get`] store and read a `u64` value per key, and
+//! [`ConcurrentSet::scan`] / [`ConcurrentSet::count_range`] extend the
+//! paper's global size predicate to key ranges (see the scan contract on
+//! those methods). Competitor structures keep the value-less defaults.
 //!
 //! Beyond the raw `size()` (each caller pays its policy's own
 //! synchronization), the trait exposes the arbiter-backed freshness API:
@@ -35,6 +39,53 @@ pub trait ConcurrentSet: Send + Sync {
     fn size(&self) -> Option<i64>;
     /// Structure name for reports (e.g. `SizeSkipList`).
     fn name(&self) -> String;
+
+    /// Dictionary upsert: store `v` under `k`. Returns `true` iff `k` was
+    /// absent (a fresh insert); storing over an existing key overwrites
+    /// its value and returns `false`, so the reply contract of the wire
+    /// `PUT` stays exactly the set-semantics one. Default: value-less
+    /// structures ignore `v` and delegate to [`Self::insert`].
+    fn put(&self, k: u64, v: u64) -> bool {
+        let _ = v;
+        self.insert(k)
+    }
+
+    /// Dictionary read: the value stored under `k`, `None` when absent.
+    /// Default: value-less structures report membership as value `0`.
+    fn get(&self, k: u64) -> Option<u64> {
+        if self.contains(k) {
+            Some(0)
+        } else {
+            None
+        }
+    }
+
+    /// Range scan: every `(key, value)` pair with `lo <= key <= hi`,
+    /// sorted by key. `None` when the structure does not support scans
+    /// (competitor structures keep this default).
+    ///
+    /// **Scan contract** (what the history monitor's `check_scan`
+    /// verifies): the reported *key set* is justified at a single point
+    /// inside the call window — implementations validate a helping
+    /// traversal with the size policy's double-collect over the update
+    /// counters ([`crate::size::validated_collect`]), falling back to a
+    /// per-key-justified traversal (each reported key individually live
+    /// at some point in the window) under sustained contention or for
+    /// policies without a calculator. Each *value* is an atomic per-key
+    /// read; a concurrent overwrite may land mid-scan, exactly as an
+    /// independent `get` racing the scan could observe.
+    fn scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        let _ = (lo, hi);
+        None
+    }
+
+    /// Predicate count over a key range: `|{k in the set : lo <= k <= hi}|`,
+    /// under the same justification contract as [`Self::scan`] — the
+    /// paper's global size predicate restricted to a sub-range. Default:
+    /// the scan's length.
+    fn count_range(&self, lo: u64, hi: u64) -> Option<i64> {
+        self.scan(lo, hi).map(|pairs| pairs.len() as i64)
+    }
 
     /// Linearizable size through the structure's combining arbiter:
     /// concurrent callers register in one queue and a single underlying

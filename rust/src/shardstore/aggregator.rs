@@ -88,6 +88,46 @@ impl<'a, P: SizePolicy> SizeAggregator<'a, P> {
         Some(Self::compose(&views))
     }
 
+    /// Cluster-wide range scan under the same two-phase discipline as
+    /// [`Self::global_exact`], keyed on the policy's update counters
+    /// instead of arbiter round generations (scans have no rounds).
+    /// Phase 1 pre-samples each shard's counters and collects its range.
+    /// Phase 2 re-samples: a shard whose counters moved during the sweep
+    /// may have answered from before the last shard's collect, so it is
+    /// re-collected. Keys partition across shards, so the merged set is
+    /// the union of per-shard membership snapshots each justified inside
+    /// this call's window — the aggregated analogue of the monolithic
+    /// scan contract, and what `check_scan_aggregated` verifies.
+    ///
+    /// Untracked policies have no counters ([`SizePolicy::calculator`]
+    /// is `None`); their shards fall back to the per-key-justified scan
+    /// and skip phase 2. `None` is impossible for a hash-table shard
+    /// today but kept for [`ConcurrentSet::scan`] signature parity.
+    pub fn global_scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        let sample = |shard: &HashTableSet<P>| {
+            shard.policy().calculator().map(|c| c.sample_counters())
+        };
+        let mut parts = Vec::with_capacity(self.shards.len());
+        for shard in self.shards {
+            let before = sample(shard);
+            parts.push((before, shard.scan(lo, hi)?));
+        }
+        for (shard, (before, part)) in self.shards.iter().zip(parts.iter_mut()) {
+            if before.is_some() && sample(shard) != *before {
+                *part = shard.scan(lo, hi)?;
+            }
+        }
+        let mut merged: Vec<(u64, u64)> = parts.into_iter().flat_map(|(_, p)| p).collect();
+        merged.sort_unstable_by_key(|&(k, _)| k);
+        Some(merged)
+    }
+
+    /// Cluster-wide range cardinality: the [`Self::global_scan`] key set's
+    /// size, so the count is justified by the same two-phase window.
+    pub fn global_count(&self, lo: u64, hi: u64) -> Option<i64> {
+        self.global_scan(lo, hi).map(|pairs| pairs.len() as i64)
+    }
+
     /// Per-shard [`ArbiterStats`] folded into one line (counters add,
     /// gauges take the max — see [`ArbiterStats::merge`]).
     pub fn global_stats(&self) -> ArbiterStats {

@@ -11,8 +11,10 @@
 //! of arbiters"): `global_exact()` is a two-phase fan-out collect whose
 //! sum is justified by overlapping per-shard linearization intervals,
 //! `global_recent(d)` composes the EBR-published per-shard views under
-//! `age = max(per-shard ages) <= d`, and `global_stats()` merges the
-//! per-shard [`crate::size::ArbiterStats`].
+//! `age = max(per-shard ages) <= d`, `global_scan(lo, hi)` composes the
+//! per-shard validated range scans under a counter-keyed two-phase
+//! sweep, and `global_stats()` merges the per-shard
+//! [`crate::size::ArbiterStats`].
 //!
 //! The server mounts a [`ShardStore`] like any other structure (the
 //! [`ConcurrentSet`] defaults `store_shards`/`shard_of`/`shard_estimate`
@@ -100,6 +102,25 @@ impl<P: SizePolicy> ConcurrentSet for ShardStore<P> {
 
     fn contains(&self, k: u64) -> bool {
         self.shards[self.route(k)].contains(k)
+    }
+
+    fn put(&self, k: u64, v: u64) -> bool {
+        self.shards[self.route(k)].put(k, v)
+    }
+
+    fn get(&self, k: u64) -> Option<u64> {
+        self.shards[self.route(k)].get(k)
+    }
+
+    /// Cluster-wide range scan: per-shard validated collects composed
+    /// under the aggregator's counter-keyed two-phase sweep (see
+    /// [`SizeAggregator::global_scan`]).
+    fn scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        self.aggregator().global_scan(lo, hi)
+    }
+
+    fn count_range(&self, lo: u64, hi: u64) -> Option<i64> {
+        self.aggregator().global_count(lo, hi)
     }
 
     /// The aggregated exact size (two-phase collect). Unlike a monolithic
@@ -237,6 +258,25 @@ mod tests {
         assert_eq!(s.shard_estimate(99), None, "out-of-range shard");
         let stats = s.size_stats().expect("aggregated stats");
         assert!(stats.rounds > 0, "exact collects must have driven rounds");
+    }
+
+    #[test]
+    fn global_scan_merges_shards_in_key_order() {
+        let s = store(4);
+        for k in (1..=400u64).rev() {
+            assert!(s.put(k, k + 1000));
+        }
+        let pairs = s.scan(100, 149).expect("scan");
+        let want: Vec<_> = (100..=149).map(|k| (k, k + 1000)).collect();
+        assert_eq!(pairs, want);
+        assert_eq!(s.count_range(1, 400), Some(400));
+        assert_eq!(s.scan(400, 1), Some(vec![]), "inverted range is empty");
+        // Overwrite routes to the same shard the key lives on.
+        assert!(!s.put(123, 7), "upsert over existing key reports 0");
+        assert_eq!(s.get(123), Some(7));
+        assert_eq!(s.get(401), None);
+        assert!(s.delete(123));
+        assert_eq!(s.count_range(100, 149), Some(49));
     }
 
     #[test]

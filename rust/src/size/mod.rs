@@ -96,6 +96,38 @@ macro_rules! impl_size_surface {
 }
 pub(crate) use impl_size_surface;
 
+/// Retries of the scan double-collect before falling back to a
+/// per-key-justified traversal (mirrors the optimistic size method's
+/// bounded-retry shape).
+pub const SCAN_RETRIES: u32 = 8;
+
+/// Double-collect validation for range scans, built on the same
+/// exactly-once counters the size predicate uses: sample every thread's
+/// `(insertions, deletions)` pair, run `collect`, and re-sample. If no
+/// counter moved, no tracked update linearized during the traversal —
+/// the collected view is an atomic snapshot of the membership (the
+/// traversal helps pending inserts and commits observed deletes, so any
+/// in-flight update it could have half-seen bumps a counter and
+/// invalidates the attempt). After [`SCAN_RETRIES`] failed attempts, or
+/// when the policy has no calculator, the last traversal is returned
+/// un-validated; the `bool` reports whether the snapshot validated.
+pub fn validated_collect<T>(
+    calc: Option<&SizeCalculator>,
+    mut collect: impl FnMut() -> T,
+) -> (T, bool) {
+    if let Some(calc) = calc {
+        for _ in 0..SCAN_RETRIES {
+            let before = calc.sample_counters();
+            crate::faults::jitter(crate::faults::FaultSite::ScanCollect);
+            let out = collect();
+            if calc.sample_counters() == before {
+                return (out, true);
+            }
+        }
+    }
+    (collect(), false)
+}
+
 /// Spins before each yield in the size subsystem's wait loops
 /// (single-core containers need the yield to make progress at all).
 pub(crate) const SPINS_BEFORE_YIELD: u32 = 64;

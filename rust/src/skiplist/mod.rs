@@ -51,6 +51,9 @@ const STATE_CLAIMED: u64 = 1 << 63;
 
 pub(crate) struct SkipNode<P: SizePolicy> {
     key: u64,
+    /// Dictionary payload; an upsert over an existing key overwrites it
+    /// in place (per-key atomic, not part of the membership protocol).
+    value: AtomicU64,
     /// Tower of successor words (low bit = mark); length = node level.
     next: Box<[AtomicU64]>,
     /// Per-level link/unlink accounting for safe reclamation: the node is
@@ -66,9 +69,10 @@ pub(crate) struct SkipNode<P: SizePolicy> {
 }
 
 impl<P: SizePolicy> SkipNode<P> {
-    fn alloc(key: u64, level: usize) -> *mut Self {
+    fn alloc(key: u64, value: u64, level: usize) -> *mut Self {
         Box::into_raw(Box::new(SkipNode {
             key,
+            value: AtomicU64::new(value),
             next: (0..level).map(|_| AtomicU64::new(0)).collect(),
             state: AtomicU64::new(0),
             insert_info: P::InfoSlot::default(),
@@ -414,10 +418,56 @@ impl<P: SizePolicy> SkipListSet<P> {
         }
         n
     }
-}
 
-impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
-    fn insert(&self, k: u64) -> bool {
+    /// Bottom-level range collect: push every live `(key, value)` with
+    /// `lo <= key <= hi` onto `out`, in key order, after a wait-free
+    /// upper-level descent to the range start. Helps pending inserts and
+    /// commits observed deletes so any tracked update the traversal could
+    /// half-see bumps a counter and invalidates the surrounding
+    /// double-collect. Caller must hold an EBR pin.
+    fn collect_range(&self, lo: u64, hi: u64, out: &mut Vec<(u64, u64)>) {
+        let mut pred: *mut SkipNode<P> = std::ptr::null_mut();
+        for lvl in (0..MAX_LEVEL).rev() {
+            loop {
+                let w = self.next_ref(pred, lvl).load(SeqCst);
+                let curr = addr::<P>(w);
+                if curr.is_null() {
+                    break;
+                }
+                let curr_ref = unsafe { &*curr };
+                if curr_ref.key < lo {
+                    pred = curr;
+                } else {
+                    break;
+                }
+            }
+        }
+        let mut curr = addr::<P>(self.next_ref(pred, 0).load(SeqCst));
+        while !curr.is_null() {
+            let curr_ref = unsafe { &*curr };
+            if curr_ref.key > hi {
+                return;
+            }
+            let next = addr::<P>(curr_ref.next[0].load(SeqCst));
+            if curr_ref.key >= lo {
+                let (deleted, dinfo) = deletion_state(curr_ref);
+                if deleted {
+                    if P::TRACKED {
+                        self.core.policy.commit_delete(dinfo);
+                    }
+                } else {
+                    self.core.policy.help_insert(&curr_ref.insert_info);
+                    out.push((curr_ref.key, curr_ref.value.load(SeqCst)));
+                }
+            }
+            curr = next;
+        }
+    }
+
+    /// Upsert engine shared by `insert` (`v = 0`, no overwrite) and `put`
+    /// (overwrite): the original lock-free insert, with a value payload
+    /// published with the node.
+    fn put_with(&self, k: u64, v: u64, overwrite: bool) -> bool {
         debug_assert!(k <= MAX_KEY);
         let _guard = ebr::pin();
         let _op = self.core.policy.enter();
@@ -433,13 +483,16 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
             if let Some(found) = self.find(k, &mut preds, &mut succs) {
                 // Present in an unmarked node: help, fail (Fig. 3 ll.16–18).
                 self.core.policy.help_insert(unsafe { &(*found).insert_info });
+                if overwrite {
+                    unsafe { &*found }.value.store(v, SeqCst);
+                }
                 if !new_node.is_null() {
                     drop(unsafe { Box::from_raw(new_node) });
                 }
                 return false;
             }
             if new_node.is_null() {
-                new_node = SkipNode::<P>::alloc(k, level);
+                new_node = SkipNode::<P>::alloc(k, v, level);
                 P::stash_insert_info(unsafe { &(*new_node).insert_info }, packed);
             }
             let new_ref = unsafe { &*new_node };
@@ -503,6 +556,75 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
             return true;
         }
     }
+}
+
+impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
+    fn insert(&self, k: u64) -> bool {
+        self.put_with(k, 0, false)
+    }
+
+    fn put(&self, k: u64, v: u64) -> bool {
+        self.put_with(k, v, true)
+    }
+
+    fn get(&self, k: u64) -> Option<u64> {
+        let _guard = ebr::pin();
+        let _op = self.core.policy.enter_read();
+
+        // Wait-free traversal (no unlinking), as `contains`.
+        let mut pred: *mut SkipNode<P> = std::ptr::null_mut();
+        for lvl in (0..MAX_LEVEL).rev() {
+            loop {
+                let w = self.next_ref(pred, lvl).load(SeqCst);
+                let curr = addr::<P>(w);
+                if curr.is_null() {
+                    break;
+                }
+                let curr_ref = unsafe { &*curr };
+                if curr_ref.key < k {
+                    pred = curr;
+                } else {
+                    break;
+                }
+            }
+        }
+        let mut curr = addr::<P>(self.next_ref(pred, 0).load(SeqCst));
+        while !curr.is_null() {
+            let curr_ref = unsafe { &*curr };
+            if curr_ref.key >= k {
+                break;
+            }
+            curr = addr::<P>(curr_ref.next[0].load(SeqCst));
+        }
+        if curr.is_null() {
+            return None;
+        }
+        let node = unsafe { &*curr };
+        if node.key != k {
+            return None;
+        }
+        let (deleted, dinfo) = deletion_state(node);
+        if deleted {
+            if P::TRACKED {
+                self.core.policy.commit_delete(dinfo);
+            }
+            return None;
+        }
+        self.core.policy.help_insert(&node.insert_info);
+        Some(node.value.load(SeqCst))
+    }
+
+    fn scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        let _guard = ebr::pin();
+        let _op = self.core.policy.enter_read();
+        let (pairs, _validated) =
+            crate::size::validated_collect(self.core.policy.calculator(), || {
+                let mut out = Vec::new();
+                self.collect_range(lo, hi, &mut out);
+                out
+            });
+        Some(pairs)
+    }
 
     fn delete(&self, k: u64) -> bool {
         let _guard = ebr::pin();
@@ -542,51 +664,8 @@ impl<P: SizePolicy> ConcurrentSet for SkipListSet<P> {
     }
 
     fn contains(&self, k: u64) -> bool {
-        let _guard = ebr::pin();
-        let _op = self.core.policy.enter_read();
-
-        // Wait-free traversal (no unlinking).
-        let mut pred: *mut SkipNode<P> = std::ptr::null_mut();
-        for lvl in (0..MAX_LEVEL).rev() {
-            loop {
-                let w = self.next_ref(pred, lvl).load(SeqCst);
-                let curr = addr::<P>(w);
-                if curr.is_null() {
-                    break;
-                }
-                let curr_ref = unsafe { &*curr };
-                if curr_ref.key < k {
-                    pred = curr;
-                } else {
-                    break;
-                }
-            }
-        }
-        // Walk the bottom level to the candidate.
-        let mut curr = addr::<P>(self.next_ref(pred, 0).load(SeqCst));
-        while !curr.is_null() {
-            let curr_ref = unsafe { &*curr };
-            if curr_ref.key >= k {
-                break;
-            }
-            curr = addr::<P>(curr_ref.next[0].load(SeqCst));
-        }
-        if curr.is_null() {
-            return false;
-        }
-        let node = unsafe { &*curr };
-        if node.key != k {
-            return false;
-        }
-        let (deleted, dinfo) = deletion_state(node);
-        if deleted {
-            if P::TRACKED {
-                self.core.policy.commit_delete(dinfo); // Fig. 3 ll.12–13
-            }
-            return false;
-        }
-        self.core.policy.help_insert(&node.insert_info); // Fig. 3 ll.9–10
-        true
+        // The wait-free helping traversal lives in `get` (Fig. 3 ll.6–13).
+        self.get(k).is_some()
     }
 
     crate::size::impl_size_surface!();
@@ -666,6 +745,32 @@ mod tests {
             assert_eq!(s.contains(k), k % 2 == 1, "key {k}");
         }
         assert_eq!(s.quiescent_count(), 1000);
+    }
+
+    #[test]
+    fn dictionary_scan_is_ordered_and_bounded() {
+        let s = sl();
+        let mut rng = crate::rng::Xoshiro256::new(23);
+        let mut model = std::collections::BTreeMap::new();
+        for _ in 0..400 {
+            let k = rng.gen_range(1_000);
+            let v = rng.next_u64() >> 1;
+            assert_eq!(s.put(k, v), model.insert(k, v).is_none());
+        }
+        assert_eq!(s.get(999_999), None);
+        for (&k, &v) in model.iter().take(10) {
+            assert_eq!(s.get(k), Some(v));
+        }
+        let want: Vec<_> = model
+            .range(100..=700)
+            .map(|(&k, &v)| (k, v))
+            .collect();
+        assert_eq!(s.scan(100, 700), Some(want));
+        assert_eq!(
+            s.count_range(100, 700),
+            Some(model.range(100..=700).count() as i64)
+        );
+        assert_eq!(s.scan(701, 100), Some(vec![]), "inverted range is empty");
     }
 
     #[test]

@@ -3,14 +3,18 @@
 //! `history::monitor` — every `size()` return must be justified by some
 //! linearization of the recorded history (ISSUE 4 satellite; the
 //! aggressive generalization of the DeltaLog spot checks, after
-//! arXiv 2509.17795's online-monitoring framing).
+//! arXiv 2509.17795's online-monitoring framing). Scanner threads ride
+//! the same schedule: every `scan`/`count_range` return is checked
+//! against the keyed history's per-key membership bounds, for **every**
+//! policy — the interval criterion accepts the un-validated fallback
+//! scans too, so a scan violation always means a torn collect.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use concurrent_size::bench_util::{make_set, STRUCTURES};
 use concurrent_size::cli::PolicyKind;
-use concurrent_size::history::monitor::{Monitor, Report};
+use concurrent_size::history::monitor::{Monitor, Report, ScanReport};
 use concurrent_size::list::LinkedListSet;
 use concurrent_size::rng::Xoshiro256;
 use concurrent_size::set_api::ConcurrentSet;
@@ -19,13 +23,15 @@ use concurrent_size::MAX_THREADS;
 
 const UPDATERS: usize = 3;
 const SIZERS: usize = 2;
+const SCANNERS: usize = 2;
 const OPS_PER_UPDATER: usize = 1_500;
 const SIZES_PER_SIZER: usize = 250;
+const SCANS_PER_SCANNER: usize = 150;
 const KEY_SPACE: u64 = 48;
 
 /// Drive one structure/policy combination with seeded updater and sizer
 /// threads, recording everything into a monitor.
-fn drive(structure: &str, policy: PolicyKind, seed: u64) -> Report {
+fn drive(structure: &str, policy: PolicyKind, seed: u64) -> (Report, ScanReport) {
     let set: Arc<dyn ConcurrentSet> = Arc::from(make_set(structure, policy, 128).unwrap());
     let monitor = Monitor::new();
     std::thread::scope(|scope| {
@@ -40,18 +46,49 @@ fn drive(structure: &str, policy: PolicyKind, seed: u64) -> Report {
                         0 => {
                             let timer = monitor.begin();
                             if set.insert(k) {
-                                monitor.commit_update(timer, 1);
+                                monitor.commit_keyed_update(timer, k, 1);
                             }
                         }
                         1 => {
                             let timer = monitor.begin();
                             if set.delete(k) {
-                                monitor.commit_update(timer, -1);
+                                monitor.commit_keyed_update(timer, k, -1);
                             }
                         }
                         _ => {
                             set.contains(k); // moves no size: not recorded
                         }
+                    }
+                }
+            });
+        }
+        // Scanners run under EVERY policy: structures always answer
+        // range reads (validated double-collect when the policy has
+        // counters, per-key-justified traversal otherwise).
+        for t in 0..SCANNERS as u64 {
+            let set = set.clone();
+            let monitor = &monitor;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(seed ^ ((t + 5) * 0x5CA4));
+                for i in 0..SCANS_PER_SCANNER {
+                    let lo = rng.gen_range_incl(1, KEY_SPACE);
+                    let hi = (lo + rng.gen_range(16)).min(KEY_SPACE);
+                    if i % 2 == 0 {
+                        let timer = monitor.begin();
+                        let pairs = set.scan(lo, hi).expect("structures answer scans");
+                        monitor.commit_scan(
+                            timer,
+                            lo,
+                            hi,
+                            pairs.into_iter().map(|(k, _)| k).collect(),
+                        );
+                    } else {
+                        let timer = monitor.begin();
+                        let n = set.count_range(lo, hi).expect("structures answer counts");
+                        monitor.commit_count(timer, lo, hi, n);
+                    }
+                    if rng.gen_bool(0.25) {
+                        std::thread::yield_now();
                     }
                 }
             });
@@ -101,7 +138,7 @@ fn drive(structure: &str, policy: PolicyKind, seed: u64) -> Report {
             "{structure}/{policy:?}: quiescent size vs monitor net"
         );
     }
-    report
+    (report, monitor.verify_scans())
 }
 
 /// The acceptance sweep: six policies × four structures. Every
@@ -112,12 +149,25 @@ fn drive(structure: &str, policy: PolicyKind, seed: u64) -> Report {
 fn monitor_passes_all_policies_on_all_structures() {
     for (i, structure) in STRUCTURES.iter().enumerate() {
         for policy in PolicyKind::ALL {
-            let report = drive(
+            let (report, scan_report) = drive(
                 structure,
                 policy,
                 0x5EED ^ ((i as u64) << 8) ^ policy as u64,
             );
             assert!(report.updates > 0, "{structure}/{policy:?}: no updates");
+            // Scan/count justification is policy-independent: the
+            // interval bound accepts even naive's fallback scans, so any
+            // violation means a torn collect — a failure everywhere.
+            assert!(
+                scan_report.is_ok(),
+                "{structure}/{policy:?}: unjustified scans {:?}",
+                scan_report.violations
+            );
+            assert_eq!(
+                scan_report.scans_checked + scan_report.counts_checked,
+                SCANNERS * SCANS_PER_SCANNER,
+                "{structure}/{policy:?}: dropped scan observations"
+            );
             match policy {
                 PolicyKind::Naive => {
                     // Non-linearizable by design: the monitor may catch

@@ -1,0 +1,288 @@
+//! Scan-aware test tier (ISSUE 9): the dictionary upgrade's range reads
+//! checked three ways —
+//!
+//! * **model**: quiescent `put`/`insert`/`delete`/`get`/`scan`/
+//!   `count_range` sequences against a `BTreeMap` oracle, swept over
+//!   random structure × policy picks (single-threaded, so scans must be
+//!   *exact*, not merely justified);
+//! * **wire**: pipelined `SCAN`/`COUNT` bursts mixed into update streams
+//!   and cut at random TCP segment boundaries — multi-line scan replies
+//!   must reassemble in command order through the 2-reactor server;
+//! * **teeth**: the `history::monitor` scan checker must flag a
+//!   deliberately torn scan record and an out-of-bounds count while
+//!   accepting the honest versions of both.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use concurrent_size::bench_util::{make_set, STRUCTURES};
+use concurrent_size::cli::PolicyKind;
+use concurrent_size::history::monitor::Monitor;
+use concurrent_size::prop_assert;
+use concurrent_size::proptest_lite;
+use concurrent_size::server::{BlockingClient, Server, ServerConfig};
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::shardstore::make_shard_store;
+use concurrent_size::size::SizeOpts;
+
+/// Quiescent dictionary semantics against a `BTreeMap` oracle: fresh
+/// `put` vs overwrite, `insert` never clobbering a stored value, `get`
+/// round-trips, and every `scan`/`count_range` exactly equal to the
+/// model's range — across random structure × policy picks.
+#[test]
+fn scan_matches_btreemap_model_quiescently() {
+    proptest_lite::run("quiescent scans equal the model range", |rng| {
+        let structure = STRUCTURES[rng.gen_range(STRUCTURES.len() as u64) as usize];
+        let policy = PolicyKind::ALL[rng.gen_range(PolicyKind::ALL.len() as u64) as usize];
+        let set = make_set(structure, policy, 64).expect("known structure");
+        let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+        for _ in 0..250 {
+            let k = 1 + rng.gen_range(40);
+            match rng.gen_range(4) {
+                0 => {
+                    let v = rng.gen_range(1000);
+                    let fresh = set.put(k, v);
+                    prop_assert!(
+                        fresh == model.insert(k, v).is_none(),
+                        "{structure}/{policy:?}: put({k}, {v}) freshness"
+                    );
+                }
+                1 => {
+                    // A set-flavored insert must not clobber a value.
+                    let fresh = set.insert(k);
+                    let model_fresh = !model.contains_key(&k);
+                    if model_fresh {
+                        model.insert(k, 0);
+                    }
+                    prop_assert!(
+                        fresh == model_fresh,
+                        "{structure}/{policy:?}: insert({k}) freshness"
+                    );
+                }
+                2 => {
+                    prop_assert!(
+                        set.delete(k) == model.remove(&k).is_some(),
+                        "{structure}/{policy:?}: delete({k})"
+                    );
+                }
+                _ => {
+                    prop_assert!(
+                        set.get(k) == model.get(&k).copied(),
+                        "{structure}/{policy:?}: get({k})"
+                    );
+                }
+            }
+        }
+        // Range reads at quiescence are exact, window by window.
+        for _ in 0..8 {
+            let lo = 1 + rng.gen_range(40);
+            let hi = lo + rng.gen_range(12);
+            let want: Vec<(u64, u64)> = model.range(lo..=hi).map(|(&k, &v)| (k, v)).collect();
+            let got = set.scan(lo, hi).expect("structures answer scans");
+            prop_assert!(
+                got == want,
+                "{structure}/{policy:?}: scan({lo}, {hi}) = {got:?}, want {want:?}"
+            );
+            let n = set.count_range(lo, hi).expect("structures answer counts");
+            prop_assert!(
+                n == want.len() as i64,
+                "{structure}/{policy:?}: count({lo}, {hi}) = {n}, want {}",
+                want.len()
+            );
+        }
+        prop_assert!(
+            set.scan(40, 1) == Some(vec![]),
+            "{structure}/{policy:?}: inverted range must be empty"
+        );
+        Ok(())
+    });
+}
+
+/// Property: multi-line SCAN replies hold their place in pipelined reply
+/// order no matter how the command stream is segmented on the wire —
+/// random cut points over bursts mixing PUT/DEL/HAS/GET/SCAN/COUNT,
+/// against a 2-reactor server with a small batch depth so bursts
+/// straddle dispatch boundaries too.
+#[test]
+fn pipelined_scan_bursts_survive_random_wire_segmentation() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let config = ServerConfig {
+        reactors: 2,
+        pipeline_depth: 4,
+        ..Default::default()
+    };
+    let store: Arc<dyn ConcurrentSet> = Arc::from(
+        make_set("hashtable", PolicyKind::Linearizable, 1 << 10).expect("hashtable"),
+    );
+    let server = Server::bind("127.0.0.1:0", store, config).expect("bind");
+    let addr = server.local_addr();
+    let case = AtomicU64::new(0);
+    proptest_lite::run("segmented scan bursts reassemble in order", |rng| {
+        // Disjoint key block per case: the store outlives the cases.
+        let base = 1 + case.fetch_add(1, Ordering::Relaxed) * 100;
+        let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut wire = Vec::new();
+        let mut expected: Vec<String> = Vec::new();
+        for _ in 0..30 {
+            let key = base + rng.gen_range(8);
+            match rng.gen_range(6) {
+                0 => {
+                    let v = rng.gen_range(100);
+                    wire.extend_from_slice(format!("PUT {key} {v}\n").as_bytes());
+                    expected.push(u64::from(model.insert(key, v).is_none()).to_string());
+                }
+                1 => {
+                    wire.extend_from_slice(format!("DEL {key}\n").as_bytes());
+                    expected.push(u64::from(model.remove(&key).is_some()).to_string());
+                }
+                2 => {
+                    wire.extend_from_slice(format!("HAS {key}\n").as_bytes());
+                    expected.push(u64::from(model.contains_key(&key)).to_string());
+                }
+                3 => {
+                    wire.extend_from_slice(format!("GET {key}\n").as_bytes());
+                    expected.push(
+                        model
+                            .get(&key)
+                            .map_or_else(|| "NIL".to_string(), u64::to_string),
+                    );
+                }
+                4 => {
+                    // Occasionally inverted: `END 0`, not an error.
+                    let (lo, hi) = if rng.gen_range(4) == 0 {
+                        (base + 7, base)
+                    } else {
+                        (base, base + rng.gen_range(8))
+                    };
+                    wire.extend_from_slice(format!("SCAN {lo} {hi}\n").as_bytes());
+                    let mut n = 0usize;
+                    if lo <= hi {
+                        for (&k, &v) in model.range(lo..=hi) {
+                            expected.push(format!("{k} {v}"));
+                            n += 1;
+                        }
+                    }
+                    expected.push(format!("END {n}"));
+                }
+                _ => {
+                    let (lo, hi) = (base, base + rng.gen_range(8));
+                    wire.extend_from_slice(format!("COUNT {lo} {hi}\n").as_bytes());
+                    expected.push(model.range(lo..=hi).count().to_string());
+                }
+            }
+        }
+        let stream = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+        stream.set_nodelay(true).map_err(|e| e.to_string())?;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .map_err(|e| e.to_string())?;
+        let mut out = stream.try_clone().map_err(|e| e.to_string())?;
+        let mut reader = BufReader::new(stream);
+        let mut sent = 0usize;
+        while sent < wire.len() {
+            let seg = 1 + rng.gen_range((wire.len() - sent) as u64) as usize;
+            out.write_all(&wire[sent..sent + seg])
+                .map_err(|e| e.to_string())?;
+            sent += seg;
+            if rng.gen_range(4) == 0 {
+                std::thread::yield_now();
+            }
+        }
+        for (i, want) in expected.iter().enumerate() {
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
+            prop_assert!(n > 0, "EOF at reply line {i}");
+            prop_assert!(
+                line.trim_end() == want,
+                "reply line {i}: got {:?}, want {want:?}",
+                line.trim_end()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// End to end through `--store-shards`: SCAN against a server mounted on
+/// a 4-shard store returns the cross-shard merge in key order, COUNT
+/// agrees, and values stored on one shard come back through GET.
+#[test]
+fn sharded_server_scans_merge_across_store_shards() {
+    let store: Arc<dyn ConcurrentSet> = Arc::from(
+        make_shard_store(PolicyKind::Linearizable, 4, 1 << 10, SizeOpts::default())
+            .expect("shard store factory"),
+    );
+    let server = Server::bind("127.0.0.1:0", store, ServerConfig::default()).expect("bind");
+    let mut client = BlockingClient::connect(server.local_addr());
+    // Reversed insertion order: key order in replies comes from the
+    // merge, not from insertion accidents.
+    for k in (1..=200u64).rev() {
+        assert_eq!(client.cmd(format!("PUT {k} {}", k + 5000)), "1");
+    }
+    let pairs = client.scan(50, 99).expect("sharded SCAN");
+    let want: Vec<(u64, u64)> = (50..=99).map(|k| (k, k + 5000)).collect();
+    assert_eq!(pairs, want, "cross-shard merge must be key-ordered");
+    assert_eq!(client.cmd("COUNT 1 200"), "200");
+    assert_eq!(client.cmd("COUNT 201 500"), "0");
+    assert_eq!(client.cmd("GET 137"), "5137");
+    assert_eq!(client.cmd("GET 999"), "NIL");
+    assert_eq!(client.cmd("DEL 137"), "1");
+    assert_eq!(client.cmd("GET 137"), "NIL");
+    assert_eq!(client.cmd("COUNT 1 200"), "199");
+    assert_eq!(client.cmd("SCAN 99 50"), "END 0", "inverted range");
+}
+
+/// The scan checker itself has teeth: an honest quiescent record passes,
+/// a scan missing a pinned key fails, and a count outside the justified
+/// band fails — each flagged with the offending key/value.
+#[test]
+fn scan_checker_flags_torn_scans_and_bad_counts() {
+    let honest = Monitor::new();
+    let torn = Monitor::new();
+    let miscount = Monitor::new();
+    for m in [&honest, &torn, &miscount] {
+        for k in 1..=10u64 {
+            let timer = m.begin();
+            m.commit_keyed_update(timer, k, 1);
+        }
+    }
+    let keys: Vec<u64> = (1..=10).collect();
+
+    let timer = honest.begin();
+    honest.commit_scan(timer, 1, 10, keys.clone());
+    let timer = honest.begin();
+    honest.commit_count(timer, 1, 10, 10);
+    assert!(honest.verify_scans().is_ok(), "honest record must pass");
+
+    // Torn scan: drop key 4, which was pinned present before the scan.
+    let timer = torn.begin();
+    let mut missing: Vec<u64> = keys.clone();
+    missing.retain(|&k| k != 4);
+    torn.commit_scan(timer, 1, 10, missing);
+    let report = torn.verify_scans();
+    assert!(!report.is_ok(), "dropped pinned key must be flagged");
+    assert!(
+        report
+            .violations
+            .iter()
+            .any(|v| v.key == Some(4) && !v.reported),
+        "violation must name the dropped key: {:?}",
+        report.violations
+    );
+
+    // Count above any possible membership sum for the window.
+    let timer = miscount.begin();
+    miscount.commit_count(timer, 1, 10, 11);
+    let report = miscount.verify_scans();
+    assert!(!report.is_ok(), "impossible count must be flagged");
+    assert!(
+        report
+            .violations
+            .iter()
+            .any(|v| v.key.is_none() && v.value == 11 && v.high == 10),
+        "violation must carry the count and its bound: {:?}",
+        report.violations
+    );
+}

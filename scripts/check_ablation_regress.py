@@ -39,14 +39,26 @@ MATCH_KEYS = (
     "refresh_us",
     "reactors",
     "pipeline_depth",
+    "scan_frac",
+    "scan_span",
 )
+# Axis values assumed when a baseline record predates the axis, so old
+# artifacts keep matching new reports (the recorder writes these exact
+# defaults for scenarios that don't sweep the axis).
+AXIS_DEFAULTS = {
+    "scan_frac": 0.0,
+    "scan_span": 0,
+}
 MAX_DROP = 0.25
-# Per-scenario overrides of MAX_DROP. Every scenario currently sits at
-# the default; the explicit reactor_scale entry pins the contract for
-# the newest (socket-path, hence noisiest) sweep so future tuning is a
-# one-line diff instead of a global loosening.
+# Per-scenario overrides of MAX_DROP. The scale sweeps run whole servers
+# or shard fleets per cell, so their run-to-run noise is wider than the
+# in-process scenarios'; scan_scale is the noisiest of all (socket path
+# plus multi-line reply coalescing). Tuning one of these is a one-line
+# diff instead of a global loosening.
 SCENARIO_MAX_DROP = {
-    "reactor_scale": 0.25,
+    "shard_scale": 0.30,
+    "reactor_scale": 0.30,
+    "scan_scale": 0.40,
 }
 
 
@@ -76,14 +88,28 @@ def load_records(path, *, required):
 
 
 def identity(rec):
-    # Older baselines predate some axes; .get keeps them matchable.
-    return tuple(rec.get(key) for key in MATCH_KEYS)
+    # Older baselines predate some axes; .get (with the axis default
+    # where one exists) keeps them matchable against fresh records.
+    return tuple(rec.get(key, AXIS_DEFAULTS.get(key)) for key in MATCH_KEYS)
 
 
 def main(baseline_path, fresh_path):
     fresh = load_records(fresh_path, required=True)
     baseline = load_records(baseline_path, required=False)
     if baseline is None:
+        # Soft skip by design, but loudly: a silently-vanished baseline
+        # artifact would disable this gate forever without anyone
+        # noticing, so the skip has to be unmissable in the CI log.
+        banner = "!" * 64
+        for line in (
+            banner,
+            "!! regress-check: SKIPPED — NO BASELINE TO COMPARE AGAINST",
+            "!! Throughput regressions are NOT being gated on this run.",
+            "!! Expected on the first run; otherwise check the artifact",
+            "!! download step for this pipeline.",
+            banner,
+        ):
+            print(line, file=sys.stderr)
         print("regress-check: SKIP — no baseline to compare against")
         return 0
 

@@ -8,10 +8,12 @@ This gate pins the contract:
 * top-level keys: bench / structure / config / results;
 * config carries every scale knob the sweeps are keyed on;
 * every record carries the full field set — including the scale-layer
-  `shards` / `refresh_us` / `daemon_rounds` fields added in PR 4 and the
-  multi-reactor `reactors` / `pipeline_depth` fields — with finite,
-  non-negative numerics (NaN/Infinity literals are rejected at parse
-  time), and `reactor_scale` records carry both reactor axes >= 1;
+  `shards` / `refresh_us` / `daemon_rounds` fields added in PR 4, the
+  multi-reactor `reactors` / `pipeline_depth` fields, and the scan-mix
+  `scan_frac` / `scan_span` axes — with finite, non-negative numerics
+  (NaN/Infinity literals are rejected at parse time), `reactor_scale`
+  records carry both reactor axes >= 1, and `scan_scale` records carry
+  a positive scan fraction and span;
 * at least one record actually measured something (positive workload
   throughput), so an all-zero report can't slip through.
 
@@ -54,6 +56,8 @@ RECORD_KEYS = {
     "per_shard_sheds",
     "reactors",
     "pipeline_depth",
+    "scan_frac",
+    "scan_span",
 }
 THROUGHPUT_KEYS = ("workload_ops_per_sec", "size_ops_per_sec")
 COUNTER_KEYS = (
@@ -70,8 +74,16 @@ COUNTER_KEYS = (
     "per_shard_sheds",
     "reactors",
     "pipeline_depth",
+    "scan_span",
 )
-SCENARIOS = {"periodic-size", "size-heavy", "scale", "shard_scale", "reactor_scale"}
+SCENARIOS = {
+    "periodic-size",
+    "size-heavy",
+    "scale",
+    "shard_scale",
+    "reactor_scale",
+    "scan_scale",
+}
 POLICIES = {"baseline", "linearizable", "naive", "lock", "handshake", "optimistic"}
 
 
@@ -139,6 +151,11 @@ def main(path):
             v = rec[key]
             if not isinstance(v, int) or isinstance(v, bool) or v < 0:
                 fail(f"{where}.{key} must be a non-negative integer, got {v!r}")
+        frac = rec["scan_frac"]
+        if not isinstance(frac, (int, float)) or isinstance(frac, bool):
+            fail(f"{where}.scan_frac is not numeric: {frac!r}")
+        if not math.isfinite(frac) or not 0.0 <= frac <= 1.0:
+            fail(f"{where}.scan_frac must be a finite fraction in [0, 1], got {frac!r}")
         if rec["scenario"] == "reactor_scale":
             # The multi-reactor sweep's own axes: a record claiming the
             # scenario with no reactors (or a zero pipeline) is the
@@ -146,6 +163,16 @@ def main(path):
             for key in ("reactors", "pipeline_depth"):
                 if rec[key] < 1:
                     fail(f"{where}.{key} must be >= 1 in reactor_scale, got {rec[key]!r}")
+        if rec["scenario"] == "scan_scale":
+            # The scan-mix sweep must actually issue scans: a zero
+            # fraction or span is another scenario's row misfiled.
+            if not frac > 0.0:
+                fail(f"{where}.scan_frac must be > 0 in scan_scale, got {frac!r}")
+            if rec["scan_span"] < 1:
+                fail(
+                    f"{where}.scan_span must be >= 1 in scan_scale, "
+                    f"got {rec['scan_span']!r}"
+                )
 
     if not any(rec["workload_ops_per_sec"] > 0 for rec in records):
         fail("no record measured positive workload throughput (dead recorder?)")

@@ -1,14 +1,17 @@
 #!/usr/bin/env python3
 """Protocol smoke client for `make server-smoke` (CI's server gate).
 
-Drives a live kv_server over TCP: PUT/DEL/HAS, all three SIZE flavors,
-STATS, malformed input — an overload burst that MUST observe
-`ERR OVERLOAD` (the server under test runs with --admission-high 64
---admission-low 32) while `SIZE?` keeps answering, followed by a drain
-that must readmit — and a pipelined burst (many commands in one TCP
-segment against the 2-reactor server, replies read back in strict
-order). Stdlib only; exits non-zero with a pointed message on the first
-broken expectation.
+Drives a live kv_server over TCP: PUT/DEL/HAS, the dictionary endpoints
+(PUT k v / GET / SCAN / COUNT, including multi-line END-terminated scan
+replies), all three SIZE flavors, STATS, malformed input — an overload
+burst that MUST observe `ERR OVERLOAD` (the server under test runs with
+--admission-high 64 --admission-low 32) while `SIZE?` keeps answering
+AND a mid-overload SCAN still gets its full reply (range reads are
+never shed), followed by a drain that must readmit — and pipelined
+bursts (many commands in one TCP segment against the 2-reactor server,
+replies read back in strict order, multi-line SCAN blocks holding their
+place in the stream). Stdlib only; exits non-zero with a pointed
+message on the first broken expectation.
 """
 
 import socket
@@ -29,6 +32,27 @@ class Client:
         if not reply:
             raise AssertionError(f"server closed the connection after {line!r}")
         return reply.strip()
+
+    def read_scan(self):
+        """Read one SCAN reply: `k v` lines until the `END n` terminator.
+        Returns the (key, value) pairs; checks the trailer count."""
+        pairs = []
+        while True:
+            line = self.reader.readline()
+            if not line:
+                raise AssertionError("server closed mid-scan")
+            line = line.strip()
+            if line.startswith("ERR") and not pairs:
+                raise AssertionError(f"SCAN answered {line!r}")
+            if line.startswith("END "):
+                expect(int(line[4:]), len(pairs), "SCAN terminator count")
+                return pairs
+            k, v = line.split(" ", 1)
+            pairs.append((int(k), int(v)))
+
+    def scan(self, lo, hi):
+        self.sock.sendall(f"SCAN {lo} {hi}\n".encode("ascii"))
+        return self.read_scan()
 
 
 def expect(got, want, what):
@@ -61,6 +85,20 @@ def main(addr):
     assert c.cmd("NOPE 1").startswith("ERR"), "unknown command must ERR"
     expect(c.cmd("HAS 1"), "0", "connection survives bad commands")
 
+    # Dictionary + range endpoints (cleaned up before the overload burst
+    # so the admission arithmetic below stays exact).
+    expect(c.cmd("PUT 5 41"), "1", "fresh PUT with a value")
+    expect(c.cmd("GET 5"), "41", "GET round-trips the value")
+    expect(c.cmd("PUT 5 42"), "0", "value overwrite reports 0")
+    expect(c.cmd("GET 5"), "42", "GET sees the overwrite")
+    expect(c.cmd("GET 6"), "NIL", "GET on a missing key")
+    expect(c.scan(1, 9), [(5, 42)], "SCAN returns the key/value pair")
+    expect(c.cmd("COUNT 1 9"), "1", "COUNT agrees with SCAN")
+    expect(c.cmd("SCAN 9 1"), "END 0", "inverted range is empty, not an error")
+    assert c.cmd("SCAN 1").startswith("ERR"), "SCAN without a range must ERR"
+    assert c.cmd("COUNT 1 x").startswith("ERR"), "bad COUNT bound must ERR"
+    expect(c.cmd("DEL 5"), "1", "dictionary cleanup")
+
     # Overload burst: push past the high watermark; sheds must appear.
     admitted, sheds = 0, 0
     for k in range(3 * HIGH):
@@ -74,6 +112,17 @@ def main(addr):
                 assert estimate >= HIGH, f"shed below high watermark: {estimate}"
                 stats = parse_stats(probe.cmd("STATS"))
                 expect(stats["admitting"], 0, "STATS admitting during shed")
+                # Range reads are never shed: a SCAN launched in the
+                # middle of the overload must answer in full — exactly
+                # the HIGH admitted keys, all holding the default value.
+                pairs = probe.scan(0, 3 * HIGH)
+                expect(len(pairs), HIGH, "mid-overload SCAN answers in full")
+                assert all(v == 0 for _, v in pairs), "valueless PUTs scan as 0"
+                expect(
+                    probe.cmd(f"COUNT 0 {3 * HIGH}"),
+                    str(HIGH),
+                    "mid-overload COUNT",
+                )
         elif reply == "1":
             admitted += 1
         else:
@@ -113,6 +162,28 @@ def main(addr):
             expect(reply, "1", f"pipelined {phase} #{i} (reply order)")
     stats = parse_stats(probe.cmd("STATS"))
     expect(stats["reactors"], 2, "STATS reactor-shard count")
+
+    # Scan-mixed pipelined burst: a multi-line SCAN reply must hold its
+    # place in the coalesced reply stream, byte-for-byte in order.
+    n = 16
+    pipe2 = Client(addr)
+    wire = "".join(f"PUT {30000 + i} {i}\n" for i in range(n))
+    wire += f"SCAN 30000 {30000 + n - 1}\n"
+    wire += f"COUNT 30000 {30000 + n - 1}\n"
+    wire += "HAS 30005\n"
+    wire += "".join(f"DEL {30000 + i}\n" for i in range(n))
+    pipe2.sock.sendall(wire.encode("ascii"))
+    for i in range(n):
+        expect(pipe2.reader.readline().strip(), "1", f"pipelined PUT #{i}")
+    expect(
+        pipe2.read_scan(),
+        [(30000 + i, i) for i in range(n)],
+        "pipelined SCAN block (values and order)",
+    )
+    expect(pipe2.reader.readline().strip(), str(n), "pipelined COUNT")
+    expect(pipe2.reader.readline().strip(), "1", "pipelined HAS")
+    for i in range(n):
+        expect(pipe2.reader.readline().strip(), "1", f"pipelined DEL #{i}")
 
     expect(c.cmd("SIZE"), "1", "exact SIZE after drain")
     # QUIT has no reply; the server closes the connection.
