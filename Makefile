@@ -19,7 +19,7 @@ FUZZ_SEED ?= 793093
 FUZZ_FLAGS ?= --fault-seed $(FUZZ_SEED) --seeds 2 --ops 800 --structure hashtable
 
 .PHONY: build test pytest bench-smoke schema-check regress-check \
-  server-smoke artifacts fuzz-smoke fmt fmt-check lint clean
+  server-smoke artifacts fuzz-smoke resize-stress fmt fmt-check lint clean
 
 ## Release build of the library, the csize binary, and every example
 ## (kv_server is an example, so --examples is not optional).
@@ -77,6 +77,18 @@ fuzz-smoke:
 	timeout 300 $(CARGO) test -q --features faults
 	timeout 300 $(CARGO) run --release --features faults --bin csize -- \
 	  fuzz $(FUZZ_FLAGS)
+
+## Growth gate: `csize resize-stress` under the chaos plane — phase 1 is
+## the in-process growth workload (10x trigger capacity of inserts, the
+## 50%-of-median window-collapse gate, migration drained to zero); phase
+## 2 mounts a resizing hashtable on a monitored server and swarms it,
+## asserting zero monitor violations, resizes >= 1, and
+## migration_pending == 0 out of STATS. Seeded like fuzz-smoke so CI
+## failures replay locally; repro histories land in artifacts/.
+RESIZE_STRESS_FLAGS ?= --fault-seed $(FUZZ_SEED) --monitor-sample 16
+resize-stress:
+	timeout 300 $(CARGO) run --release --features faults --bin csize -- \
+	  resize-stress $(RESIZE_STRESS_FLAGS)
 
 ## The AOT artifact flow: release binaries + ablation smoke + schema
 ## check, collected with rendered figures into $(ARTIFACTS)/. The steps

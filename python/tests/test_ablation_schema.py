@@ -1,0 +1,183 @@
+"""Negative tests for scripts/check_ablation_schema.py.
+
+The schema gate is itself CI-load-bearing: if it silently accepted a
+malformed report, the bench recorder could rot unnoticed. These tests
+drive the script as a subprocess (exactly as `make schema-check` does)
+against synthesized reports — one known-good, then targeted mutations
+that each must be rejected with a pointed message.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+SCRIPT = os.path.join(REPO_ROOT, "scripts", "check_ablation_schema.py")
+
+
+def record(**overrides):
+    """One fully-populated ablation record; override per test."""
+    rec = {
+        "scenario": "periodic-size",
+        "policy": "linearizable",
+        "mix": "update-heavy",
+        "size_threads": 1,
+        "size_call": "raw",
+        "shards": 0,
+        "key_dist": "uniform",
+        "refresh_us": 0,
+        "workload_ops_per_sec": 1000.0,
+        "size_ops_per_sec": 10.0,
+        "arbiter_rounds": 0,
+        "arbiter_adoptions": 0,
+        "arbiter_recent_hits": 0,
+        "daemon_rounds": 0,
+        "daemon_stalls": 0,
+        "fallbacks": 0,
+        "retry_budget": 0,
+        "per_shard_sheds": 0,
+        "reactors": 0,
+        "pipeline_depth": 0,
+        "scan_frac": 0.0,
+        "scan_span": 0,
+        "initial_buckets": 0,
+        "final_buckets": 0,
+        "migration_quanta": 0,
+        "growth_windows": [],
+    }
+    rec.update(overrides)
+    return rec
+
+
+def growth_record(**overrides):
+    """A resize_scale record shaped like a healthy growth run."""
+    defaults = {
+        "scenario": "resize_scale",
+        "initial_buckets": 64,
+        "final_buckets": 2048,
+        "migration_quanta": 512,
+        "growth_windows": [900.0, 700.0, 850.0, 780.0, 910.0],
+    }
+    defaults.update(overrides)
+    return record(**defaults)
+
+
+def report(records):
+    return {
+        "bench": "ablation_policies",
+        "structure": "hashtable",
+        "config": {
+            "initial": 1024,
+            "secs": 1.0,
+            "runs": 1,
+            "warmup": 0,
+            "workload_threads": 4,
+            "size_heavy_threads": 4,
+            "staleness_ms": 1,
+            "seed": 42,
+        },
+        "results": records,
+    }
+
+
+def run_check(tmp_path, payload):
+    path = tmp_path / "BENCH_ablation.json"
+    path.write_text(json.dumps(payload), encoding="utf-8")
+    return subprocess.run(
+        [sys.executable, SCRIPT, str(path)],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+
+
+class TestSchemaCheck:
+    def test_valid_report_passes(self, tmp_path):
+        res = run_check(tmp_path, report([record(), growth_record()]))
+        assert res.returncode == 0, res.stderr
+        assert "OK" in res.stdout
+
+    def test_growth_gate_prints_margin(self, tmp_path):
+        res = run_check(tmp_path, report([growth_record()]))
+        assert res.returncode == 0, res.stderr
+        assert "resize_scale[64 -> 2048 buckets]" in res.stdout
+        assert "margin" in res.stdout
+
+    def test_missing_growth_keys_rejected(self, tmp_path):
+        rec = record()
+        del rec["growth_windows"]
+        res = run_check(tmp_path, report([rec]))
+        assert res.returncode == 1
+        assert "growth_windows" in res.stderr
+
+    def test_unknown_scenario_rejected(self, tmp_path):
+        res = run_check(tmp_path, report([record(scenario="mystery")]))
+        assert res.returncode == 1
+        assert "unknown scenario" in res.stderr
+
+    def test_collapse_window_rejected(self, tmp_path):
+        # One window at 10% of the median = the stop-the-world signature
+        # the gate exists to catch.
+        rec = growth_record(
+            growth_windows=[900.0, 880.0, 90.0, 910.0, 905.0]
+        )
+        res = run_check(tmp_path, report([rec]))
+        assert res.returncode == 1
+        assert "collapse" in res.stderr
+
+    def test_empty_growth_windows_rejected(self, tmp_path):
+        res = run_check(tmp_path, report([growth_record(growth_windows=[])]))
+        assert res.returncode == 1
+        assert "non-empty" in res.stderr
+
+    def test_shrinking_table_rejected(self, tmp_path):
+        res = run_check(
+            tmp_path, report([growth_record(final_buckets=32)])
+        )
+        assert res.returncode == 1
+        assert "final_buckets" in res.stderr
+
+    def test_zero_initial_buckets_rejected(self, tmp_path):
+        res = run_check(
+            tmp_path, report([growth_record(initial_buckets=0)])
+        )
+        assert res.returncode == 1
+        assert "initial_buckets" in res.stderr
+
+    def test_nan_window_rejected(self, tmp_path):
+        # json.dumps emits a bare NaN literal; the checker's
+        # parse_constant hook must refuse it at parse time.
+        rec = growth_record(
+            growth_windows=[900.0, float("nan"), 850.0, 780.0, 910.0]
+        )
+        res = run_check(tmp_path, report([rec]))
+        assert res.returncode == 1
+        assert "NaN" in res.stderr or "non-finite" in res.stderr
+
+    def test_negative_window_rejected(self, tmp_path):
+        rec = growth_record(
+            growth_windows=[900.0, -1.0, 850.0, 780.0, 910.0]
+        )
+        res = run_check(tmp_path, report([rec]))
+        assert res.returncode == 1
+        assert "non-negative" in res.stderr
+
+    def test_negative_counter_rejected(self, tmp_path):
+        res = run_check(
+            tmp_path, report([growth_record(migration_quanta=-3)])
+        )
+        assert res.returncode == 1
+        assert "migration_quanta" in res.stderr
+
+    @pytest.mark.parametrize("windows", [[0.0, 100.0, 100.0]])
+    def test_zero_rate_window_rejected(self, tmp_path, windows):
+        res = run_check(
+            tmp_path, report([growth_record(growth_windows=windows)])
+        )
+        assert res.returncode == 1
+        assert "positive" in res.stderr

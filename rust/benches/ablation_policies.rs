@@ -1,6 +1,6 @@
 //! Ablation B: the size-methods design space on one structure.
 //!
-//! Six scenarios, all recorded to a machine-readable report
+//! Seven scenarios, all recorded to a machine-readable report
 //! (`BENCH_ablation.json` by default, `--json PATH` to override) so the
 //! perf trajectory is tracked PR over PR:
 //!
@@ -48,18 +48,29 @@
 //!   throughput degrades as scans get more frequent and wider — the
 //!   `scan_frac`/`scan_span` columns only mean something here (every
 //!   other scenario records 0).
+//! * **resize_scale** — the incremental-resize growth phase: a fresh
+//!   hashtable at a deliberately small bucket count (64 and 4× that),
+//!   flooded with 10× its trigger capacity of inserts under concurrent
+//!   readers and a `size()` thread, timed in fixed-op windows
+//!   ([`growth_run`]). Records the per-window throughput curve
+//!   (`growth_windows`), the start/end bucket counts, and the number of
+//!   migration quanta — the CI gate asserts no window collapses below
+//!   50% of the median, i.e. migration debt is paid incrementally
+//!   instead of in one stop-the-world stall. The `initial_buckets`/
+//!   `final_buckets`/`migration_quanta`/`growth_windows` columns only
+//!   mean something here (every other scenario records 0 / `[]`).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use concurrent_size::bench_util::{BenchScale, make_set_opts, MIXES, STRUCTURES};
 use concurrent_size::cli::{Args, PolicyKind, SizeCallKind};
-use concurrent_size::harness::{client_swarm, run, SizeCall, SwarmConfig};
+use concurrent_size::harness::{client_swarm, growth_run, run, GrowthConfig, SizeCall, SwarmConfig};
 use concurrent_size::metrics::{fmt_rate, json_escape, json_f64, Table};
 use concurrent_size::server::{parse_stats, BlockingClient, Server, ServerConfig, Watermarks};
 use concurrent_size::set_api::ConcurrentSet;
 use concurrent_size::shardstore::make_shard_store;
-use concurrent_size::size::{detect_shards, SizeOpts};
+use concurrent_size::size::{detect_shards, LinearizableSize, SizeOpts};
 use concurrent_size::workload::{self, KeyDist, Mix, UPDATE_HEAVY};
 
 /// One measured configuration, ready for the JSON report.
@@ -95,10 +106,20 @@ struct Record {
     scan_frac: f64,
     /// Key width of each swarm scan range (`scan_scale` only).
     scan_span: u64,
+    /// Starting bucket count of the growth run (`resize_scale` only).
+    initial_buckets: usize,
+    /// Bucket count after every migration drained (`resize_scale` only).
+    final_buckets: usize,
+    /// Bucket-migration quanta completed (`resize_scale` only).
+    migration_quanta: u64,
+    /// Per-window insert throughput (ops/s) across the growth phase
+    /// (`resize_scale` only; empty for every other scenario).
+    growth_windows: Vec<f64>,
 }
 
 impl Record {
     fn to_json(&self) -> String {
+        let windows: Vec<String> = self.growth_windows.iter().map(|w| json_f64(*w)).collect();
         format!(
             concat!(
                 "{{\"scenario\":\"{}\",\"policy\":\"{}\",\"mix\":\"{}\",",
@@ -109,7 +130,9 @@ impl Record {
                 "\"arbiter_recent_hits\":{},\"daemon_rounds\":{},",
                 "\"daemon_stalls\":{},\"fallbacks\":{},\"retry_budget\":{},",
                 "\"per_shard_sheds\":{},\"reactors\":{},\"pipeline_depth\":{},",
-                "\"scan_frac\":{},\"scan_span\":{}}}"
+                "\"scan_frac\":{},\"scan_span\":{},",
+                "\"initial_buckets\":{},\"final_buckets\":{},",
+                "\"migration_quanta\":{},\"growth_windows\":[{}]}}"
             ),
             json_escape(self.scenario),
             json_escape(self.policy.label()),
@@ -133,6 +156,10 @@ impl Record {
             self.pipeline_depth,
             json_f64(self.scan_frac),
             self.scan_span,
+            self.initial_buckets,
+            self.final_buckets,
+            self.migration_quanta,
+            windows.join(","),
         )
     }
 }
@@ -243,6 +270,10 @@ fn main() {
                 pipeline_depth: 0,
                 scan_frac: 0.0,
                 scan_span: 0,
+                initial_buckets: 0,
+                final_buckets: 0,
+                migration_quanta: 0,
+                growth_windows: Vec::new(),
             });
             table.row(&[
                 kind.label().to_string(),
@@ -315,6 +346,10 @@ fn main() {
                 pipeline_depth: 0,
                 scan_frac: 0.0,
                 scan_span: 0,
+                initial_buckets: 0,
+                final_buckets: 0,
+                migration_quanta: 0,
+                growth_windows: Vec::new(),
             });
             table.row(&[
                 kind.label().to_string(),
@@ -384,6 +419,10 @@ fn main() {
                     pipeline_depth: 0,
                     scan_frac: 0.0,
                     scan_span: 0,
+                    initial_buckets: 0,
+                    final_buckets: 0,
+                    migration_quanta: 0,
+                    growth_windows: Vec::new(),
                 });
                 table.row(&[
                     kind.label().to_string(),
@@ -488,6 +527,10 @@ fn main() {
                 pipeline_depth: 1,
                 scan_frac: 0.0,
                 scan_span: 0,
+                initial_buckets: 0,
+                final_buckets: 0,
+                migration_quanta: 0,
+                growth_windows: Vec::new(),
             });
             table.row(&[
                 store_shards.to_string(),
@@ -567,6 +610,10 @@ fn main() {
                 pipeline_depth: pipeline,
                 scan_frac: 0.0,
                 scan_span: 0,
+                initial_buckets: 0,
+                final_buckets: 0,
+                migration_quanta: 0,
+                growth_windows: Vec::new(),
             });
             table.row(&[
                 reactors.to_string(),
@@ -644,6 +691,10 @@ fn main() {
                 pipeline_depth: 16,
                 scan_frac,
                 scan_span,
+                initial_buckets: 0,
+                final_buckets: 0,
+                migration_quanta: 0,
+                growth_windows: Vec::new(),
             });
             table.row(&[
                 format!("{scan_frac:.2}"),
@@ -652,6 +703,82 @@ fn main() {
                 swarm.errors.to_string(),
             ]);
         }
+    }
+    table.print();
+
+    // -- Scenario 7: resize_scale — the incremental-resize growth phase --
+    // A deliberately undersized hashtable flooded with 10x its trigger
+    // capacity of inserts under concurrent readers and one size() thread,
+    // timed in fixed-op windows. The per-window curve is the payoff: with
+    // incremental migration the trigger windows dip but never collapse;
+    // a stop-the-world rehash would flatline one window. The CI schema
+    // gate (scripts/check_ablation_schema.py) asserts min(window) >= 50%
+    // of the median.
+    let growth_bucket_axis = [
+        args.get_usize("resize-initial-buckets", 64),
+        args.get_usize("resize-initial-buckets", 64) * 4,
+    ];
+    println!(
+        "\n-- resize_scale: insert flood to 10x trigger capacity \
+         (initial buckets axis; {} windows) --",
+        GrowthConfig::default().windows
+    );
+    let mut table = Table::new(&[
+        "initial buckets",
+        "final buckets",
+        "resizes",
+        "quanta",
+        "mean ops/s",
+        "min/median",
+    ]);
+    for &initial_buckets in &growth_bucket_axis {
+        let cfg = GrowthConfig {
+            initial_buckets,
+            seed: scale.seed,
+            ..GrowthConfig::default()
+        };
+        let res = growth_run::<LinearizableSize>(&cfg);
+        let mean = if res.windows.is_empty() {
+            0.0
+        } else {
+            res.windows.iter().sum::<f64>() / res.windows.len() as f64
+        };
+        records.push(Record {
+            scenario: "resize_scale",
+            policy: PolicyKind::Linearizable,
+            mix: UPDATE_HEAVY,
+            size_threads: cfg.size_threads,
+            size_call: SizeCall::Raw.label(),
+            shards: 0,
+            key_dist: KeyDist::Uniform.label(),
+            refresh_us: 0,
+            workload_ops_per_sec: mean,
+            size_ops_per_sec: 0.0,
+            arbiter_rounds: 0,
+            arbiter_adoptions: 0,
+            arbiter_recent_hits: 0,
+            daemon_rounds: 0,
+            daemon_stalls: 0,
+            fallbacks: 0,
+            retry_budget: 0,
+            per_shard_sheds: 0,
+            reactors: 0,
+            pipeline_depth: 0,
+            scan_frac: 0.0,
+            scan_span: 0,
+            initial_buckets: res.initial_buckets,
+            final_buckets: res.final_buckets,
+            migration_quanta: res.migration_quanta,
+            growth_windows: res.windows.clone(),
+        });
+        table.row(&[
+            res.initial_buckets.to_string(),
+            res.final_buckets.to_string(),
+            res.resizes.to_string(),
+            res.migration_quanta.to_string(),
+            fmt_rate(mean),
+            format!("{:.2}", res.collapse_ratio()),
+        ]);
     }
     table.print();
 

@@ -73,11 +73,17 @@ pub enum FaultSite {
     /// the range traversal (widens the double-collect window so racing
     /// updates land mid-scan and force validation retries).
     ScanCollect = 11,
+    /// `HashTableSet` incremental resize, inside a bucket-migration
+    /// quantum (after the freeze, between node copies). A `Delay`/`Yield`
+    /// stretches the frozen window where lookups chase the seal
+    /// indirection; a `Panic` kills the helper mid-quantum so another
+    /// updater must finish the bucket (self-repair).
+    ResizeMigrate = 12,
 }
 
 impl FaultSite {
     /// Number of sites (array dimension for per-thread hit counters).
-    pub const COUNT: usize = 12;
+    pub const COUNT: usize = 13;
 
     /// All sites, in index order.
     pub const ALL: [FaultSite; FaultSite::COUNT] = [
@@ -93,6 +99,7 @@ impl FaultSite {
         FaultSite::AcceptHandoff,
         FaultSite::ReplyCoalesce,
         FaultSite::ScanCollect,
+        FaultSite::ResizeMigrate,
     ];
 
     /// Stable label (README site list, panic messages, fuzz reports).
@@ -110,6 +117,7 @@ impl FaultSite {
             FaultSite::AcceptHandoff => "accept-handoff",
             FaultSite::ReplyCoalesce => "reply-coalesce",
             FaultSite::ScanCollect => "scan-collect",
+            FaultSite::ResizeMigrate => "resize-migrate",
         }
     }
 }
@@ -248,6 +256,12 @@ impl FaultPlane {
                 FaultSite::ScanCollect,
                 19,
                 FaultAction::Delay(Duration::from_micros(200)),
+            )
+            .with(FaultSite::ResizeMigrate, 3, FaultAction::Yield)
+            .with(
+                FaultSite::ResizeMigrate,
+                23,
+                FaultAction::Delay(Duration::from_micros(100)),
             )
     }
 }

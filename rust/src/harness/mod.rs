@@ -240,6 +240,177 @@ pub fn run(set: &dyn ConcurrentSet, cfg: &RunConfig) -> RunResult {
     result
 }
 
+/// Configuration of a growth-phase run ([`growth_run`]): a writer drives
+/// a fresh [`crate::hashtable::HashTableSet`] from `initial_buckets`
+/// through `growth_factor`× its resize-trigger capacity while reader and
+/// size threads run against it, recording per-window insert throughput —
+/// the `resize_scale` ablation axis and the `resize-stress` CI gate both
+/// consume this.
+#[derive(Clone, Copy, Debug)]
+pub struct GrowthConfig {
+    /// Starting bucket count (the issue's growth workload starts at 64).
+    pub initial_buckets: usize,
+    /// Insert this many multiples of the initial *trigger* capacity
+    /// (`initial_buckets * RESIZE_CHAIN`), forcing several doublings.
+    pub growth_factor: u64,
+    /// Concurrent `contains`/`get` readers over the growing key space.
+    pub reader_threads: usize,
+    /// Concurrent `size()` callers (0 for size-less policies).
+    pub size_threads: usize,
+    /// Fixed op-count windows the insert phase is split into; each
+    /// window's throughput is reported separately so a migration stall
+    /// shows up as a collapsed window.
+    pub windows: usize,
+    /// Growth rounds (fresh table each); per-window throughputs are
+    /// averaged elementwise across rounds to damp scheduler noise.
+    pub rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for GrowthConfig {
+    fn default() -> Self {
+        Self {
+            initial_buckets: 64,
+            growth_factor: 10,
+            reader_threads: 2,
+            size_threads: 1,
+            windows: 16,
+            rounds: 3,
+            seed: 0xC12E,
+        }
+    }
+}
+
+/// Aggregated result of [`growth_run`].
+#[derive(Clone, Debug, Default)]
+pub struct GrowthResult {
+    pub initial_buckets: usize,
+    /// Bucket count after the last round's migrations completed.
+    pub final_buckets: usize,
+    /// Resizes triggered, summed over rounds.
+    pub resizes: u64,
+    /// Bucket-migration quanta completed, summed over rounds.
+    pub migration_quanta: u64,
+    /// Keys inserted per round.
+    pub inserted: u64,
+    /// Per-window insert throughput (ops/s), averaged across rounds.
+    /// The CI collapse gate compares `min(windows)` against the median.
+    pub windows: Vec<f64>,
+    pub elapsed: Duration,
+}
+
+impl GrowthResult {
+    /// `min(window) / median(window)` — 1.0 is perfectly flat; the
+    /// acceptance gate requires this to stay above 0.5 (no window worse
+    /// than half of steady-state).
+    pub fn collapse_ratio(&self) -> f64 {
+        if self.windows.is_empty() {
+            return 1.0;
+        }
+        let mut sorted = self.windows.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = sorted[sorted.len() / 2];
+        if median <= 0.0 {
+            return 0.0;
+        }
+        sorted[0] / median
+    }
+}
+
+/// The growth-phase workload: per round, build a fresh table at
+/// `cfg.initial_buckets`, then insert `growth_factor × trigger-capacity`
+/// distinct keys under concurrent read + size load, timing each fixed
+/// op-count window of the insert stream. Inserts help migrate quanta
+/// inline, so window throughput directly prices the incremental resize;
+/// every round ends with a drained migration and a membership check.
+pub fn growth_run<P: crate::size::SizePolicy>(cfg: &GrowthConfig) -> GrowthResult {
+    use crate::hashtable::{HashTableSet, RESIZE_CHAIN};
+
+    let total = cfg.growth_factor * cfg.initial_buckets as u64 * RESIZE_CHAIN as u64;
+    let windows = cfg.windows.max(1);
+    let window_ops = (total / windows as u64).max(1);
+    let inserted = window_ops * windows as u64;
+    let start = Instant::now();
+    let mut result = GrowthResult {
+        initial_buckets: cfg.initial_buckets,
+        inserted,
+        windows: vec![0.0; windows],
+        ..GrowthResult::default()
+    };
+
+    for round in 0..cfg.rounds.max(1) {
+        let set: HashTableSet<P> = HashTableSet::new(crate::MAX_THREADS, cfg.initial_buckets);
+        let stop = AtomicBool::new(false);
+        let mut round_windows = vec![0.0f64; windows];
+        std::thread::scope(|scope| {
+            let mut helpers = Vec::new();
+            for t in 0..cfg.reader_threads {
+                let stop = &stop;
+                let set = &set;
+                let seed = cfg.seed ^ ((round as u64) << 40) ^ ((t as u64) << 8);
+                helpers.push(scope.spawn(move || {
+                    let mut rng = crate::rng::Xoshiro256::new(seed);
+                    while !stop.load(SeqCst) {
+                        let k = rng.gen_range(total) + 1;
+                        if rng.gen_bool(0.5) {
+                            set.contains(k);
+                        } else {
+                            set.get(k);
+                        }
+                    }
+                }));
+            }
+            for _ in 0..cfg.size_threads {
+                let stop = &stop;
+                let set = &set;
+                helpers.push(scope.spawn(move || {
+                    while !stop.load(SeqCst) {
+                        if P::HAS_SIZE {
+                            let s = set.size().expect("size-providing policy");
+                            debug_assert!(s >= 0, "size went negative mid-growth");
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                }));
+            }
+
+            // The writer: the timed growth phase itself.
+            let mut next = 1u64;
+            for w in round_windows.iter_mut() {
+                let t0 = Instant::now();
+                for _ in 0..window_ops {
+                    set.insert(next);
+                    next += 1;
+                }
+                *w = window_ops as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+            }
+            stop.store(true, SeqCst);
+            for h in helpers {
+                h.join().unwrap();
+            }
+        });
+
+        set.finish_migration();
+        assert_eq!(set.migration_pending(), 0, "migration failed to drain");
+        assert_eq!(
+            set.occupancy(),
+            inserted as i64,
+            "keys lost or duplicated across migration"
+        );
+        result.resizes += set.resizes();
+        result.migration_quanta += set.migration_quanta();
+        result.final_buckets = set.capacity();
+        for (acc, w) in result.windows.iter_mut().zip(&round_windows) {
+            *acc += w / cfg.rounds.max(1) as f64;
+        }
+        crate::ebr::collect();
+    }
+
+    result.elapsed = start.elapsed();
+    result
+}
+
 /// Aggregate result of one [`client_swarm`] run against a live
 /// [`crate::server::Server`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -623,6 +794,31 @@ mod tests {
             cfg.effective_refresh_period(),
             Some(Duration::from_millis(7))
         );
+    }
+
+    #[test]
+    fn growth_run_records_windows_and_resizes() {
+        let cfg = GrowthConfig {
+            initial_buckets: 16,
+            growth_factor: 8,
+            reader_threads: 1,
+            size_threads: 1,
+            windows: 8,
+            rounds: 1,
+            seed: 5,
+        };
+        let res = growth_run::<LinearizableSize>(&cfg);
+        assert_eq!(res.initial_buckets, 16);
+        assert_eq!(res.windows.len(), 8);
+        assert!(res.windows.iter().all(|w| *w > 0.0), "empty window");
+        assert!(res.resizes >= 1, "8x growth never resized");
+        assert!(res.final_buckets > res.initial_buckets);
+        assert!(
+            res.migration_quanta >= 16,
+            "every migrated bucket counts a quantum"
+        );
+        let ratio = res.collapse_ratio();
+        assert!(ratio > 0.0 && ratio <= 1.0, "ratio {ratio} out of range");
     }
 
     #[test]

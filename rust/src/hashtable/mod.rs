@@ -1,17 +1,77 @@
-//! Hash-table set: a static table of Harris-list buckets (paper Section 9:
-//! "a table of linked lists whose implementation is based on the linked
-//! list", capacity a power of two between 1× and 2× the expected elements,
-//! as Java's `ConcurrentHashMap` sizes itself).
+//! Hash-table set: Harris-list buckets behind an incrementally-resizable
+//! table (paper Section 9: "a table of linked lists whose implementation
+//! is based on the linked list").
 //!
 //! All buckets share one size policy instance, so `size()` spans the whole
 //! table — the metadata is per *thread*, not per bucket (paper Section 5).
+//!
+//! ## Incremental concurrent resize
+//!
+//! The bucket array lives in a [`Table`] descriptor published through an
+//! EBR-protected root pointer. When occupancy crosses
+//! [`RESIZE_CHAIN`]× capacity, an updater installs a successor descriptor
+//! of twice the capacity in `Table::next`, and from then on every update
+//! operation helps migrate a quantum of [`MIGRATION_QUANTUM`] buckets
+//! before doing its own work. Per bucket, migration is:
+//!
+//! 1. **Freeze** ([`list::freeze_chain`]): tag the head word and every
+//!    node's `next` with `FREEZE`, making every pre-freeze CAS snapshot
+//!    stale. Untracked deletes refuse to mark frozen words, so the set of
+//!    deleted nodes is fixed; overwrite stores bail and re-route.
+//! 2. **Copy**: walk the frozen chain and splice a copy of each live node
+//!    into the successor buckets `i` / `i + old_capacity`. For tracked
+//!    policies the one mutation that penetrates a freeze — the delete-info
+//!    claim — is arbitrated by *sealing* the same word with
+//!    `copy_ptr | SEAL_TAG`: the claim-vs-seal CAS decides atomically
+//!    whether the node died here or moved. The copy/link phase is
+//!    serialized on a per-table mutex (`mover`), which is what makes the
+//!    successor chains single-writer and a panicked quantum recoverable by
+//!    the next helper (the whole pass is idempotent: seals are
+//!    deduplicated by copy pointer, untracked copies by key).
+//! 3. **Publish**: store the [`list::MOVED_HEAD`] sentinel in the old
+//!    head — lookups now chase exactly one indirection to the successor —
+//!    then retire the originals through [`crate::ebr`]. When the last
+//!    bucket moves, the root pointer swings to the successor and the old
+//!    descriptor itself is retired.
+//!
+//! **Counter-ownership rule** (the size-policy invariant): the mover never
+//! creates `UpdateInfo` and never bumps a per-thread `(ins, del)` counter.
+//! Migration relocates nodes; the exactly-once counter-CAS of
+//! `SizeCalculator::update_metadata` always belongs to the logical
+//! inserter/deleter — movers only *help* already-claimed operations commit,
+//! which the protocol endorses from any thread. `size()` therefore stays
+//! wait-free and exact across a resize. Range scans sample the
+//! bucket-migration generation counter (`quanta`) around their
+//! double-collect and retry if a bucket relocated mid-sweep, since a
+//! relocation moves keys without moving any counter.
 
-use std::sync::atomic::AtomicU64;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::SeqCst};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 
-use crate::list;
-use crate::set_api::ConcurrentSet;
+use crate::ebr;
+use crate::list::{self, Node};
+use crate::set_api::{ConcurrentSet, ResizeStats};
 use crate::size::{RefresherSlot, SizeArbiter, SizeCore, SizeOpts, SizePolicy};
+
+/// Resize trigger: grow when occupancy exceeds this many nodes per bucket
+/// on average (chains stay O(1) while `size()` stays O(threads)).
+pub const RESIZE_CHAIN: i64 = 3;
+/// Buckets each helping updater migrates per operation while a resize is
+/// in flight.
+pub const MIGRATION_QUANTUM: u64 = 4;
+/// Hard capacity ceiling (2^22 buckets) — a backstop against runaway
+/// doubling, not a tuning knob.
+const MAX_CAPACITY: usize = 1 << 22;
+
+/// Process-wide count of resizes triggered by any table (the `csize fuzz`
+/// coverage gate uses this to excuse an armed-but-silent `ResizeMigrate`
+/// site when no workload ever crossed the load-factor threshold).
+static RESIZES_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Total resizes triggered process-wide, across every table instance.
+pub fn resizes_total() -> u64 {
+    RESIZES_TOTAL.load(SeqCst)
+}
 
 /// Fibonacci multiplicative hash: spreads sequential keys across buckets.
 #[inline]
@@ -19,9 +79,57 @@ fn spread(k: u64) -> u64 {
     k.wrapping_mul(0x9E3779B97F4A7C15) >> 17
 }
 
-pub struct HashTableSet<P: SizePolicy> {
+/// One generation of the bucket array. Buckets hold list head words; the
+/// descriptor additionally carries the migration state that moves keys to
+/// its successor. Policy-independent: nodes are reached through tagged
+/// `u64` words.
+struct Table {
     buckets: Box<[AtomicU64]>,
     mask: u64,
+    /// Successor descriptor (`*mut Table` as u64), 0 while not resizing.
+    /// Set once by the CAS winner of the resize trigger.
+    next: AtomicU64,
+    /// Next bucket index the quantum sweep will claim.
+    cursor: AtomicU64,
+    /// Buckets of *this* table not yet `MOVED` to the successor. Hits 0
+    /// exactly when the migration out of this table completes.
+    remaining: AtomicU64,
+}
+
+impl Table {
+    fn new(capacity: usize) -> Self {
+        Table {
+            buckets: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            mask: capacity as u64 - 1,
+            next: AtomicU64::new(0),
+            cursor: AtomicU64::new(0),
+            remaining: AtomicU64::new(capacity as u64),
+        }
+    }
+
+    #[inline]
+    fn capacity(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+pub struct HashTableSet<P: SizePolicy> {
+    /// Current root [`Table`] (`*mut Table` as u64), EBR-published: ops
+    /// pin before dereferencing, and a superseded descriptor is retired
+    /// only after the root swings to its successor.
+    root: AtomicU64,
+    /// Live keys across both generations (logical inserts − deletes).
+    occupancy: AtomicI64,
+    /// Resizes this table triggered.
+    resizes: AtomicU64,
+    /// Bucket-migration generation counter: bumped once per bucket that
+    /// turns `MOVED`. Scans sample it around their double-collect.
+    quanta: AtomicU64,
+    /// Serializes the copy/link phase of migration: successor chains are
+    /// single-writer while in flight, so splices are plain stores and a
+    /// panicked quantum is recoverable (poisoning is cleared and repaired,
+    /// never propagated).
+    mover: Mutex<()>,
     /// Policy + arbiter, shared with the optional refresher daemon.
     core: Arc<SizeCore<P>>,
     refresher: RefresherSlot,
@@ -31,8 +139,9 @@ unsafe impl<P: SizePolicy> Send for HashTableSet<P> {}
 unsafe impl<P: SizePolicy> Sync for HashTableSet<P> {}
 
 impl<P: SizePolicy> HashTableSet<P> {
-    /// `expected_elements` sizes the table: capacity = next power of two
-    /// `>= expected_elements` (1–2× occupancy, mirroring the paper).
+    /// `expected_elements` sizes the initial table: capacity = next power
+    /// of two `>= expected_elements` (1–2× occupancy, mirroring the
+    /// paper). Under load the table grows past this on its own.
     pub fn new(max_threads: usize, expected_elements: usize) -> Self {
         Self::with_opts(max_threads, expected_elements, SizeOpts::default())
     }
@@ -43,17 +152,23 @@ impl<P: SizePolicy> HashTableSet<P> {
 
     pub fn with_policy(policy: P, expected_elements: usize) -> Self {
         let capacity = expected_elements.max(1).next_power_of_two();
+        let table = Box::into_raw(Box::new(Table::new(capacity)));
         Self {
-            buckets: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
-            mask: capacity as u64 - 1,
+            root: AtomicU64::new(table as u64),
+            occupancy: AtomicI64::new(0),
+            resizes: AtomicU64::new(0),
+            quanta: AtomicU64::new(0),
+            mover: Mutex::new(()),
             core: Arc::new(SizeCore::new(policy)),
             refresher: RefresherSlot::new(),
         }
     }
 
+    /// Current root descriptor. Caller must hold an EBR pin.
     #[inline]
-    fn bucket(&self, k: u64) -> &AtomicU64 {
-        &self.buckets[(spread(k) & self.mask) as usize]
+    fn root_ptr(&self) -> *mut Table {
+        debug_assert!(ebr::is_pinned());
+        self.root.load(SeqCst) as *mut Table
     }
 
     pub fn policy(&self) -> &P {
@@ -65,56 +180,451 @@ impl<P: SizePolicy> HashTableSet<P> {
         &self.core.arbiter
     }
 
+    /// Current bucket count (doubles across resizes).
     pub fn capacity(&self) -> usize {
-        self.buckets.len()
+        let _guard = ebr::pin();
+        unsafe { &*self.root_ptr() }.capacity()
     }
 
-    /// Quiescent full count across all buckets (tests).
+    /// Resizes this table has triggered.
+    pub fn resizes(&self) -> u64 {
+        self.resizes.load(SeqCst)
+    }
+
+    /// Buckets still awaiting migration (0 when no resize is in flight).
+    pub fn migration_pending(&self) -> u64 {
+        let _guard = ebr::pin();
+        let t = unsafe { &*self.root_ptr() };
+        if t.next.load(SeqCst) == 0 {
+            0
+        } else {
+            t.remaining.load(SeqCst)
+        }
+    }
+
+    /// Bucket migrations completed so far (the scan validation generation).
+    pub fn migration_quanta(&self) -> u64 {
+        self.quanta.load(SeqCst)
+    }
+
+    /// Live-key count maintained at the logical insert/delete (drives the
+    /// load-factor trigger; exact at quiescence).
+    pub fn occupancy(&self) -> i64 {
+        self.occupancy.load(SeqCst)
+    }
+
+    /// Occupancy over capacity: the resize trigger fires above
+    /// [`RESIZE_CHAIN`].
+    pub fn load_factor(&self) -> f64 {
+        let _guard = ebr::pin();
+        let cap = unsafe { &*self.root_ptr() }.capacity();
+        self.occupancy.load(SeqCst) as f64 / cap as f64
+    }
+
+    /// Drive any in-flight migration to completion (blocking). Tests,
+    /// teardown and quiescent accounting use this; regular operations only
+    /// ever help by quanta.
+    pub fn finish_migration(&self) {
+        let _guard = ebr::pin();
+        loop {
+            let tp = self.root_ptr();
+            let t = unsafe { &*tp };
+            let np = t.next.load(SeqCst) as *mut Table;
+            if np.is_null() {
+                return;
+            }
+            let lock = self.acquire_mover(tp);
+            for bi in 0..t.capacity() {
+                self.migrate_bucket(tp, np, bi);
+            }
+            drop(lock);
+            // remaining hit 0 inside the loop, so the root has swung; the
+            // next iteration re-reads it (and returns unless the successor
+            // immediately started its own resize).
+        }
+    }
+
+    /// Quiescent full count across all buckets (tests). Finishes any
+    /// in-flight migration first so exactly one generation holds the keys.
     pub fn quiescent_count(&self) -> usize {
-        self.buckets
+        self.finish_migration();
+        let _guard = ebr::pin();
+        let t = unsafe { &*self.root_ptr() };
+        t.buckets
             .iter()
             .map(list::quiescent_count_at::<P>)
             .sum()
+    }
+
+    /// Take the mover mutex, absorbing poison from a helper that panicked
+    /// mid-quantum: clear it and recount this table's `remaining` from the
+    /// actual head states (the interrupted bucket stays frozen-not-moved,
+    /// which the idempotent [`Self::migrate_bucket`] finishes).
+    fn acquire_mover(&self, tp: *mut Table) -> MutexGuard<'_, ()> {
+        match self.mover.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let g = poisoned.into_inner();
+                self.mover.clear_poison();
+                self.repair_after_panic(tp);
+                g
+            }
+        }
+    }
+
+    /// Re-derive migration bookkeeping after a mid-quantum panic (mover
+    /// lock held). Head words are the ground truth: `remaining` becomes
+    /// the count of not-yet-`MOVED` buckets, and a migration whose final
+    /// bookkeeping was lost is completed here.
+    fn repair_after_panic(&self, tp: *mut Table) {
+        let t = unsafe { &*tp };
+        let np = t.next.load(SeqCst) as *mut Table;
+        if np.is_null() || self.root.load(SeqCst) != tp as u64 {
+            return;
+        }
+        let pending = t
+            .buckets
+            .iter()
+            .filter(|b| b.load(SeqCst) != list::MOVED_HEAD)
+            .count() as u64;
+        t.remaining.store(pending, SeqCst);
+        if pending == 0 {
+            self.root.store(np as u64, SeqCst);
+            unsafe { ebr::retire(tp) };
+        }
+    }
+
+    /// Successful-insert hook: bump occupancy and install a successor
+    /// descriptor when the load factor crosses [`RESIZE_CHAIN`]. Only the
+    /// `next`-CAS winner publishes (the loser frees its allocation); the
+    /// migration itself is performed incrementally by every subsequent
+    /// updater.
+    fn note_insert(&self) {
+        let occ = self.occupancy.fetch_add(1, SeqCst) + 1;
+        let _guard = ebr::pin();
+        let t = unsafe { &*self.root_ptr() };
+        let cap = t.capacity();
+        if t.next.load(SeqCst) != 0 || cap >= MAX_CAPACITY || occ <= cap as i64 * RESIZE_CHAIN {
+            return;
+        }
+        let successor = Box::into_raw(Box::new(Table::new(cap * 2)));
+        if t.next
+            .compare_exchange(0, successor as u64, SeqCst, SeqCst)
+            .is_ok()
+        {
+            self.resizes.fetch_add(1, SeqCst);
+            RESIZES_TOTAL.fetch_add(1, SeqCst);
+        } else {
+            drop(unsafe { Box::from_raw(successor) }); // lost the trigger race
+        }
+    }
+
+    /// Opportunistic helping: migrate up to [`MIGRATION_QUANTUM`] buckets
+    /// if the mover mutex is free (never blocks the calling operation).
+    fn help_quanta(&self, tp: *mut Table, np: *mut Table) {
+        let t = unsafe { &*tp };
+        if t.remaining.load(SeqCst) == 0 {
+            return;
+        }
+        let lock = match self.mover.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(poisoned)) => {
+                let g = poisoned.into_inner();
+                self.mover.clear_poison();
+                self.repair_after_panic(tp);
+                g
+            }
+            Err(TryLockError::WouldBlock) => return, // someone else is moving
+        };
+        let cap = t.capacity() as u64;
+        for _ in 0..MIGRATION_QUANTUM {
+            let bi = t.cursor.fetch_add(1, SeqCst);
+            if bi >= cap {
+                // Sweep exhausted. Any straggler bucket (claimed by a
+                // helper that then panicked) is finished here so the
+                // migration always terminates.
+                if t.remaining.load(SeqCst) > 0 {
+                    for bi in 0..t.capacity() {
+                        self.migrate_bucket(tp, np, bi);
+                    }
+                }
+                break;
+            }
+            self.migrate_bucket(tp, np, bi as usize);
+        }
+        drop(lock);
+    }
+
+    /// Blocking help for one bucket an operation depends on: waits for the
+    /// mover mutex and finishes the bucket before returning. Cheap no-op
+    /// once the bucket is `MOVED`.
+    fn complete_bucket(&self, tp: *mut Table, np: *mut Table, bi: usize) {
+        let t = unsafe { &*tp };
+        if t.buckets[bi].load(SeqCst) == list::MOVED_HEAD {
+            return;
+        }
+        let lock = self.acquire_mover(tp);
+        self.migrate_bucket(tp, np, bi);
+        drop(lock);
+    }
+
+    /// Migrate one bucket (mover lock held; idempotent and resumable).
+    /// Freeze → copy live nodes into the successor → publish `MOVED` →
+    /// retire originals → complete the table swap on the last bucket.
+    fn migrate_bucket(&self, tp: *mut Table, np: *mut Table, bi: usize) {
+        let t = unsafe { &*tp };
+        let n = unsafe { &*np };
+        let head = &t.buckets[bi];
+        if head.load(SeqCst) == list::MOVED_HEAD {
+            return;
+        }
+        let frozen = list::freeze_chain::<P>(head);
+        // Chaos plane: Delay/Yield stretch the frozen window; Panic kills
+        // this helper mid-quantum (the next mover repairs and finishes).
+        crate::faults::jitter(crate::faults::FaultSite::ResizeMigrate);
+
+        let policy = &self.core.policy;
+        let mut curr = list::addr::<P>(frozen);
+        while !curr.is_null() {
+            let node = unsafe { &*curr };
+            let succ = list::addr::<P>(node.next.load(SeqCst));
+            let new_head = &n.buckets[(spread(node.key) & n.mask) as usize];
+            if P::TRACKED {
+                let raw = P::read_delete_info(&node.delete_info);
+                if list::is_seal(raw) {
+                    // An interrupted pass already sealed it: make sure its
+                    // copy made it into the successor chain.
+                    unsafe { list::link_exclusive(new_head, list::seal_ptr::<P>(raw)) };
+                } else if raw != 0 {
+                    // Logically deleted: commit the metadata (helping — the
+                    // deleter owns the counter-CAS, which is idempotent),
+                    // copy nothing.
+                    policy.commit_delete(raw);
+                } else {
+                    // Live: linearize any pending insert, then race the
+                    // seal against late delete claims on the same word.
+                    policy.help_insert(&node.insert_info);
+                    let copy = Node::<P>::alloc(node.key, node.value.load(SeqCst), 0);
+                    let seal = copy as u64 | list::SEAL_TAG;
+                    let winner = P::try_claim_delete(&node.delete_info, seal);
+                    if winner == seal {
+                        let outcome = unsafe { list::link_exclusive(new_head, copy) };
+                        debug_assert_eq!(outcome, list::LinkOutcome::Linked);
+                    } else {
+                        // A real delete claimed it first: help it commit
+                        // and discard the unpublished copy.
+                        policy.commit_delete(winner);
+                        drop(unsafe { Box::from_raw(copy) });
+                    }
+                }
+            } else if !list::is_marked(node.next.load(SeqCst)) {
+                // Untracked: the (now-immutable) mark bit is the deleted
+                // state. Copies are deduplicated by key on recovery.
+                let copy = Node::<P>::alloc(node.key, node.value.load(SeqCst), 0);
+                if unsafe { list::link_exclusive(new_head, copy) } == list::LinkOutcome::DuplicateKey
+                {
+                    drop(unsafe { Box::from_raw(copy) });
+                }
+            }
+            curr = succ;
+        }
+
+        head.store(list::MOVED_HEAD, SeqCst);
+        self.quanta.fetch_add(1, SeqCst);
+
+        // Originals are unreachable to post-`MOVED` readers; pre-freeze
+        // traversals still inside the chain hold EBR pins.
+        let mut curr = list::addr::<P>(frozen);
+        while !curr.is_null() {
+            let succ = list::addr::<P>(unsafe { &*curr }.next.load(SeqCst));
+            unsafe { ebr::retire(curr) };
+            curr = succ;
+        }
+
+        if t.remaining.fetch_sub(1, SeqCst) == 1 {
+            // Last bucket: the successor becomes the root and this
+            // descriptor retires through the same epochs as its nodes.
+            self.root.store(np as u64, SeqCst);
+            unsafe { ebr::retire(tp) };
+        }
+    }
+
+    /// Route an update to the authoritative bucket for `k`, helping the
+    /// in-flight migration by a quantum first. `op` returns `None` when
+    /// the chain froze/moved under it, in which case the bucket is
+    /// completed (blocking) and the operation retries against the
+    /// successor.
+    fn route_update<R>(&self, k: u64, op: impl Fn(&AtomicU64) -> Option<R>) -> R {
+        let _guard = ebr::pin();
+        let h = spread(k);
+        loop {
+            let tp = self.root_ptr();
+            let t = unsafe { &*tp };
+            let bi = (h & t.mask) as usize;
+            let np = t.next.load(SeqCst) as *mut Table;
+            if np.is_null() {
+                match op(&t.buckets[bi]) {
+                    Some(r) => return r,
+                    None => continue, // a resize started mid-op: re-route
+                }
+            }
+            self.help_quanta(tp, np);
+            let n = unsafe { &*np };
+            let w = t.buckets[bi].load(SeqCst);
+            if w != list::MOVED_HEAD {
+                if list::is_frozen(w) {
+                    self.complete_bucket(tp, np, bi);
+                } else {
+                    match op(&t.buckets[bi]) {
+                        Some(r) => return r,
+                        None => self.complete_bucket(tp, np, bi),
+                    }
+                }
+            }
+            match op(&n.buckets[(h & n.mask) as usize]) {
+                Some(r) => return r,
+                // The successor itself began resizing (this migration
+                // finished and the next one started): re-read the root.
+                None => continue,
+            }
+        }
+    }
+
+    /// Route a read to the authoritative bucket for `k`. Never blocks on
+    /// migration: frozen chains answer reads directly; only a fully-moved
+    /// bucket redirects to the successor.
+    fn route_read<R>(&self, k: u64, op: impl Fn(&AtomicU64) -> Option<R>) -> R {
+        let _guard = ebr::pin();
+        let h = spread(k);
+        loop {
+            let tp = self.root_ptr();
+            let t = unsafe { &*tp };
+            let np = t.next.load(SeqCst) as *mut Table;
+            if let Some(r) = op(&t.buckets[(h & t.mask) as usize]) {
+                return r;
+            }
+            // Bucket is MOVED. If `next` reads null the migration completed
+            // between the two loads — re-read the root.
+            if np.is_null() {
+                continue;
+            }
+            let n = unsafe { &*np };
+            if let Some(r) = op(&n.buckets[(h & n.mask) as usize]) {
+                return r;
+            }
+            // Successor bucket moved too (a following resize): retry.
+        }
+    }
+
+    /// One full-table collect attempt for [`ConcurrentSet::scan`]. `None`
+    /// when a bucket relocated under the sweep irrecoverably (the root or
+    /// successor advanced); the scan loop retries from the fresh root.
+    fn sweep(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
+        let tp = self.root_ptr();
+        let t = unsafe { &*tp };
+        let cap = t.capacity();
+        let policy = &self.core.policy;
+        let mut out = Vec::new();
+        for bi in 0..cap {
+            if t.buckets[bi].load(SeqCst) == list::MOVED_HEAD {
+                // One indirection: this bucket's keys split across the
+                // successor buckets bi and bi + cap.
+                let np = t.next.load(SeqCst) as *mut Table;
+                debug_assert!(!np.is_null(), "MOVED bucket without a successor");
+                let n = unsafe { &*np };
+                list::try_collect_range_at(policy, &n.buckets[bi], lo, hi, &mut out)?;
+                list::try_collect_range_at(policy, &n.buckets[bi + cap], lo, hi, &mut out)?;
+            } else {
+                // Normal or frozen: the old chain is authoritative (seals
+                // read as live; see list::try_collect_range_at).
+                list::try_collect_range_at(policy, &t.buckets[bi], lo, hi, &mut out)?;
+            }
+        }
+        Some(out)
     }
 }
 
 impl<P: SizePolicy> ConcurrentSet for HashTableSet<P> {
     fn insert(&self, k: u64) -> bool {
-        list::insert_at(&self.core.policy, self.bucket(k), k)
+        self.put(k, 0)
     }
     fn delete(&self, k: u64) -> bool {
-        list::delete_at(&self.core.policy, self.bucket(k), k)
+        let removed =
+            self.route_update(k, |head| list::try_delete_at(&self.core.policy, head, k));
+        if removed {
+            self.occupancy.fetch_sub(1, SeqCst);
+        }
+        removed
     }
     fn contains(&self, k: u64) -> bool {
-        list::contains_at(&self.core.policy, self.bucket(k), k)
+        self.route_read(k, |head| list::try_contains_at(&self.core.policy, head, k))
     }
     fn put(&self, k: u64, v: u64) -> bool {
-        list::put_at(&self.core.policy, self.bucket(k), k, v, true)
+        let fresh = self
+            .route_update(k, |head| list::try_put_at(&self.core.policy, head, k, v, true));
+        if fresh {
+            self.note_insert();
+        }
+        fresh
     }
     fn get(&self, k: u64) -> Option<u64> {
-        list::get_at(&self.core.policy, self.bucket(k), k)
+        self.route_read(k, |head| list::try_get_at(&self.core.policy, head, k))
     }
 
     // A range scan has no locality in a hashed table: the collect sweeps
     // every bucket and sorts, with the whole sweep inside one
     // double-collect window so the merged view is still a membership
-    // snapshot.
+    // snapshot. Migration moves keys without moving counters, so the sweep
+    // additionally brackets itself with the bucket-migration generation
+    // (`quanta`) and retries when a bucket relocated mid-collect.
     fn scan(&self, lo: u64, hi: u64) -> Option<Vec<(u64, u64)>> {
         let _guard = crate::ebr::pin();
         let _op = self.core.policy.enter_read();
-        let (mut pairs, _validated) =
-            crate::size::validated_collect(self.core.policy.calculator(), || {
-                let mut out = Vec::new();
-                for bucket in self.buckets.iter() {
-                    list::collect_range_at(&self.core.policy, bucket, lo, hi, &mut out);
+        let calc = self.core.policy.calculator();
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let gen_before = self.quanta.load(SeqCst);
+            let (swept, validated) =
+                crate::size::validated_collect(calc, || self.sweep(lo, hi));
+            let gen_after = self.quanta.load(SeqCst);
+            let Some(mut pairs) = swept else {
+                if attempts >= crate::size::SCAN_RETRIES {
+                    // Force a stable view rather than spinning against a
+                    // resize storm.
+                    self.finish_migration();
                 }
-                out
-            });
-        pairs.sort_unstable_by_key(|&(k, _)| k);
-        Some(pairs)
+                continue;
+            };
+            let counters_ok = validated || calc.is_none();
+            if (counters_ok && gen_before == gen_after) || attempts >= crate::size::SCAN_RETRIES {
+                pairs.sort_unstable_by_key(|&(k, _)| k);
+                return Some(pairs);
+            }
+        }
     }
 
-    crate::size::impl_size_surface!();
+    crate::size::impl_size_surface!(except_stats);
+
+    fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
+        let mut stats = self.core.stats(self.refresher.rounds());
+        stats.resizes = self.resizes();
+        stats.migration_pending = self.migration_pending();
+        Some(stats)
+    }
+
+    fn resize_stats(&self) -> Option<ResizeStats> {
+        let _guard = ebr::pin();
+        let capacity = unsafe { &*self.root_ptr() }.capacity();
+        let occupancy = self.occupancy.load(SeqCst);
+        Some(ResizeStats {
+            capacity,
+            occupancy,
+            resizes: self.resizes(),
+            migration_pending: self.migration_pending(),
+            load_factor: occupancy as f64 / capacity as f64,
+        })
+    }
 
     fn name(&self) -> String {
         format!(
@@ -126,8 +636,20 @@ impl<P: SizePolicy> ConcurrentSet for HashTableSet<P> {
 
 impl<P: SizePolicy> Drop for HashTableSet<P> {
     fn drop(&mut self) {
-        for b in self.buckets.iter() {
+        // Exclusive access: free both generations. MOVED buckets hold no
+        // chain (addr of the sentinel is null — their originals went
+        // through EBR when they migrated), so this never double-frees.
+        let tp = *self.root.get_mut() as *mut Table;
+        let t = unsafe { Box::from_raw(tp) };
+        let np = t.next.load(SeqCst) as *mut Table;
+        for b in t.buckets.iter() {
             unsafe { list::drop_chain::<P>(b) };
+        }
+        if !np.is_null() {
+            let n = unsafe { Box::from_raw(np) };
+            for b in n.buckets.iter() {
+                unsafe { list::drop_chain::<P>(b) };
+            }
         }
     }
 }
@@ -135,7 +657,7 @@ impl<P: SizePolicy> Drop for HashTableSet<P> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::size::{LinearizableSize, NoSize};
+    use crate::size::{LinearizableSize, NaiveSize, NoSize};
     use std::sync::atomic::Ordering::SeqCst;
     use std::sync::Arc;
 
@@ -197,6 +719,8 @@ mod tests {
     #[test]
     fn colliding_keys_coexist() {
         // Keys an exact capacity apart can collide; both must be stored.
+        // With incremental resize the table grows under these inserts,
+        // which must not lose keys either.
         let t: HashTableSet<LinearizableSize> = HashTableSet::new(crate::MAX_THREADS, 2);
         for k in 0..64 {
             assert!(t.insert(k));
@@ -205,6 +729,86 @@ mod tests {
             assert!(t.contains(k), "lost key {k}");
         }
         assert_eq!(t.size(), Some(64));
+        assert!(t.resizes() >= 1, "64 keys over 2 buckets must resize");
+    }
+
+    #[test]
+    fn growth_preserves_membership_and_size() {
+        let t: HashTableSet<LinearizableSize> = HashTableSet::new(crate::MAX_THREADS, 8);
+        let initial_cap = t.capacity();
+        for k in 0..400u64 {
+            assert!(t.put(k, k + 1));
+            assert_eq!(t.size(), Some(k as i64 + 1), "size wrong mid-growth");
+        }
+        assert!(t.resizes() >= 1, "10x occupancy must trigger a resize");
+        assert!(t.capacity() > initial_cap);
+        for k in 0..400u64 {
+            assert_eq!(t.get(k), Some(k + 1), "lost key {k} across migration");
+        }
+        t.finish_migration();
+        assert_eq!(t.migration_pending(), 0);
+        assert_eq!(t.quiescent_count(), 400);
+        assert_eq!(t.size(), Some(400));
+        assert_eq!(t.occupancy(), 400);
+    }
+
+    #[test]
+    fn growth_works_for_untracked_policies() {
+        let t: HashTableSet<NaiveSize> = HashTableSet::new(crate::MAX_THREADS, 4);
+        for k in 0..200u64 {
+            assert!(t.put(k, k * 3));
+        }
+        assert!(t.resizes() >= 1);
+        for k in 0..200u64 {
+            assert_eq!(t.get(k), Some(k * 3));
+        }
+        for k in (0..200u64).step_by(2) {
+            assert!(t.delete(k));
+        }
+        assert_eq!(t.quiescent_count(), 100);
+        assert_eq!(t.size(), Some(100));
+    }
+
+    #[test]
+    fn delete_racing_migration_is_exactly_once() {
+        // Seeded interleaving: threads delete while inserts force growth;
+        // every key is deleted exactly once and occupancy drains to the
+        // survivors.
+        for seed in 0..8u64 {
+            let t = Arc::new(HashTableSet::<LinearizableSize>::new(crate::MAX_THREADS, 4));
+            for k in 0..256 {
+                assert!(t.insert(k));
+            }
+            let wins = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let hs: Vec<_> = (0..4u64)
+                .map(|tid| {
+                    let t = t.clone();
+                    let wins = wins.clone();
+                    std::thread::spawn(move || {
+                        let mut rng = crate::rng::Xoshiro256::new(seed * 31 + tid);
+                        // Grow the table under the deleters' feet.
+                        for k in 256..(256 + 128 * (tid + 1)) {
+                            t.insert(k);
+                        }
+                        for k in 0..256 {
+                            if rng.gen_bool(0.5) && t.delete(k) {
+                                wins.fetch_add(1, SeqCst);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            let survivors = (0..256).filter(|&k| t.contains(k)).count();
+            assert_eq!(
+                wins.load(SeqCst) + survivors,
+                256,
+                "seed {seed}: deletes double-counted or lost across migration"
+            );
+            assert_eq!(t.size().unwrap() as usize, t.quiescent_count());
+        }
     }
 
     #[test]

@@ -28,15 +28,52 @@ use crate::size::{RefresherSlot, SizeArbiter, SizeCore, SizeOpts, SizePolicy};
 use crate::thread_id;
 
 const MARK: u64 = 1;
+/// Low bit 1 on a node's `next` (and on a bucket head): the chain is being
+/// migrated by [`crate::hashtable`]'s incremental resize. A frozen word
+/// makes every pre-freeze CAS snapshot stale, so in-flight structure
+/// mutations fail and re-route to the successor table. Untracked deletes
+/// refuse to mark a frozen word, so after [`freeze_chain`] the set of
+/// marked (deleted) nodes is fixed and the mover's copy pass reads it
+/// authoritatively.
+pub(crate) const FREEZE: u64 = 2;
+/// All pointer-tag bits ([`Node`] allocations are 8-byte aligned).
+const LOW_BITS: u64 = MARK | FREEZE;
+/// Bucket-head sentinel: every live key of this bucket now lives in the
+/// successor table (`FREEZE` so every stale CAS still fails, `MARK` to
+/// distinguish "migrated" from a merely frozen empty bucket). `addr` of
+/// it is null, so a stale traversal degrades to an empty walk, and the
+/// `try_*` entry points bail out to the table router before that.
+pub(crate) const MOVED_HEAD: u64 = FREEZE | MARK;
+/// Tag bit distinguishing a migration *seal* stored in a tracked node's
+/// `delete_info` slot from packed `UpdateInfo` (`tid << 48 | counter` with
+/// `tid < MAX_THREADS`, so bit 63 is never set by a real operation). A
+/// sealed word carries the copy node's address: claim-vs-seal races on the
+/// original resolve on this one word.
+pub(crate) const SEAL_TAG: u64 = 1 << 63;
 
 #[inline]
-fn is_marked(word: u64) -> bool {
+pub(crate) fn is_marked(word: u64) -> bool {
     word & MARK == MARK
 }
 
 #[inline]
-fn addr<P: SizePolicy>(word: u64) -> *mut Node<P> {
-    (word & !MARK) as *mut Node<P>
+pub(crate) fn is_frozen(word: u64) -> bool {
+    word & FREEZE == FREEZE
+}
+
+#[inline]
+pub(crate) fn is_seal(word: u64) -> bool {
+    word & SEAL_TAG == SEAL_TAG
+}
+
+#[inline]
+pub(crate) fn seal_ptr<P: SizePolicy>(word: u64) -> *mut Node<P> {
+    (word & !SEAL_TAG) as *mut Node<P>
+}
+
+#[inline]
+pub(crate) fn addr<P: SizePolicy>(word: u64) -> *mut Node<P> {
+    (word & !LOW_BITS) as *mut Node<P>
 }
 
 /// List node. Info slots are zero-sized for untracked policies, so the
@@ -56,7 +93,7 @@ pub(crate) struct Node<P: SizePolicy> {
 }
 
 impl<P: SizePolicy> Node<P> {
-    fn alloc(key: u64, value: u64, next: u64) -> *mut Self {
+    pub(crate) fn alloc(key: u64, value: u64, next: u64) -> *mut Self {
         Box::into_raw(Box::new(Node {
             key,
             value: AtomicU64::new(value),
@@ -74,6 +111,13 @@ fn deletion_state<P: SizePolicy>(node: &Node<P>) -> (bool, u64) {
     if P::TRACKED {
         let dinfo = P::read_delete_info(&node.delete_info);
         if dinfo != 0 {
+            // A migration seal is not a delete: the node was copied to the
+            // successor table. Sealed nodes live only in frozen chains,
+            // which these traversals bail out of first — treat the slot as
+            // "nothing to commit" defensively (0 is commit-guarded below).
+            if is_seal(dinfo) {
+                return (true, 0);
+            }
             return (true, dinfo);
         }
         // delete_info is installed before the mark, so a marked node always
@@ -87,11 +131,17 @@ fn deletion_state<P: SizePolicy>(node: &Node<P>) -> (bool, u64) {
     }
 }
 
-/// Set the Harris mark bit on `node.next` (idempotent).
+/// Set the Harris mark bit on `node.next` (idempotent). Bails out without
+/// marking when the word is frozen — the bucket is migrating and physical
+/// deletion must not race the mover; the caller checks `is_frozen` on the
+/// returned word.
 #[inline]
 fn mark_next<P: SizePolicy>(node: &Node<P>) -> u64 {
     let mut w = node.next.load(SeqCst);
     while !is_marked(w) {
+        if is_frozen(w) {
+            return w;
+        }
         match node.next.compare_exchange(w, w | MARK, SeqCst, SeqCst) {
             Ok(_) => return w | MARK,
             Err(cur) => w = cur,
@@ -106,12 +156,14 @@ fn mark_next<P: SizePolicy>(node: &Node<P>) -> u64 {
 /// updateMetadata(node's deleteInfo, DELETE) before unlinking"*).
 ///
 /// `pred == null` means the predecessor is `head` itself. Caller must hold
-/// an EBR pin.
+/// an EBR pin. Returns `None` when a frozen word is encountered — the
+/// bucket is being migrated and the caller must re-route through the
+/// table descriptor.
 unsafe fn search<P: SizePolicy>(
     policy: &P,
     head: &AtomicU64,
     k: u64,
-) -> (*mut Node<P>, *mut Node<P>) {
+) -> Option<(*mut Node<P>, *mut Node<P>)> {
     'retry: loop {
         let mut pred: *mut Node<P> = std::ptr::null_mut();
         loop {
@@ -121,22 +173,28 @@ unsafe fn search<P: SizePolicy>(
                 unsafe { &(*pred).next }
             };
             let curr_w = pred_next.load(SeqCst);
+            if is_frozen(curr_w) {
+                return None;
+            }
             if is_marked(curr_w) {
                 // pred was deleted under us; restart from the head.
                 continue 'retry;
             }
             let curr = addr::<P>(curr_w);
             if curr.is_null() {
-                return (pred, curr);
+                return Some((pred, curr));
             }
             let curr_ref = unsafe { &*curr };
             let (deleted, dinfo) = deletion_state(curr_ref);
             if deleted {
                 // New linearization order: metadata before unlink.
-                if P::TRACKED {
+                if P::TRACKED && dinfo != 0 {
                     policy.commit_delete(dinfo);
                 }
                 let marked_next = mark_next(curr_ref);
+                if is_frozen(marked_next) {
+                    return None;
+                }
                 match pred_next.compare_exchange(curr_w, marked_next & !MARK, SeqCst, SeqCst) {
                     Ok(_) => {
                         unsafe { ebr::retire(curr) };
@@ -146,7 +204,7 @@ unsafe fn search<P: SizePolicy>(
                 }
             }
             if curr_ref.key >= k {
-                return (pred, curr);
+                return Some((pred, curr));
             }
             pred = curr;
         }
@@ -171,6 +229,24 @@ pub(crate) fn put_at<P: SizePolicy>(
     v: u64,
     overwrite: bool,
 ) -> bool {
+    try_put_at(policy, head, k, v, overwrite).expect("standalone list chains never freeze")
+}
+
+/// [`put_at`] that bails out with `None` when the chain freezes under it
+/// (the bucket is migrating): the caller re-routes through the table
+/// descriptor. No partial effect escapes a `None` — an unpublished node
+/// is reclaimed, and the one non-CAS mutation (the overwrite store) is
+/// fenced by a frozen check on both sides: if the post-store check sees
+/// the freeze, the mover may have copied the old value, so the caller
+/// must retry the overwrite against the successor chain (re-storing the
+/// same value there is idempotent).
+pub(crate) fn try_put_at<P: SizePolicy>(
+    policy: &P,
+    head: &AtomicU64,
+    k: u64,
+    v: u64,
+    overwrite: bool,
+) -> Option<bool> {
     debug_assert!(k <= MAX_KEY);
     let _guard = ebr::pin();
     let _op = policy.enter();
@@ -179,8 +255,17 @@ pub(crate) fn put_at<P: SizePolicy>(
     let packed = policy.begin_insert(tid); // line 22 (createUpdateInfo)
     let mut new_node: *mut Node<P> = std::ptr::null_mut();
 
+    let reclaim = |node: *mut Node<P>| {
+        if !node.is_null() {
+            drop(unsafe { Box::from_raw(node) }); // never published
+        }
+    };
+
     loop {
-        let (pred, curr) = unsafe { search(policy, head, k) };
+        let Some((pred, curr)) = (unsafe { search(policy, head, k) }) else {
+            reclaim(new_node);
+            return None;
+        };
         if !curr.is_null() {
             let curr_ref = unsafe { &*curr };
             if curr_ref.key == k {
@@ -188,12 +273,18 @@ pub(crate) fn put_at<P: SizePolicy>(
                 // (lines 16–18).
                 policy.help_insert(&curr_ref.insert_info);
                 if overwrite {
+                    if is_frozen(curr_ref.next.load(SeqCst)) {
+                        reclaim(new_node);
+                        return None; // mover may already have copied it
+                    }
                     curr_ref.value.store(v, SeqCst);
+                    if is_frozen(curr_ref.next.load(SeqCst)) {
+                        reclaim(new_node);
+                        return None; // store raced the copy: redo on successor
+                    }
                 }
-                if !new_node.is_null() {
-                    drop(unsafe { Box::from_raw(new_node) }); // never published
-                }
-                return false;
+                reclaim(new_node);
+                return Some(false);
             }
         }
         if new_node.is_null() {
@@ -213,36 +304,52 @@ pub(crate) fn put_at<P: SizePolicy>(
         {
             // Original linearization passed; reach the new one (line 25).
             policy.commit_insert(unsafe { &(*new_node).insert_info }, packed);
-            return true;
+            return Some(true);
         }
-        // CAS failed: retry with the allocated node.
+        // CAS failed (concurrent update, or the chain froze — search
+        // distinguishes): retry with the allocated node.
     }
 }
 
 /// Delete from the list rooted at `head` (Fig. 3 lines 27–38).
 pub(crate) fn delete_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> bool {
+    try_delete_at(policy, head, k).expect("standalone list chains never freeze")
+}
+
+/// [`delete_at`] that bails out with `None` when the chain freezes under
+/// it. Tracked policies have one freeze-penetrating step — the delete-info
+/// claim lands on a word the mover does not freeze — so the mover *seals*
+/// that same word ([`SEAL_TAG`]): whichever CAS wins decides atomically
+/// whether the node was deleted here or moved. A claim that loses to a
+/// seal returns `None` and the caller re-deletes the copy in the
+/// successor chain.
+pub(crate) fn try_delete_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> Option<bool> {
     let _guard = ebr::pin();
     let _op = policy.enter();
     let tid = thread_id::current();
 
-    loop {
-        let (pred, curr) = unsafe { search(policy, head, k) };
-        if curr.is_null() || unsafe { &*curr }.key != k {
-            return false; // line 29
-        }
-        let curr_ref = unsafe { &*curr };
+    let (pred, curr) = unsafe { search(policy, head, k) }?;
+    if curr.is_null() || unsafe { &*curr }.key != k {
+        return Some(false); // line 29
+    }
+    let curr_ref = unsafe { &*curr };
 
-        if P::TRACKED {
-            // Line 33: the node we found is unmarked — ensure its insert is
-            // linearized before we depend on it.
-            policy.help_insert(&curr_ref.insert_info);
-            let packed = policy.begin_delete(tid); // line 34
-            // Line 35: the marking step = installing delete-info.
-            let winner = P::try_claim_delete(&curr_ref.delete_info, packed);
-            // Line 36: metadata before any unlink.
-            policy.commit_delete(winner);
-            // Physical deletion (best effort; search() will finish it).
-            let marked_next = mark_next(curr_ref);
+    if P::TRACKED {
+        // Line 33: the node we found is unmarked — ensure its insert is
+        // linearized before we depend on it.
+        policy.help_insert(&curr_ref.insert_info);
+        let packed = policy.begin_delete(tid); // line 34
+        // Line 35: the marking step = installing delete-info.
+        let winner = P::try_claim_delete(&curr_ref.delete_info, packed);
+        if is_seal(winner) {
+            return None; // the mover moved it first: delete the copy
+        }
+        // Line 36: metadata before any unlink.
+        policy.commit_delete(winner);
+        // Physical deletion (best effort; search() will finish it, or the
+        // mover retires the whole frozen chain).
+        let marked_next = mark_next(curr_ref);
+        if !is_frozen(marked_next) {
             let pred_next: &AtomicU64 = if pred.is_null() {
                 head
             } else {
@@ -254,36 +361,40 @@ pub(crate) fn delete_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> 
             {
                 unsafe { ebr::retire(curr) };
             }
-            return winner == packed; // lost the claim race => concurrent
-                                     // delete succeeded instead (lines 30-32)
-        } else {
-            // Classic Harris: the next-pointer mark decides the winner.
-            let mut w = curr_ref.next.load(SeqCst);
-            loop {
-                if is_marked(w) {
-                    break; // someone else deleted it; re-search => not found
-                }
-                match curr_ref.next.compare_exchange(w, w | MARK, SeqCst, SeqCst) {
-                    Ok(_) => {
-                        policy.commit_delete(0); // naive/lock counter bump
-                        let pred_next: &AtomicU64 = if pred.is_null() {
-                            head
-                        } else {
-                            unsafe { &(*pred).next }
-                        };
-                        if pred_next
-                            .compare_exchange(curr as u64, w, SeqCst, SeqCst)
-                            .is_ok()
-                        {
-                            unsafe { ebr::retire(curr) };
-                        }
-                        return true;
-                    }
-                    Err(cur) => w = cur,
-                }
+        }
+        Some(winner == packed) // lost the claim race => concurrent
+                               // delete succeeded instead (lines 30-32)
+    } else {
+        // Classic Harris: the next-pointer mark decides the winner. The
+        // mark CAS refuses frozen words, which is what lets the mover read
+        // the mark bit as the authoritative deleted/live state.
+        let mut w = curr_ref.next.load(SeqCst);
+        loop {
+            if is_frozen(w) {
+                return None;
             }
-            // Marked by a concurrent delete: the key is gone.
-            return false;
+            if is_marked(w) {
+                // Marked by a concurrent delete: the key is gone.
+                return Some(false);
+            }
+            match curr_ref.next.compare_exchange(w, w | MARK, SeqCst, SeqCst) {
+                Ok(_) => {
+                    policy.commit_delete(0); // naive/lock counter bump
+                    let pred_next: &AtomicU64 = if pred.is_null() {
+                        head
+                    } else {
+                        unsafe { &(*pred).next }
+                    };
+                    if pred_next
+                        .compare_exchange(curr as u64, w, SeqCst, SeqCst)
+                        .is_ok()
+                    {
+                        unsafe { ebr::retire(curr) };
+                    }
+                    return Some(true);
+                }
+                Err(cur) => w = cur,
+            }
         }
     }
 }
@@ -292,41 +403,43 @@ pub(crate) fn delete_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> 
 /// pending operations on the found node reach their metadata linearization
 /// point before reporting.
 pub(crate) fn contains_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> bool {
-    let _guard = ebr::pin();
-    let _op = policy.enter_read();
-
-    let mut curr = addr::<P>(head.load(SeqCst));
-    while !curr.is_null() {
-        let curr_ref = unsafe { &*curr };
-        if curr_ref.key >= k {
-            break;
-        }
-        curr = addr::<P>(curr_ref.next.load(SeqCst));
-    }
-    if curr.is_null() {
-        return false;
-    }
-    let curr_ref = unsafe { &*curr };
-    if curr_ref.key != k {
-        return false;
-    }
-    let (deleted, dinfo) = deletion_state(curr_ref);
-    if deleted {
-        if P::TRACKED {
-            policy.commit_delete(dinfo); // lines 12–13
-        }
-        return false;
-    }
-    policy.help_insert(&curr_ref.insert_info); // lines 9–10
-    true
+    try_contains_at(policy, head, k).expect("standalone list chains never freeze")
 }
 
 /// Dictionary read: [`contains_at`] returning the stored value.
 pub(crate) fn get_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> Option<u64> {
+    try_get_at(policy, head, k).expect("standalone list chains never freeze")
+}
+
+/// [`contains_at`] over a possibly-migrating bucket. A *frozen* chain is
+/// still authoritative for reads — freezing stops mutation, it does not
+/// move anything — so the walk ignores `FREEZE` bits, and a migration
+/// *seal* reads as live: the node was live when sealed, its value is
+/// frozen, and every mutation of its copy starts after the bucket turns
+/// [`MOVED_HEAD`], i.e. after this reader began, so ordering the read
+/// before them is linearizable. The only `None` is a [`MOVED_HEAD`]
+/// bucket, which carries no data — the caller re-routes to the successor
+/// table. Reads never block on migration.
+pub(crate) fn try_contains_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> Option<bool> {
+    try_get_at(policy, head, k).map(|v| v.is_some())
+}
+
+/// [`get_at`] over a possibly-migrating bucket; see [`try_contains_at`]
+/// for the `None` contract.
+#[allow(clippy::option_option)]
+pub(crate) fn try_get_at<P: SizePolicy>(
+    policy: &P,
+    head: &AtomicU64,
+    k: u64,
+) -> Option<Option<u64>> {
     let _guard = ebr::pin();
     let _op = policy.enter_read();
 
-    let mut curr = addr::<P>(head.load(SeqCst));
+    let head_w = head.load(SeqCst);
+    if head_w == MOVED_HEAD {
+        return None;
+    }
+    let mut curr = addr::<P>(head_w);
     while !curr.is_null() {
         let curr_ref = unsafe { &*curr };
         if curr_ref.key >= k {
@@ -335,21 +448,27 @@ pub(crate) fn get_at<P: SizePolicy>(policy: &P, head: &AtomicU64, k: u64) -> Opt
         curr = addr::<P>(curr_ref.next.load(SeqCst));
     }
     if curr.is_null() {
-        return None;
+        return Some(None);
     }
     let curr_ref = unsafe { &*curr };
     if curr_ref.key != k {
-        return None;
+        return Some(None);
+    }
+    if P::TRACKED && is_seal(P::read_delete_info(&curr_ref.delete_info)) {
+        // Sealed = moved while live; the frozen original is a valid
+        // linearization of the key (see try_contains_at).
+        policy.help_insert(&curr_ref.insert_info);
+        return Some(Some(curr_ref.value.load(SeqCst)));
     }
     let (deleted, dinfo) = deletion_state(curr_ref);
     if deleted {
-        if P::TRACKED {
-            policy.commit_delete(dinfo);
+        if P::TRACKED && dinfo != 0 {
+            policy.commit_delete(dinfo); // lines 12–13
         }
-        return None;
+        return Some(None);
     }
-    policy.help_insert(&curr_ref.insert_info);
-    Some(curr_ref.value.load(SeqCst))
+    policy.help_insert(&curr_ref.insert_info); // lines 9–10
+    Some(Some(curr_ref.value.load(SeqCst)))
 }
 
 /// Range collect: push every live `(key, value)` with `lo <= key <= hi`
@@ -366,26 +485,57 @@ pub(crate) fn collect_range_at<P: SizePolicy>(
     hi: u64,
     out: &mut Vec<(u64, u64)>,
 ) {
-    let mut curr = addr::<P>(head.load(SeqCst));
+    try_collect_range_at(policy, head, lo, hi, out).expect("standalone list chains never freeze")
+}
+
+/// [`collect_range_at`] over a possibly-migrating bucket. Frozen chains
+/// are collected as normal (a migration seal reads as live, exactly as in
+/// [`try_contains_at`]); the hashtable's sweep pairs this with a
+/// migration-generation check so a bucket that relocates mid-scan forces
+/// a retry. `None` (bucket is [`MOVED_HEAD`]) leaves `out` untouched.
+pub(crate) fn try_collect_range_at<P: SizePolicy>(
+    policy: &P,
+    head: &AtomicU64,
+    lo: u64,
+    hi: u64,
+    out: &mut Vec<(u64, u64)>,
+) -> Option<()> {
+    let head_w = head.load(SeqCst);
+    if head_w == MOVED_HEAD {
+        return None;
+    }
+    let mut curr = addr::<P>(head_w);
     while !curr.is_null() {
         let curr_ref = unsafe { &*curr };
         if curr_ref.key > hi {
-            return;
+            return Some(());
         }
         let next = addr::<P>(curr_ref.next.load(SeqCst));
         if curr_ref.key >= lo {
-            let (deleted, dinfo) = deletion_state(curr_ref);
-            if deleted {
-                if P::TRACKED {
-                    policy.commit_delete(dinfo);
-                }
+            let raw = if P::TRACKED {
+                P::read_delete_info(&curr_ref.delete_info)
             } else {
+                0
+            };
+            if is_seal(raw) {
+                // Moved while live: report the frozen original.
                 policy.help_insert(&curr_ref.insert_info);
                 out.push((curr_ref.key, curr_ref.value.load(SeqCst)));
+            } else {
+                let (deleted, dinfo) = deletion_state(curr_ref);
+                if deleted {
+                    if P::TRACKED && dinfo != 0 {
+                        policy.commit_delete(dinfo);
+                    }
+                } else {
+                    policy.help_insert(&curr_ref.insert_info);
+                    out.push((curr_ref.key, curr_ref.value.load(SeqCst)));
+                }
             }
         }
         curr = next;
     }
+    Some(())
 }
 
 /// Non-linearizable full count: walks the list ignoring in-flight state.
@@ -414,6 +564,99 @@ pub(crate) unsafe fn drop_chain<P: SizePolicy>(head: &AtomicU64) {
         curr = next;
     }
     head.store(0, SeqCst);
+}
+
+// --- incremental-resize migration primitives -------------------------------
+//
+// Used only by `crate::hashtable`. The mover never creates `UpdateInfo` and
+// never touches a per-thread `(ins, del)` counter: migration relocates
+// nodes, it performs no logical operation, so the exactly-once counter-CAS
+// stays with the real inserter/deleter (the size-policy invariant).
+
+/// Freeze a bucket chain: set [`FREEZE`] on the head word and on every
+/// node's `next`. After this returns, every pre-freeze CAS snapshot is
+/// stale (structure mutations fail and re-route), untracked deletes can no
+/// longer mark, and overwrite stores bail — the chain is immutable except
+/// for tracked delete-info claims, which the copy pass arbitrates with
+/// [`SEAL_TAG`]. Idempotent, so a helper recovering a panicked migration
+/// re-runs it safely. Returns the frozen head word.
+pub(crate) fn freeze_chain<P: SizePolicy>(head: &AtomicU64) -> u64 {
+    let mut w = head.load(SeqCst);
+    while !is_frozen(w) {
+        match head.compare_exchange(w, w | FREEZE, SeqCst, SeqCst) {
+            Ok(_) => w |= FREEZE,
+            Err(cur) => w = cur,
+        }
+    }
+    let mut curr = addr::<P>(w);
+    while !curr.is_null() {
+        let next = unsafe { &(*curr).next };
+        let mut nw = next.load(SeqCst);
+        while !is_frozen(nw) {
+            match next.compare_exchange(nw, nw | FREEZE, SeqCst, SeqCst) {
+                Ok(_) => nw |= FREEZE,
+                Err(cur) => nw = cur,
+            }
+        }
+        curr = addr::<P>(nw);
+    }
+    w
+}
+
+/// Outcome of [`link_exclusive`].
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum LinkOutcome {
+    /// Spliced into the chain at its sorted position.
+    Linked,
+    /// This exact node is already in the chain (recovery re-walk after a
+    /// mid-quantum panic; tracked copies are deduplicated by pointer).
+    AlreadyLinked,
+    /// A different node with the same key is already in the chain (an
+    /// earlier, interrupted pass copied this key; untracked copies are
+    /// deduplicated by key) — the caller frees the redundant allocation.
+    DuplicateKey,
+}
+
+/// Sorted-position splice into a chain the caller owns exclusively: the
+/// successor-table buckets of an in-flight migration are written only by
+/// the (mutex-serialized) mover, so plain stores suffice and duplicate
+/// detection is exact.
+///
+/// # Safety
+/// `node` must be a valid unpublished allocation (or one already linked
+/// here by an interrupted pass), and no other thread may be mutating the
+/// chain rooted at `head`.
+pub(crate) unsafe fn link_exclusive<P: SizePolicy>(
+    head: &AtomicU64,
+    node: *mut Node<P>,
+) -> LinkOutcome {
+    let key = unsafe { &*node }.key;
+    let mut pred: *mut Node<P> = std::ptr::null_mut();
+    let mut curr = addr::<P>(head.load(SeqCst));
+    loop {
+        if !curr.is_null() {
+            if curr == node {
+                return LinkOutcome::AlreadyLinked;
+            }
+            let curr_ref = unsafe { &*curr };
+            if curr_ref.key < key {
+                pred = curr;
+                curr = addr::<P>(curr_ref.next.load(SeqCst));
+                continue;
+            }
+            if curr_ref.key == key {
+                return LinkOutcome::DuplicateKey;
+            }
+        }
+        unsafe { &(*node).next }.store(curr as u64, SeqCst);
+        let pred_next: &AtomicU64 = if pred.is_null() {
+            head
+        } else {
+            unsafe { &(*pred).next }
+        };
+        pred_next.store(node as u64, SeqCst);
+        return LinkOutcome::Linked;
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -291,7 +291,7 @@ pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
          store_shards={} shard_shed={} timeouts={} panics={} reaped={} \
          monitor_violations={} faults={} \
          rounds={} adoptions={} recent_hits={} recent_refreshes={} daemon_rounds={} \
-         daemon_stalls={} fallbacks={} retry_budget={}",
+         daemon_stalls={} fallbacks={} retry_budget={} resizes={} migration_pending={}",
         server.live_conns,
         server.peak_conns,
         server.queue_depth,
@@ -315,6 +315,8 @@ pub fn stats_reply(server: &ServerStats, size: &ArbiterStats) -> String {
         size.daemon_stalls,
         size.fallbacks,
         size.retry_budget,
+        size.resizes,
+        size.migration_pending,
     )
 }
 
@@ -483,6 +485,8 @@ mod tests {
             "faults",
             "daemon_rounds",
             "daemon_stalls",
+            "resizes",
+            "migration_pending",
         ] {
             assert!(stats.contains_key(want), "missing {want} in {line}");
         }

@@ -23,6 +23,26 @@ use std::time::Duration;
 
 use crate::size::{ArbiterStats, SizeView};
 
+/// A point-in-time view of a structure's incremental-resize machinery
+/// (`None` for structures without one). For a sharded store the fields are
+/// aggregates across shards: `capacity`/`occupancy`/`resizes`/
+/// `migration_pending` sum, `load_factor` is recomputed from the sums.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResizeStats {
+    /// Current bucket count (current root table generation).
+    pub capacity: usize,
+    /// Live keys (logical inserts minus deletes; exact at quiescence).
+    pub occupancy: i64,
+    /// Resizes triggered over the structure's lifetime.
+    pub resizes: u64,
+    /// Buckets not yet migrated to the successor table (0 when no resize
+    /// is in flight).
+    pub migration_pending: u64,
+    /// `occupancy / capacity` — the trigger fires above
+    /// [`crate::hashtable::RESIZE_CHAIN`].
+    pub load_factor: f64,
+}
+
 /// Object-safe set interface used by the workload harness, so one driver
 /// benches every structure/policy combination.
 pub trait ConcurrentSet: Send + Sync {
@@ -135,6 +155,13 @@ pub trait ConcurrentSet: Send + Sync {
     /// Diagnostics from the structure's size arbiter (`None` when the
     /// structure has none).
     fn size_stats(&self) -> Option<ArbiterStats> {
+        None
+    }
+
+    /// Diagnostics from the structure's incremental-resize machinery
+    /// (`None` for structures with a fixed layout — only the hashtable
+    /// and the sharded store over it resize today).
+    fn resize_stats(&self) -> Option<ResizeStats> {
         None
     }
 

@@ -37,7 +37,7 @@ pub use route::route;
 use std::time::Duration;
 
 use crate::hashtable::HashTableSet;
-use crate::set_api::ConcurrentSet;
+use crate::set_api::{ConcurrentSet, ResizeStats};
 use crate::size::{ArbiterStats, SizeOpts, SizePolicy, SizeView};
 
 /// `S` independent [`HashTableSet`] shards under hash routing.
@@ -163,6 +163,23 @@ impl<P: SizePolicy> ConcurrentSet for ShardStore<P> {
         Some(self.aggregator().global_stats())
     }
 
+    /// Shards grow independently (each is its own resizable table, so a
+    /// hot shard under zipfian skew doubles alone); the aggregate sums
+    /// their capacities/occupancies/pending buckets and recomputes the
+    /// cluster-wide load factor.
+    fn resize_stats(&self) -> Option<ResizeStats> {
+        let mut agg = ResizeStats::default();
+        for shard in self.shards.iter() {
+            let s = shard.resize_stats()?;
+            agg.capacity += s.capacity;
+            agg.occupancy += s.occupancy;
+            agg.resizes += s.resizes;
+            agg.migration_pending += s.migration_pending;
+        }
+        agg.load_factor = agg.occupancy as f64 / agg.capacity.max(1) as f64;
+        Some(agg)
+    }
+
     fn name(&self) -> String {
         format!(
             "ShardStore[{}x{}]",
@@ -277,6 +294,51 @@ mod tests {
         assert_eq!(s.get(401), None);
         assert!(s.delete(123));
         assert_eq!(s.count_range(100, 149), Some(49));
+    }
+
+    #[test]
+    fn shards_grow_independently_under_skew() {
+        // Tiny shards so a hot-shard insert burst crosses the load-factor
+        // threshold: only shards actually holding keys double.
+        let s: ShardStore<LinearizableSize> =
+            ShardStore::new(MAX_THREADS, 4, 16, SizeOpts::default());
+        let caps_before: Vec<_> = (0..4).map(|i| s.shard(i).capacity()).collect();
+        // Load one shard ~50x past its threshold; route() finds the keys.
+        let hot = s.shard_of(1);
+        let mut loaded = 0;
+        for k in 1..=20_000u64 {
+            if s.shard_of(k) == hot {
+                assert!(s.insert(k));
+                loaded += 1;
+                if loaded == 800 {
+                    break;
+                }
+            }
+        }
+        s.shard(hot).finish_migration();
+        assert!(s.shard(hot).resizes() >= 1, "hot shard never grew");
+        assert!(s.shard(hot).capacity() > caps_before[hot]);
+        for i in 0..4 {
+            if i != hot {
+                assert_eq!(s.shard(i).capacity(), caps_before[i], "cold shard {i} grew");
+            }
+        }
+        let rs = s.resize_stats().expect("aggregated resize stats");
+        assert_eq!(rs.occupancy, loaded as i64);
+        assert_eq!(rs.resizes, s.shard(hot).resizes());
+        assert_eq!(rs.migration_pending, 0);
+        assert_eq!(
+            rs.capacity,
+            (0..4).map(|i| s.shard(i).capacity()).sum::<usize>()
+        );
+        // Every key survived the hot shard's migrations.
+        let mut found = 0;
+        for k in 1..=20_000u64 {
+            if s.contains(k) {
+                found += 1;
+            }
+        }
+        assert_eq!(found, loaded);
     }
 
     #[test]

@@ -114,6 +114,13 @@ pub struct ArbiterStats {
     pub fallbacks: u64,
     /// Policy-level current retry budget (`OptimisticSize`; 0 otherwise).
     pub retry_budget: u64,
+    /// Hashtable resizes triggered (0 for non-resizable structures);
+    /// merged in by the structure's `size_stats()` like the daemon fields.
+    pub resizes: u64,
+    /// Buckets still awaiting migration across in-flight resizes (0 when
+    /// no migration is running — the resize-stress CI gate asserts this
+    /// drains).
+    pub migration_pending: u64,
 }
 
 impl ArbiterStats {
@@ -131,6 +138,8 @@ impl ArbiterStats {
             daemon_stalls: self.daemon_stalls + other.daemon_stalls,
             fallbacks: self.fallbacks + other.fallbacks,
             retry_budget: self.retry_budget.max(other.retry_budget),
+            resizes: self.resizes + other.resizes,
+            migration_pending: self.migration_pending + other.migration_pending,
         }
     }
 }
@@ -205,6 +214,8 @@ impl SizeArbiter {
             daemon_stalls: self.daemon_stalls.load(SeqCst),
             fallbacks: 0,
             retry_budget: 0,
+            resizes: 0,
+            migration_pending: 0,
         }
     }
 

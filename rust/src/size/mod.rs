@@ -59,6 +59,16 @@ pub use sharded::{detect_shards, ShardedCounters};
 /// [`ConcurrentSet`]: crate::set_api::ConcurrentSet
 macro_rules! impl_size_surface {
     () => {
+        crate::size::impl_size_surface!(except_stats);
+
+        fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
+            Some(self.core.stats(self.refresher.rounds()))
+        }
+    };
+    // Everything but `size_stats` — for structures that decorate the
+    // merged stats with their own fields (the resizable hashtable adds
+    // `resizes` / `migration_pending`).
+    (except_stats) => {
         fn size(&self) -> Option<i64> {
             self.core.policy.size()
         }
@@ -87,10 +97,6 @@ macro_rules! impl_size_surface {
 
         fn set_refresh_period(&self, period: Option<std::time::Duration>) -> bool {
             self.refresher.set(&self.core, period)
-        }
-
-        fn size_stats(&self) -> Option<crate::size::ArbiterStats> {
-            Some(self.core.stats(self.refresher.rounds()))
         }
     };
 }

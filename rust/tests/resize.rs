@@ -1,0 +1,343 @@
+//! Incremental-resize acceptance tests: a BTreeMap oracle driven across
+//! several growth phases, the linearizability monitor racing `size` /
+//! `size_exact` / `scan` against live bucket migration, and (under
+//! `--features faults`) a chaos pass where the `ResizeMigrate` site
+//! panics mid-quantum and the table self-repairs — the mover mutex
+//! poison is absorbed, the straggler sweep finishes the bucket, and no
+//! key or counter is lost.
+
+use std::sync::Arc;
+
+use concurrent_size::hashtable::HashTableSet;
+use concurrent_size::history::monitor::Monitor;
+use concurrent_size::proptest_lite;
+use concurrent_size::prop_assert;
+use concurrent_size::rng::Xoshiro256;
+use concurrent_size::set_api::ConcurrentSet;
+use concurrent_size::size::LinearizableSize;
+use concurrent_size::MAX_THREADS;
+
+/// Claim: across arbitrary interleavings of put/insert/delete/get/scan
+/// and several table doublings, the hashtable stays exactly a
+/// `BTreeMap` — membership, values, size, range scans, and the
+/// post-migration physical count all match the oracle.
+#[test]
+fn prop_growth_matches_btreemap_oracle() {
+    proptest_lite::run_with(
+        "resize vs BTreeMap oracle",
+        proptest_lite::Config {
+            cases: 12,
+            seed: 0x2E512E,
+        },
+        |rng: &mut Xoshiro256| {
+            // Deliberately tiny: the op stream must cross the load-factor
+            // trigger several times to exercise growth, not steady state.
+            let set = HashTableSet::<LinearizableSize>::new(MAX_THREADS, 4);
+            let initial_capacity = set.capacity();
+            let mut oracle = std::collections::BTreeMap::new();
+            let key_space = 300 + rng.gen_range(300);
+            for _ in 0..1_500 {
+                let k = rng.gen_range_incl(1, key_space);
+                match rng.gen_range(6) {
+                    // Insert-biased so the table actually grows.
+                    0 | 1 => {
+                        let v = rng.gen_range(1 << 20);
+                        let fresh = set.put(k, v);
+                        let want = oracle.insert(k, v).is_none();
+                        prop_assert!(fresh == want, "put({k}) fresh {fresh} != {want}");
+                    }
+                    2 => {
+                        let fresh = set.insert(k);
+                        // `insert` is put(k, 0): an existing key keeps its
+                        // value, a fresh one gets 0.
+                        let want = if oracle.contains_key(&k) {
+                            false
+                        } else {
+                            oracle.insert(k, 0);
+                            true
+                        };
+                        prop_assert!(fresh == want, "insert({k}) {fresh} != {want}");
+                    }
+                    3 => {
+                        let got = set.delete(k);
+                        let want = oracle.remove(&k).is_some();
+                        prop_assert!(got == want, "delete({k}) {got} != {want}");
+                    }
+                    4 => {
+                        let got = set.get(k);
+                        let want = oracle.get(&k).copied();
+                        prop_assert!(got == want, "get({k}) {got:?} != {want:?}");
+                    }
+                    _ => {
+                        let lo = rng.gen_range_incl(1, key_space);
+                        let hi = (lo + rng.gen_range(48)).min(key_space);
+                        let got = set.scan(lo, hi).expect("hashtable answers scans");
+                        let want: Vec<(u64, u64)> =
+                            oracle.range(lo..=hi).map(|(&k, &v)| (k, v)).collect();
+                        prop_assert!(
+                            got == want,
+                            "scan({lo},{hi}) {} pairs != oracle {}",
+                            got.len(),
+                            want.len()
+                        );
+                    }
+                }
+                let size = set.size().expect("policy provides size");
+                prop_assert!(
+                    size == oracle.len() as i64,
+                    "size {size} != oracle {}",
+                    oracle.len()
+                );
+            }
+            prop_assert!(
+                set.resizes() >= 1,
+                "op stream never crossed the load-factor trigger"
+            );
+            prop_assert!(
+                set.capacity() > initial_capacity,
+                "resize never doubled the bucket array"
+            );
+            set.finish_migration();
+            prop_assert!(
+                set.migration_pending() == 0,
+                "migration debt after finish_migration"
+            );
+            prop_assert!(
+                set.quiescent_count() == oracle.len(),
+                "physical count {} != oracle {}",
+                set.quiescent_count(),
+                oracle.len()
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Seeded size/scan calls racing live migration, checked by the history
+/// monitor: insert-heavy updaters drag a 16-bucket table through
+/// several doublings while sizers and scanners observe mid-quantum —
+/// every returned size and scan key set must still be justified by a
+/// linearization of the recorded history.
+#[test]
+fn monitor_justifies_sizes_and_scans_racing_migration() {
+    const UPDATERS: u64 = 3;
+    const SIZERS: u64 = 2;
+    const OPS_PER_UPDATER: usize = 1_200;
+    const SIZES_PER_SIZER: usize = 250;
+    const SCANS: usize = 150;
+    const KEY_SPACE: u64 = 600;
+    const SEED: u64 = 0x9E512E;
+
+    let set = Arc::new(HashTableSet::<LinearizableSize>::new(MAX_THREADS, 16));
+    let monitor = Monitor::new();
+    std::thread::scope(|scope| {
+        for t in 0..UPDATERS {
+            let set = set.clone();
+            let monitor = &monitor;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(SEED ^ ((t + 1) * 0x9E37));
+                for _ in 0..OPS_PER_UPDATER {
+                    let k = rng.gen_range_incl(1, KEY_SPACE);
+                    // Insert-biased (3:1) so live occupancy climbs
+                    // through the trigger repeatedly.
+                    if rng.gen_range(4) < 3 {
+                        let timer = monitor.begin();
+                        if set.insert(k) {
+                            monitor.commit_keyed_update(timer, k, 1);
+                        }
+                    } else {
+                        let timer = monitor.begin();
+                        if set.delete(k) {
+                            monitor.commit_keyed_update(timer, k, -1);
+                        }
+                    }
+                }
+            });
+        }
+        for t in 0..SIZERS {
+            let set = set.clone();
+            let monitor = &monitor;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(SEED ^ ((t + 9) * 0xC0FF));
+                for _ in 0..SIZES_PER_SIZER {
+                    if rng.gen_bool(0.5) {
+                        let timer = monitor.begin();
+                        let v = set.size().expect("policy provides size");
+                        monitor.commit_size(timer, v);
+                    } else {
+                        let timer = monitor.begin();
+                        let v = set.size_exact().expect("policy provides size");
+                        monitor.commit_size(timer, v.value);
+                    }
+                }
+            });
+        }
+        {
+            let set = set.clone();
+            let monitor = &monitor;
+            scope.spawn(move || {
+                let mut rng = Xoshiro256::new(SEED ^ 0x5CA4);
+                for i in 0..SCANS {
+                    let lo = rng.gen_range_incl(1, KEY_SPACE);
+                    let hi = (lo + rng.gen_range(32)).min(KEY_SPACE);
+                    if i % 2 == 0 {
+                        let timer = monitor.begin();
+                        let pairs = set.scan(lo, hi).expect("hashtable answers scans");
+                        monitor.commit_scan(
+                            timer,
+                            lo,
+                            hi,
+                            pairs.into_iter().map(|(k, _)| k).collect(),
+                        );
+                    } else {
+                        let timer = monitor.begin();
+                        let n = set.count_range(lo, hi).expect("hashtable answers counts");
+                        monitor.commit_count(timer, lo, hi, n);
+                    }
+                }
+            });
+        }
+    });
+
+    assert!(set.resizes() >= 1, "workload never triggered a resize");
+    set.finish_migration();
+    assert_eq!(set.migration_pending(), 0, "migration debt left behind");
+
+    let report = monitor.verify();
+    assert!(
+        report.is_ok(),
+        "unjustified sizes racing migration: {:?}",
+        report.violations
+    );
+    assert_eq!(
+        report.sizes_checked,
+        (SIZERS as usize) * SIZES_PER_SIZER,
+        "dropped size observations"
+    );
+    assert_eq!(
+        set.size(),
+        Some(report.final_net),
+        "quiescent size vs monitor net"
+    );
+    let scan_report = monitor.verify_scans();
+    assert!(
+        scan_report.is_ok(),
+        "unjustified scans racing migration: {:?}",
+        scan_report.violations
+    );
+    assert_eq!(
+        scan_report.scans_checked + scan_report.counts_checked,
+        SCANS,
+        "dropped scan observations"
+    );
+}
+
+/// Chaos pass: every `ResizeMigrate` hit panics mid-quantum (after the
+/// chain freeze, before the copy), poisoning the mover mutex with a
+/// bucket half-migrated. The panics are caught at the op boundary;
+/// once the plane is disarmed the next mover must absorb the poison,
+/// recount the migration debt, finish every bucket, and end with the
+/// exact oracle membership — self-repair, not a wedge.
+#[cfg(feature = "faults")]
+#[test]
+fn resize_migrate_panic_mid_quantum_self_repairs() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    use concurrent_size::faults::{self, FaultAction, FaultPlane, FaultSite};
+
+    const KEYS: u64 = 200;
+
+    let set = HashTableSet::<LinearizableSize>::new(MAX_THREADS, 8);
+    let mut panics = 0;
+    {
+        let _guard = faults::install(FaultPlane::new(0xDEAD512E).with(
+            FaultSite::ResizeMigrate,
+            1,
+            FaultAction::Panic,
+        ));
+        // Every migrate attempt dies at the injection site, so each
+        // op that lends a hand unwinds; the op's own logical
+        // insert/delete never committed when it does (the panic site
+        // precedes the routing retry), so the oracle is simply "every
+        // key we successfully put".
+        for k in 1..=KEYS {
+            if catch_unwind(AssertUnwindSafe(|| set.put(k, k * 10))).is_err() {
+                panics += 1;
+            }
+        }
+        assert!(panics >= 1, "armed ResizeMigrate panic never fired");
+        assert!(
+            set.resizes() >= 1,
+            "insert flood never crossed the trigger"
+        );
+    }
+
+    // Plane disarmed: re-put the whole key set (upsert is idempotent),
+    // then force the migration to drain. The first mover to take the
+    // mutex absorbs the poison and repairs the half-migrated bucket.
+    for k in 1..=KEYS {
+        set.put(k, k * 10);
+    }
+    set.finish_migration();
+    assert_eq!(set.migration_pending(), 0, "self-repair left migration debt");
+    assert_eq!(set.size(), Some(KEYS as i64), "lost keys across the panic");
+    assert_eq!(set.quiescent_count(), KEYS as usize, "physical/logical drift");
+    for k in 1..=KEYS {
+        assert_eq!(set.get(k), Some(k * 10), "key {k} lost or value torn");
+    }
+
+    // And the table still grows afterwards: the poisoned-and-repaired
+    // mover keeps working for later resizes.
+    let before = set.resizes();
+    for k in KEYS + 1..=KEYS * 4 {
+        set.put(k, 1);
+    }
+    set.finish_migration();
+    assert!(set.resizes() > before, "table stopped growing after repair");
+    assert_eq!(set.size(), Some((KEYS * 4) as i64));
+}
+
+/// The growth phase must not leak: every retired table generation and
+/// migrated-out-of node goes through EBR, so a grow-then-drop cycle
+/// under an epoch flush stays balanced (smoke for the Drop path that
+/// frees both generations).
+#[test]
+fn grow_and_drop_reclaims_cleanly() {
+    for round in 0..8u64 {
+        let set = HashTableSet::<LinearizableSize>::new(MAX_THREADS, 4);
+        for k in 1..=150u64 {
+            set.put(k, round);
+        }
+        // Drop with a migration deliberately in flight on some rounds.
+        if round % 2 == 0 {
+            set.finish_migration();
+        }
+        drop(set);
+        concurrent_size::ebr::collect();
+    }
+}
+
+/// `Duration`-free sanity on the public resize surface: counters are
+/// monotone and consistent through a growth phase.
+#[test]
+fn resize_stats_surface_is_consistent() {
+    let set = HashTableSet::<LinearizableSize>::new(MAX_THREADS, 8);
+    let stats0 = set.resize_stats().expect("hashtable reports resize stats");
+    assert_eq!(stats0.resizes, 0);
+    assert_eq!(stats0.occupancy, 0);
+    for k in 1..=120u64 {
+        set.insert(k);
+    }
+    set.finish_migration();
+    let stats = set.resize_stats().expect("hashtable reports resize stats");
+    assert!(stats.resizes >= 1, "no resize in 120 inserts from 8 buckets");
+    assert_eq!(stats.occupancy, 120);
+    assert_eq!(stats.migration_pending, 0);
+    assert!(stats.capacity > stats0.capacity);
+    assert!(
+        (stats.load_factor - 120.0 / stats.capacity as f64).abs() < 1e-9,
+        "load factor inconsistent with occupancy/capacity"
+    );
+    // Quiet period: nothing should move.
+    assert_eq!(set.resize_stats(), Some(stats), "stats moved at quiescence");
+}

@@ -9,11 +9,19 @@ This gate pins the contract:
 * config carries every scale knob the sweeps are keyed on;
 * every record carries the full field set — including the scale-layer
   `shards` / `refresh_us` / `daemon_rounds` fields added in PR 4, the
-  multi-reactor `reactors` / `pipeline_depth` fields, and the scan-mix
-  `scan_frac` / `scan_span` axes — with finite, non-negative numerics
+  multi-reactor `reactors` / `pipeline_depth` fields, the scan-mix
+  `scan_frac` / `scan_span` axes, and the growth-phase
+  `initial_buckets` / `final_buckets` / `migration_quanta` /
+  `growth_windows` fields — with finite, non-negative numerics
   (NaN/Infinity literals are rejected at parse time), `reactor_scale`
   records carry both reactor axes >= 1, and `scan_scale` records carry
   a positive scan fraction and span;
+* `resize_scale` records describe a real growth phase — a positive
+  starting bucket count, a final count at least as large, a non-empty
+  per-window throughput curve of finite positive rates, and the
+  collapse gate itself: no window below 50% of the median window
+  (the acceptance bar for incremental migration — a stop-the-world
+  rehash flatlines a window and fails here);
 * at least one record actually measured something (positive workload
   throughput), so an all-zero report can't slip through.
 
@@ -58,6 +66,10 @@ RECORD_KEYS = {
     "pipeline_depth",
     "scan_frac",
     "scan_span",
+    "initial_buckets",
+    "final_buckets",
+    "migration_quanta",
+    "growth_windows",
 }
 THROUGHPUT_KEYS = ("workload_ops_per_sec", "size_ops_per_sec")
 COUNTER_KEYS = (
@@ -75,7 +87,13 @@ COUNTER_KEYS = (
     "reactors",
     "pipeline_depth",
     "scan_span",
+    "initial_buckets",
+    "final_buckets",
+    "migration_quanta",
 )
+# Fraction of the median window a growth-phase window may dip to before
+# the run counts as a throughput collapse (the issue's acceptance bar).
+COLLAPSE_FLOOR = 0.5
 SCENARIOS = {
     "periodic-size",
     "size-heavy",
@@ -83,6 +101,7 @@ SCENARIOS = {
     "shard_scale",
     "reactor_scale",
     "scan_scale",
+    "resize_scale",
 }
 POLICIES = {"baseline", "linearizable", "naive", "lock", "handshake", "optimistic"}
 
@@ -173,6 +192,53 @@ def main(path):
                     f"{where}.scan_span must be >= 1 in scan_scale, "
                     f"got {rec['scan_span']!r}"
                 )
+        windows = rec["growth_windows"]
+        if not isinstance(windows, list):
+            fail(f"{where}.growth_windows must be a list, got {windows!r}")
+        for j, v in enumerate(windows):
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                fail(f"{where}.growth_windows[{j}] is not numeric: {v!r}")
+            if not math.isfinite(v) or v < 0:
+                fail(
+                    f"{where}.growth_windows[{j}] must be finite and "
+                    f"non-negative, got {v!r}"
+                )
+        if rec["scenario"] == "resize_scale":
+            # The growth sweep must describe a real growth phase: the
+            # table started somewhere, ended at least as large, and the
+            # window curve is populated with real rates.
+            if rec["initial_buckets"] < 1:
+                fail(
+                    f"{where}.initial_buckets must be >= 1 in resize_scale, "
+                    f"got {rec['initial_buckets']!r}"
+                )
+            if rec["final_buckets"] < rec["initial_buckets"]:
+                fail(
+                    f"{where}.final_buckets must be >= initial_buckets in "
+                    f"resize_scale, got {rec['final_buckets']!r} < "
+                    f"{rec['initial_buckets']!r}"
+                )
+            if not windows:
+                fail(f"{where}.growth_windows must be non-empty in resize_scale")
+            if min(windows) <= 0.0:
+                fail(f"{where}.growth_windows must all be positive in resize_scale")
+            # The collapse gate: incremental migration spreads the debt,
+            # so no single window may crater against the run's median.
+            ordered = sorted(windows)
+            median = ordered[len(ordered) // 2]
+            floor = COLLAPSE_FLOOR * median
+            worst = min(windows)
+            if worst < floor:
+                fail(
+                    f"{where} growth-phase throughput collapse: worst window "
+                    f"{worst:.1f} ops/s < {COLLAPSE_FLOOR:.0%} of median "
+                    f"{median:.1f} ops/s (floor {floor:.1f})"
+                )
+            print(
+                f"schema-check: resize_scale[{rec['initial_buckets']} -> "
+                f"{rec['final_buckets']} buckets] worst window {worst:.1f} vs "
+                f"floor {floor:.1f} ops/s (margin {worst - floor:+.1f})"
+            )
 
     if not any(rec["workload_ops_per_sec"] > 0 for rec in records):
         fail("no record measured positive workload throughput (dead recorder?)")
